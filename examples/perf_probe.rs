@@ -1,0 +1,19 @@
+//! Perf probe: simulator event throughput on a heavy cell (not shipped as
+//! a bench; used by the EXPERIMENTS.md §Perf log).
+use miriam::coordinator::{driver, scheduler_for};
+use miriam::gpu::spec::GpuSpec;
+use miriam::workloads::mdtb;
+
+fn main() {
+    for (wl_name, sched) in [("D", "multistream"), ("D", "miriam"),
+                             ("A", "multistream"), ("C", "miriam")] {
+        let wl = mdtb::by_name(wl_name, 2_000_000.0).unwrap().build();
+        let mut s = scheduler_for(sched, &wl).unwrap();
+        let t0 = std::time::Instant::now();
+        let st = driver::run(GpuSpec::rtx2060(), &wl, s.as_mut());
+        let wall = t0.elapsed().as_secs_f64();
+        println!("{wl_name}/{sched:<12} events {:>8}  wall {:>6.2}s  {:>9.0} events/s  sched-decision mean {:.2}us",
+                 st.events, wall, st.events as f64 / wall,
+                 st.sched_decision_mean_us());
+    }
+}

@@ -1,0 +1,157 @@
+"""AOT export: lower the L2 models (and elastic-kernel shards) to HLO text.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the image's xla_extension
+0.5.1 (behind the `xla` 0.1.6 crate) rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/gen_hlo.py.
+
+Outputs (to --out, default ../artifacts):
+  <model>.hlo.txt        — one per MDTB model, params baked as constants,
+                           signature (input,) -> (logits[10],)
+  matmul_rows<R>.hlo.txt — elastic-grid matmul shard executables: the full
+                           (64,32)@(32,48) product sliced into 2**d equal
+                           row shards shares one executable per shard size R,
+                           signature (x[R,32], w[32,48]) -> (y[R,48],).
+                           The Rust runtime demonstrates the paper's §6.4
+                           consistency property by stitching shard outputs.
+  manifest.json          — machine-readable registry (name, file, shapes,
+                           golden input/output checksums) read by
+                           rust/src/runtime/artifacts.rs.
+
+Run once at build time (`make artifacts`); never on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as model_zoo
+from .kernels.elastic_matmul import matmul_tiled
+
+# The shard family exported for the runtime elasticity demo.
+MM_M, MM_K, MM_N = 64, 32, 48
+MM_DEGREES = [0, 1, 2, 3]  # shard row counts 64, 32, 16, 8
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the baked model weights MUST survive the
+    # text round trip — the default printer elides them as `constant({...})`,
+    # which the rust-side parser would reject (or worse, zero-fill).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def _golden_input(shape, seed=42):
+    return np.asarray(
+        np.random.RandomState(seed).randn(*shape), dtype=np.float32)
+
+
+def _sha16(arr: np.ndarray) -> str:
+    return hashlib.sha256(arr.tobytes()).hexdigest()[:16]
+
+
+def export_model(name: str, out_dir: str) -> dict:
+    shape, fn = model_zoo.build(name)
+    wrapped = lambda x: (fn(x),)
+    spec = jax.ShapeDtypeStruct(shape, jnp.float32)
+    t0 = time.time()
+    lowered = jax.jit(wrapped).lower(spec)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    # Golden vector for the Rust runtime integration tests.
+    gx = _golden_input(shape)
+    gy = np.asarray(jax.jit(wrapped)(jnp.asarray(gx))[0])
+    print(f"  {name}: {len(text) / 1e6:.2f} MB HLO text, "
+          f"{time.time() - t0:.1f}s")
+    return {
+        "name": name,
+        "file": f"{name}.hlo.txt",
+        "kind": "model",
+        "inputs": [{"shape": list(shape), "dtype": "f32"}],
+        "outputs": [{"shape": [10], "dtype": "f32"}],
+        "golden": {
+            "input_seed": 42,
+            "input_sha": _sha16(gx),
+            "output": [float(v) for v in gy],
+        },
+    }
+
+
+def export_matmul_shards(out_dir: str) -> list[dict]:
+    entries = []
+    w = _golden_input((MM_K, MM_N), seed=7)
+    x = _golden_input((MM_M, MM_K), seed=8)
+    full = np.asarray(x @ w, dtype=np.float32)
+    for d in MM_DEGREES:
+        rows = MM_M // (2 ** d)
+        fn = lambda xs, ws: (matmul_tiled(xs, ws, bm=min(16, rows), bn=16),)
+        spec_x = jax.ShapeDtypeStruct((rows, MM_K), jnp.float32)
+        spec_w = jax.ShapeDtypeStruct((MM_K, MM_N), jnp.float32)
+        text = to_hlo_text(jax.jit(fn).lower(spec_x, spec_w))
+        fname = f"matmul_rows{rows}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entries.append({
+            "name": f"matmul_rows{rows}",
+            "file": fname,
+            "kind": "matmul_shard",
+            "degree": d,
+            "rows": rows,
+            "inputs": [
+                {"shape": [rows, MM_K], "dtype": "f32"},
+                {"shape": [MM_K, MM_N], "dtype": "f32"},
+            ],
+            "outputs": [{"shape": [rows, MM_N], "dtype": "f32"}],
+        })
+        print(f"  matmul_rows{rows}: degree {d}")
+    # One golden product for all degrees (shards must stitch back to this).
+    entries.append({
+        "name": "matmul_golden",
+        "kind": "golden",
+        "m": MM_M, "k": MM_K, "n": MM_N,
+        "x_seed": 8, "w_seed": 7,
+        "output_sha": _sha16(full),
+        "output_first8": [float(v) for v in full.ravel()[:8]],
+    })
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default=",".join(model_zoo.MODELS),
+                    help="comma-separated subset to export")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": 1, "artifacts": []}
+    print("exporting matmul shard family:")
+    manifest["artifacts"] += export_matmul_shards(args.out)
+    for name in args.models.split(","):
+        print(f"exporting model {name}:")
+        manifest["artifacts"].append(export_model(name, args.out))
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out}/manifest.json "
+          f"({len(manifest['artifacts'])} entries)")
+
+
+if __name__ == "__main__":
+    main()

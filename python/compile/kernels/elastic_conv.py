@@ -1,0 +1,127 @@
+"""Elastic Pallas 2-D convolution kernel.
+
+Convolution is the dominant kernel family in the MDTB models (AlexNet,
+CifarNet, SqueezeNet, ResNet). The elasticity knobs mirror
+``elastic_matmul``:
+
+* **elastic grid**  — the output row range is sliced into ``2**degree``
+  independent launches (paper Eq. 1 at thread-block granularity).
+* **elastic block** — each program instance owns a block of ``block_rows``
+  output rows x ``block_co`` output channels; shrinking either shrinks the
+  per-instance VMEM footprint (the intra-SM knob of §6.1).
+
+The kernel computes, for its (row-block, cout-block) tile:
+
+    out[r, c, co] = sum_{kh, kw, ci} x[r+kh, c+kw, ci] * w[kh, kw, ci, co]
+
+by unrolling the small (kh, kw) loop and contracting over ci with a dot —
+i.e. the same shifted-slice + GEMM decomposition a CUDA conv kernel uses,
+expressed with whole-array refs and ``pl.ds`` dynamic slices (interpret
+mode; see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, block_rows: int, block_co: int,
+                 out_h: int, out_w: int, kh: int, kw: int, cin: int):
+    pr = pl.program_id(0)  # output-row block
+    pc = pl.program_id(1)  # output-channel block
+    r0 = pr * block_rows
+    c0 = pc * block_co
+
+    # Rows beyond out_h are padding rows; they exist because the caller pads
+    # the output to a multiple of block_rows. Guard the store instead of the
+    # loads: the input is padded accordingly so loads are in bounds.
+    acc = jnp.zeros((block_rows, out_w, block_co), jnp.float32)
+    for dh in range(kh):
+        for dw in range(kw):
+            # (block_rows, out_w, cin) input patch shifted by (dh, dw)
+            xs = x_ref[pl.ds(r0 + dh, block_rows), pl.ds(dw, out_w), :]
+            ws = w_ref[dh, dw, :, pl.ds(c0, block_co)]
+            acc = acc + lax.dot_general(
+                xs, ws, (((2,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+    o_ref[pl.ds(r0, block_rows), :, pl.ds(c0, block_co)] = acc
+
+
+def conv2d_elastic(x: jnp.ndarray, w: jnp.ndarray, *, block_rows: int = 4,
+                   block_co: int = 16, degree: int = 0) -> jnp.ndarray:
+    """Elastic conv2d, stride 1, VALID padding.
+
+    x: (H, W, Cin); w: (KH, KW, Cin, Cout) -> (H-KH+1, W-KW+1, Cout).
+    ``degree`` slices the row-block grid into 2**degree sequential launches
+    (the elastic-grid knob); ``block_rows``/``block_co`` set the per-program
+    tile (the elastic-block knob). All settings agree with ``ref.conv2d``.
+    """
+    h, wd, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    assert cin == cin2
+    out_h, out_w = h - kh + 1, wd - kw + 1
+    assert out_h > 0 and out_w > 0
+
+    row_blocks = _ceil_div(out_h, block_rows)
+    co_blocks = _ceil_div(cout, block_co)
+    # Pad input rows so the last row-block's loads stay in bounds, and the
+    # weight cout so the last channel-block's loads stay in bounds.
+    pad_h = row_blocks * block_rows + kh - 1 - h
+    xp = jnp.pad(x, ((0, max(pad_h, 0)), (0, 0), (0, 0)))
+    pad_co = co_blocks * block_co - cout
+    wp = jnp.pad(w, ((0, 0), (0, 0), (0, 0), (0, pad_co)))
+
+    shards = 2 ** degree
+    rb_per_shard = _ceil_div(row_blocks, shards)
+    outs = []
+    for s in range(shards):
+        lo = s * rb_per_shard
+        n_rb = min(rb_per_shard, max(row_blocks - lo, 0))
+        if n_rb == 0:
+            continue
+        # Shift the shard's input window; each shard is an independent launch.
+        xs = lax.dynamic_slice(
+            xp, (lo * block_rows, 0, 0),
+            (min(n_rb * block_rows + kh - 1, xp.shape[0] - lo * block_rows),
+             wd, cin))
+        xs = jnp.pad(xs, ((0, n_rb * block_rows + kh - 1 - xs.shape[0]),
+                          (0, 0), (0, 0)))
+        kern = functools.partial(
+            _conv_kernel, block_rows=block_rows, block_co=block_co,
+            out_h=out_h, out_w=out_w, kh=kh, kw=kw, cin=cin)
+        out = pl.pallas_call(
+            kern,
+            grid=(n_rb, co_blocks),
+            in_specs=[
+                pl.BlockSpec(xs.shape, lambda i, j: (0, 0, 0)),
+                pl.BlockSpec(wp.shape, lambda i, j: (0, 0, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (n_rb * block_rows, out_w, co_blocks * block_co),
+                lambda i, j: (0, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct(
+                (n_rb * block_rows, out_w, co_blocks * block_co), jnp.float32),
+            interpret=True,
+        )(xs, wp)
+        outs.append(out)
+    full = jnp.concatenate(outs, axis=0)
+    return full[:out_h, :, :cout]
+
+
+def conv2d_same_elastic(x: jnp.ndarray, w: jnp.ndarray, *, block_rows: int = 4,
+                        block_co: int = 16, degree: int = 0) -> jnp.ndarray:
+    """SAME-padded stride-1 elastic conv2d (odd kernel sizes)."""
+    kh, kw = w.shape[0], w.shape[1]
+    ph, pw = (kh - 1) // 2, (kw - 1) // 2
+    xp = jnp.pad(x, ((ph, kh - 1 - ph), (pw, kw - 1 - pw), (0, 0)))
+    return conv2d_elastic(xp, w, block_rows=block_rows, block_co=block_co,
+                          degree=degree)

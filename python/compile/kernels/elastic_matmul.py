@@ -1,0 +1,208 @@
+"""Elastic Pallas matmul kernels (the paper's L1 compute hot-spot).
+
+Miriam's elasticity knobs, translated from CUDA to the Pallas programming
+model (see DESIGN.md §Hardware-Adaptation):
+
+* **elastic grid**  — the number of independent launches a kernel is sliced
+  into (paper Eq. 1: dichotomy slicing plan ``S(K)``). Implemented by
+  :func:`matmul_sliced`, which splits the logical ``M``-axis tile range into
+  ``2**degree`` shards, each a separate ``pallas_call`` — the unit the L3
+  coordinator interleaves with critical kernels.
+* **elastic block** — the per-"thread-block" resource footprint. On a TPU
+  this is the VMEM tile shape; the persistent-thread N:1 logical→physical
+  thread mapping of §6.1 becomes a grid-stride loop inside the kernel:
+  :func:`matmul_persistent` launches ``num_programs`` physical program
+  instances which cooperatively cover ``ceil(M/block_m)`` logical row tiles.
+
+All variants must agree bit-for-bit-ish (allclose) with ``ref.matmul`` for
+*every* knob setting — the computational-consistency requirement the paper's
+source-to-source transformer (§6.4) guarantees. python/tests/test_kernels.py
+sweeps the knob space with hypothesis.
+
+All kernels use ``interpret=True``: the image's CPU PJRT cannot execute
+Mosaic custom-calls, and interpret mode lowers to plain HLO that both the
+pytest oracle checks and the Rust runtime execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+
+def _pad_to(x: jnp.ndarray, axis: int, multiple: int) -> jnp.ndarray:
+    """Zero-pad ``x`` along ``axis`` up to the next multiple of ``multiple``."""
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# Original (inelastic) kernel: classic BlockSpec-tiled matmul.
+# ---------------------------------------------------------------------------
+
+def _tiled_kernel(x_ref, w_ref, o_ref):
+    # One (bm, bn) output tile; the full K reduction happens in-kernel.
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def matmul_tiled(x: jnp.ndarray, w: jnp.ndarray, *, bm: int = 32,
+                 bn: int = 32) -> jnp.ndarray:
+    """The "original GPU kernel": fixed (bm, bn) tiling over a (M/bm, N/bn)
+    grid, analogous to a CUDA kernel whose launch geometry is baked in by the
+    computation schedule (the situation Fig. 6 of the paper illustrates).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    xp = _pad_to(x, 0, bm)
+    wp = _pad_to(w, 1, bn)
+    mp, np_ = xp.shape[0], wp.shape[1]
+    out = pl.pallas_call(
+        _tiled_kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(xp, wp)
+    return out[:m, :n]
+
+
+# ---------------------------------------------------------------------------
+# Elastic block: persistent-thread style kernel. ``num_programs`` physical
+# instances cover all logical tiles with an N:1 grid-stride mapping.
+# ---------------------------------------------------------------------------
+
+def _persistent_kernel(x_ref, w_ref, o_ref, *, block_m: int,
+                       num_programs: int, num_tiles: int):
+    pid = pl.program_id(0)
+    rounds = _ceil_div(num_tiles, num_programs)
+
+    def body(r, _):
+        t = pid + r * num_programs  # logical tile owned this round
+
+        @pl.when(t < num_tiles)
+        def _():
+            xs = x_ref[pl.ds(t * block_m, block_m), :]
+            o_ref[pl.ds(t * block_m, block_m), :] = jnp.dot(
+                xs, w_ref[...], preferred_element_type=jnp.float32)
+
+        return _
+
+    lax.fori_loop(0, rounds, lambda r, c: (body(r, c), 0)[1], 0)
+
+
+def matmul_persistent(x: jnp.ndarray, w: jnp.ndarray, *, num_programs: int = 4,
+                      block_m: int = 16) -> jnp.ndarray:
+    """Elastic-block matmul: the launch geometry (``num_programs``) is fully
+    decoupled from the logical work decomposition (``ceil(M/block_m)`` row
+    tiles), exactly the persistent-thread transformation of paper §6.1/§6.4.
+
+    Any ``num_programs >= 1`` and ``block_m >= 1`` computes the same result.
+    """
+    m, k = x.shape
+    _, n = w.shape
+    xp = _pad_to(x, 0, block_m)
+    mp = xp.shape[0]
+    num_tiles = mp // block_m
+    kern = functools.partial(_persistent_kernel, block_m=block_m,
+                             num_programs=num_programs, num_tiles=num_tiles)
+    out = pl.pallas_call(
+        kern,
+        grid=(num_programs,),
+        in_specs=[
+            pl.BlockSpec(xp.shape, lambda p: (0, 0)),
+            pl.BlockSpec(w.shape, lambda p: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((mp, n), lambda p: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=True,
+    )(xp, w)
+    return out[:m]
+
+
+# ---------------------------------------------------------------------------
+# Elastic grid: dichotomy slicing plan S(K) (paper Eq. 1). The kernel's tile
+# range is split into 2**degree shards, each an independent launch.
+# ---------------------------------------------------------------------------
+
+def slicing_plan(num_blocks: int) -> list[int]:
+    """Paper Eq. 1: S(K) = (M/2^n, M/2^{n-1}, ..., M) with n the largest
+    power of two dividing M. Returns the list of admissible shard sizes."""
+    n = 0
+    while num_blocks % (2 ** (n + 1)) == 0:
+        n += 1
+    return [num_blocks // (2 ** i) for i in range(n, -1, -1)]
+
+
+def matmul_shard(x: jnp.ndarray, w: jnp.ndarray, *, shard: int, degree: int,
+                 bm: int = 16, bn: int = 32) -> jnp.ndarray:
+    """Compute shard ``shard`` of ``2**degree`` of the row-tile range.
+
+    The shard owns logical row tiles [shard * T/2^degree, (shard+1) * T/2^degree)
+    where T = ceil(M/bm) padded up to a multiple of 2**degree. Returns the
+    (rows_per_shard, N) slice of the output; concatenating all shards in
+    order reconstructs the full product (tested in test_kernels.py).
+    """
+    m, k = x.shape
+    _, n = w.shape
+    shards = 2 ** degree
+    xp = _pad_to(x, 0, bm)
+    tiles = xp.shape[0] // bm
+    tiles = _ceil_div(tiles, shards) * shards
+    # Pad rows so every shard has an equal integer number of tiles.
+    xp = _pad_to(xp, 0, tiles * bm)
+    tiles_per_shard = tiles // shards
+    row0 = shard * tiles_per_shard * bm
+    rows = tiles_per_shard * bm
+    xs = lax.dynamic_slice(xp, (row0, 0), (rows, k))
+    return matmul_tiled(xs, w, bm=bm, bn=bn)
+
+
+def matmul_sliced(x: jnp.ndarray, w: jnp.ndarray, *, degree: int,
+                  bm: int = 16, bn: int = 32) -> jnp.ndarray:
+    """Full elastic-grid matmul: run all ``2**degree`` shards and stitch the
+    result. Semantically identical to ``ref.matmul`` for every degree."""
+    m = x.shape[0]
+    outs = [
+        matmul_shard(x, w, shard=s, degree=degree, bm=bm, bn=bn)
+        for s in range(2 ** degree)
+    ]
+    return jnp.concatenate(outs, axis=0)[:m]
+
+
+# ---------------------------------------------------------------------------
+# Fully elastic kernel: grid slicing x persistent blocks combined — the shape
+# the L3 coordinator actually schedules (an "elastic kernel shard", §7).
+# ---------------------------------------------------------------------------
+
+def matmul_elastic(x: jnp.ndarray, w: jnp.ndarray, *, degree: int = 0,
+                   num_programs: int = 4, block_m: int = 16) -> jnp.ndarray:
+    """Elastic grid (2**degree shards) of elastic-block (persistent) matmuls."""
+    m, k = x.shape
+    shards = 2 ** degree
+    xp = _pad_to(x, 0, block_m * shards)
+    rows = xp.shape[0] // shards
+    outs = [
+        matmul_persistent(xp[s * rows:(s + 1) * rows], w,
+                          num_programs=num_programs, block_m=block_m)
+        for s in range(shards)
+    ]
+    return jnp.concatenate(outs, axis=0)[:m]

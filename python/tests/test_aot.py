@@ -1,0 +1,90 @@
+"""AOT artifact integrity: manifest structure + golden numerics.
+
+These tests only run when `make artifacts` has produced artifacts/ — they
+are the python half of the cross-language contract with
+rust/src/runtime/artifacts.rs (which performs the same golden checks after
+the HLO-text round trip through the PJRT CPU client).
+"""
+
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as zoo
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first")
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_models(manifest):
+    names = {e["name"] for e in manifest["artifacts"] if e["kind"] == "model"}
+    assert names == set(zoo.MODELS)
+
+
+def test_artifact_files_exist(manifest):
+    for e in manifest["artifacts"]:
+        if "file" in e:
+            assert os.path.exists(os.path.join(ART, e["file"])), e["file"]
+
+
+def test_no_elided_constants(manifest):
+    # Regression guard: the default HLO printer elides large constants as
+    # `constant({...})`, which silently destroys the baked weights.
+    for e in manifest["artifacts"]:
+        if "file" not in e:
+            continue
+        with open(os.path.join(ART, e["file"])) as f:
+            text = f.read()
+        assert "constant({...})" not in text, e["file"]
+
+
+def test_goldens_match_fresh_forward(manifest):
+    # Re-run each model in-process on the golden input; the manifest numbers
+    # were produced by the lowered/AOT'd path — they must agree exactly.
+    for e in manifest["artifacts"]:
+        if e["kind"] != "model":
+            continue
+        shape, fn = zoo.build(e["name"])
+        x = np.random.RandomState(e["golden"]["input_seed"]).randn(*shape)
+        x = x.astype(np.float32)
+        assert hashlib.sha256(x.tobytes()).hexdigest()[:16] == \
+            e["golden"]["input_sha"]
+        y = np.asarray(jax.jit(fn)(jnp.asarray(x)))
+        np.testing.assert_allclose(
+            y, np.asarray(e["golden"]["output"], np.float32),
+            rtol=1e-4, atol=1e-5)
+
+
+def test_matmul_golden_consistency(manifest):
+    gold = next(e for e in manifest["artifacts"] if e["kind"] == "golden")
+    x = np.random.RandomState(gold["x_seed"]).randn(
+        gold["m"], gold["k"]).astype(np.float32)
+    w = np.random.RandomState(gold["w_seed"]).randn(
+        gold["k"], gold["n"]).astype(np.float32)
+    full = (x @ w).astype(np.float32)
+    assert hashlib.sha256(full.tobytes()).hexdigest()[:16] == \
+        gold["output_sha"]
+    np.testing.assert_allclose(full.ravel()[:8],
+                               np.asarray(gold["output_first8"]), rtol=1e-5)
+
+
+def test_shard_family_covers_dichotomy(manifest):
+    # Paper Eq. 1: shard sizes must be M / 2^d for d = 0..3.
+    rows = sorted(
+        e["rows"] for e in manifest["artifacts"]
+        if e["kind"] == "matmul_shard")
+    assert rows == [8, 16, 32, 64]

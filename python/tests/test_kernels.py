@@ -1,0 +1,259 @@
+"""L1 correctness: elastic Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps the elasticity knob space (shapes, slicing degrees, block
+sizes, program counts) — the empirical form of the paper's §6.4 claim that
+the source-to-source elastic transform preserves computational consistency
+for *every* admissible configuration.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.elastic_conv import conv2d_elastic, conv2d_same_elastic
+from compile.kernels.elastic_matmul import (
+    matmul_elastic,
+    matmul_persistent,
+    matmul_shard,
+    matmul_sliced,
+    matmul_tiled,
+    slicing_plan,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mats(m, k, n, seed=0):
+    rs = np.random.RandomState(seed)
+    x = jnp.asarray(rs.randn(m, k).astype(np.float32))
+    w = jnp.asarray(rs.randn(k, n).astype(np.float32))
+    return x, w
+
+
+def _check(out, want, rtol=1e-4, atol=1e-4):
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# matmul: fixed-point checks
+# ---------------------------------------------------------------------------
+
+class TestMatmulTiled:
+    def test_square_divisible(self):
+        x, w = _mats(32, 32, 32)
+        _check(matmul_tiled(x, w, bm=8, bn=8), ref.matmul(x, w))
+
+    def test_ragged_shapes(self):
+        x, w = _mats(37, 19, 23)
+        _check(matmul_tiled(x, w, bm=8, bn=8), ref.matmul(x, w))
+
+    def test_single_row(self):
+        x, w = _mats(1, 16, 8)
+        _check(matmul_tiled(x, w, bm=4, bn=4), ref.matmul(x, w))
+
+    def test_block_larger_than_matrix(self):
+        x, w = _mats(3, 5, 4)
+        _check(matmul_tiled(x, w, bm=16, bn=16), ref.matmul(x, w))
+
+    def test_zero_input(self):
+        x = jnp.zeros((8, 8), jnp.float32)
+        w = jnp.ones((8, 8), jnp.float32)
+        _check(matmul_tiled(x, w, bm=4, bn=4), jnp.zeros((8, 8)))
+
+
+class TestMatmulPersistent:
+    def test_more_programs_than_tiles(self):
+        # Physical > logical: some programs own zero tiles.
+        x, w = _mats(8, 8, 8)
+        _check(matmul_persistent(x, w, num_programs=16, block_m=4),
+               ref.matmul(x, w))
+
+    def test_one_program_owns_everything(self):
+        # Full serialization: 1 physical instance, N logical tiles (the
+        # extreme persistent-thread N:1 mapping).
+        x, w = _mats(40, 12, 20)
+        _check(matmul_persistent(x, w, num_programs=1, block_m=4),
+               ref.matmul(x, w))
+
+    def test_uneven_tile_ownership(self):
+        # tiles=7 over programs=3 -> rounds with masked tail.
+        x, w = _mats(7 * 5, 9, 11)
+        _check(matmul_persistent(x, w, num_programs=3, block_m=5),
+               ref.matmul(x, w))
+
+
+class TestSlicingPlan:
+    def test_paper_eq1_power_of_two(self):
+        # M=8: S(K) = (1, 2, 4, 8)
+        assert slicing_plan(8) == [1, 2, 4, 8]
+
+    def test_paper_eq1_odd(self):
+        # M odd -> only the trivial plan.
+        assert slicing_plan(7) == [7]
+
+    def test_paper_eq1_mixed(self):
+        assert slicing_plan(12) == [3, 6, 12]
+
+    def test_all_entries_divide(self):
+        for m in range(1, 65):
+            for s in slicing_plan(m):
+                assert m % s == 0
+
+
+class TestMatmulSliced:
+    @pytest.mark.parametrize("degree", [0, 1, 2, 3])
+    def test_degrees(self, degree):
+        x, w = _mats(64, 16, 24, seed=degree)
+        _check(matmul_sliced(x, w, degree=degree, bm=4, bn=8),
+               ref.matmul(x, w))
+
+    def test_ragged_rows_with_slicing(self):
+        x, w = _mats(50, 16, 24)
+        _check(matmul_sliced(x, w, degree=2, bm=4, bn=8), ref.matmul(x, w))
+
+    def test_shards_partition_rows(self):
+        # Stitching individual shards == full product (runtime does this).
+        x, w = _mats(64, 16, 24)
+        parts = [
+            matmul_shard(x, w, shard=s, degree=2, bm=4, bn=8)
+            for s in range(4)
+        ]
+        _check(jnp.concatenate(parts, axis=0)[:64], ref.matmul(x, w))
+
+
+# ---------------------------------------------------------------------------
+# matmul: hypothesis sweeps over the elastic knob space
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=25)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 24),
+    n=st.integers(1, 24),
+    bm=st.integers(1, 16),
+    bn=st.integers(1, 16),
+)
+def test_tiled_matches_ref(m, k, n, bm, bn):
+    x, w = _mats(m, k, n, seed=m * 31 + k)
+    _check(matmul_tiled(x, w, bm=bm, bn=bn), ref.matmul(x, w))
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    m=st.integers(1, 48),
+    k=st.integers(1, 24),
+    n=st.integers(1, 24),
+    num_programs=st.integers(1, 8),
+    block_m=st.integers(1, 12),
+)
+def test_persistent_matches_ref(m, k, n, num_programs, block_m):
+    x, w = _mats(m, k, n, seed=m * 17 + n)
+    _check(matmul_persistent(x, w, num_programs=num_programs,
+                             block_m=block_m), ref.matmul(x, w))
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 16),
+    n=st.integers(1, 16),
+    degree=st.integers(0, 3),
+    num_programs=st.integers(1, 4),
+    block_m=st.integers(1, 8),
+)
+def test_fully_elastic_matches_ref(m, k, n, degree, num_programs, block_m):
+    """The coordinator-facing kernel: grid slicing x persistent blocks."""
+    x, w = _mats(m, k, n, seed=m + k + n + degree)
+    _check(matmul_elastic(x, w, degree=degree, num_programs=num_programs,
+                          block_m=block_m), ref.matmul(x, w))
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+class TestConvFixed:
+    def test_basic_valid(self):
+        rs = np.random.RandomState(1)
+        x = jnp.asarray(rs.randn(12, 10, 3).astype(np.float32))
+        w = jnp.asarray(rs.randn(3, 3, 3, 8).astype(np.float32))
+        _check(conv2d_elastic(x, w, block_rows=4, block_co=4),
+               ref.conv2d(x, w))
+
+    def test_1x1_kernel(self):
+        rs = np.random.RandomState(2)
+        x = jnp.asarray(rs.randn(8, 8, 4).astype(np.float32))
+        w = jnp.asarray(rs.randn(1, 1, 4, 6).astype(np.float32))
+        _check(conv2d_elastic(x, w, block_rows=2, block_co=3),
+               ref.conv2d(x, w))
+
+    def test_5x5_kernel_same(self):
+        rs = np.random.RandomState(3)
+        x = jnp.asarray(rs.randn(16, 16, 3).astype(np.float32))
+        w = jnp.asarray(rs.randn(5, 5, 3, 4).astype(np.float32))
+        _check(conv2d_same_elastic(x, w, block_rows=4, block_co=2),
+               ref.conv2d_same(x, w))
+
+    def test_block_rows_exceed_output(self):
+        rs = np.random.RandomState(4)
+        x = jnp.asarray(rs.randn(6, 6, 2).astype(np.float32))
+        w = jnp.asarray(rs.randn(3, 3, 2, 4).astype(np.float32))
+        _check(conv2d_elastic(x, w, block_rows=16, block_co=16),
+               ref.conv2d(x, w))
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    h=st.integers(5, 18),
+    wd=st.integers(5, 14),
+    cin=st.integers(1, 4),
+    cout=st.integers(1, 8),
+    ksz=st.sampled_from([1, 3, 5]),
+    block_rows=st.integers(1, 6),
+    block_co=st.integers(1, 6),
+    degree=st.integers(0, 2),
+)
+def test_conv_elastic_matches_ref(h, wd, cin, cout, ksz, block_rows,
+                                  block_co, degree):
+    if h < ksz or wd < ksz:
+        return
+    rs = np.random.RandomState(h * 7 + wd)
+    x = jnp.asarray(rs.randn(h, wd, cin).astype(np.float32))
+    w = jnp.asarray(rs.randn(ksz, ksz, cin, cout).astype(np.float32))
+    _check(
+        conv2d_elastic(x, w, block_rows=block_rows, block_co=block_co,
+                       degree=degree),
+        ref.conv2d(x, w), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# RNN cells (oracle self-consistency under vectorization)
+# ---------------------------------------------------------------------------
+
+def test_gru_cell_shapes():
+    h = jnp.zeros((2, 8), jnp.float32)
+    x = jnp.ones((2, 4), jnp.float32)
+    rs = np.random.RandomState(0)
+    wx = jnp.asarray(rs.randn(4, 24).astype(np.float32))
+    wh = jnp.asarray(rs.randn(8, 24).astype(np.float32))
+    b = jnp.zeros((24,), jnp.float32)
+    out = ref.gru_cell(h, x, wx, wh, b)
+    assert out.shape == (2, 8)
+    assert bool(jnp.all(jnp.abs(out) <= 1.0 + 1e-6))  # tanh/sigmoid bounded
+
+
+def test_lstm_cell_shapes():
+    h = jnp.zeros((2, 8), jnp.float32)
+    c = jnp.zeros((2, 8), jnp.float32)
+    x = jnp.ones((2, 4), jnp.float32)
+    rs = np.random.RandomState(0)
+    wx = jnp.asarray(rs.randn(4, 32).astype(np.float32))
+    wh = jnp.asarray(rs.randn(8, 32).astype(np.float32))
+    b = jnp.zeros((32,), jnp.float32)
+    h2, c2 = ref.lstm_cell(h, c, x, wx, wh, b)
+    assert h2.shape == (2, 8) and c2.shape == (2, 8)
+    assert bool(jnp.all(jnp.abs(h2) <= 1.0 + 1e-6))

@@ -1,0 +1,83 @@
+//! Fig. 2 (left) — motivation: latency distribution of ResNet50 when
+//! co-running with different DNN models under plain multi-stream.
+//!
+//! Paper observation (RTX 2060): solo ResNet50 ~4.2 ms; co-running with
+//! VGG16 spreads the distribution from 4.4 ms to ~16.2 ms, and the spread
+//! pattern differs per co-runner. We regenerate the CDF rows (p10..p99).
+//!
+//! Run: `cargo bench --bench fig2_motivation`
+
+use std::sync::Arc;
+
+use miriam::coordinator::{baselines::multistream::MultiStream, driver};
+use miriam::gpu::kernel::Criticality;
+use miriam::gpu::spec::GpuSpec;
+use miriam::workloads::arrival::Arrival;
+use miriam::workloads::mdtb::{Source, Workload};
+use miriam::workloads::models;
+
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+    sorted[lo] + (sorted[hi] - sorted[lo]) * (pos - lo as f64)
+}
+
+fn run_pair(co: Option<&str>, duration_us: f64) -> Vec<f64> {
+    let mut sources = vec![Source {
+        model: Arc::new(models::resnet50()),
+        arrival: Arrival::ClosedLoop { clients: 1 },
+        criticality: Criticality::Critical,
+    }];
+    if let Some(name) = co {
+        sources.push(Source {
+            model: Arc::new(models::by_name(name).unwrap()),
+            arrival: Arrival::ClosedLoop { clients: 1 },
+            criticality: Criticality::Normal,
+        });
+    }
+    let wl = Workload {
+        name: format!("fig2/{}", co.unwrap_or("solo")),
+        sources,
+        duration_us,
+        seed: 2,
+    };
+    let stats = driver::run(GpuSpec::rtx2060(), &wl, &mut MultiStream::new());
+    let mut lats: Vec<f64> = stats.critical_latencies_us.clone();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lats
+}
+
+fn main() {
+    let duration_us = 1_000_000.0;
+    println!("# Fig. 2 (left): ResNet50 latency CDF under multi-stream co-running");
+    println!("# (rtx2060 preset, closed-loop, {}s simulated)", duration_us / 1e6);
+    println!("{:<12} {:>6} {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}",
+             "co-runner", "n", "p10(ms)", "p25(ms)", "p50(ms)", "p75(ms)",
+             "p90(ms)", "p99(ms)");
+    let solo = run_pair(None, duration_us);
+    let solo_p50 = quantile(&solo, 0.5);
+    for co in [None, Some("vgg16"), Some("alexnet"), Some("squeezenet")] {
+        let lats = run_pair(co, duration_us);
+        println!("{:<12} {:>6} {:>8.2} {:>8.2} {:>8.2} {:>8.2} {:>8.2} {:>8.2}",
+                 co.unwrap_or("solo"),
+                 lats.len(),
+                 quantile(&lats, 0.10) / 1e3,
+                 quantile(&lats, 0.25) / 1e3,
+                 quantile(&lats, 0.50) / 1e3,
+                 quantile(&lats, 0.75) / 1e3,
+                 quantile(&lats, 0.90) / 1e3,
+                 quantile(&lats, 0.99) / 1e3);
+    }
+    // Paper-shape check: co-running shifts + widens the distribution.
+    let vgg = run_pair(Some("vgg16"), duration_us);
+    let shift = quantile(&vgg, 0.5) / solo_p50;
+    let spread = (quantile(&vgg, 0.99) - quantile(&vgg, 0.10))
+        / (quantile(&solo, 0.99) - quantile(&solo, 0.10)).max(1.0);
+    println!("\n# shape: vgg16 shifts the median x{shift:.2} and widens the \
+              p10-p99 band x{spread:.1} vs solo");
+    println!("# paper: solo 4.2 ms; with vgg16 the range is 4.4-16.2 ms \
+              (median shift >1, wide spread)");
+}

@@ -1,0 +1,71 @@
+//! Fig. 8 (a)–(f) — the headline evaluation: end-to-end critical-task
+//! latency, overall throughput, and average achieved occupancy for
+//! {Sequential, Multi-stream+Priority, IB, Miriam} on MDTB A–D, on both
+//! platforms (RTX 2060 and Jetson AGX Xavier).
+//!
+//! Paper shapes to reproduce:
+//!  * Sequential: lowest critical latency reference, lowest throughput;
+//!  * Multi-stream: highest raw throughput, critical latency blown up
+//!    (1.95x / 2.02x on MDTB-A);
+//!  * IB: latency between the two, throughput can drop below Sequential
+//!    under frequent critical launches (MDTB-A);
+//!  * Miriam: throughput well above Sequential (paper: +64% / +83% on A,
+//!    1.79x–1.91x on B–D) at a small critical-latency overhead (<= ~28%).
+//!
+//! Run: `cargo bench --bench fig8_mdtb`
+
+use miriam::coordinator::{driver, scheduler_for, RunStats, SCHEDULERS};
+use miriam::gpu::spec::GpuSpec;
+use miriam::workloads::mdtb;
+
+fn run_cell(platform: &GpuSpec, wl_name: &str, sched: &str,
+            duration_us: f64) -> RunStats {
+    let wl = mdtb::by_name(wl_name, duration_us).unwrap().build();
+    let mut s = scheduler_for(sched, &wl).unwrap();
+    driver::run(platform.clone(), &wl, s.as_mut())
+}
+
+fn main() {
+    let duration_us = 1_000_000.0;
+    println!("# Fig. 8: MDTB A-D x {{rtx2060, xavier}} x 4 schedulers, \
+              {}s simulated each", duration_us / 1e6);
+    for spec in [GpuSpec::rtx2060(), GpuSpec::xavier()] {
+        for wl in ["A", "B", "C", "D"] {
+            println!("\n## MDTB-{wl} on {}", spec.name);
+            println!("{:<12} {:>10} {:>10} {:>12} {:>10} {:>8}",
+                     "scheduler", "crit(ms)", "crit p99", "tput(req/s)",
+                     "norm(1/s)", "occup");
+            let mut seq_lat = f64::NAN;
+            let mut seq_tput = f64::NAN;
+            let mut rows = Vec::new();
+            for sched in SCHEDULERS {
+                let st = run_cell(&spec, wl, sched, duration_us);
+                if sched == "sequential" {
+                    seq_lat = st.critical_latency_mean_us();
+                    seq_tput = st.throughput_rps();
+                }
+                rows.push((sched, st));
+            }
+            for (sched, st) in &rows {
+                println!("{:<12} {:>10.2} {:>10.2} {:>12.1} {:>10.1} {:>8.3}",
+                         sched,
+                         st.critical_latency_mean_us() / 1e3,
+                         st.critical_latency_p99_us() / 1e3,
+                         st.throughput_rps(),
+                         st.completed_normal() as f64 / (st.span_us / 1e6),
+                         st.achieved_occupancy);
+            }
+            // Normalized summary (the ratios the paper quotes).
+            println!("{:<12} {:>10} {:>22}", "-- ratio", "lat/seq", "tput/seq");
+            for (sched, st) in &rows {
+                println!("{:<12} {:>10.2} {:>22.2}",
+                         sched,
+                         st.critical_latency_mean_us() / seq_lat,
+                         st.throughput_rps() / seq_tput);
+            }
+        }
+    }
+    println!("\n# paper targets: Miriam tput/seq ~1.64-1.91 with lat/seq <= ~1.28;");
+    println!("# multistream lat/seq ~1.3-2.0; IB tput/seq < 1 under closed-loop");
+    println!("# critical (MDTB-A). See EXPERIMENTS.md for measured-vs-paper.");
+}

@@ -1,0 +1,98 @@
+//! Run configuration: which platform, workload, scheduler(s), duration —
+//! shared by the CLI, the examples and the bench harnesses.
+
+pub mod cli;
+
+
+use crate::gpu::spec::GpuSpec;
+use crate::workloads::mdtb::{self, WorkloadSpec};
+
+/// A full simulation-run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// GPU preset name ("rtx2060", "xavier", "tx2").
+    pub platform: String,
+    /// Workload name ("A".."D" for MDTB, "lgsvl").
+    pub workload: String,
+    /// Scheduler names to run (subset of coordinator::SCHEDULERS).
+    pub schedulers: Vec<String>,
+    /// Simulated duration in seconds.
+    pub duration_s: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            platform: "rtx2060".into(),
+            workload: "A".into(),
+            schedulers: crate::coordinator::SCHEDULERS
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            duration_s: 1.0,
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn spec(&self) -> Option<GpuSpec> {
+        GpuSpec::by_name(&self.platform)
+    }
+
+    pub fn workload_spec(&self) -> Option<WorkloadSpec> {
+        mdtb::by_name(&self.workload, self.duration_s * 1e6)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.spec().is_none() {
+            return Err(format!("unknown platform {}", self.platform));
+        }
+        if self.workload_spec().is_none()
+            && self.workload.to_ascii_lowercase() != "lgsvl"
+        {
+            return Err(format!("unknown workload {}", self.workload));
+        }
+        for s in &self.schedulers {
+            if !crate::coordinator::SCHEDULERS.contains(&s.as_str()) {
+                return Err(format!("unknown scheduler {s}"));
+            }
+        }
+        if self.duration_s <= 0.0 {
+            return Err("duration must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        assert!(RunConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn rejects_unknowns() {
+        let mut c = RunConfig::default();
+        c.platform = "h100".into();
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.workload = "Z".into();
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.schedulers = vec!["fifo".into()];
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.duration_s = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn lgsvl_is_a_known_workload() {
+        let mut c = RunConfig::default();
+        c.workload = "lgsvl".into();
+        assert!(c.validate().is_ok());
+    }
+}

@@ -1,0 +1,204 @@
+//! **Inter-stream Barrier (IB)** baseline (paper §8.1.3, after Yu et al.
+//! [39]): multi-stream execution where *normal-kernel dispatch* is
+//! manually synchronized against the critical stream with inter-stream
+//! barriers.
+//!
+//! Critical tasks run exactly as in Multi-stream (all kernels enqueued on
+//! a priority stream at arrival). Normal kernels, however, are released
+//! one at a time and only at critical-kernel *boundaries*: a normal kernel
+//! may launch only when no critical kernel is mid-flight, and each release
+//! pays a fixed barrier synchronization cost on top of the launch
+//! overhead. Bounding concurrency this way protects the critical task
+//! better than free-running Multi-stream, but the barriers serialize the
+//! normal stream and add overhead — with frequently-launching critical
+//! tasks the normal side starves and total throughput can fall below even
+//! Sequential (the paper's MDTB-A observation, §8.2).
+
+use std::collections::VecDeque;
+
+use crate::coordinator::scheduler::{Req, Scheduler};
+use crate::gpu::engine::{Completion, Engine};
+use crate::gpu::kernel::{Criticality, LaunchConfig};
+use crate::gpu::stream::{LaunchTag, StreamId};
+
+/// Per-request kernel cursor for normal tasks.
+struct TaskState {
+    req_id: u64,
+    model: crate::workloads::models::ModelRef,
+    next_kernel: usize,
+}
+
+pub struct InterStreamBarrier {
+    critical_stream: StreamId,
+    normal_stream: StreamId,
+    /// Critical tasks in flight: (req id, last kernel tag).
+    critical_open: Vec<(u64, LaunchTag)>,
+    /// Number of critical *kernels* currently in flight (submitted, not
+    /// completed) — the barrier predicate.
+    critical_kernels_inflight: usize,
+    normal: VecDeque<TaskState>,
+    /// The one outstanding normal kernel, if any: (tag, req id).
+    normal_inflight: Option<(LaunchTag, u64)>,
+    /// Barrier synchronization cost per normal-kernel release (us).
+    pub barrier_us: f64,
+}
+
+impl InterStreamBarrier {
+    pub fn new() -> Self {
+        InterStreamBarrier {
+            critical_stream: 0,
+            normal_stream: 0,
+            critical_open: Vec::new(),
+            critical_kernels_inflight: 0,
+            normal: VecDeque::new(),
+            normal_inflight: None,
+            barrier_us: 15.0,
+        }
+    }
+
+    /// Release the next normal kernel if the barrier predicate holds:
+    /// nothing critical mid-flight and no normal kernel outstanding.
+    fn release_normal(&mut self, eng: &mut Engine) {
+        if self.normal_inflight.is_some() || self.critical_kernels_inflight > 0 {
+            return;
+        }
+        let Some(task) = self.normal.front_mut() else { return };
+        let k = &task.model.kernels[task.next_kernel];
+        let tag = eng.submit_delayed(self.normal_stream,
+                                     LaunchConfig::from_kernel(k),
+                                     Criticality::Normal, self.barrier_us);
+        task.next_kernel += 1;
+        self.normal_inflight = Some((tag, task.req_id));
+    }
+}
+
+impl Default for InterStreamBarrier {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for InterStreamBarrier {
+    fn name(&self) -> &'static str {
+        "ib"
+    }
+
+    fn init(&mut self, eng: &mut Engine) {
+        self.critical_stream = eng.add_stream(10);
+        self.normal_stream = eng.add_stream(0);
+    }
+
+    fn on_request(&mut self, req: Req, eng: &mut Engine) {
+        match req.criticality {
+            Criticality::Critical => {
+                // Free-running critical stream, but each kernel pays the
+                // barrier cost needed to coordinate with the normal stream
+                // (the "more synchronization barriers ... significant
+                // overhead" effect of §8.2).
+                let mut last = 0;
+                for k in &req.model.kernels {
+                    last = eng.submit_delayed(self.critical_stream,
+                                              LaunchConfig::from_kernel(k),
+                                              Criticality::Critical,
+                                              self.barrier_us);
+                    self.critical_kernels_inflight += 1;
+                }
+                self.critical_open.push((req.id, last));
+            }
+            Criticality::Normal => {
+                self.normal.push_back(TaskState {
+                    req_id: req.id,
+                    model: req.model.clone(),
+                    next_kernel: 0,
+                });
+                self.release_normal(eng);
+            }
+        }
+    }
+
+    fn on_completion(&mut self, comp: &Completion, eng: &mut Engine) -> Vec<u64> {
+        let mut finished = Vec::new();
+        match comp.record.criticality {
+            Criticality::Critical => {
+                self.critical_kernels_inflight -= 1;
+                if let Some(pos) = self
+                    .critical_open
+                    .iter()
+                    .position(|(_, t)| *t == comp.tag)
+                {
+                    finished.push(self.critical_open.swap_remove(pos).0);
+                }
+            }
+            Criticality::Normal => {
+                if let Some((tag, req_id)) = self.normal_inflight {
+                    if tag == comp.tag {
+                        self.normal_inflight = None;
+                        // Retire the task if that was its last kernel.
+                        if let Some(front) = self.normal.front() {
+                            if front.req_id == req_id
+                                && front.next_kernel >= front.model.kernels.len()
+                            {
+                                finished.push(req_id);
+                                self.normal.pop_front();
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        self.release_normal(eng);
+        finished
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::baselines::multistream::MultiStream;
+    use crate::coordinator::driver;
+    use crate::gpu::spec::GpuSpec;
+    use crate::workloads::mdtb;
+
+    #[test]
+    fn completes_work() {
+        let wl = mdtb::mdtb_a(100_000.0).build();
+        let st = driver::run(GpuSpec::rtx2060(), &wl,
+                             &mut InterStreamBarrier::new());
+        assert!(st.completed_critical() > 0);
+        assert!(st.completed_normal() > 0);
+    }
+
+    #[test]
+    fn critical_latency_better_than_multistream() {
+        // IB's whole point: bounded co-running protects the critical task
+        // relative to unrestricted multi-stream.
+        let wl = mdtb::mdtb_a(300_000.0).build();
+        let ib = driver::run(GpuSpec::rtx2060(), &wl,
+                             &mut InterStreamBarrier::new());
+        let ms = driver::run(GpuSpec::rtx2060(), &wl, &mut MultiStream::new());
+        assert!(
+            ib.critical_latency_mean_us() < ms.critical_latency_mean_us(),
+            "ib {} >= ms {}",
+            ib.critical_latency_mean_us(),
+            ms.critical_latency_mean_us()
+        );
+    }
+
+    #[test]
+    fn at_most_one_normal_kernel_inflight() {
+        let wl = mdtb::mdtb_b(200_000.0).build();
+        let st = driver::run(GpuSpec::rtx2060(), &wl,
+                             &mut InterStreamBarrier::new());
+        // Sweep the timeline: normal launches never overlap each other.
+        let mut normals: Vec<_> = st
+            .timeline
+            .iter()
+            .filter(|r| r.criticality == Criticality::Normal)
+            .collect();
+        normals.sort_by(|a, b| a.start_us.partial_cmp(&b.start_us).unwrap());
+        for w in normals.windows(2) {
+            assert!(w[1].start_us >= w[0].end_us - 1e-6,
+                    "normal kernels overlapped");
+        }
+    }
+}

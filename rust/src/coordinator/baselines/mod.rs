@@ -1,0 +1,9 @@
+//! The paper's three comparison baselines (§8.1.3).
+
+pub mod ib;
+pub mod multistream;
+pub mod sequential;
+
+pub use ib::InterStreamBarrier;
+pub use multistream::MultiStream;
+pub use sequential::Sequential;

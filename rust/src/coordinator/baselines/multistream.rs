@@ -1,0 +1,109 @@
+//! **GPU Multi-stream with Priority** baseline (paper §8.1.3, the NVIDIA
+//! Triton approach): kernels from both task classes are enqueued
+//! immediately on separate streams; the critical stream has dispatch
+//! priority but resident normal blocks are never evicted — so critical
+//! kernels suffer the full intra-/inter-SM contention of whatever is
+//! already on the GPU.
+
+use crate::coordinator::scheduler::{Req, Scheduler};
+use crate::gpu::engine::{Completion, Engine};
+use crate::gpu::kernel::{Criticality, LaunchConfig};
+use crate::gpu::stream::{LaunchTag, StreamId};
+
+pub struct MultiStream {
+    critical_stream: StreamId,
+    /// Normal tasks round-robin across several streams (one per
+    /// closed-loop client), so they overlap each other as well as the
+    /// critical stream — the Triton-style free-for-all.
+    normal_streams: Vec<StreamId>,
+    next_normal: usize,
+    /// (request id, last kernel tag) for every in-flight task.
+    open: Vec<(u64, LaunchTag)>,
+}
+
+impl MultiStream {
+    pub fn new() -> Self {
+        MultiStream {
+            critical_stream: 0,
+            normal_streams: Vec::new(),
+            next_normal: 0,
+            open: Vec::new(),
+        }
+    }
+}
+
+impl Default for MultiStream {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Scheduler for MultiStream {
+    fn name(&self) -> &'static str {
+        "multistream"
+    }
+
+    fn init(&mut self, eng: &mut Engine) {
+        self.critical_stream = eng.add_stream(10);
+        for _ in 0..3 {
+            self.normal_streams.push(eng.add_stream(0));
+        }
+    }
+
+    fn on_request(&mut self, req: Req, eng: &mut Engine) {
+        let stream = match req.criticality {
+            Criticality::Critical => self.critical_stream,
+            Criticality::Normal => {
+                let s = self.normal_streams[self.next_normal
+                    % self.normal_streams.len()];
+                self.next_normal += 1;
+                s
+            }
+        };
+        let mut last = 0;
+        for k in &req.model.kernels {
+            last = eng.submit(stream, LaunchConfig::from_kernel(k),
+                              req.criticality);
+        }
+        self.open.push((req.id, last));
+    }
+
+    fn on_completion(&mut self, comp: &Completion, _eng: &mut Engine) -> Vec<u64> {
+        if let Some(pos) = self.open.iter().position(|(_, t)| *t == comp.tag) {
+            vec![self.open.swap_remove(pos).0]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::baselines::sequential::Sequential;
+    use crate::coordinator::driver;
+    use crate::gpu::spec::GpuSpec;
+    use crate::workloads::mdtb;
+
+    #[test]
+    fn overlaps_and_outperforms_sequential_throughput() {
+        let wl = mdtb::mdtb_a(100_000.0).build();
+        let ms = driver::run(GpuSpec::rtx2060(), &wl, &mut MultiStream::new());
+        let sq = driver::run(GpuSpec::rtx2060(), &wl, &mut Sequential::new());
+        assert!(ms.throughput_rps() > sq.throughput_rps(),
+                "multistream {} <= sequential {}",
+                ms.throughput_rps(), sq.throughput_rps());
+    }
+
+    #[test]
+    fn critical_latency_degrades_vs_sequential() {
+        // The paper's core motivation (Fig. 2 / Fig. 8): co-running
+        // inflates critical latency under plain multi-stream.
+        let wl = mdtb::mdtb_a(100_000.0).build();
+        let ms = driver::run(GpuSpec::rtx2060(), &wl, &mut MultiStream::new());
+        let sq = driver::run(GpuSpec::rtx2060(), &wl, &mut Sequential::new());
+        assert!(ms.critical_latency_mean_us() > sq.critical_latency_mean_us(),
+                "expected degradation: ms {} vs sq {}",
+                ms.critical_latency_mean_us(), sq.critical_latency_mean_us());
+    }
+}

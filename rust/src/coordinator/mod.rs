@@ -1,0 +1,48 @@
+//! Runtime kernel coordination (paper §7) and the evaluation baselines.
+//!
+//! * [`scheduler`] — the policy interface.
+//! * [`driver`] — arrival/event loop gluing workloads, policies and the
+//!   GPU simulator; produces [`stats::RunStats`].
+//! * [`shaded_tree`] — dynamic shard formation (Fig. 7).
+//! * [`miriam`] — the Miriam coordinator (elastic padding).
+//! * [`baselines`] — Sequential, Multi-stream+Priority, Inter-stream
+//!   Barrier.
+
+pub mod baselines;
+pub mod driver;
+pub mod miriam;
+pub mod scheduler;
+pub mod shaded_tree;
+pub mod stats;
+
+pub use baselines::{InterStreamBarrier, MultiStream, Sequential};
+pub use miriam::Miriam;
+pub use scheduler::{Req, Scheduler};
+pub use stats::RunStats;
+
+use crate::gpu::kernel::Criticality;
+use crate::workloads::mdtb::Workload;
+use crate::workloads::models::ModelRef;
+
+/// Build a scheduler by name, wired for `workload` (Miriam needs the
+/// critical model set for its offline shrink).
+pub fn scheduler_for(name: &str, workload: &Workload) -> Option<Box<dyn Scheduler>> {
+    match name {
+        "sequential" => Some(Box::new(Sequential::new())),
+        "multistream" => Some(Box::new(MultiStream::new())),
+        "ib" => Some(Box::new(InterStreamBarrier::new())),
+        "miriam" => {
+            let crits: Vec<ModelRef> = workload
+                .sources
+                .iter()
+                .filter(|s| s.criticality == Criticality::Critical)
+                .map(|s| s.model.clone())
+                .collect();
+            Some(Box::new(Miriam::new(&crits)))
+        }
+        _ => None,
+    }
+}
+
+/// All scheduler names, in the paper's presentation order.
+pub const SCHEDULERS: [&str; 4] = ["sequential", "multistream", "ib", "miriam"];

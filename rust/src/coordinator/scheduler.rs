@@ -1,0 +1,55 @@
+//! The scheduler interface all coordination policies implement.
+//!
+//! The driver ([`crate::coordinator::driver`]) owns the arrival process and
+//! the simulator; a [`Scheduler`] decides *what to submit to which stream
+//! and when* — exactly the degrees of freedom the paper's baselines and
+//! Miriam differ in.
+
+use crate::gpu::engine::{Completion, Engine};
+use crate::gpu::kernel::Criticality;
+use crate::workloads::models::ModelRef;
+
+/// One inference request flowing through the system.
+#[derive(Debug, Clone)]
+pub struct Req {
+    pub id: u64,
+    /// Index of the originating source in the workload.
+    pub source: usize,
+    pub model: ModelRef,
+    pub criticality: Criticality,
+    pub arrival_us: f64,
+}
+
+/// Coordination policy.
+pub trait Scheduler {
+    fn name(&self) -> &'static str;
+
+    /// Create streams, pre-generate elastic kernels, etc.
+    fn init(&mut self, eng: &mut Engine);
+
+    /// A request arrived (engine time == req.arrival_us).
+    fn on_request(&mut self, req: Req, eng: &mut Engine);
+
+    /// A launch completed. Returns ids of requests that finished with it.
+    fn on_completion(&mut self, comp: &Completion, eng: &mut Engine) -> Vec<u64>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use crate::workloads::models;
+
+    #[test]
+    fn req_is_cloneable_and_carries_model() {
+        let r = Req {
+            id: 1,
+            source: 0,
+            model: Arc::new(models::cifarnet()),
+            criticality: Criticality::Normal,
+            arrival_us: 0.0,
+        };
+        let r2 = r.clone();
+        assert_eq!(r2.model.name, "cifarnet");
+    }
+}

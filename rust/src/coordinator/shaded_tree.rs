@@ -1,0 +1,238 @@
+//! The dynamic-sized **shaded binary tree** for elastic-kernel shard
+//! formation (paper §7, Fig. 7).
+//!
+//! The root represents a normal kernel with `M` logical thread blocks.
+//! Each level halves the shard size (the *sharding degree*); each node's
+//! "shading" is the elastic block size the shard would run with. At
+//! runtime the coordinator walks the tree head: it carves the largest
+//! shard that fits the resources left over by resident critical kernels
+//! ("actual shards"), leaving the rest of the kernel as "virtual shards"
+//! to be re-evaluated against whatever critical kernel is resident when
+//! their turn comes.
+
+use crate::elastic::candidate::Candidate;
+use crate::gpu::kernel::{KernelDesc, LaunchConfig};
+
+/// Resources currently left over for padding (derived from a
+/// [`crate::gpu::engine::GpuSnapshot`]).
+#[derive(Debug, Clone, Copy)]
+pub struct Leftover {
+    /// Thread blocks that can dispatch without displacing critical work
+    /// (Eq. 2 first constraint: `N_SM - N_blk_rt mod N_SM`).
+    pub blocks: u32,
+    /// Threads per SM left beside a resident critical block (Eq. 2 second
+    /// constraint: `L_threads - S_blk_rt`).
+    pub threads: u32,
+    /// Whether any critical work is resident or pending — when false the
+    /// padder may use the whole GPU (identity geometry).
+    pub critical_active: bool,
+}
+
+/// Tracks the shard decomposition of one elastic kernel instance.
+#[derive(Debug, Clone)]
+pub struct ShadedTree {
+    kernel: KernelDesc,
+    /// Candidate schedules, best-ranked first (from the offline shrink).
+    candidates: Vec<Candidate>,
+    /// Logical blocks not yet dispatched.
+    remaining: u32,
+    /// Logical blocks dispatched but not yet completed.
+    inflight_blocks: u32,
+    /// Shards dispatched so far (the sharding degree achieved).
+    shards_cut: u32,
+}
+
+impl ShadedTree {
+    pub fn new(kernel: KernelDesc, candidates: Vec<Candidate>) -> Self {
+        assert!(!candidates.is_empty(), "need at least the identity candidate");
+        let remaining = kernel.grid;
+        ShadedTree { kernel, candidates, remaining, inflight_blocks: 0, shards_cut: 0 }
+    }
+
+    pub fn kernel(&self) -> &KernelDesc {
+        &self.kernel
+    }
+
+    /// The top-ranked offline candidate (used by the static-sharding
+    /// ablation; the dynamic policy re-fits per carve instead).
+    pub fn first_candidate(&self) -> Candidate {
+        self.candidates[0]
+    }
+
+    /// Logical blocks still to dispatch.
+    pub fn remaining(&self) -> u32 {
+        self.remaining
+    }
+
+    /// All work dispatched (tree fully carved)?
+    pub fn fully_dispatched(&self) -> bool {
+        self.remaining == 0
+    }
+
+    /// All work dispatched *and* completed?
+    pub fn finished(&self) -> bool {
+        self.remaining == 0 && self.inflight_blocks == 0
+    }
+
+    pub fn shards_cut(&self) -> u32 {
+        self.shards_cut
+    }
+
+    /// Carve the next actual shard given current leftovers. Returns `None`
+    /// when nothing remains or nothing fits (the coordinator retries at the
+    /// next event). The policy (paper §7): the largest candidate shard that
+    /// respects Eq. 2 against the resident critical kernel; with no
+    /// critical work resident, the whole remainder goes out at the
+    /// original block size — "allocate all available resources".
+    pub fn next_shard(&mut self, left: &Leftover) -> Option<LaunchConfig> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let (blocks, threads) = if !left.critical_active {
+            // Run-alone fast path: identity geometry for the remainder.
+            (self.remaining, self.kernel.block_threads)
+        } else {
+            if left.blocks == 0 || left.threads == 0 {
+                return None;
+            }
+            // Largest-first fit over the ranked candidate lattice.
+            let fit = self
+                .candidates
+                .iter()
+                .filter(|c| {
+                    c.n_blocks <= left.blocks && c.block_threads <= left.threads
+                })
+                .max_by_key(|c| (c.n_blocks, c.block_threads))?;
+            (fit.n_blocks.min(self.remaining), fit.block_threads)
+        };
+        let frac = blocks as f64 / self.kernel.grid as f64;
+        self.remaining -= blocks;
+        self.inflight_blocks += blocks;
+        self.shards_cut += 1;
+        Some(LaunchConfig {
+            name: format!("{}#es{}", self.kernel.name, self.shards_cut - 1),
+            grid: blocks,
+            block_threads: threads.min(self.kernel.block_threads).max(1),
+            smem_per_block: self.kernel.smem_per_block.min(
+                ((self.kernel.smem_per_block as f64
+                    * (threads as f64 / self.kernel.block_threads as f64)
+                        .min(1.0))
+                    .ceil()) as u32,
+            ),
+            regs_per_thread: self.kernel.regs_per_thread,
+            flops: self.kernel.flops * frac,
+            bytes: self.kernel.bytes * frac,
+        })
+    }
+
+    /// Record completion of a previously carved shard.
+    pub fn shard_done(&mut self, grid: u32) {
+        assert!(grid <= self.inflight_blocks,
+                "completing more blocks than inflight");
+        self.inflight_blocks -= grid;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kernel(grid: u32) -> KernelDesc {
+        KernelDesc {
+            name: "n/k".into(),
+            grid,
+            block_threads: 256,
+            smem_per_block: 8192,
+            regs_per_thread: 32,
+            flops: 1e7,
+            bytes: 2e5,
+        }
+    }
+
+    fn cands() -> Vec<Candidate> {
+        vec![
+            Candidate { n_blocks: 16, block_threads: 256 },
+            Candidate { n_blocks: 8, block_threads: 128 },
+            Candidate { n_blocks: 4, block_threads: 64 },
+            Candidate { n_blocks: 2, block_threads: 32 },
+        ]
+    }
+
+    #[test]
+    fn no_critical_dispatches_identity_remainder() {
+        let mut t = ShadedTree::new(kernel(64), cands());
+        let l = Leftover { blocks: 0, threads: 0, critical_active: false };
+        let s = t.next_shard(&l).unwrap();
+        assert_eq!(s.grid, 64);
+        assert_eq!(s.block_threads, 256);
+        assert!(t.fully_dispatched());
+        assert!(!t.finished());
+        t.shard_done(64);
+        assert!(t.finished());
+    }
+
+    #[test]
+    fn critical_active_carves_fitting_shards() {
+        let mut t = ShadedTree::new(kernel(64), cands());
+        let l = Leftover { blocks: 10, threads: 200, critical_active: true };
+        // Largest fit: blocks<=10 & threads<=200 -> (8, 128).
+        let s = t.next_shard(&l).unwrap();
+        assert_eq!(s.grid, 8);
+        assert_eq!(s.block_threads, 128);
+        assert_eq!(t.remaining(), 56);
+        // Work fraction proportional to carved blocks.
+        assert!((s.flops - 1e7 * 8.0 / 64.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn tight_leftover_blocks_padding() {
+        let mut t = ShadedTree::new(kernel(64), cands());
+        let l = Leftover { blocks: 1, threads: 16, critical_active: true };
+        assert!(t.next_shard(&l).is_none(), "nothing fits");
+        assert_eq!(t.remaining(), 64);
+        let l2 = Leftover { blocks: 0, threads: 512, critical_active: true };
+        assert!(t.next_shard(&l2).is_none());
+    }
+
+    #[test]
+    fn shards_partition_grid() {
+        let mut t = ShadedTree::new(kernel(50), cands());
+        let l = Leftover { blocks: 16, threads: 512, critical_active: true };
+        let mut total = 0;
+        while let Some(s) = t.next_shard(&l) {
+            total += s.grid;
+        }
+        assert_eq!(total, 50);
+        assert!(t.fully_dispatched());
+    }
+
+    #[test]
+    fn tail_shard_clipped_to_remainder() {
+        let mut t = ShadedTree::new(kernel(10), cands());
+        let l = Leftover { blocks: 16, threads: 512, critical_active: true };
+        let s1 = t.next_shard(&l).unwrap();
+        assert_eq!(s1.grid, 10); // candidate 16 clipped to remaining 10
+        assert!(t.fully_dispatched());
+    }
+
+    #[test]
+    fn work_fraction_sums_to_total() {
+        let mut t = ShadedTree::new(kernel(64), cands());
+        let l = Leftover { blocks: 4, threads: 128, critical_active: true };
+        let mut flops = 0.0;
+        let mut bytes = 0.0;
+        while let Some(s) = t.next_shard(&l) {
+            flops += s.flops;
+            bytes += s.bytes;
+        }
+        assert!((flops - 1e7).abs() < 1e-3);
+        assert!((bytes - 2e5).abs() < 1e-6);
+    }
+
+    #[test]
+    #[should_panic(expected = "more blocks than inflight")]
+    fn over_completion_panics() {
+        let mut t = ShadedTree::new(kernel(8), cands());
+        t.shard_done(1);
+    }
+}

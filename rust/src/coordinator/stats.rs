@@ -1,0 +1,142 @@
+//! Per-run statistics: the three paper metrics (§8.1.4) — end-to-end
+//! critical-task latency, overall throughput, achieved occupancy — plus
+//! timelines and scheduling-overhead counters.
+
+use std::collections::HashMap;
+
+use crate::gpu::metrics::LaunchRecord;
+
+/// Outcome of one simulated run.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub scheduler: String,
+    pub workload: String,
+    pub platform: String,
+    /// End-to-end latency (us) of each completed critical task.
+    pub critical_latencies_us: Vec<f64>,
+    /// End-to-end latency (us) of each completed normal task.
+    pub normal_latencies_us: Vec<f64>,
+    /// Wall-clock span of the simulation (us).
+    pub span_us: f64,
+    /// Average achieved occupancy over active SM time, [0, 1].
+    pub achieved_occupancy: f64,
+    /// Achieved occupancy attributed per kernel name (Fig. 9).
+    pub per_name_occupancy: HashMap<String, f64>,
+    /// Full launch timeline (Fig. 9 upper).
+    pub timeline: Vec<LaunchRecord>,
+    /// Simulator events processed (perf counter).
+    pub events: u64,
+    /// Wall time the scheduler spent making decisions (ns) — the §8.6
+    /// scheduling-overhead metric, measured on the host.
+    pub sched_decision_ns: u64,
+    /// Number of scheduler decisions taken.
+    pub sched_decisions: u64,
+}
+
+fn quantile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+impl RunStats {
+    pub fn completed_critical(&self) -> usize {
+        self.critical_latencies_us.len()
+    }
+
+    pub fn completed_normal(&self) -> usize {
+        self.normal_latencies_us.len()
+    }
+
+    /// Overall throughput in requests/second (critical + normal, §8.1.4).
+    pub fn throughput_rps(&self) -> f64 {
+        if self.span_us <= 0.0 {
+            return 0.0;
+        }
+        (self.completed_critical() + self.completed_normal()) as f64
+            / (self.span_us / 1e6)
+    }
+
+    pub fn critical_latency_mean_us(&self) -> f64 {
+        mean(&self.critical_latencies_us)
+    }
+
+    pub fn critical_latency_p99_us(&self) -> f64 {
+        let mut v = self.critical_latencies_us.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        quantile(&v, 0.99)
+    }
+
+    pub fn critical_latency_quantile_us(&self, q: f64) -> f64 {
+        let mut v = self.critical_latencies_us.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        quantile(&v, q)
+    }
+
+    pub fn normal_latency_mean_us(&self) -> f64 {
+        mean(&self.normal_latencies_us)
+    }
+
+    /// Mean scheduler decision time in microseconds (§8.6).
+    pub fn sched_decision_mean_us(&self) -> f64 {
+        if self.sched_decisions == 0 {
+            return 0.0;
+        }
+        self.sched_decision_ns as f64 / self.sched_decisions as f64 / 1e3
+    }
+}
+
+fn mean(v: &[f64]) -> f64 {
+    if v.is_empty() {
+        f64::NAN
+    } else {
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_counts_both_classes() {
+        let s = RunStats {
+            critical_latencies_us: vec![1.0; 10],
+            normal_latencies_us: vec![1.0; 30],
+            span_us: 2e6,
+            ..Default::default()
+        };
+        assert!((s.throughput_rps() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles_interpolate() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert!((quantile(&v, 0.0) - 1.0).abs() < 1e-12);
+        assert!((quantile(&v, 1.0) - 4.0).abs() < 1e-12);
+        assert!((quantile(&v, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_latencies_are_nan_not_panic() {
+        let s = RunStats::default();
+        assert!(s.critical_latency_mean_us().is_nan());
+        assert!(s.critical_latency_p99_us().is_nan());
+        assert_eq!(s.throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn decision_overhead_mean() {
+        let s = RunStats {
+            sched_decision_ns: 3_000_000,
+            sched_decisions: 1000,
+            ..Default::default()
+        };
+        assert!((s.sched_decision_mean_us() - 3.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,75 @@
+//! Elastic block: persistent-thread block sizing (paper §6.1).
+//!
+//! The elastic block shrinks a kernel's resident thread count per block by
+//! switching from the default 1:1 logical-to-physical thread mapping to an
+//! N:1 mapping (persistent threads, Gupta et al. [10]). Admissible sizes
+//! range from one warp up to the original block size, in warp multiples —
+//! sub-warp blocks waste issue slots on real hardware, so they are pruned
+//! here the same way §6.3 prunes definitely-slow cases.
+
+/// Admissible elastic block sizes for an original block of
+/// `original_threads`, on hardware with `warp_size`-wide warps.
+/// Descending order (original size first — the "no transformation" point).
+pub fn block_size_options(original_threads: u32, warp_size: u32) -> Vec<u32> {
+    assert!(original_threads > 0);
+    if original_threads <= warp_size {
+        return vec![original_threads];
+    }
+    let mut sizes = Vec::new();
+    let mut s = original_threads - original_threads % warp_size;
+    if original_threads % warp_size != 0 {
+        sizes.push(original_threads); // ragged original stays admissible
+    }
+    while s >= warp_size {
+        sizes.push(s);
+        s -= warp_size;
+    }
+    sizes
+}
+
+/// Number of logical threads each persistent physical thread covers when an
+/// original `logical` thread count runs on `physical` threads (the N in the
+/// N:1 mapping). Ceiling division: the tail round is partially masked.
+pub fn persistence_factor(logical: u32, physical: u32) -> u32 {
+    assert!(physical > 0);
+    logical.div_ceil(physical)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn options_are_warp_multiples_descending() {
+        let opts = block_size_options(256, 32);
+        assert_eq!(opts.first(), Some(&256));
+        assert_eq!(opts.last(), Some(&32));
+        for w in opts.windows(2) {
+            assert!(w[0] > w[1]);
+            assert_eq!(w[1] % 32, 0);
+        }
+        assert_eq!(opts.len(), 8);
+    }
+
+    #[test]
+    fn small_blocks_keep_original_only() {
+        assert_eq!(block_size_options(17, 32), vec![17]);
+        assert_eq!(block_size_options(32, 32), vec![32]);
+    }
+
+    #[test]
+    fn ragged_original_included() {
+        let opts = block_size_options(100, 32);
+        assert!(opts.contains(&100));
+        assert!(opts.contains(&96));
+        assert!(opts.contains(&32));
+    }
+
+    #[test]
+    fn persistence() {
+        assert_eq!(persistence_factor(256, 256), 1);
+        assert_eq!(persistence_factor(256, 64), 4);
+        assert_eq!(persistence_factor(100, 32), 4); // ceil(100/32)
+        assert_eq!(persistence_factor(1, 32), 1);
+    }
+}

@@ -1,0 +1,138 @@
+//! Elastic-kernel candidates: one point of the (elastic grid x elastic
+//! block) design space — a "schedule" in the paper's §6.3 terminology.
+
+
+use crate::gpu::kernel::{KernelDesc, LaunchConfig};
+
+/// One elastic implementation pattern of a kernel: dispatch shards of
+/// `n_blocks` thread blocks (`N_blk_be`), each block running
+/// `block_threads` persistent threads (`S_blk_be`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Candidate {
+    /// Thread blocks per dispatched shard (`N_blk_be`, Table 1).
+    pub n_blocks: u32,
+    /// Threads per block (`S_blk_be`, Table 1).
+    pub block_threads: u32,
+}
+
+impl Candidate {
+    /// Number of shard launches needed to cover `kernel` at this candidate.
+    pub fn num_shards(&self, kernel: &KernelDesc) -> u32 {
+        kernel.grid.div_ceil(self.n_blocks)
+    }
+
+    /// The launch config of shard `idx` (0-based). The final shard may
+    /// carry fewer logical blocks; work (flops/bytes) is the covered
+    /// fraction of the kernel's totals — the persistent-thread transform
+    /// keeps per-logical-block work invariant while the physical geometry
+    /// shrinks (§6.1/§6.4).
+    pub fn shard_launch(&self, kernel: &KernelDesc, idx: u32) -> LaunchConfig {
+        let total = self.num_shards(kernel);
+        assert!(idx < total, "shard {idx} out of {total}");
+        let start = idx * self.n_blocks;
+        let blocks = self.n_blocks.min(kernel.grid - start);
+        let frac = blocks as f64 / kernel.grid as f64;
+        LaunchConfig {
+            name: format!("{}#s{}/{}", kernel.name, idx, total),
+            grid: blocks,
+            block_threads: self.block_threads.min(kernel.block_threads),
+            // Elastic transform never increases smem (§6.1): same per-block
+            // footprint, or smaller when fewer threads need fewer buffers.
+            smem_per_block: scale_smem(kernel, self.block_threads),
+            regs_per_thread: kernel.regs_per_thread,
+            flops: kernel.flops * frac,
+            bytes: kernel.bytes * frac,
+        }
+    }
+
+    /// All shard launches covering the kernel, in dispatch order.
+    pub fn launches(&self, kernel: &KernelDesc) -> Vec<LaunchConfig> {
+        (0..self.num_shards(kernel))
+            .map(|i| self.shard_launch(kernel, i))
+            .collect()
+    }
+}
+
+/// Shared memory of an elastic block: proportional to the thread ratio but
+/// never above the original (the §6.1 guarantee "equal to or less").
+fn scale_smem(kernel: &KernelDesc, block_threads: u32) -> u32 {
+    if kernel.block_threads == 0 {
+        return kernel.smem_per_block;
+    }
+    let ratio = block_threads as f64 / kernel.block_threads as f64;
+    ((kernel.smem_per_block as f64 * ratio.min(1.0)).ceil()) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kernel() -> KernelDesc {
+        KernelDesc {
+            name: "m/conv1".into(),
+            grid: 64,
+            block_threads: 256,
+            smem_per_block: 8192,
+            regs_per_thread: 32,
+            flops: 6.4e7,
+            bytes: 1.6e6,
+        }
+    }
+
+    #[test]
+    fn shards_cover_all_work_exactly() {
+        let k = kernel();
+        for c in [
+            Candidate { n_blocks: 64, block_threads: 256 },
+            Candidate { n_blocks: 16, block_threads: 128 },
+            Candidate { n_blocks: 7, block_threads: 32 }, // ragged tail
+        ] {
+            let launches = c.launches(&k);
+            let blocks: u32 = launches.iter().map(|l| l.grid).sum();
+            let flops: f64 = launches.iter().map(|l| l.flops).sum();
+            let bytes: f64 = launches.iter().map(|l| l.bytes).sum();
+            assert_eq!(blocks, k.grid, "{c:?}");
+            assert!((flops - k.flops).abs() < 1e-6 * k.flops, "{c:?}");
+            assert!((bytes - k.bytes).abs() < 1e-6 * k.bytes, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn identity_candidate_is_one_launch() {
+        let k = kernel();
+        let c = Candidate { n_blocks: k.grid, block_threads: k.block_threads };
+        let launches = c.launches(&k);
+        assert_eq!(launches.len(), 1);
+        assert_eq!(launches[0].grid, k.grid);
+        assert_eq!(launches[0].block_threads, k.block_threads);
+        assert_eq!(launches[0].smem_per_block, k.smem_per_block);
+    }
+
+    #[test]
+    fn smem_never_grows() {
+        let k = kernel();
+        for bt in [32, 64, 128, 256] {
+            let c = Candidate { n_blocks: 8, block_threads: bt };
+            for l in c.launches(&k) {
+                assert!(l.smem_per_block <= k.smem_per_block);
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_final_shard() {
+        let k = kernel(); // 64 blocks
+        let c = Candidate { n_blocks: 48, block_threads: 256 };
+        let launches = c.launches(&k);
+        assert_eq!(launches.len(), 2);
+        assert_eq!(launches[0].grid, 48);
+        assert_eq!(launches[1].grid, 16);
+    }
+
+    #[test]
+    fn block_threads_never_exceed_original() {
+        let k = kernel();
+        let c = Candidate { n_blocks: 8, block_threads: 1024 };
+        assert_eq!(c.shard_launch(&k, 0).block_threads, k.block_threads);
+    }
+}

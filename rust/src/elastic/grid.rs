@@ -1,0 +1,74 @@
+//! Elastic grid: the dichotomy slicing plan (paper Eq. 1).
+//!
+//! For a kernel with `M` thread blocks, the admissible shard sizes are
+//! `S(K) = (M/2^n, M/2^{n-1}, ..., M)` where `n` is the largest power of
+//! two dividing `M`. Slicing a kernel into independent launches of that
+//! size lets the GPU interleave critical kernels between shards,
+//! attacking *inter-SM* memory contention (§6.2).
+//!
+//! Mirrors `python/compile/kernels/elastic_matmul.py::slicing_plan` — the
+//! two implementations are kept in lock-step by tests on both sides.
+
+/// The dichotomy slicing plan `S(K)`: admissible shard sizes (in thread
+/// blocks), ascending. Always contains `m` itself; never empty.
+pub fn slicing_plan(m: u32) -> Vec<u32> {
+    assert!(m > 0, "kernel must have at least one block");
+    let mut n = 0u32;
+    while m % 2u32.pow(n + 1) == 0 {
+        n += 1;
+    }
+    (0..=n).rev().map(|i| m / 2u32.pow(i)).collect()
+}
+
+/// Number of shards when slicing `m` blocks at shard size `shard`
+/// (the sharding degree of the shaded binary tree is `log2(m/shard)`).
+pub fn num_shards(m: u32, shard: u32) -> u32 {
+    assert!(shard > 0 && m % shard == 0, "shard size must divide grid");
+    m / shard
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_paper_eq1_examples() {
+        assert_eq!(slicing_plan(8), vec![1, 2, 4, 8]);
+        assert_eq!(slicing_plan(7), vec![7]);
+        assert_eq!(slicing_plan(12), vec![3, 6, 12]);
+        assert_eq!(slicing_plan(1), vec![1]);
+    }
+
+    #[test]
+    fn plan_entries_divide_grid() {
+        for m in 1..=512 {
+            let plan = slicing_plan(m);
+            assert_eq!(*plan.last().unwrap(), m);
+            for s in plan {
+                assert_eq!(m % s, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_is_ascending_dichotomy() {
+        for m in 1..=256 {
+            let plan = slicing_plan(m);
+            for w in plan.windows(2) {
+                assert_eq!(w[1], w[0] * 2);
+            }
+        }
+    }
+
+    #[test]
+    fn shard_count() {
+        assert_eq!(num_shards(8, 2), 4);
+        assert_eq!(num_shards(12, 12), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn nondividing_shard_rejected() {
+        num_shards(8, 3);
+    }
+}

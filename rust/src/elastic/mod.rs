@@ -1,0 +1,77 @@
+//! Offline elastic-kernel generation (paper §6).
+//!
+//! * [`grid`] — elastic grid: dichotomy slicing plan `S(K)` (Eq. 1).
+//! * [`block`] — elastic block: persistent-thread sizes (§6.1).
+//! * [`candidate`] — one (N_blk_be, S_blk_be) schedule and its shard
+//!   launches.
+//! * [`shrink`] — Eq. 2 constraints + WIScore (Eq. 4) + OScore (Eq. 5)
+//!   design-space shrinking, top-20% keep (§6.3).
+//! * [`transformer`] — source-to-source transform metadata and the
+//!   computational-consistency verifier (§6.4).
+
+pub mod block;
+pub mod candidate;
+pub mod grid;
+pub mod shrink;
+pub mod transformer;
+
+
+pub use candidate::Candidate;
+pub use shrink::{CriticalProfile, ShrinkConfig, ShrunkSpace};
+
+use crate::gpu::kernel::KernelDesc;
+use crate::gpu::spec::GpuSpec;
+
+/// A kernel together with its offline-generated elastic candidates — the
+/// artifact Miriam's offline phase hands to the runtime coordinator.
+#[derive(Debug, Clone)]
+pub struct ElasticKernel {
+    pub kernel: KernelDesc,
+    /// Shrunk candidate set, best (highest WIScore*OScore) first.
+    pub candidates: Vec<Candidate>,
+}
+
+impl ElasticKernel {
+    /// Run the offline generator for one kernel against representative
+    /// critical profiles.
+    pub fn generate(kernel: KernelDesc, crits: &[CriticalProfile],
+                    spec: &GpuSpec, cfg: &ShrinkConfig) -> Self {
+        let shrunk = shrink::shrink_design_space(&kernel, crits, spec, cfg);
+        let mut candidates = shrunk.kept;
+        // Always keep the identity schedule as a fallback: when no critical
+        // kernel is resident the coordinator launches the original geometry.
+        let identity = Candidate {
+            n_blocks: kernel.grid,
+            block_threads: kernel.block_threads,
+        };
+        if !candidates.contains(&identity) {
+            candidates.push(identity);
+        }
+        ElasticKernel { kernel, candidates }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_includes_identity_fallback() {
+        let spec = GpuSpec::rtx2060();
+        let k = KernelDesc {
+            name: "t".into(),
+            grid: 64,
+            block_threads: 256,
+            smem_per_block: 0,
+            regs_per_thread: 32,
+            flops: 1e7,
+            bytes: 1e5,
+        };
+        let crits = [CriticalProfile { n_blk_rt: 45, s_blk_rt: 512 }];
+        let ek = ElasticKernel::generate(k.clone(), &crits, &spec,
+                                         &ShrinkConfig::default());
+        assert!(ek.candidates.iter().any(|c| c.n_blocks == k.grid
+            && c.block_threads == k.block_threads));
+        assert!(!ek.candidates.is_empty());
+    }
+}

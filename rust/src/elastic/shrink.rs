@@ -1,0 +1,261 @@
+//! Workload-balance-guided design-space shrinking (paper §6.3).
+//!
+//! The full (elastic grid x elastic block) space is huge (the paper counts
+//! 2.2e25 feasible schedules for AlexNet's conv kernels). Miriam prunes it
+//! offline with:
+//!
+//! * the two hard constraints of Eq. 2 (inter-SM block-count fit and
+//!   intra-SM thread fit against a representative critical co-runner),
+//! * `WIScore` (Eq. 4) — workload-imbalance metric in [0, 1],
+//! * `OScore` (Eq. 5) — a 0/1 launch-overhead gate,
+//!
+//! keeping the top `keep_frac` (paper: 20%) of candidates by
+//! `WIScore * OScore`.
+
+
+use crate::elastic::block::block_size_options;
+use crate::elastic::candidate::Candidate;
+use crate::elastic::grid::slicing_plan;
+use crate::gpu::kernel::KernelDesc;
+use crate::gpu::spec::GpuSpec;
+
+/// Launch geometry of a representative critical co-runner
+/// (`N_blk_rt`, `S_blk_rt` in Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CriticalProfile {
+    pub n_blk_rt: u32,
+    pub s_blk_rt: u32,
+}
+
+impl CriticalProfile {
+    pub fn from_kernel(k: &KernelDesc) -> Self {
+        CriticalProfile { n_blk_rt: k.grid, s_blk_rt: k.block_threads }
+    }
+}
+
+/// Shrinking configuration.
+#[derive(Debug, Clone)]
+pub struct ShrinkConfig {
+    /// Fraction of (feasible) candidates kept (paper §6.3: top 20%).
+    pub keep_frac: f64,
+    /// Maximum acceptable cumulative extra launch overhead per kernel, us
+    /// (the `MAX` bar of Eq. 5; §8.6 measures <15us per-launch padding
+    /// overheads, so the default allows a modest multiple of that).
+    pub max_overhead_us: f64,
+}
+
+impl Default for ShrinkConfig {
+    fn default() -> Self {
+        ShrinkConfig { keep_frac: 0.2, max_overhead_us: 200.0 }
+    }
+}
+
+/// Eq. 2, first constraint: shard block count must fit the SMs left after
+/// the critical kernel's partial wave (`N_blk_be <= N_SM - N_blk_rt mod
+/// N_SM`).
+pub fn fits_inter_sm(c: &Candidate, crit: &CriticalProfile, spec: &GpuSpec) -> bool {
+    let leftover = spec.num_sms - crit.n_blk_rt % spec.num_sms;
+    c.n_blocks <= leftover
+}
+
+/// Eq. 2, second constraint: elastic block threads must fit the intra-SM
+/// thread slots left by a resident critical block
+/// (`S_blk_be <= L_threads - S_blk_rt`).
+pub fn fits_intra_sm(c: &Candidate, crit: &CriticalProfile, spec: &GpuSpec) -> bool {
+    crit.s_blk_rt < spec.max_threads_per_sm
+        && c.block_threads <= spec.max_threads_per_sm - crit.s_blk_rt
+}
+
+/// Both Eq. 2 constraints.
+pub fn feasible(c: &Candidate, crit: &CriticalProfile, spec: &GpuSpec) -> bool {
+    fits_inter_sm(c, crit, spec) && fits_intra_sm(c, crit, spec)
+}
+
+/// `WIScore` (Eq. 4): workload-imbalance metric in [0, 1]; higher = the
+/// combined residency packs SMs more fully/evenly.
+/// `((N_blk_rt mod N_SM + N_blk_be) / N_SM) * ((S_blk_rt + S_blk_be) /
+/// L_threads)` — the paper's formula (its second term is printed with a
+/// typo, `S_blk_be + S_blk_be`; the surrounding text makes clear it
+/// combines the critical and elastic block sizes).
+pub fn wiscore(c: &Candidate, crit: &CriticalProfile, spec: &GpuSpec) -> f64 {
+    let blocks = (crit.n_blk_rt % spec.num_sms + c.n_blocks) as f64
+        / spec.num_sms as f64;
+    let threads = (crit.s_blk_rt + c.block_threads) as f64
+        / spec.max_threads_per_sm as f64;
+    (blocks * threads).clamp(0.0, 1.0)
+}
+
+/// `OScore` (Eq. 5): 1 if the cumulative extra launch overhead of the
+/// candidate's sharding stays under the acceptable bar, else 0. The extra
+/// overhead is `(num_shards - 1) * kernel_launch_us` — the launches the
+/// original (single-launch) kernel did not pay.
+pub fn oscore(c: &Candidate, kernel: &KernelDesc, spec: &GpuSpec,
+              max_overhead_us: f64) -> f64 {
+    let extra = (c.num_shards(kernel) as f64 - 1.0) * spec.kernel_launch_us;
+    if extra < max_overhead_us {
+        1.0
+    } else {
+        0.0
+    }
+}
+
+/// Result of shrinking one kernel's design space.
+#[derive(Debug, Clone)]
+pub struct ShrunkSpace {
+    /// Size of the full enumerated space.
+    pub total: usize,
+    /// Candidates surviving Eq. 2 + OScore, ranked by WIScore desc, top
+    /// `keep_frac` kept.
+    pub kept: Vec<Candidate>,
+    /// Pruned fraction in [0, 1] (Fig. 10 reports 84%–95.2%).
+    pub pruned_frac: f64,
+}
+
+/// Enumerate the (slicing plan x block sizes) space for `kernel` and shrink
+/// it against representative critical profiles (the best score across
+/// profiles is used — a candidate only needs one co-running context in
+/// which it packs well).
+pub fn shrink_design_space(kernel: &KernelDesc, crits: &[CriticalProfile],
+                           spec: &GpuSpec, cfg: &ShrinkConfig) -> ShrunkSpace {
+    let mut scored: Vec<(Candidate, f64)> = Vec::new();
+    let mut total = 0usize;
+    for n_blocks in slicing_plan(kernel.grid) {
+        for block_threads in block_size_options(kernel.block_threads,
+                                                spec.warp_size) {
+            let c = Candidate { n_blocks, block_threads };
+            total += 1;
+            let os = oscore(&c, kernel, spec, cfg.max_overhead_us);
+            if os == 0.0 {
+                continue;
+            }
+            // Best WIScore across the representative critical contexts the
+            // candidate is feasible for.
+            let best = crits
+                .iter()
+                .filter(|cr| feasible(&c, cr, spec))
+                .map(|cr| wiscore(&c, cr, spec))
+                .fold(f64::NEG_INFINITY, f64::max);
+            if best.is_finite() {
+                scored.push((c, best * os));
+            }
+        }
+    }
+    scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap()
+        .then_with(|| (a.0.n_blocks, a.0.block_threads)
+            .cmp(&(b.0.n_blocks, b.0.block_threads))));
+    let keep = ((scored.len() as f64 * cfg.keep_frac).ceil() as usize)
+        .max(1)
+        .min(scored.len());
+    let kept: Vec<Candidate> = scored.into_iter().take(keep).map(|s| s.0).collect();
+    let pruned_frac = if total > 0 {
+        1.0 - kept.len() as f64 / total as f64
+    } else {
+        0.0
+    };
+    ShrunkSpace { total, kept, pruned_frac }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kernel() -> KernelDesc {
+        KernelDesc {
+            name: "t/k".into(),
+            grid: 64,
+            block_threads: 256,
+            smem_per_block: 4096,
+            regs_per_thread: 32,
+            flops: 1e7,
+            bytes: 1e5,
+        }
+    }
+
+    fn crit() -> CriticalProfile {
+        CriticalProfile { n_blk_rt: 50, s_blk_rt: 512 }
+    }
+
+    #[test]
+    fn eq2_inter_sm() {
+        let spec = GpuSpec::rtx2060(); // 30 SMs
+        // 50 mod 30 = 20 resident-wave blocks; leftover = 10 SMs.
+        let cr = crit();
+        assert!(fits_inter_sm(&Candidate { n_blocks: 10, block_threads: 32 }, &cr, &spec));
+        assert!(!fits_inter_sm(&Candidate { n_blocks: 11, block_threads: 32 }, &cr, &spec));
+    }
+
+    #[test]
+    fn eq2_intra_sm() {
+        let spec = GpuSpec::rtx2060(); // 1024 threads/SM
+        let cr = crit(); // 512-thread critical blocks
+        assert!(fits_intra_sm(&Candidate { n_blocks: 1, block_threads: 512 }, &cr, &spec));
+        assert!(!fits_intra_sm(&Candidate { n_blocks: 1, block_threads: 513 }, &cr, &spec));
+        // Full-SM critical block leaves no room at all.
+        let full = CriticalProfile { n_blk_rt: 30, s_blk_rt: 1024 };
+        assert!(!fits_intra_sm(&Candidate { n_blocks: 1, block_threads: 1 }, &full, &spec));
+    }
+
+    #[test]
+    fn wiscore_in_unit_range_and_monotone() {
+        let spec = GpuSpec::rtx2060();
+        let cr = crit();
+        let small = wiscore(&Candidate { n_blocks: 1, block_threads: 32 }, &cr, &spec);
+        let big = wiscore(&Candidate { n_blocks: 10, block_threads: 512 }, &cr, &spec);
+        assert!(small >= 0.0 && small <= 1.0);
+        assert!(big >= 0.0 && big <= 1.0);
+        assert!(big > small, "fuller packing scores higher");
+    }
+
+    #[test]
+    fn oscore_gates_excessive_sharding() {
+        let spec = GpuSpec::rtx2060(); // 5us launch overhead
+        let k = kernel(); // 64 blocks
+        let cfg_max = 200.0;
+        // 64 shards of 1 block: extra overhead 63*5 = 315us > 200 -> 0.
+        assert_eq!(oscore(&Candidate { n_blocks: 1, block_threads: 32 }, &k, &spec, cfg_max), 0.0);
+        // 2 shards: 5us extra -> 1.
+        assert_eq!(oscore(&Candidate { n_blocks: 32, block_threads: 32 }, &k, &spec, cfg_max), 1.0);
+    }
+
+    #[test]
+    fn shrink_keeps_top_fraction() {
+        let spec = GpuSpec::rtx2060();
+        let k = kernel();
+        let out = shrink_design_space(&k, &[crit()], &spec,
+                                      &ShrinkConfig::default());
+        assert!(out.total > 0);
+        assert!(!out.kept.is_empty());
+        assert!(out.pruned_frac > 0.5, "pruned {}", out.pruned_frac);
+        // Everything kept satisfies Eq. 2 for the profile.
+        for c in &out.kept {
+            assert!(feasible(c, &crit(), &spec), "{c:?}");
+        }
+    }
+
+    #[test]
+    fn shrink_empty_when_nothing_feasible_keeps_none() {
+        let spec = GpuSpec::rtx2060();
+        let k = kernel();
+        // Critical occupies every thread slot: nothing fits intra-SM.
+        let full = CriticalProfile { n_blk_rt: 30, s_blk_rt: 1024 };
+        let out = shrink_design_space(&k, &[full], &spec,
+                                      &ShrinkConfig::default());
+        assert!(out.kept.is_empty());
+        assert!((out.pruned_frac - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_fig10_range_on_representative_kernels() {
+        // Pruned fraction should land in the order of Fig. 10's 84–95.2%
+        // (top-20% keep of the feasible subset of the full space).
+        let spec = GpuSpec::rtx2060();
+        let k = KernelDesc { grid: 128, block_threads: 512, ..kernel() };
+        let crits = [
+            CriticalProfile { n_blk_rt: 40, s_blk_rt: 256 },
+            CriticalProfile { n_blk_rt: 75, s_blk_rt: 128 },
+        ];
+        let out = shrink_design_space(&k, &crits, &spec, &ShrinkConfig::default());
+        assert!(out.pruned_frac >= 0.8, "pruned {}", out.pruned_frac);
+        assert!(out.pruned_frac < 1.0);
+    }
+}

@@ -1,0 +1,197 @@
+//! The source-to-source kernel transformer, descriptor side (paper §6.4).
+//!
+//! On real CUDA, Miriam rewrites kernel source so grid/block sizes become
+//! free knobs: physical thread identities (`blockIdx`, `threadIdx`) are
+//! replaced by *logical* equivalents computed from a global thread
+//! identifier, so any physical geometry covers the same logical iteration
+//! space. Our compute path realizes the same transform in Pallas
+//! (`python/compile/kernels/elastic_matmul.py::matmul_persistent`); this
+//! module is the scheduling-side twin: it constructs the logical→physical
+//! remapping for an elastic shard and *proves* (by exhaustive check in
+//! tests, and a verifier callable from proptests) that the remap is a
+//! partition of the original work — the paper's computational-consistency
+//! guarantee.
+
+use crate::gpu::kernel::KernelDesc;
+
+/// The logical→physical mapping of one elastic shard.
+///
+/// Logical space: blocks `[logical_start, logical_start+logical_blocks)` of
+/// the original kernel, each with `logical_threads` logical threads.
+/// Physical space: `phys_blocks` blocks of `phys_threads` persistent
+/// threads. Assignment is grid-strided in both dimensions, mirroring the
+/// generated CUDA/Pallas code.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ElasticMapping {
+    pub logical_start: u32,
+    pub logical_blocks: u32,
+    pub logical_threads: u32,
+    pub phys_blocks: u32,
+    pub phys_threads: u32,
+}
+
+impl ElasticMapping {
+    /// Build the mapping for shard `idx` when a kernel is elasticized to
+    /// shards of `n_blocks` physical blocks x `block_threads` threads.
+    ///
+    /// Physical blocks equal logical blocks per shard (the elastic-grid
+    /// transform slices, it does not merge); the persistent-thread N:1
+    /// mapping happens inside the block (threads).
+    pub fn for_shard(kernel: &KernelDesc, n_blocks: u32, block_threads: u32,
+                     idx: u32) -> Self {
+        let start = idx * n_blocks;
+        assert!(start < kernel.grid, "shard start beyond grid");
+        let blocks = n_blocks.min(kernel.grid - start);
+        ElasticMapping {
+            logical_start: start,
+            logical_blocks: blocks,
+            logical_threads: kernel.block_threads,
+            phys_blocks: blocks,
+            phys_threads: block_threads.min(kernel.block_threads),
+        }
+    }
+
+    /// Logical (block, thread) pairs owned by physical (pb, pt).
+    /// Grid-stride within the block: pt covers logical threads
+    /// pt, pt+phys_threads, ... (the N:1 persistent mapping).
+    pub fn assignments(&self, pb: u32, pt: u32) -> Vec<(u32, u32)> {
+        assert!(pb < self.phys_blocks && pt < self.phys_threads);
+        let lb = self.logical_start + pb; // 1:1 at block granularity
+        (pt..self.logical_threads)
+            .step_by(self.phys_threads as usize)
+            .map(move |lt| (lb, lt))
+            .collect()
+    }
+
+    /// Verify the mapping covers every logical (block, thread) of the
+    /// shard exactly once. This is the §6.4 consistency theorem for the
+    /// descriptor side; the Pallas tests verify it for real numerics.
+    pub fn covers_exactly_once(&self) -> bool {
+        let total = (self.logical_blocks as usize)
+            * (self.logical_threads as usize);
+        let mut seen = vec![false; total];
+        for pb in 0..self.phys_blocks {
+            for pt in 0..self.phys_threads {
+                for (lb, lt) in self.assignments(pb, pt) {
+                    let rel = (lb - self.logical_start) as usize;
+                    let i = rel * self.logical_threads as usize + lt as usize;
+                    if seen[i] {
+                        return false; // duplicated work
+                    }
+                    seen[i] = true;
+                }
+            }
+        }
+        seen.into_iter().all(|s| s)
+    }
+
+    /// The persistence factor N of the N:1 thread mapping.
+    pub fn persistence(&self) -> u32 {
+        self.logical_threads.div_ceil(self.phys_threads)
+    }
+}
+
+/// Build and verify all shard mappings for an elastic configuration;
+/// returns the mappings or an error description. This is what the offline
+/// generator runs per candidate — rejecting any transform that would break
+/// computational consistency (none can, by construction, but the check is
+/// cheap and guards future edits).
+pub fn transform(kernel: &KernelDesc, n_blocks: u32, block_threads: u32)
+                 -> Result<Vec<ElasticMapping>, String> {
+    if n_blocks == 0 || block_threads == 0 {
+        return Err("elastic geometry must be positive".into());
+    }
+    let shards = kernel.grid.div_ceil(n_blocks);
+    let maps: Vec<ElasticMapping> = (0..shards)
+        .map(|i| ElasticMapping::for_shard(kernel, n_blocks, block_threads, i))
+        .collect();
+    // Shards must partition the kernel's logical blocks.
+    let covered: u32 = maps.iter().map(|m| m.logical_blocks).sum();
+    if covered != kernel.grid {
+        return Err(format!("shards cover {covered} of {} blocks", kernel.grid));
+    }
+    for (i, m) in maps.iter().enumerate() {
+        if !m.covers_exactly_once() {
+            return Err(format!("shard {i} breaks thread-level consistency"));
+        }
+    }
+    Ok(maps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kernel(grid: u32, threads: u32) -> KernelDesc {
+        KernelDesc {
+            name: "t/k".into(),
+            grid,
+            block_threads: threads,
+            smem_per_block: 0,
+            regs_per_thread: 16,
+            flops: 1e6,
+            bytes: 1e4,
+        }
+    }
+
+    #[test]
+    fn identity_mapping_covers() {
+        let k = kernel(8, 64);
+        let maps = transform(&k, 8, 64).unwrap();
+        assert_eq!(maps.len(), 1);
+        assert_eq!(maps[0].persistence(), 1);
+    }
+
+    #[test]
+    fn persistent_threads_cover() {
+        let k = kernel(8, 64);
+        for bt in [1, 3, 16, 32, 63, 64] {
+            let maps = transform(&k, 4, bt).unwrap();
+            assert_eq!(maps.len(), 2);
+            for m in &maps {
+                assert!(m.covers_exactly_once(), "bt={bt}");
+            }
+        }
+    }
+
+    #[test]
+    fn ragged_grid_cover() {
+        let k = kernel(13, 96);
+        let maps = transform(&k, 4, 32).unwrap();
+        assert_eq!(maps.len(), 4); // 4+4+4+1
+        assert_eq!(maps[3].logical_blocks, 1);
+        for m in maps {
+            assert!(m.covers_exactly_once());
+        }
+    }
+
+    #[test]
+    fn persistence_factor() {
+        let k = kernel(4, 100);
+        let maps = transform(&k, 4, 32).unwrap();
+        assert_eq!(maps[0].persistence(), 4); // ceil(100/32)
+    }
+
+    #[test]
+    fn zero_geometry_rejected() {
+        let k = kernel(4, 32);
+        assert!(transform(&k, 0, 32).is_err());
+        assert!(transform(&k, 4, 0).is_err());
+    }
+
+    #[test]
+    fn assignment_strides_are_disjoint_across_threads() {
+        let m = ElasticMapping {
+            logical_start: 0,
+            logical_blocks: 1,
+            logical_threads: 10,
+            phys_blocks: 1,
+            phys_threads: 3,
+        };
+        let a0 = m.assignments(0, 0);
+        let a1 = m.assignments(0, 1);
+        assert_eq!(a0, vec![(0, 0), (0, 3), (0, 6), (0, 9)]);
+        assert_eq!(a1, vec![(0, 1), (0, 4), (0, 7)]);
+        assert!(m.covers_exactly_once());
+    }
+}

@@ -1,0 +1,262 @@
+//! The contention/rate model: how fast each resident block progresses.
+//!
+//! This encodes the paper's §4 taxonomy directly:
+//!
+//! * **intra-SM contention** — blocks co-resident on one SM compete for
+//!   issue bandwidth/execution units. A block's standalone compute demand
+//!   is `cap * min(1, (threads/max_threads) * latency_hiding)`: with enough
+//!   warps (1/latency_hiding of the SM's thread slots) a DNN block can
+//!   saturate the SM's FP units alone. When co-residents' demands
+//!   oversubscribe the SM, everyone is scaled down proportionally.
+//!   Additionally, blocks from *different kernels* sharing an SM interfere
+//!   beyond slot arithmetic (L1/texture/shared-memory bank conflicts,
+//!   divergent instruction mixes): each block pays a penalty scaling with
+//!   the *thread share foreign kernels hold on its SM* — which is exactly
+//!   the quantity Miriam's elastic blocks shrink (§6.1).
+//! * **inter-SM contention** — all resident blocks on *all* SMs share DRAM
+//!   bandwidth. Each block needs `bytes/flops * compute_rate` of bandwidth
+//!   to keep pace (balanced roofline); when total demand exceeds the
+//!   spec's bandwidth, memory-bound progress scales down globally.
+//!
+//! Between simulator events the rates are constant, so block completion
+//! times are exact.
+
+use crate::gpu::spec::GpuSpec;
+
+/// Tunable model parameters (calibration recorded in EXPERIMENTS.md §Calib).
+#[derive(Debug, Clone)]
+pub struct ContentionParams {
+    /// How over-subscribable SM compute is w.r.t. thread share: a block
+    /// with `max_threads/latency_hiding` threads can saturate the SM alone.
+    pub latency_hiding: f64,
+    /// Strength of cross-kernel intra-SM interference: a block whose SM is
+    /// fraction `f` occupied by *foreign-kernel* threads runs at
+    /// `1 / (1 + alpha * f)` of its entitled rate.
+    pub foreign_interference: f64,
+}
+
+impl Default for ContentionParams {
+    fn default() -> Self {
+        ContentionParams { latency_hiding: 3.0, foreign_interference: 3.0 }
+    }
+}
+
+/// Per-block inputs to the rate computation.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockWork {
+    /// SM the block is resident on.
+    pub sm: u32,
+    /// Threads in the block.
+    pub threads: u32,
+    /// FLOPs per block (total for the block).
+    pub flops: f64,
+    /// DRAM bytes per block.
+    pub bytes: f64,
+    /// Distinguishes which kernel the block belongs to (for the foreign-
+    /// interference term); typically the launch tag.
+    pub kernel: u64,
+}
+
+/// Compute the instantaneous progress rate (FLOP/us of the block's own
+/// work) for every resident block. Output order matches input order.
+pub fn block_rates(spec: &GpuSpec, params: &ContentionParams,
+                   blocks: &[BlockWork]) -> Vec<f64> {
+    let n_sms = spec.num_sms as usize;
+    // Pass 1: per-SM compute-demand sums and per-(SM, kernel) thread sums.
+    let mut sm_demand = vec![0.0f64; n_sms];
+    let mut sm_threads = vec![0u32; n_sms];
+    // (sm, kernel) -> threads; small linear maps (few kernels per SM).
+    let mut sm_kernel_threads: Vec<Vec<(u64, u32)>> = vec![Vec::new(); n_sms];
+    let mut demands = Vec::with_capacity(blocks.len());
+    for b in blocks {
+        let share = (b.threads as f64 / spec.max_threads_per_sm as f64)
+            * params.latency_hiding;
+        let demand = spec.flops_per_sm_us * share.min(1.0);
+        demands.push(demand);
+        let s = b.sm as usize;
+        sm_demand[s] += demand;
+        sm_threads[s] += b.threads;
+        match sm_kernel_threads[s].iter_mut().find(|(k, _)| *k == b.kernel) {
+            Some((_, t)) => *t += b.threads,
+            None => sm_kernel_threads[s].push((b.kernel, b.threads)),
+        }
+    }
+    // Pass 2: intra-SM scaling + foreign-interference -> compute rate.
+    let mut compute_rate = Vec::with_capacity(blocks.len());
+    for (b, demand) in blocks.iter().zip(&demands) {
+        let s = b.sm as usize;
+        let scale = if sm_demand[s] > spec.flops_per_sm_us {
+            spec.flops_per_sm_us / sm_demand[s]
+        } else {
+            1.0
+        };
+        let own: u32 = sm_kernel_threads[s]
+            .iter()
+            .find(|(k, _)| *k == b.kernel)
+            .map(|(_, t)| *t)
+            .unwrap_or(0);
+        let foreign_frac = (sm_threads[s] - own) as f64
+            / spec.max_threads_per_sm as f64;
+        let penalty = 1.0 / (1.0 + params.foreign_interference * foreign_frac);
+        compute_rate.push(demand * scale * penalty);
+    }
+    // Pass 3: global bandwidth demand (inter-SM contention).
+    let mut total_bw_demand = 0.0;
+    for (b, cr) in blocks.iter().zip(&compute_rate) {
+        if b.bytes > 0.0 && b.flops > 0.0 {
+            total_bw_demand += cr * b.bytes / b.flops;
+        }
+    }
+    let bw_scale = if total_bw_demand > spec.dram_bw_bytes_us {
+        spec.dram_bw_bytes_us / total_bw_demand
+    } else {
+        1.0
+    };
+    // Pass 4: final progress rate. Memory-bound blocks are scaled by the
+    // global factor; pure-compute blocks are not.
+    blocks
+        .iter()
+        .zip(&compute_rate)
+        .map(|(b, cr)| {
+            if b.bytes > 0.0 && b.flops > 0.0 {
+                cr * bw_scale
+            } else {
+                *cr
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> GpuSpec {
+        GpuSpec::rtx2060()
+    }
+
+    fn blk(sm: u32, threads: u32, flops: f64, bytes: f64, kernel: u64) -> BlockWork {
+        BlockWork { sm, threads, flops, bytes, kernel }
+    }
+
+    fn no_foreign() -> ContentionParams {
+        ContentionParams { foreign_interference: 0.0, ..Default::default() }
+    }
+
+    #[test]
+    fn solo_small_block_rate_is_thread_share() {
+        let s = spec();
+        // 128/1024 threads * 3.0 hiding = 0.375 of SM peak.
+        let r = block_rates(&s, &no_foreign(), &[blk(0, 128, 1e6, 0.0, 1)]);
+        assert!((r[0] - s.flops_per_sm_us * 0.375).abs() < 1e-6);
+    }
+
+    #[test]
+    fn solo_large_block_saturates_sm() {
+        let s = spec();
+        // 512/1024 * 3 = 1.5 -> clamped at 1.0.
+        let r = block_rates(&s, &no_foreign(), &[blk(0, 512, 1e6, 0.0, 1)]);
+        assert!((r[0] - s.flops_per_sm_us).abs() < 1e-6);
+    }
+
+    #[test]
+    fn intra_sm_oversubscription_scales_down() {
+        let s = spec();
+        // Two 512-thread blocks of the same kernel: demands 1.0 + 1.0 ->
+        // each gets 0.5, no foreign penalty.
+        let p = ContentionParams::default();
+        let r = block_rates(&s, &p, &[
+            blk(0, 512, 1e6, 0.0, 1),
+            blk(0, 512, 1e6, 0.0, 1),
+        ]);
+        assert!((r[0] - s.flops_per_sm_us * 0.5).abs() < 1e-6);
+        assert!((r[1] - s.flops_per_sm_us * 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn different_sms_do_not_compute_contend() {
+        let s = spec();
+        let r = block_rates(&s, &ContentionParams::default(), &[
+            blk(0, 512, 1e6, 0.0, 1),
+            blk(1, 512, 1e6, 0.0, 2),
+        ]);
+        assert!((r[0] - s.flops_per_sm_us).abs() < 1e-6);
+        assert!((r[1] - s.flops_per_sm_us).abs() < 1e-6);
+    }
+
+    #[test]
+    fn foreign_threads_penalize_both_kernels() {
+        let s = spec();
+        let p = ContentionParams { latency_hiding: 3.0, foreign_interference: 2.0 };
+        // Same-kernel pair: pure slot sharing.
+        let same = block_rates(&s, &p, &[
+            blk(0, 512, 1e6, 0.0, 1),
+            blk(0, 512, 1e6, 0.0, 1),
+        ]);
+        // Cross-kernel pair: extra interference, foreign frac = 0.5 each.
+        let diff = block_rates(&s, &p, &[
+            blk(0, 512, 1e6, 0.0, 1),
+            blk(0, 512, 1e6, 0.0, 2),
+        ]);
+        assert!(diff[0] < same[0]);
+        // penalty = 1/(1 + 2.0 * 512/1024) = 0.5
+        assert!((same[0] / diff[0] - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn smaller_foreign_blocks_interfere_less() {
+        // The heart of the elastic-block mechanism: shrinking the padded
+        // kernel's block threads reduces the critical block's penalty.
+        let s = spec();
+        let p = ContentionParams::default();
+        let with_big = block_rates(&s, &p, &[
+            blk(0, 512, 1e6, 0.0, 1), // critical
+            blk(0, 512, 1e6, 0.0, 2), // fat normal block
+        ]);
+        let with_small = block_rates(&s, &p, &[
+            blk(0, 512, 1e6, 0.0, 1), // critical
+            blk(0, 128, 1e6, 0.0, 2), // elastic normal block
+        ]);
+        assert!(with_small[0] > with_big[0],
+                "critical rate should improve with smaller co-resident: {} vs {}",
+                with_small[0], with_big[0]);
+    }
+
+    #[test]
+    fn bandwidth_oversubscription_slows_memory_bound_blocks() {
+        let s = spec();
+        // Very memory-hungry blocks on different SMs: intensity 0.1 FLOP/B.
+        let blocks: Vec<_> = (0..4)
+            .map(|i| blk(i, 512, 1e5, 1e6, i as u64 + 1))
+            .collect();
+        let r = block_rates(&s, &no_foreign(), &blocks);
+        let solo = block_rates(&s, &no_foreign(), &blocks[..1]);
+        assert!(r[0] < solo[0]);
+        // Total consumed bandwidth equals the spec's bandwidth.
+        let total_bw: f64 = r.iter().map(|cr| cr * 1e6 / 1e5).sum();
+        assert!((total_bw - s.dram_bw_bytes_us).abs() / s.dram_bw_bytes_us < 1e-9);
+    }
+
+    #[test]
+    fn pure_compute_blocks_ignore_bandwidth_pressure() {
+        let s = spec();
+        let r = block_rates(&s, &no_foreign(), &[
+            blk(0, 512, 1e5, 1e7, 1), // bw hog
+            blk(1, 512, 1e6, 0.0, 2), // pure compute
+        ]);
+        assert!((r[1] - s.flops_per_sm_us).abs() < 1e-6);
+        assert!(r[0] < s.flops_per_sm_us);
+    }
+
+    #[test]
+    fn rates_always_positive() {
+        let s = spec();
+        let p = ContentionParams::default();
+        let blocks: Vec<_> = (0..64)
+            .map(|i| blk(i % s.num_sms, 1 + (i % 512), 1.0 + i as f64, i as f64, i as u64))
+            .collect();
+        for r in block_rates(&s, &p, &blocks) {
+            assert!(r > 0.0);
+        }
+    }
+}

@@ -1,0 +1,148 @@
+//! Kernel descriptors and launch configurations.
+//!
+//! A [`KernelDesc`] is the simulator's view of one GPU kernel: its launch
+//! geometry (grid x block) plus aggregate work (FLOPs, DRAM bytes) and
+//! per-block resource demands. Miriam never inspects kernel *code* at
+//! runtime — only launch geometry and occupancy (paper §6) — so descriptors
+//! expose exactly the interface the real system consumes.
+
+
+/// Task criticality (paper §4: critical tasks have hard real-time
+/// requirements; normal tasks run best-effort).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Criticality {
+    Critical,
+    Normal,
+}
+
+/// Static description of a GPU kernel as authored/compiled (before any
+/// elastic transformation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelDesc {
+    /// Kernel name, e.g. "alexnet/conv2".
+    pub name: String,
+    /// Number of thread blocks in the grid.
+    pub grid: u32,
+    /// Threads per block.
+    pub block_threads: u32,
+    /// Shared memory per block, bytes.
+    pub smem_per_block: u32,
+    /// Registers per thread.
+    pub regs_per_thread: u32,
+    /// Total kernel FLOPs.
+    pub flops: f64,
+    /// Total DRAM traffic in bytes (reads + writes past the cache).
+    pub bytes: f64,
+}
+
+impl KernelDesc {
+    /// FLOPs carried by one thread block.
+    pub fn flops_per_block(&self) -> f64 {
+        self.flops / self.grid as f64
+    }
+
+    /// DRAM bytes carried by one thread block.
+    pub fn bytes_per_block(&self) -> f64 {
+        self.bytes / self.grid as f64
+    }
+
+    /// Arithmetic intensity (FLOP/byte) — decides whether the kernel is
+    /// compute- or memory-bound on a given spec (the "contention channel"
+    /// of DeepEye/Abacus the paper contrasts with).
+    pub fn arithmetic_intensity(&self) -> f64 {
+        if self.bytes > 0.0 {
+            self.flops / self.bytes
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+/// A concrete launch: some (possibly elastic-transformed) geometry carrying
+/// a slice of a kernel's work. For an untransformed kernel this is the
+/// identity mapping of its [`KernelDesc`]; for an elastic shard, `grid` and
+/// `block_threads` come from the coordinator and `flops`/`bytes` are the
+/// covered fraction of the logical work (persistent-thread N:1 mapping,
+/// paper §6.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaunchConfig {
+    /// Name (inherits the kernel's, plus a shard suffix).
+    pub name: String,
+    /// Physical thread blocks to dispatch.
+    pub grid: u32,
+    /// Threads per physical block.
+    pub block_threads: u32,
+    /// Shared memory per block, bytes.
+    pub smem_per_block: u32,
+    /// Registers per thread.
+    pub regs_per_thread: u32,
+    /// FLOPs this launch performs.
+    pub flops: f64,
+    /// DRAM bytes this launch moves.
+    pub bytes: f64,
+}
+
+impl LaunchConfig {
+    /// The identity launch of an untransformed kernel.
+    pub fn from_kernel(k: &KernelDesc) -> Self {
+        LaunchConfig {
+            name: k.name.clone(),
+            grid: k.grid,
+            block_threads: k.block_threads,
+            smem_per_block: k.smem_per_block,
+            regs_per_thread: k.regs_per_thread,
+            flops: k.flops,
+            bytes: k.bytes,
+        }
+    }
+
+    pub fn flops_per_block(&self) -> f64 {
+        self.flops / self.grid as f64
+    }
+
+    pub fn bytes_per_block(&self) -> f64 {
+        self.bytes / self.grid as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k() -> KernelDesc {
+        KernelDesc {
+            name: "t/conv".into(),
+            grid: 64,
+            block_threads: 256,
+            smem_per_block: 8192,
+            regs_per_thread: 32,
+            flops: 6.4e6,
+            bytes: 3.2e5,
+        }
+    }
+
+    #[test]
+    fn per_block_work_partitions_total() {
+        let k = k();
+        assert!((k.flops_per_block() * k.grid as f64 - k.flops).abs() < 1e-6);
+        assert!((k.bytes_per_block() * k.grid as f64 - k.bytes).abs() < 1e-6);
+    }
+
+    #[test]
+    fn intensity() {
+        let k = k();
+        assert!((k.arithmetic_intensity() - 20.0).abs() < 1e-9);
+        let pure = KernelDesc { bytes: 0.0, ..k };
+        assert!(pure.arithmetic_intensity().is_infinite());
+    }
+
+    #[test]
+    fn identity_launch_preserves_work() {
+        let k = k();
+        let l = LaunchConfig::from_kernel(&k);
+        assert_eq!(l.grid, k.grid);
+        assert_eq!(l.block_threads, k.block_threads);
+        assert_eq!(l.flops, k.flops);
+        assert_eq!(l.bytes, k.bytes);
+    }
+}

@@ -1,0 +1,122 @@
+//! Simulation metrics: achieved occupancy, timelines, per-kernel stats.
+
+use std::collections::HashMap;
+
+use crate::gpu::kernel::Criticality;
+use crate::gpu::spec::GpuSpec;
+use crate::gpu::stream::{LaunchTag, StreamId};
+
+/// Completed-launch record (one row of the Fig. 9 timeline).
+#[derive(Debug, Clone)]
+pub struct LaunchRecord {
+    pub tag: LaunchTag,
+    pub name: String,
+    pub stream: StreamId,
+    pub criticality: Criticality,
+    /// Submission time (us).
+    pub submit_us: f64,
+    /// First block dispatched (us).
+    pub start_us: f64,
+    /// Last block completed (us).
+    pub end_us: f64,
+}
+
+impl LaunchRecord {
+    /// Queueing + execution latency of the launch.
+    pub fn latency_us(&self) -> f64 {
+        self.end_us - self.submit_us
+    }
+}
+
+/// Occupancy accounting (paper §8.1.4):
+/// `achieved = (active_warp·time / active_time) / max_warps_per_sm`
+/// where `active_time` sums over SM-time with >= 1 resident block.
+#[derive(Debug, Clone, Default)]
+pub struct OccupancyAccum {
+    /// Integral over time of total active warps (warp·us across all SMs).
+    pub warp_time: f64,
+    /// Integral over time of number of active SMs (SM·us).
+    pub active_sm_time: f64,
+    /// Per-kernel-name warp·us attribution (Fig. 9 layer-wise occupancy).
+    pub per_name_warp_time: HashMap<String, f64>,
+    /// Per-kernel-name active window (us of sim time the name had >= 1
+    /// resident block).
+    pub per_name_active_time: HashMap<String, f64>,
+}
+
+impl OccupancyAccum {
+    /// Average achieved occupancy over the active window.
+    pub fn achieved(&self, spec: &GpuSpec) -> f64 {
+        if self.active_sm_time <= 0.0 {
+            return 0.0;
+        }
+        (self.warp_time / self.active_sm_time) / spec.max_warps_per_sm() as f64
+    }
+
+    /// Achieved occupancy attributed to a single kernel name: the average
+    /// fraction of the *whole GPU's* warp budget this kernel's blocks held
+    /// while the kernel was live (warp·time spans all SMs, so the
+    /// denominator is `max_warps_per_sm * num_sms`).
+    pub fn achieved_for(&self, spec: &GpuSpec, name: &str) -> f64 {
+        let wt = self.per_name_warp_time.get(name).copied().unwrap_or(0.0);
+        let at = self.per_name_active_time.get(name).copied().unwrap_or(0.0);
+        if at <= 0.0 {
+            return 0.0;
+        }
+        (wt / at)
+            / (spec.max_warps_per_sm() as f64 * spec.num_sms as f64)
+    }
+}
+
+/// Everything a simulation run reports.
+#[derive(Debug, Clone, Default)]
+pub struct SimMetrics {
+    pub records: Vec<LaunchRecord>,
+    pub occupancy: OccupancyAccum,
+    /// Total simulated time (us).
+    pub sim_time_us: f64,
+    /// Number of block-level events processed (perf counter).
+    pub events: u64,
+}
+
+impl SimMetrics {
+    pub fn records_for(&self, crit: Criticality) -> impl Iterator<Item = &LaunchRecord> {
+        self.records.iter().filter(move |r| r.criticality == crit)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_zero_when_never_active() {
+        let acc = OccupancyAccum::default();
+        assert_eq!(acc.achieved(&GpuSpec::rtx2060()), 0.0);
+        assert_eq!(acc.achieved_for(&GpuSpec::rtx2060(), "x"), 0.0);
+    }
+
+    #[test]
+    fn occupancy_full() {
+        let spec = GpuSpec::rtx2060();
+        let mut acc = OccupancyAccum::default();
+        // All 30 SMs active for 10us, each holding max warps.
+        acc.active_sm_time = 300.0;
+        acc.warp_time = 300.0 * spec.max_warps_per_sm() as f64;
+        assert!((acc.achieved(&spec) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_is_end_minus_submit() {
+        let r = LaunchRecord {
+            tag: 1,
+            name: "k".into(),
+            stream: 0,
+            criticality: Criticality::Critical,
+            submit_us: 10.0,
+            start_us: 15.0,
+            end_us: 42.0,
+        };
+        assert!((r.latency_us() - 32.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,30 @@
+//! The edge-GPU simulator substrate.
+//!
+//! The paper evaluates on physical CUDA devices (RTX 2060, Jetson AGX
+//! Xavier); this environment has none, so the whole CUDA execution model
+//! the paper relies on — SMs with thread/smem/register/block-slot budgets,
+//! a priority block dispatcher, FIFO streams, intra-SM issue contention and
+//! inter-SM DRAM-bandwidth contention — is implemented here as a
+//! discrete-event simulator (see DESIGN.md "Hardware substitution").
+//!
+//! * [`spec`] — hardware presets (RTX 2060 / Xavier / TX2).
+//! * [`kernel`] — kernel descriptors and launch configurations.
+//! * [`sm`] — per-SM resource ledger (dispatch admission).
+//! * [`stream`] — FIFO priority streams.
+//! * [`contention`] — the intra-/inter-SM rate model.
+//! * [`engine`] — the event loop.
+//! * [`metrics`] — achieved occupancy, timelines.
+
+pub mod contention;
+pub mod engine;
+pub mod kernel;
+pub mod metrics;
+pub mod sm;
+pub mod spec;
+pub mod stream;
+
+pub use engine::{Completion, Engine, GpuSnapshot};
+pub use kernel::{Criticality, KernelDesc, LaunchConfig};
+pub use metrics::{LaunchRecord, SimMetrics};
+pub use spec::GpuSpec;
+pub use stream::{LaunchTag, StreamId};

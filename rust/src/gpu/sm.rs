@@ -1,0 +1,150 @@
+//! Per-SM resource ledger.
+//!
+//! Tracks the four budgets that decide whether a thread block can be
+//! dispatched to an SM (paper §3 "Kernel Execution on GPU"): thread slots,
+//! shared memory, registers, and block slots. Exhaustion of any budget
+//! forces the block to queue — the *inter-SM* wait component of kernel
+//! latency (§4).
+
+use crate::gpu::spec::GpuSpec;
+
+/// Resource demand of one thread block.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BlockDemand {
+    pub threads: u32,
+    pub smem: u32,
+    pub regs: u32, // total registers = regs_per_thread * threads
+}
+
+/// Mutable occupancy state of one SM.
+#[derive(Debug, Clone)]
+pub struct SmState {
+    pub threads_used: u32,
+    pub smem_used: u32,
+    pub regs_used: u32,
+    pub blocks_resident: u32,
+}
+
+impl SmState {
+    pub fn empty() -> Self {
+        SmState { threads_used: 0, smem_used: 0, regs_used: 0, blocks_resident: 0 }
+    }
+
+    /// Can `d` be dispatched here under `spec`'s budgets?
+    pub fn fits(&self, d: &BlockDemand, spec: &GpuSpec) -> bool {
+        self.threads_used + d.threads <= spec.max_threads_per_sm
+            && self.smem_used + d.smem <= spec.smem_per_sm
+            && self.regs_used + d.regs <= spec.regs_per_sm
+            && self.blocks_resident + 1 <= spec.max_blocks_per_sm
+    }
+
+    /// Admit a block (caller must have checked `fits`).
+    pub fn admit(&mut self, d: &BlockDemand) {
+        self.threads_used += d.threads;
+        self.smem_used += d.smem;
+        self.regs_used += d.regs;
+        self.blocks_resident += 1;
+    }
+
+    /// Release a completed block's resources.
+    pub fn release(&mut self, d: &BlockDemand) {
+        debug_assert!(self.threads_used >= d.threads);
+        debug_assert!(self.smem_used >= d.smem);
+        debug_assert!(self.regs_used >= d.regs);
+        debug_assert!(self.blocks_resident >= 1);
+        self.threads_used -= d.threads;
+        self.smem_used -= d.smem;
+        self.regs_used -= d.regs;
+        self.blocks_resident -= 1;
+    }
+
+    /// Free thread slots.
+    pub fn free_threads(&self, spec: &GpuSpec) -> u32 {
+        spec.max_threads_per_sm - self.threads_used
+    }
+
+    /// Resident warps (ceil of threads / warp size), the occupancy numerator.
+    pub fn active_warps(&self, spec: &GpuSpec) -> u32 {
+        self.threads_used.div_ceil(spec.warp_size)
+    }
+
+    pub fn is_idle(&self) -> bool {
+        self.blocks_resident == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn d(threads: u32, smem: u32) -> BlockDemand {
+        BlockDemand { threads, smem, regs: threads * 32 }
+    }
+
+    #[test]
+    fn admit_release_round_trip() {
+        let spec = GpuSpec::rtx2060();
+        let mut sm = SmState::empty();
+        let b = d(256, 8192);
+        assert!(sm.fits(&b, &spec));
+        sm.admit(&b);
+        assert_eq!(sm.threads_used, 256);
+        assert_eq!(sm.blocks_resident, 1);
+        assert_eq!(sm.free_threads(&spec), 768);
+        sm.release(&b);
+        assert!(sm.is_idle());
+        assert_eq!(sm.threads_used, 0);
+    }
+
+    #[test]
+    fn thread_slot_exhaustion_blocks_admission() {
+        let spec = GpuSpec::rtx2060();
+        let mut sm = SmState::empty();
+        for _ in 0..4 {
+            let b = d(256, 0);
+            assert!(sm.fits(&b, &spec));
+            sm.admit(&b);
+        }
+        // 1024/1024 threads used: a 1-thread block must queue.
+        assert!(!sm.fits(&d(1, 0), &spec));
+    }
+
+    #[test]
+    fn smem_exhaustion_blocks_admission() {
+        let spec = GpuSpec::rtx2060();
+        let mut sm = SmState::empty();
+        sm.admit(&d(32, 48 * 1024));
+        assert!(!sm.fits(&d(32, 32 * 1024), &spec));
+        assert!(sm.fits(&d(32, 16 * 1024), &spec));
+    }
+
+    #[test]
+    fn block_slot_exhaustion() {
+        let spec = GpuSpec::rtx2060();
+        let mut sm = SmState::empty();
+        for _ in 0..spec.max_blocks_per_sm {
+            sm.admit(&d(1, 0));
+        }
+        assert!(!sm.fits(&d(1, 0), &spec));
+    }
+
+    #[test]
+    fn register_exhaustion() {
+        let spec = GpuSpec::rtx2060();
+        let mut sm = SmState::empty();
+        // 512 threads * 64 regs = 32768; two fit (65536), third does not.
+        let b = BlockDemand { threads: 512, smem: 0, regs: 512 * 64 };
+        sm.admit(&b);
+        assert!(sm.fits(&BlockDemand { threads: 256, smem: 0, regs: 256 * 64 }, &spec));
+        sm.admit(&BlockDemand { threads: 256, smem: 0, regs: 256 * 64 });
+        assert!(!sm.fits(&BlockDemand { threads: 256, smem: 0, regs: 256 * 128 }, &spec));
+    }
+
+    #[test]
+    fn warp_rounding() {
+        let spec = GpuSpec::rtx2060();
+        let mut sm = SmState::empty();
+        sm.admit(&d(33, 0)); // 33 threads -> 2 warps
+        assert_eq!(sm.active_warps(&spec), 2);
+    }
+}

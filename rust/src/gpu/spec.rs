@@ -1,0 +1,146 @@
+//! GPU hardware specifications for the edge-GPU simulator.
+//!
+//! The paper's testbeds (NVIDIA GeForce RTX 2060, Jetson AGX Xavier) plus
+//! the Jetson TX2 from its background section (§3, Fig. 1). This
+//! environment has no GPU, so these specs parameterize the discrete-event
+//! simulator in [`crate::gpu::engine`] — see DESIGN.md "Hardware
+//! substitution" for why this preserves the paper's contention behaviour.
+
+
+/// Static architecture parameters of a simulated GPU (paper Table 1's
+/// `SM`, `N_SM`, `L_threads` plus the rate parameters the execution model
+/// needs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    /// Human-readable platform name (e.g. "rtx2060").
+    pub name: String,
+    /// Number of streaming multiprocessors (`N_SM`).
+    pub num_sms: u32,
+    /// Maximum resident threads per SM (`L_threads` in paper Table 1).
+    pub max_threads_per_sm: u32,
+    /// Maximum resident thread blocks per SM.
+    pub max_blocks_per_sm: u32,
+    /// Shared memory per SM in bytes.
+    pub smem_per_sm: u32,
+    /// Register file size per SM (32-bit registers).
+    pub regs_per_sm: u32,
+    /// Threads per warp.
+    pub warp_size: u32,
+    /// Peak FP32 throughput of one SM, in FLOP per microsecond.
+    pub flops_per_sm_us: f64,
+    /// Global (DRAM) memory bandwidth, bytes per microsecond, shared by all
+    /// SMs — the inter-SM contention resource (§4).
+    pub dram_bw_bytes_us: f64,
+    /// Fixed kernel launch overhead in microseconds (the cost OScore, Eq. 5,
+    /// charges per elastic shard).
+    pub kernel_launch_us: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA GeForce RTX 2060: 30 SMs x 64 cores = 1920 CUDA cores
+    /// (paper §8.1.1), ~6.5 TFLOPS FP32, 336 GB/s GDDR6.
+    pub fn rtx2060() -> Self {
+        GpuSpec {
+            name: "rtx2060".into(),
+            num_sms: 30,
+            max_threads_per_sm: 1024,
+            max_blocks_per_sm: 16,
+            smem_per_sm: 64 * 1024,
+            regs_per_sm: 65_536,
+            warp_size: 32,
+            // 6.45 TFLOPS / 30 SMs = 215 GFLOP/s/SM = 215_000 FLOP/us.
+            flops_per_sm_us: 215_000.0,
+            // 336 GB/s = 336_000 bytes/us.
+            dram_bw_bytes_us: 336_000.0,
+            kernel_launch_us: 5.0,
+        }
+    }
+
+    /// NVIDIA Jetson AGX Xavier (paper §8.1.1 describes its GPU as a
+    /// 256-core edge part): 8 SMs, ~1.4 TFLOPS FP32, 137 GB/s LPDDR4x,
+    /// thermally constrained (lower effective per-SM rate).
+    pub fn xavier() -> Self {
+        GpuSpec {
+            name: "xavier".into(),
+            num_sms: 8,
+            max_threads_per_sm: 1024,
+            max_blocks_per_sm: 16,
+            smem_per_sm: 48 * 1024,
+            regs_per_sm: 65_536,
+            warp_size: 32,
+            // 1.4 TFLOPS / 8 SMs, derated ~20% for edge thermals (§8.2
+            // discusses the Xavier's TDP-limited clocks).
+            flops_per_sm_us: 140_000.0,
+            dram_bw_bytes_us: 137_000.0,
+            kernel_launch_us: 8.0,
+        }
+    }
+
+    /// NVIDIA Jetson TX2 (paper Fig. 1): 2 SMs x 128 cores, 0.665 TFLOPS,
+    /// 59.7 GB/s. Used by tests as the smallest-contention platform.
+    pub fn tx2() -> Self {
+        GpuSpec {
+            name: "tx2".into(),
+            num_sms: 2,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 16,
+            smem_per_sm: 64 * 1024,
+            regs_per_sm: 65_536,
+            warp_size: 32,
+            flops_per_sm_us: 332_000.0,
+            dram_bw_bytes_us: 59_700.0,
+            kernel_launch_us: 10.0,
+        }
+    }
+
+    /// Look up a named preset.
+    pub fn by_name(name: &str) -> Option<Self> {
+        match name {
+            "rtx2060" | "2060" => Some(Self::rtx2060()),
+            "xavier" => Some(Self::xavier()),
+            "tx2" => Some(Self::tx2()),
+            _ => None,
+        }
+    }
+
+    /// Maximum resident warps per SM (denominator of achieved occupancy,
+    /// §8.1.4).
+    pub fn max_warps_per_sm(&self) -> u32 {
+        self.max_threads_per_sm / self.warp_size
+    }
+
+    /// Total peak FP32 throughput in FLOP/us.
+    pub fn total_flops_us(&self) -> f64 {
+        self.flops_per_sm_us * self.num_sms as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_by_name() {
+        assert_eq!(GpuSpec::by_name("rtx2060").unwrap().num_sms, 30);
+        assert_eq!(GpuSpec::by_name("2060").unwrap().num_sms, 30);
+        assert_eq!(GpuSpec::by_name("xavier").unwrap().num_sms, 8);
+        assert_eq!(GpuSpec::by_name("tx2").unwrap().num_sms, 2);
+        assert!(GpuSpec::by_name("h100").is_none());
+    }
+
+    #[test]
+    fn occupancy_denominator() {
+        assert_eq!(GpuSpec::rtx2060().max_warps_per_sm(), 32);
+        assert_eq!(GpuSpec::tx2().max_warps_per_sm(), 64);
+    }
+
+    #[test]
+    fn edge_parts_are_smaller() {
+        // The paper's premise: edge GPUs have far fewer on-board resources.
+        let big = GpuSpec::rtx2060();
+        let small = GpuSpec::xavier();
+        assert!(small.num_sms < big.num_sms);
+        assert!(small.dram_bw_bytes_us < big.dram_bw_bytes_us);
+        assert!(small.total_flops_us() < big.total_flops_us());
+    }
+}

@@ -1,0 +1,94 @@
+//! GPU streams: FIFO kernel queues with priorities.
+//!
+//! Kernels in the same stream execute strictly in order (paper §3); kernels
+//! in different streams may overlap. Stream priority orders *block
+//! dispatch* across streams (NVIDIA priority streams), which is the
+//! mechanism the Multi-stream baseline (§8.1.3) and Miriam's critical
+//! stream rely on.
+
+use std::collections::VecDeque;
+
+use crate::gpu::kernel::{Criticality, LaunchConfig};
+
+pub type StreamId = u32;
+pub type LaunchTag = u64;
+
+/// A launch queued on a stream, waiting for its turn.
+#[derive(Debug, Clone)]
+pub struct QueuedLaunch {
+    pub tag: LaunchTag,
+    pub config: LaunchConfig,
+    pub criticality: Criticality,
+    /// Extra delay (us) before the launch may start dispatching once it
+    /// reaches the head of its stream — models sync/barrier costs the
+    /// scheduler imposes (e.g. the IB baseline's inter-stream barriers) on
+    /// top of the hardware launch overhead.
+    pub extra_delay_us: f64,
+    /// Simulation time at which the launch was submitted.
+    pub submit_us: f64,
+}
+
+/// One GPU stream.
+#[derive(Debug)]
+pub struct Stream {
+    pub id: StreamId,
+    /// Larger value = higher dispatch priority.
+    pub priority: i32,
+    pub queue: VecDeque<QueuedLaunch>,
+    /// Whether the head launch is currently dispatching/executing (a
+    /// stream runs at most one kernel at a time).
+    pub head_active: bool,
+}
+
+impl Stream {
+    pub fn new(id: StreamId, priority: i32) -> Self {
+        Stream { id, priority, queue: VecDeque::new(), head_active: false }
+    }
+
+    pub fn push(&mut self, launch: QueuedLaunch) {
+        self.queue.push_back(launch);
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Number of launches waiting (including an active head).
+    pub fn depth(&self) -> usize {
+        self.queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn launch(tag: u64) -> QueuedLaunch {
+        QueuedLaunch {
+            tag,
+            config: LaunchConfig {
+                name: format!("k{tag}"),
+                grid: 1,
+                block_threads: 32,
+                smem_per_block: 0,
+                regs_per_thread: 16,
+                flops: 1.0,
+                bytes: 0.0,
+            },
+            criticality: Criticality::Normal,
+            extra_delay_us: 0.0,
+            submit_us: 0.0,
+        }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut s = Stream::new(0, 0);
+        s.push(launch(1));
+        s.push(launch(2));
+        assert_eq!(s.depth(), 2);
+        assert_eq!(s.queue.pop_front().unwrap().tag, 1);
+        assert_eq!(s.queue.pop_front().unwrap().tag, 2);
+        assert!(s.is_empty());
+    }
+}

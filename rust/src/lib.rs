@@ -1,0 +1,31 @@
+//! **miriam** — a reproduction of *"Miriam: Exploiting Elastic Kernels for
+//! Real-time Multi-DNN Inference on Edge GPU"* (Zhao et al., 2023) as a
+//! Rust + JAX + Pallas three-layer stack.
+//!
+//! Layer map (DESIGN.md has the full inventory):
+//!
+//! * [`gpu`] — discrete-event edge-GPU simulator (the hardware substrate;
+//!   this environment has no physical GPU).
+//! * [`elastic`] — the paper's offline contribution: elastic-kernel
+//!   generation (elastic grid Eq. 1, elastic block §6.1), design-space
+//!   shrinking (Eq. 2, WIScore Eq. 4, OScore Eq. 5), and the
+//!   source-to-source transform metadata (§6.4).
+//! * [`coordinator`] — the paper's online contribution: the shaded-binary-
+//!   tree shard former and greedy padding scheduler (§7), plus the three
+//!   evaluation baselines (Sequential, Multi-stream, Inter-stream Barrier).
+//! * [`workloads`] — the MDTB benchmark (Table 2), model kernel
+//!   descriptors, arrival processes, and the LGSVL case-study trace.
+//! * [`runtime`] — PJRT CPU client executing the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) — real model compute on the serving
+//!   path, Python never involved at runtime.
+//! * [`server`] — std-thread serving loop binding the coordinator to the
+//!   runtime.
+//! * [`config`] — run configuration.
+
+pub mod config;
+pub mod coordinator;
+pub mod elastic;
+pub mod gpu;
+pub mod runtime;
+pub mod server;
+pub mod workloads;

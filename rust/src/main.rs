@@ -1,0 +1,130 @@
+//! `miriam` CLI — simulate workloads, regenerate paper figures, run
+//! inference through the PJRT runtime.
+//!
+//! Subcommands:
+//!   simulate   --platform rtx2060 --workload A --schedulers all --duration 1.0
+//!   infer      --model cifarnet [--artifacts artifacts]
+//!   artifacts  [--artifacts artifacts]
+
+use anyhow::{anyhow, Result};
+
+use miriam::config::cli::Args;
+use miriam::config::RunConfig;
+use miriam::coordinator::{self, driver};
+use miriam::gpu::spec::GpuSpec;
+use miriam::runtime::Manifest;
+use miriam::workloads::{lgsvl, mdtb};
+
+const USAGE: &str = "\
+miriam — elastic-kernel multi-DNN coordination on a simulated edge GPU
+
+USAGE:
+  miriam simulate [--platform rtx2060|xavier|tx2] [--workload A|B|C|D|lgsvl]
+                  [--schedulers sequential,multistream,ib,miriam]
+                  [--duration SECONDS]
+  miriam infer --model NAME [--artifacts DIR]
+  miriam artifacts [--artifacts DIR]
+";
+
+fn build_workload(name: &str, duration_us: f64) -> Result<mdtb::Workload> {
+    if name.eq_ignore_ascii_case("lgsvl") {
+        return Ok(lgsvl::workload(duration_us));
+    }
+    mdtb::by_name(name, duration_us)
+        .map(|w| w.build())
+        .ok_or_else(|| anyhow!("unknown workload {name}"))
+}
+
+fn simulate(args: &Args) -> Result<()> {
+    let platform = args.get("platform", "rtx2060");
+    let workload = args.get("workload", "A");
+    let schedulers = args.get("schedulers", "sequential,multistream,ib,miriam");
+    let duration = args.get_f64("duration", 1.0).map_err(|e| anyhow!(e))?;
+
+    let cfg = RunConfig {
+        platform: platform.into(),
+        workload: workload.into(),
+        schedulers: schedulers.split(',').map(|s| s.trim().to_string()).collect(),
+        duration_s: duration,
+    };
+    cfg.validate().map_err(|e| anyhow!(e))?;
+    let spec = GpuSpec::by_name(platform).unwrap();
+    let wl = build_workload(workload, duration * 1e6)?;
+
+    println!("# workload {} on {} ({} SMs), {duration}s simulated",
+             wl.name, spec.name, spec.num_sms);
+    println!("{:<12} {:>10} {:>10} {:>10} {:>12} {:>8} {:>8}",
+             "scheduler", "crit p50", "crit p99", "crit mean",
+             "throughput", "occup", "norm/s");
+    println!("{:<12} {:>10} {:>10} {:>10} {:>12} {:>8} {:>8}",
+             "", "(ms)", "(ms)", "(ms)", "(req/s)", "", "");
+    for name in &cfg.schedulers {
+        let mut sched = coordinator::scheduler_for(name, &wl)
+            .ok_or_else(|| anyhow!("unknown scheduler {name}"))?;
+        let stats = driver::run(spec.clone(), &wl, sched.as_mut());
+        println!("{:<12} {:>10.2} {:>10.2} {:>10.2} {:>12.1} {:>8.3} {:>8.1}",
+                 name,
+                 stats.critical_latency_quantile_us(0.5) / 1e3,
+                 stats.critical_latency_p99_us() / 1e3,
+                 stats.critical_latency_mean_us() / 1e3,
+                 stats.throughput_rps(),
+                 stats.achieved_occupancy,
+                 stats.completed_normal() as f64 / (stats.span_us / 1e6));
+    }
+    Ok(())
+}
+
+fn infer(args: &Args) -> Result<()> {
+    use miriam::runtime::artifacts::npy_rand;
+    let model = args
+        .flags
+        .get("model")
+        .ok_or_else(|| anyhow!("--model is required"))?
+        .clone();
+    let artifacts = args.get("artifacts", "artifacts");
+    let manifest = Manifest::load(artifacts)?;
+    let entry = manifest.entry(&model)?.clone();
+    let mut rt = miriam::runtime::Runtime::new(manifest)?;
+    println!("platform: {}", rt.platform());
+    let m = rt.load(&model)?;
+    let n: usize = m.input_shapes[0].iter().product();
+    let seed = entry.golden.as_ref().map(|g| g.input_seed).unwrap_or(42);
+    let input = npy_rand::randn(seed as u32, n);
+    let t0 = std::time::Instant::now();
+    let out = m.run_f32(&[input])?;
+    println!("{model}: output {:?} in {:.2} ms", &out[..out.len().min(10)],
+             t0.elapsed().as_secs_f64() * 1e3);
+    if let Some(g) = &entry.golden {
+        let max_err = out
+            .iter()
+            .zip(&g.output)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        println!("golden max abs err: {max_err:.3e} {}",
+                 if max_err < 1e-3 { "OK" } else { "MISMATCH" });
+        if max_err >= 1e-3 {
+            return Err(anyhow!("golden mismatch"));
+        }
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow!(e))?;
+    match args.positional.first().map(String::as_str) {
+        Some("simulate") => simulate(&args),
+        Some("infer") => infer(&args),
+        Some("artifacts") => {
+            let m = Manifest::load(args.get("artifacts", "artifacts"))?;
+            for e in &m.artifacts {
+                println!("{:<16} kind={:<14} file={}", e.name, e.kind,
+                         e.file.as_deref().unwrap_or("-"));
+            }
+            Ok(())
+        }
+        _ => {
+            eprint!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}

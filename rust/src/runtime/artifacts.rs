@@ -1,0 +1,323 @@
+//! AOT artifact registry: parses `artifacts/manifest.json` (written by
+//! `python/compile/aot.py`) and locates the HLO-text files.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::runtime::json::{self, Json};
+
+/// Tensor spec in the manifest.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("tensor spec missing shape"))?
+            .iter()
+            .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .unwrap_or("f32")
+            .to_string();
+        Ok(TensorSpec { shape, dtype })
+    }
+}
+
+/// Golden input/output vector for a model artifact.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub input_seed: u64,
+    pub input_sha: String,
+    pub output: Vec<f32>,
+}
+
+/// One manifest entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: Option<String>,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub golden: Option<Golden>,
+    // matmul-shard extras
+    pub degree: Option<u32>,
+    pub rows: Option<u32>,
+    // matmul golden extras
+    pub m: Option<usize>,
+    pub k: Option<usize>,
+    pub n: Option<usize>,
+    pub x_seed: Option<u64>,
+    pub w_seed: Option<u64>,
+    pub output_first8: Option<Vec<f32>>,
+}
+
+impl ArtifactEntry {
+    fn from_json(j: &Json) -> Result<Self> {
+        let name = j
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("artifact missing name"))?
+            .to_string();
+        let specs = |key: &str| -> Result<Vec<TensorSpec>> {
+            j.get(key)
+                .and_then(Json::as_arr)
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect()
+        };
+        let golden = match j.get("golden") {
+            Some(g) => Some(Golden {
+                input_seed: g
+                    .get("input_seed")
+                    .and_then(Json::as_u64)
+                    .ok_or_else(|| anyhow!("golden missing input_seed"))?,
+                input_sha: g
+                    .get("input_sha")
+                    .and_then(Json::as_str)
+                    .unwrap_or_default()
+                    .to_string(),
+                output: f32_vec(g.get("output")),
+            }),
+            None => None,
+        };
+        Ok(ArtifactEntry {
+            name,
+            file: j.get("file").and_then(Json::as_str).map(str::to_string),
+            kind: j
+                .get("kind")
+                .and_then(Json::as_str)
+                .unwrap_or("model")
+                .to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            golden,
+            degree: j.get("degree").and_then(Json::as_u64).map(|v| v as u32),
+            rows: j.get("rows").and_then(Json::as_u64).map(|v| v as u32),
+            m: j.get("m").and_then(Json::as_usize),
+            k: j.get("k").and_then(Json::as_usize),
+            n: j.get("n").and_then(Json::as_usize),
+            x_seed: j.get("x_seed").and_then(Json::as_u64),
+            w_seed: j.get("w_seed").and_then(Json::as_u64),
+            output_first8: j.get("output_first8").map(|v| f32_vec(Some(v))),
+        })
+    }
+}
+
+fn f32_vec(j: Option<&Json>) -> Vec<f32> {
+    j.and_then(Json::as_arr)
+        .map(|a| a.iter().filter_map(|v| v.as_f64()).map(|f| f as f32).collect())
+        .unwrap_or_default()
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let root = json::parse(&text).context("parsing manifest.json")?;
+        let version = root
+            .get("version")
+            .and_then(Json::as_u64)
+            .ok_or_else(|| anyhow!("manifest missing version"))?;
+        let artifacts = root
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+            .iter()
+            .map(ArtifactEntry::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { version, artifacts, dir })
+    }
+
+    /// Default artifact directory: `$MIRIAM_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("MIRIAM_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|e| e.name == name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))
+    }
+
+    /// Entries of a kind ("model", "matmul_shard", "golden").
+    pub fn of_kind<'a>(&'a self, kind: &'a str)
+                       -> impl Iterator<Item = &'a ArtifactEntry> + 'a {
+        self.artifacts.iter().filter(move |e| e.kind == kind)
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn hlo_path(&self, entry: &ArtifactEntry) -> Result<PathBuf> {
+        let f = entry
+            .file
+            .as_ref()
+            .ok_or_else(|| anyhow!("artifact {} has no file", entry.name))?;
+        Ok(self.dir.join(f))
+    }
+}
+
+/// numpy-compatible random generation: the manifest's golden inputs are
+/// `numpy.random.RandomState(seed).randn(*shape)`; this module regenerates
+/// them bit-identically on the Rust side so the runtime integration tests
+/// can verify artifact numerics end to end without Python.
+pub mod npy_rand {
+    /// Minimal MT19937 (numpy-compatible) generator.
+    pub struct Mt19937 {
+        mt: [u32; 624],
+        idx: usize,
+    }
+
+    impl Mt19937 {
+        pub fn new(seed: u32) -> Self {
+            let mut mt = [0u32; 624];
+            mt[0] = seed;
+            for i in 1..624 {
+                mt[i] = 1812433253u32
+                    .wrapping_mul(mt[i - 1] ^ (mt[i - 1] >> 30))
+                    .wrapping_add(i as u32);
+            }
+            Mt19937 { mt, idx: 624 }
+        }
+
+        fn generate(&mut self) {
+            for i in 0..624 {
+                let y = (self.mt[i] & 0x8000_0000)
+                    | (self.mt[(i + 1) % 624] & 0x7fff_ffff);
+                let mut next = y >> 1;
+                if y & 1 != 0 {
+                    next ^= 0x9908_b0df;
+                }
+                self.mt[i] = self.mt[(i + 397) % 624] ^ next;
+            }
+            self.idx = 0;
+        }
+
+        pub fn next_u32(&mut self) -> u32 {
+            if self.idx >= 624 {
+                self.generate();
+            }
+            let mut y = self.mt[self.idx];
+            self.idx += 1;
+            y ^= y >> 11;
+            y ^= (y << 7) & 0x9d2c_5680;
+            y ^= (y << 15) & 0xefc6_0000;
+            y ^ (y >> 18)
+        }
+
+        /// numpy's random_double: 53-bit resolution in [0, 1).
+        pub fn next_f64(&mut self) -> f64 {
+            let a = (self.next_u32() >> 5) as f64; // 27 bits
+            let b = (self.next_u32() >> 6) as f64; // 26 bits
+            (a * 67108864.0 + b) / 9007199254740992.0
+        }
+    }
+
+    /// numpy `RandomState(seed).randn(n)` (float64 gauss via the polar
+    /// method, f*x2 returned before the cached f*x1), cast to f32 —
+    /// byte-identical to what `aot.py` hashed.
+    pub fn randn(seed: u32, n: usize) -> Vec<f32> {
+        let mut mt = Mt19937::new(seed);
+        let mut out = Vec::with_capacity(n);
+        let mut cached: Option<f64> = None;
+        while out.len() < n {
+            if let Some(g) = cached.take() {
+                out.push(g as f32);
+                continue;
+            }
+            loop {
+                let x1 = 2.0 * mt.next_f64() - 1.0;
+                let x2 = 2.0 * mt.next_f64() - 1.0;
+                let r2 = x1 * x1 + x2 * x2;
+                if r2 < 1.0 && r2 != 0.0 {
+                    let f = (-2.0 * r2.ln() / r2).sqrt();
+                    cached = Some(f * x1);
+                    out.push((f * x2) as f32);
+                    break;
+                }
+            }
+        }
+        out.truncate(n);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn have_artifacts() -> bool {
+        Manifest::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_loads_when_built() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(Manifest::default_dir()).unwrap();
+        assert_eq!(m.version, 1);
+        assert!(m.of_kind("model").count() >= 6);
+        assert!(m.of_kind("matmul_shard").count() >= 4);
+        let cn = m.entry("cifarnet").unwrap();
+        assert_eq!(cn.inputs[0].shape, vec![32, 32, 3]);
+        assert!(m.hlo_path(cn).unwrap().exists());
+        assert!(cn.golden.as_ref().is_some_and(|g| g.output.len() == 10));
+    }
+
+    #[test]
+    fn missing_entry_is_error() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(Manifest::default_dir()).unwrap();
+        assert!(m.entry("nonexistent").is_err());
+    }
+
+    #[test]
+    fn mt19937_matches_numpy_first_draw() {
+        // numpy.random.RandomState(42).random_sample() == 0.3745401188473625
+        let mut mt = npy_rand::Mt19937::new(42);
+        let v = mt.next_f64();
+        assert!((v - 0.3745401188473625).abs() < 1e-15, "{v}");
+    }
+
+    #[test]
+    fn randn_matches_numpy_first_values() {
+        // numpy.random.RandomState(42).randn(4) ==
+        // [ 0.49671415, -0.1382643 ,  0.64768854,  1.52302986]
+        let v = npy_rand::randn(42, 4);
+        let want = [0.49671415f32, -0.1382643, 0.64768854, 1.52302986];
+        for (a, b) in v.iter().zip(want.iter()) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! The PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`,
+//! produced once by `make artifacts` from JAX/Pallas) and executes them on
+//! the XLA CPU client. Python is never on this path.
+//!
+//! * [`artifacts`] — manifest parsing + artifact registry.
+//! * [`client`] — PJRT client wrapper (compile once, execute many).
+
+pub mod artifacts;
+pub mod json;
+pub mod client;
+
+pub use artifacts::{ArtifactEntry, Manifest};
+pub use client::{ModelRuntime, Runtime};

@@ -1,0 +1,240 @@
+//! The serving layer: a criticality-aware request router in front of the
+//! PJRT runtime.
+//!
+//! This is the deployment face of Miriam: clients submit inference
+//! requests tagged critical/normal; critical requests always jump the
+//! queue (the software analog of the critical stream), normal requests are
+//! served best-effort. Real model compute runs through the AOT artifacts
+//! on the PJRT CPU client — Python is never involved.
+//!
+//! On a physical edge GPU the elastic-kernel coordinator would sit between
+//! the router and the device; here its scheduling behaviour is exercised
+//! by the simulator (`crate::coordinator`), while this server proves the
+//! end-to-end artifact path (examples/serve_e2e.rs).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::gpu::kernel::Criticality;
+use crate::runtime::{Manifest, Runtime};
+
+/// One inference request.
+pub struct InferRequest {
+    pub model: String,
+    pub criticality: Criticality,
+    pub input: Vec<f32>,
+    /// Reply channel.
+    pub reply: std::sync::mpsc::Sender<InferReply>,
+}
+
+/// The server's answer.
+#[derive(Debug, Clone)]
+pub struct InferReply {
+    pub output: Vec<f32>,
+    /// Queueing + execution latency observed by the server (us).
+    pub latency_us: f64,
+    pub ok: bool,
+    pub error: Option<String>,
+}
+
+#[derive(Default)]
+struct Queues {
+    critical: VecDeque<(InferRequest, Instant)>,
+    normal: VecDeque<(InferRequest, Instant)>,
+    shutdown: bool,
+}
+
+/// Aggregate serving statistics.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub served_critical: AtomicU64,
+    pub served_normal: AtomicU64,
+    pub errors: AtomicU64,
+    /// Sum of latencies (us) per class, for means.
+    pub critical_latency_us_sum: AtomicU64,
+    pub normal_latency_us_sum: AtomicU64,
+}
+
+impl ServerStats {
+    pub fn mean_critical_latency_us(&self) -> f64 {
+        let n = self.served_critical.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.critical_latency_us_sum.load(Ordering::Relaxed) as f64 / n as f64
+    }
+    pub fn mean_normal_latency_us(&self) -> f64 {
+        let n = self.served_normal.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.normal_latency_us_sum.load(Ordering::Relaxed) as f64 / n as f64
+    }
+}
+
+/// Handle for submitting requests.
+#[derive(Clone)]
+pub struct ServerHandle {
+    queues: Arc<(Mutex<Queues>, Condvar)>,
+    pub stats: Arc<ServerStats>,
+}
+
+impl ServerHandle {
+    /// Enqueue a request (critical requests are drained first).
+    pub fn submit(&self, req: InferRequest) {
+        let (lock, cv) = &*self.queues;
+        let mut q = lock.lock().unwrap();
+        match req.criticality {
+            Criticality::Critical => q.critical.push_back((req, Instant::now())),
+            Criticality::Normal => q.normal.push_back((req, Instant::now())),
+        }
+        cv.notify_one();
+    }
+
+    /// Convenience: submit and wait for the reply.
+    pub fn infer(&self, model: &str, criticality: Criticality,
+                 input: Vec<f32>) -> InferReply {
+        let (tx, rx) = std::sync::mpsc::channel();
+        self.submit(InferRequest {
+            model: model.to_string(),
+            criticality,
+            input,
+            reply: tx,
+        });
+        rx.recv().expect("server dropped reply channel")
+    }
+
+    /// Signal shutdown (worker exits after draining nothing more).
+    pub fn shutdown(&self) {
+        let (lock, cv) = &*self.queues;
+        lock.lock().unwrap().shutdown = true;
+        cv.notify_all();
+    }
+}
+
+/// The serving loop. Owns the PJRT runtime on a dedicated thread (the XLA
+/// client is not `Send`-friendly; all execution funnels through here).
+pub struct Server {
+    pub handle: ServerHandle,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the server over an artifact directory; pre-compiles `models`.
+    ///
+    /// The PJRT client wraps non-`Send` FFI handles, so the runtime is
+    /// constructed *inside* the worker thread; startup errors are reported
+    /// back over a channel before the first request is accepted.
+    pub fn start(artifact_dir: impl Into<std::path::PathBuf>,
+                 models: &[String]) -> Result<Self> {
+        let dir = artifact_dir.into();
+        let models: Vec<String> = models.to_vec();
+        let queues = Arc::new((Mutex::new(Queues::default()), Condvar::new()));
+        let stats = Arc::new(ServerStats::default());
+        let handle = ServerHandle { queues: queues.clone(), stats: stats.clone() };
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+
+        let worker = std::thread::spawn(move || {
+            let mut runtime = match Manifest::load(&dir)
+                .and_then(Runtime::new)
+                .and_then(|mut rt| {
+                    for m in &models {
+                        rt.load(m)?;
+                    }
+                    Ok(rt)
+                }) {
+                Ok(rt) => {
+                    let _ = ready_tx.send(Ok(()));
+                    rt
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            let (lock, cv) = &*queues;
+            loop {
+                let (req, enq) = {
+                    let mut q = lock.lock().unwrap();
+                    loop {
+                        if let Some(r) = q.critical.pop_front() {
+                            break r;
+                        }
+                        if let Some(r) = q.normal.pop_front() {
+                            break r;
+                        }
+                        if q.shutdown {
+                            return;
+                        }
+                        q = cv.wait(q).unwrap();
+                    }
+                };
+                let crit = req.criticality;
+                let result = runtime
+                    .load(&req.model)
+                    .and_then(|m| m.run_f32(&[req.input.clone()]));
+                let latency_us = enq.elapsed().as_secs_f64() * 1e6;
+                let reply = match result {
+                    Ok(output) => InferReply {
+                        output,
+                        latency_us,
+                        ok: true,
+                        error: None,
+                    },
+                    Err(e) => {
+                        stats.errors.fetch_add(1, Ordering::Relaxed);
+                        InferReply {
+                            output: Vec::new(),
+                            latency_us,
+                            ok: false,
+                            error: Some(format!("{e:#}")),
+                        }
+                    }
+                };
+                if reply.ok {
+                    match crit {
+                        Criticality::Critical => {
+                            stats.served_critical.fetch_add(1, Ordering::Relaxed);
+                            stats
+                                .critical_latency_us_sum
+                                .fetch_add(latency_us as u64, Ordering::Relaxed);
+                        }
+                        Criticality::Normal => {
+                            stats.served_normal.fetch_add(1, Ordering::Relaxed);
+                            stats
+                                .normal_latency_us_sum
+                                .fetch_add(latency_us as u64, Ordering::Relaxed);
+                        }
+                    }
+                }
+                let _ = req.reply.send(reply);
+            }
+        });
+        // Propagate startup failure (bad artifacts, PJRT init error).
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("server worker died during startup"))??;
+        Ok(Server { handle, worker: Some(worker) })
+    }
+
+    /// Shut down and join the worker.
+    pub fn stop(mut self) {
+        self.handle.shutdown();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.handle.shutdown();
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}

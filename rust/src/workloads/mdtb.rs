@@ -1,0 +1,177 @@
+//! MDTB — the Mixed-critical DNN Task Benchmark (paper Table 2).
+//!
+//! Four workloads, each one critical source + one normal source:
+//!
+//! | MDTB | critical (arrival)            | normal (arrival)        |
+//! |------|-------------------------------|-------------------------|
+//! | A    | AlexNet    (closed-loop)      | CifarNet   (closed-loop)|
+//! | B    | SqueezeNet (uniform 10 req/s) | AlexNet    (closed-loop)|
+//! | C    | GRU        (Poisson 10 req/s) | ResNet     (closed-loop)|
+//! | D    | LSTM       (uniform 10 req/s) | SqueezeNet (closed-loop)|
+
+use std::sync::Arc;
+
+
+use crate::gpu::kernel::Criticality;
+use crate::workloads::arrival::Arrival;
+use crate::workloads::models::{self, ModelRef};
+
+/// One request source: a model issued with some arrival process at a
+/// criticality level.
+#[derive(Debug, Clone)]
+pub struct Source {
+    pub model: ModelRef,
+    pub arrival: Arrival,
+    pub criticality: Criticality,
+}
+
+/// A complete benchmark workload.
+#[derive(Debug, Clone)]
+pub struct Workload {
+    pub name: String,
+    pub sources: Vec<Source>,
+    /// Simulated duration over which arrivals are generated (us).
+    pub duration_us: f64,
+    /// RNG seed for stochastic arrivals.
+    pub seed: u64,
+}
+
+/// Serializable description (for configs / CLI).
+#[derive(Debug, Clone)]
+pub struct WorkloadSpec {
+    pub name: String,
+    pub critical_model: String,
+    pub critical_arrival: Arrival,
+    pub normal_model: String,
+    pub normal_arrival: Arrival,
+    pub duration_us: f64,
+    pub seed: u64,
+}
+
+impl WorkloadSpec {
+    pub fn build(&self) -> Workload {
+        let critical = models::by_name(&self.critical_model)
+            .unwrap_or_else(|| panic!("unknown model {}", self.critical_model));
+        let normal = models::by_name(&self.normal_model)
+            .unwrap_or_else(|| panic!("unknown model {}", self.normal_model));
+        Workload {
+            name: self.name.clone(),
+            sources: vec![
+                Source {
+                    model: Arc::new(critical),
+                    arrival: self.critical_arrival,
+                    criticality: Criticality::Critical,
+                },
+                Source {
+                    model: Arc::new(normal),
+                    arrival: self.normal_arrival,
+                    criticality: Criticality::Normal,
+                },
+            ],
+            duration_us: self.duration_us,
+            seed: self.seed,
+        }
+    }
+}
+
+/// MDTB A: closed-loop AlexNet critical vs closed-loop CifarNet normal.
+pub fn mdtb_a(duration_us: f64) -> WorkloadSpec {
+    WorkloadSpec {
+        name: "MDTB-A".into(),
+        critical_model: "alexnet".into(),
+        critical_arrival: Arrival::ClosedLoop { clients: 1 },
+        normal_model: "cifarnet".into(),
+        normal_arrival: Arrival::ClosedLoop { clients: 3 },
+        duration_us,
+        seed: 0xA,
+    }
+}
+
+/// MDTB B: uniform-10Hz SqueezeNet critical vs closed-loop AlexNet normal.
+pub fn mdtb_b(duration_us: f64) -> WorkloadSpec {
+    WorkloadSpec {
+        name: "MDTB-B".into(),
+        critical_model: "squeezenet".into(),
+        critical_arrival: Arrival::Uniform { rate_hz: 10.0 },
+        normal_model: "alexnet".into(),
+        normal_arrival: Arrival::ClosedLoop { clients: 3 },
+        duration_us,
+        seed: 0xB,
+    }
+}
+
+/// MDTB C: Poisson-10Hz GRU critical vs closed-loop ResNet normal.
+pub fn mdtb_c(duration_us: f64) -> WorkloadSpec {
+    WorkloadSpec {
+        name: "MDTB-C".into(),
+        critical_model: "gru".into(),
+        critical_arrival: Arrival::Poisson { rate_hz: 10.0 },
+        normal_model: "resnet".into(),
+        normal_arrival: Arrival::ClosedLoop { clients: 3 },
+        duration_us,
+        seed: 0xC,
+    }
+}
+
+/// MDTB D: uniform-10Hz LSTM critical vs closed-loop SqueezeNet normal.
+pub fn mdtb_d(duration_us: f64) -> WorkloadSpec {
+    WorkloadSpec {
+        name: "MDTB-D".into(),
+        critical_model: "lstm".into(),
+        critical_arrival: Arrival::Uniform { rate_hz: 10.0 },
+        normal_model: "squeezenet".into(),
+        normal_arrival: Arrival::ClosedLoop { clients: 3 },
+        duration_us,
+        seed: 0xD,
+    }
+}
+
+/// All four Table 2 workloads.
+pub fn all(duration_us: f64) -> Vec<WorkloadSpec> {
+    vec![mdtb_a(duration_us), mdtb_b(duration_us), mdtb_c(duration_us),
+         mdtb_d(duration_us)]
+}
+
+pub fn by_name(name: &str, duration_us: f64) -> Option<WorkloadSpec> {
+    match name.to_ascii_uppercase().as_str() {
+        "A" | "MDTB-A" => Some(mdtb_a(duration_us)),
+        "B" | "MDTB-B" => Some(mdtb_b(duration_us)),
+        "C" | "MDTB-C" => Some(mdtb_c(duration_us)),
+        "D" | "MDTB-D" => Some(mdtb_d(duration_us)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_composition() {
+        let a = mdtb_a(1e6).build();
+        assert_eq!(a.sources[0].model.name, "alexnet");
+        assert_eq!(a.sources[0].criticality, Criticality::Critical);
+        assert_eq!(a.sources[1].model.name, "cifarnet");
+        assert!(a.sources[1].arrival.is_closed_loop());
+
+        let c = mdtb_c(1e6).build();
+        assert_eq!(c.sources[0].model.name, "gru");
+        assert!(matches!(c.sources[0].arrival, Arrival::Poisson { rate_hz }
+            if (rate_hz - 10.0).abs() < 1e-9));
+    }
+
+    #[test]
+    fn lookup_by_letter() {
+        assert!(by_name("a", 1e6).is_some());
+        assert!(by_name("MDTB-D", 1e6).is_some());
+        assert!(by_name("E", 1e6).is_none());
+    }
+
+    #[test]
+    fn all_four_present() {
+        let v = all(1e6);
+        assert_eq!(v.len(), 4);
+        let names: Vec<_> = v.iter().map(|w| w.name.as_str()).collect();
+        assert_eq!(names, ["MDTB-A", "MDTB-B", "MDTB-C", "MDTB-D"]);
+    }
+}

@@ -1,0 +1,13 @@
+//! DNN workloads: model kernel descriptors, arrival processes, the MDTB
+//! benchmark (paper Table 2) and the LGSVL case-study trace (§8.5).
+
+pub mod arrival;
+pub mod lgsvl;
+pub mod mdtb;
+pub mod models;
+pub mod rng;
+
+pub use arrival::Arrival;
+pub use mdtb::{Source, Workload, WorkloadSpec};
+pub use models::{ModelDesc, ModelRef};
+pub use rng::Rng;

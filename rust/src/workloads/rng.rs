@@ -1,0 +1,80 @@
+//! Deterministic xorshift64* RNG — no external dependency, reproducible
+//! across runs (benchmark workloads must be identical between schedulers).
+
+/// xorshift64* generator (Vigna 2016). Never yields 0 state.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed.max(1) }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Exponential with rate `lambda` (events per unit time).
+    pub fn next_exp(&mut self, lambda: f64) -> f64 {
+        assert!(lambda > 0.0);
+        let u = 1.0 - self.next_f64(); // (0, 1]
+        -u.ln() / lambda
+    }
+
+    /// Uniform integer in [0, n).
+    pub fn next_below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        self.next_u64() % n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn exp_mean_close_to_inverse_rate() {
+        let mut r = Rng::new(13);
+        let lambda = 0.01; // mean 100
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.next_exp(lambda)).sum::<f64>() / n as f64;
+        assert!((mean - 100.0).abs() < 5.0, "mean {mean}");
+    }
+
+    #[test]
+    fn zero_seed_does_not_stick() {
+        let mut r = Rng::new(0);
+        assert_ne!(r.next_u64(), 0);
+        assert_ne!(r.next_u64(), r.next_u64());
+    }
+}

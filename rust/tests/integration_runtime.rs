@@ -1,0 +1,122 @@
+//! Integration tests across the language boundary: the AOT artifacts
+//! produced by python/compile/aot.py executed through the Rust PJRT
+//! runtime, checked against the manifest goldens.
+//!
+//! These tests skip (with a message) when `make artifacts` has not run —
+//! everything else in the crate is artifact-independent.
+
+use miriam::runtime::artifacts::npy_rand;
+use miriam::runtime::{Manifest, Runtime};
+
+fn manifest() -> Option<Manifest> {
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping runtime tests: run `make artifacts`");
+        return None;
+    }
+    Some(Manifest::load(dir).expect("manifest parses"))
+}
+
+#[test]
+fn all_model_artifacts_execute_and_match_goldens() {
+    let Some(manifest) = manifest() else { return };
+    let mut rt = Runtime::new(manifest).expect("PJRT CPU client");
+    let names = rt.model_names();
+    assert!(names.len() >= 6, "expected the 6 MDTB models");
+    for name in names {
+        let entry = rt.manifest.entry(&name).unwrap().clone();
+        let m = rt.load(&name).expect("compiles");
+        let n: usize = m.input_shapes[0].iter().product();
+        let golden = entry.golden.as_ref().expect("golden present");
+        let input = npy_rand::randn(golden.input_seed as u32, n);
+        let out = m.run_f32(&[input]).expect("executes");
+        assert_eq!(out.len(), 10, "{name}: logit count");
+        let max_err = out
+            .iter()
+            .zip(&golden.output)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_err < 1e-3, "{name}: max err {max_err}");
+    }
+}
+
+#[test]
+fn elastic_grid_shards_stitch_to_full_product() {
+    // The paper's §6.4 consistency property demonstrated across the
+    // language boundary: the matmul shard executables (one per dichotomy
+    // degree, Eq. 1) must reassemble the same product the full kernel
+    // computes, for every slicing degree.
+    let Some(manifest) = manifest() else { return };
+    let golden = manifest
+        .of_kind("golden")
+        .next()
+        .expect("matmul golden present")
+        .clone();
+    let m = golden.m.unwrap();
+    let k = golden.k.unwrap();
+    let n = golden.n.unwrap();
+    let x = npy_rand::randn(golden.x_seed.unwrap() as u32, m * k);
+    let w = npy_rand::randn(golden.w_seed.unwrap() as u32, k * n);
+    let want8 = golden.output_first8.clone().unwrap();
+
+    let shard_names: Vec<(String, u32)> = manifest
+        .of_kind("matmul_shard")
+        .map(|e| (e.name.clone(), e.rows.unwrap()))
+        .collect();
+    assert_eq!(shard_names.len(), 4, "degrees 0..3");
+
+    let mut rt = Runtime::new(manifest).expect("client");
+    for (name, rows) in shard_names {
+        let shards = m / rows as usize;
+        let exe = rt.load(&name).expect("shard compiles");
+        let mut full = Vec::with_capacity(m * n);
+        for s in 0..shards {
+            let xs = x[s * rows as usize * k..(s + 1) * rows as usize * k].to_vec();
+            let out = exe.run_f32(&[xs, w.clone()]).expect("shard executes");
+            assert_eq!(out.len(), rows as usize * n);
+            full.extend(out);
+        }
+        assert_eq!(full.len(), m * n, "{name}: stitched size");
+        for (i, want) in want8.iter().enumerate() {
+            assert!((full[i] - want).abs() < 1e-2 + want.abs() * 1e-4,
+                    "{name}: element {i}: {} vs {want}", full[i]);
+        }
+    }
+}
+
+#[test]
+fn runtime_rejects_bad_inputs() {
+    let Some(manifest) = manifest() else { return };
+    let mut rt = Runtime::new(manifest).expect("client");
+    let m = rt.load("cifarnet").expect("compiles");
+    // Wrong input count.
+    assert!(m.run_f32(&[]).is_err());
+    // Wrong input length.
+    assert!(m.run_f32(&[vec![0.0; 7]]).is_err());
+}
+
+#[test]
+fn server_routes_critical_first_and_serves() {
+    use miriam::gpu::kernel::Criticality;
+    use miriam::server::Server;
+    let dir = Manifest::default_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let server = Server::start(&dir, &["cifarnet".into(), "gru".into()])
+        .expect("server starts");
+    let h = server.handle.clone();
+    // A few round-trips of both classes.
+    for i in 0..6 {
+        let (model, crit, n) = if i % 2 == 0 {
+            ("cifarnet", Criticality::Critical, 32 * 32 * 3)
+        } else {
+            ("gru", Criticality::Normal, 16 * 32)
+        };
+        let reply = h.infer(model, crit, npy_rand::randn(i, n));
+        assert!(reply.ok, "{:?}", reply.error);
+        assert_eq!(reply.output.len(), 10);
+    }
+    assert_eq!(h.stats.errors.load(std::sync::atomic::Ordering::Relaxed), 0);
+    server.stop();
+}

