@@ -1,6 +1,9 @@
-//! Perf probe: simulator event throughput on a heavy cell (not shipped as
-//! a bench; used by the EXPERIMENTS.md §Perf log).
-use miriam::coordinator::{driver, scheduler_for};
+//! Perf probe: simulator event throughput on a heavy cell (the quick
+//! one-cell companion to `benches/engine_throughput.rs`; used by the
+//! EXPERIMENTS.md §Perf log). Runs each cell through both rate-model
+//! paths so the incremental-vs-reference speedup is visible at a glance.
+use miriam::coordinator::driver::{self, RunOpts};
+use miriam::coordinator::scheduler_for;
 use miriam::gpu::spec::GpuSpec;
 use miriam::workloads::mdtb;
 
@@ -8,12 +11,19 @@ fn main() {
     for (wl_name, sched) in [("D", "multistream"), ("D", "miriam"),
                              ("A", "multistream"), ("C", "miriam")] {
         let wl = mdtb::by_name(wl_name, 2_000_000.0).unwrap().build();
-        let mut s = scheduler_for(sched, &wl).unwrap();
-        let t0 = std::time::Instant::now();
-        let st = driver::run(GpuSpec::rtx2060(), &wl, s.as_mut());
-        let wall = t0.elapsed().as_secs_f64();
-        println!("{wl_name}/{sched:<12} events {:>8}  wall {:>6.2}s  {:>9.0} events/s  sched-decision mean {:.2}us",
-                 st.events, wall, st.events as f64 / wall,
-                 st.sched_decision_mean_us());
+        let mut cell = Vec::new();
+        for reference in [true, false] {
+            let mut s = scheduler_for(sched, &wl).unwrap();
+            let st = driver::run_with(GpuSpec::rtx2060(), &wl, s.as_mut(),
+                                      RunOpts { reference_rates: reference });
+            cell.push(st.events_per_sec());
+            let leg = if reference { "reference  " } else { "incremental" };
+            println!("{wl_name}/{sched:<12} {leg} events {:>9}  wall {:>6.2}s  \
+                      {:>10.0} events/s  sched-decision mean {:.2}us",
+                     st.events, st.wall_ns as f64 / 1e9, st.events_per_sec(),
+                     st.sched_decision_mean_us());
+        }
+        println!("{wl_name}/{sched:<12} speedup {:.2}x",
+                 cell[1] / cell[0].max(1e-12));
     }
 }

@@ -1,0 +1,126 @@
+//! Engine event-throughput benchmark (EXPERIMENTS.md §Perf change #4).
+//!
+//! Drives ~10k launches of MDTB-shaped kernels (MDTB-A and MDTB-D,
+//! closed-loop critical + normal sources) through every scheduler, twice:
+//!
+//! * `reference`  — the retained full-recompute rate model, the seed's
+//!   O(events × resident) per-event algorithm ("before");
+//! * `incremental` — the O(Δ)-per-event aggregate path ("after").
+//!
+//! Reports per-cell launches, events, wall time and events/sec, plus the
+//! aggregate speedup, and writes everything as JSON to `BENCH_engine.json`
+//! so the perf trajectory is tracked from this PR onward.
+//!
+//! Run: `cargo bench --bench engine_throughput`
+//! CI smoke mode (short duration): append `-- --smoke` (or set
+//! `BENCH_SMOKE=1`).
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use miriam::coordinator::driver::{self, RunOpts};
+use miriam::coordinator::{scheduler_for, SCHEDULERS};
+use miriam::gpu::spec::GpuSpec;
+use miriam::workloads::mdtb;
+
+struct Cell {
+    mode: &'static str,
+    workload: String,
+    scheduler: &'static str,
+    launches: usize,
+    events: u64,
+    wall_s: f64,
+    events_per_sec: f64,
+}
+
+fn run_cell(mode: &'static str, wl_name: &str, sched: &'static str,
+            duration_us: f64) -> Cell {
+    let wl = mdtb::by_name(wl_name, duration_us).unwrap().build();
+    let mut s = scheduler_for(sched, &wl).unwrap();
+    let opts = RunOpts { reference_rates: mode == "reference" };
+    let t0 = Instant::now();
+    let st = driver::run_with(GpuSpec::rtx2060(), &wl, s.as_mut(), opts);
+    let wall_s = t0.elapsed().as_secs_f64();
+    Cell {
+        mode,
+        workload: format!("MDTB-{wl_name}"),
+        scheduler: sched,
+        launches: st.timeline.len(),
+        events: st.events,
+        wall_s,
+        events_per_sec: st.events as f64 / wall_s.max(1e-12),
+    }
+}
+
+fn aggregate_events_per_sec(cells: &[Cell], mode: &str) -> f64 {
+    let (events, wall) = cells
+        .iter()
+        .filter(|c| c.mode == mode)
+        .fold((0u64, 0.0f64), |(e, w), c| (e + c.events, w + c.wall_s));
+    events as f64 / wall.max(1e-12)
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").is_ok();
+    // 2 simulated seconds of closed-loop MDTB traffic drives >10k launches
+    // across the scheduler grid; smoke mode only proves the harness runs.
+    let duration_us = if smoke { 30_000.0 } else { 2_000_000.0 };
+    println!("# engine_throughput: {}s simulated per cell{}",
+             duration_us / 1e6, if smoke { " (smoke)" } else { "" });
+    println!("{:<12} {:<8} {:<12} {:>9} {:>10} {:>9} {:>12}",
+             "mode", "wl", "scheduler", "launches", "events", "wall(s)",
+             "events/s");
+
+    let mut cells = Vec::new();
+    for mode in ["reference", "incremental"] {
+        for wl in ["A", "D"] {
+            for sched in SCHEDULERS {
+                let c = run_cell(mode, wl, sched, duration_us);
+                println!("{:<12} {:<8} {:<12} {:>9} {:>10} {:>9.3} {:>12.0}",
+                         c.mode, c.workload, c.scheduler, c.launches,
+                         c.events, c.wall_s, c.events_per_sec);
+                cells.push(c);
+            }
+        }
+    }
+
+    let total_launches: usize = cells
+        .iter()
+        .filter(|c| c.mode == "incremental")
+        .map(|c| c.launches)
+        .sum();
+    let before = aggregate_events_per_sec(&cells, "reference");
+    let after = aggregate_events_per_sec(&cells, "incremental");
+    let speedup = after / before.max(1e-12);
+    println!("\ntotal launches (incremental leg): {total_launches}");
+    println!("aggregate events/s: reference {before:.0}, \
+              incremental {after:.0}, speedup {speedup:.2}x");
+
+    // Hand-rolled JSON (no serde in the offline crate set).
+    let mut j = String::new();
+    j.push_str("{\n");
+    let _ = writeln!(j, "  \"bench\": \"engine_throughput\",");
+    let _ = writeln!(j, "  \"platform\": \"rtx2060\",");
+    let _ = writeln!(j, "  \"duration_us\": {duration_us},");
+    let _ = writeln!(j, "  \"smoke\": {smoke},");
+    let _ = writeln!(j, "  \"total_launches\": {total_launches},");
+    let _ = writeln!(j, "  \"events_per_sec_reference\": {before:.1},");
+    let _ = writeln!(j, "  \"events_per_sec_incremental\": {after:.1},");
+    let _ = writeln!(j, "  \"speedup\": {speedup:.3},");
+    j.push_str("  \"cells\": [\n");
+    for (i, c) in cells.iter().enumerate() {
+        let _ = write!(
+            j,
+            "    {{\"mode\": \"{}\", \"workload\": \"{}\", \
+             \"scheduler\": \"{}\", \"launches\": {}, \"events\": {}, \
+             \"wall_s\": {:.6}, \"events_per_sec\": {:.1}}}",
+            c.mode, c.workload, c.scheduler, c.launches, c.events, c.wall_s,
+            c.events_per_sec
+        );
+        j.push_str(if i + 1 < cells.len() { ",\n" } else { "\n" });
+    }
+    j.push_str("  ]\n}\n");
+    std::fs::write("BENCH_engine.json", &j).expect("write BENCH_engine.json");
+    println!("wrote BENCH_engine.json");
+}

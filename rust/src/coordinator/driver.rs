@@ -29,12 +29,32 @@ impl Ord for T {
     }
 }
 
+/// Engine configuration for a run; perf experiments and differential
+/// tests flip these, normal callers use [`run`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RunOpts {
+    /// Use the retained O(events × resident) full-recompute rate model
+    /// instead of the incremental aggregates (EXPERIMENTS.md §Perf
+    /// change #4): the differential-testing oracle and the "before" leg
+    /// of `benches/engine_throughput.rs`.
+    pub reference_rates: bool,
+}
+
 /// Run `workload` under `scheduler` on `spec`. Deterministic for a given
 /// (workload.seed, scheduler) pair.
 pub fn run(spec: GpuSpec, workload: &Workload, scheduler: &mut dyn Scheduler)
            -> RunStats {
+    run_with(spec, workload, scheduler, RunOpts::default())
+}
+
+/// [`run`] with explicit engine options.
+pub fn run_with(spec: GpuSpec, workload: &Workload,
+                scheduler: &mut dyn Scheduler, opts: RunOpts) -> RunStats {
     let platform = spec.name.clone();
     let mut eng = Engine::new(spec);
+    if opts.reference_rates {
+        eng = eng.with_reference_rates();
+    }
     scheduler.init(&mut eng);
 
     let mut rng = Rng::new(workload.seed);
@@ -134,7 +154,7 @@ pub fn run(spec: GpuSpec, workload: &Workload, scheduler: &mut dyn Scheduler)
     }
     stats.timeline = metrics.records;
     stats.events = metrics.events;
-    let _ = wall.elapsed();
+    stats.wall_ns = wall.elapsed().as_nanos() as u64;
     stats
 }
 
@@ -164,5 +184,25 @@ mod tests {
         assert_eq!(a.completed_critical(), b.completed_critical());
         assert_eq!(a.completed_normal(), b.completed_normal());
         assert!((a.span_us - b.span_us).abs() < 1e-6);
+    }
+
+    #[test]
+    fn wall_clock_and_events_recorded() {
+        let wl = mdtb::mdtb_a(50_000.0).build();
+        let st = run(GpuSpec::rtx2060(), &wl, &mut Sequential::new());
+        assert!(st.events > 0);
+        assert!(st.wall_ns > 0);
+        assert!(st.events_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn reference_rates_option_reaches_same_totals() {
+        let wl = mdtb::mdtb_a(50_000.0).build();
+        let inc = run(GpuSpec::rtx2060(), &wl, &mut Sequential::new());
+        let refr = run_with(GpuSpec::rtx2060(), &wl, &mut Sequential::new(),
+                            RunOpts { reference_rates: true });
+        assert_eq!(inc.completed_critical(), refr.completed_critical());
+        assert_eq!(inc.completed_normal(), refr.completed_normal());
+        assert_eq!(inc.events, refr.events);
     }
 }

@@ -26,6 +26,9 @@ pub struct RunStats {
     pub timeline: Vec<LaunchRecord>,
     /// Simulator events processed (perf counter).
     pub events: u64,
+    /// Host wall-clock time of the whole run (ns) — denominator of the
+    /// events/sec engine-throughput metric (EXPERIMENTS.md §Perf).
+    pub wall_ns: u64,
     /// Wall time the scheduler spent making decisions (ns) — the §8.6
     /// scheduling-overhead metric, measured on the host.
     pub sched_decision_ns: u64,
@@ -89,6 +92,24 @@ impl RunStats {
         }
         self.sched_decision_ns as f64 / self.sched_decisions as f64 / 1e3
     }
+
+    /// Simulator events processed per host wall-clock second.
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.events as f64 / (self.wall_ns as f64 / 1e9)
+    }
+
+    /// Simulated-time-to-wall-time ratio (how much faster than real time
+    /// the substrate runs — the ROADMAP's "as fast as the hardware
+    /// allows" tracking number).
+    pub fn sim_speedup(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        (self.span_us * 1e3) / self.wall_ns as f64
+    }
 }
 
 fn mean(v: &[f64]) -> f64 {
@@ -128,6 +149,21 @@ mod tests {
         assert!(s.critical_latency_mean_us().is_nan());
         assert!(s.critical_latency_p99_us().is_nan());
         assert_eq!(s.throughput_rps(), 0.0);
+    }
+
+    #[test]
+    fn events_per_sec_and_speedup() {
+        let s = RunStats {
+            events: 1_000_000,
+            span_us: 2_000_000.0,
+            wall_ns: 500_000_000, // 0.5s wall
+            ..Default::default()
+        };
+        assert!((s.events_per_sec() - 2_000_000.0).abs() < 1e-6);
+        assert!((s.sim_speedup() - 4.0).abs() < 1e-9);
+        let z = RunStats::default();
+        assert_eq!(z.events_per_sec(), 0.0);
+        assert_eq!(z.sim_speedup(), 0.0);
     }
 
     #[test]

@@ -20,7 +20,22 @@
 //!
 //! Between simulator events the rates are constant, so block completion
 //! times are exact.
+//!
+//! Two evaluation paths implement the same model (EXPERIMENTS.md §Perf
+//! change #4):
+//!
+//! * [`block_rates`] — the full-recompute reference: rebuilds every per-SM
+//!   aggregate from the complete residency set on each call. O(resident)
+//!   with allocations; retained as the differential-testing oracle and the
+//!   engine's `reference_rates` mode.
+//! * the O(1) helpers ([`standalone_demand`], [`intra_sm_scale`],
+//!   [`foreign_penalty`], [`bandwidth_scale`]) — consume aggregates the
+//!   engine maintains incrementally in [`SmState`] on block admit/release,
+//!   so a steady-state event only touches the SMs that changed.
+//!   [`block_rates_indexed`] wires them together over a `BlockWork` slice
+//!   so property tests can pin both paths to each other.
 
+use crate::gpu::sm::{BlockDemand, SmState};
 use crate::gpu::spec::GpuSpec;
 
 /// Tunable model parameters (calibration recorded in EXPERIMENTS.md §Calib).
@@ -125,6 +140,82 @@ pub fn block_rates(spec: &GpuSpec, params: &ContentionParams,
             }
         })
         .collect()
+}
+
+/// Standalone compute demand (FLOP/us) of a block with `threads` threads:
+/// what the block would draw from its SM running alone.
+pub fn standalone_demand(spec: &GpuSpec, params: &ContentionParams,
+                         threads: u32) -> f64 {
+    let share = (threads as f64 / spec.max_threads_per_sm as f64)
+        * params.latency_hiding;
+    spec.flops_per_sm_us * share.min(1.0)
+}
+
+/// Intra-SM oversubscription scale given the SM's summed standalone demand.
+pub fn intra_sm_scale(spec: &GpuSpec, sm_demand: f64) -> f64 {
+    if sm_demand > spec.flops_per_sm_us {
+        spec.flops_per_sm_us / sm_demand
+    } else {
+        1.0
+    }
+}
+
+/// Cross-kernel interference penalty for a block whose SM holds
+/// `sm_threads` resident threads, `own_threads` of them from the block's
+/// own kernel.
+pub fn foreign_penalty(spec: &GpuSpec, params: &ContentionParams,
+                       sm_threads: u32, own_threads: u32) -> f64 {
+    let foreign_frac = (sm_threads - own_threads) as f64
+        / spec.max_threads_per_sm as f64;
+    1.0 / (1.0 + params.foreign_interference * foreign_frac)
+}
+
+/// Global DRAM-bandwidth scale applied to memory-coupled blocks given the
+/// total bandwidth demand at current compute rates.
+pub fn bandwidth_scale(spec: &GpuSpec, total_bw_demand: f64) -> f64 {
+    if total_bw_demand > spec.dram_bw_bytes_us {
+        spec.dram_bw_bytes_us / total_bw_demand
+    } else {
+        1.0
+    }
+}
+
+/// Aggregate-indexed equivalent of [`block_rates`]: builds the per-SM
+/// aggregates through [`SmState::admit`] (exactly how the engine maintains
+/// them) and evaluates every block through the O(1) helpers. Property
+/// tests compare this against the reference to pin both paths together.
+pub fn block_rates_indexed(spec: &GpuSpec, params: &ContentionParams,
+                           blocks: &[BlockWork]) -> Vec<f64> {
+    let mut sms: Vec<SmState> =
+        (0..spec.num_sms as usize).map(|_| SmState::empty()).collect();
+    for b in blocks {
+        let d = BlockDemand { threads: b.threads, smem: 0, regs: 0 };
+        sms[b.sm as usize].admit(&d, b.kernel,
+                                 standalone_demand(spec, params, b.threads));
+    }
+    let mut rates: Vec<f64> = blocks
+        .iter()
+        .map(|b| {
+            let sm = &sms[b.sm as usize];
+            standalone_demand(spec, params, b.threads)
+                * intra_sm_scale(spec, sm.compute_demand)
+                * foreign_penalty(spec, params, sm.threads_used,
+                                  sm.own_threads(b.kernel))
+        })
+        .collect();
+    let total_bw: f64 = blocks
+        .iter()
+        .zip(&rates)
+        .filter(|(b, _)| b.bytes > 0.0 && b.flops > 0.0)
+        .map(|(b, cr)| cr * b.bytes / b.flops)
+        .sum();
+    let bw = bandwidth_scale(spec, total_bw);
+    for (b, r) in blocks.iter().zip(rates.iter_mut()) {
+        if b.bytes > 0.0 && b.flops > 0.0 {
+            *r *= bw;
+        }
+    }
+    rates
 }
 
 #[cfg(test)]
@@ -246,6 +337,48 @@ mod tests {
         ]);
         assert!((r[1] - s.flops_per_sm_us).abs() < 1e-6);
         assert!(r[0] < s.flops_per_sm_us);
+    }
+
+    #[test]
+    fn indexed_path_matches_reference_exactly_here() {
+        // Same input order -> same FP operation order -> bitwise equality.
+        let s = spec();
+        let p = ContentionParams::default();
+        let blocks: Vec<_> = (0..48)
+            .map(|i| blk(i % s.num_sms, 32 + 16 * (i % 20),
+                         1e4 + i as f64 * 3.0e5,
+                         if i % 3 == 0 { 0.0 } else { i as f64 * 1e4 },
+                         (i % 5) as u64))
+            .collect();
+        let reference = block_rates(&s, &p, &blocks);
+        let indexed = block_rates_indexed(&s, &p, &blocks);
+        assert_eq!(reference.len(), indexed.len());
+        for (a, b) in reference.iter().zip(&indexed) {
+            assert!((a - b).abs() <= a.abs() * 1e-12,
+                    "indexed {b} diverged from reference {a}");
+        }
+    }
+
+    #[test]
+    fn helper_factors_reassemble_reference_rate() {
+        let s = spec();
+        let p = ContentionParams::default();
+        let blocks = [blk(0, 512, 1e6, 0.0, 1), blk(0, 384, 1e6, 0.0, 2)];
+        let reference = block_rates(&s, &p, &blocks);
+        let d0 = standalone_demand(&s, &p, 512);
+        let d1 = standalone_demand(&s, &p, 384);
+        let scale = intra_sm_scale(&s, d0 + d1);
+        let r0 = d0 * scale * foreign_penalty(&s, &p, 896, 512);
+        assert!((r0 - reference[0]).abs() < 1e-9, "{r0} vs {}", reference[0]);
+    }
+
+    #[test]
+    fn bandwidth_scale_clamps_only_when_oversubscribed() {
+        let s = spec();
+        assert_eq!(bandwidth_scale(&s, 0.0), 1.0);
+        assert_eq!(bandwidth_scale(&s, s.dram_bw_bytes_us * 0.5), 1.0);
+        let over = bandwidth_scale(&s, s.dram_bw_bytes_us * 2.0);
+        assert!((over - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -11,22 +11,65 @@
 //! fill of SMs) and knows nothing about criticality policies. Schedulers
 //! (Sequential / Multi-stream / IB / Miriam, `crate::coordinator`) decide
 //! what to submit and when.
+//!
+//! Steady-state cost per event is proportional to what *changed*, not to
+//! total residency (EXPERIMENTS.md §Perf change #4):
+//!
+//! * per-SM contention aggregates live in [`SmState`] and are updated on
+//!   block admit/release; the rate refresh only revisits SMs whose
+//!   residency changed, with the global bandwidth term kept as a running
+//!   sum over per-SM contributions;
+//! * block placement pops the least-loaded SM from a lazily-invalidated
+//!   binary heap keyed by `threads_used` instead of scanning every SM per
+//!   block;
+//! * kernel names are interned to `u32` ids at submit
+//!   ([`crate::gpu::names::NameTable`]), so per-name occupancy attribution
+//!   indexes flat `Vec` accumulators — no per-event `HashMap`;
+//! * blocks and launches live in free-list slabs with per-SM resident
+//!   lists; the hot loops (`refresh_rates`/`advance_to`/`step`) construct
+//!   no `Vec`/`HashMap` in steady state.
+//!
+//! The seed's full-recompute algorithm is retained behind
+//! [`Engine::with_reference_rates`] as a differential-testing oracle and
+//! the "before" leg of `benches/engine_throughput.rs`.
 
-use std::collections::HashMap;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 
-use crate::gpu::contention::{block_rates, BlockWork, ContentionParams};
+use crate::gpu::contention::{
+    bandwidth_scale, block_rates, foreign_penalty, intra_sm_scale,
+    standalone_demand, BlockWork, ContentionParams,
+};
 use crate::gpu::kernel::{Criticality, LaunchConfig};
 use crate::gpu::metrics::{LaunchRecord, SimMetrics};
+use crate::gpu::names::NameTable;
 use crate::gpu::sm::{BlockDemand, SmState};
 use crate::gpu::spec::GpuSpec;
 use crate::gpu::stream::{LaunchTag, QueuedLaunch, Stream, StreamId};
 
-/// A launch whose blocks are being dispatched / executed.
+/// Total-ordered f64 time key for the launch-overhead timer heap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct Tm(f64);
+impl Eq for Tm {}
+impl PartialOrd for Tm {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Tm {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0
+            .partial_cmp(&other.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    }
+}
+
+/// A launch whose blocks are being dispatched / executed (slab entry).
 #[derive(Debug)]
 struct ActiveLaunch {
     tag: LaunchTag,
     stream: StreamId,
-    config: LaunchConfig,
+    name_id: u32,
     criticality: Criticality,
     submit_us: f64,
     /// Time the launch became eligible to dispatch (post launch overhead).
@@ -37,16 +80,21 @@ struct ActiveLaunch {
     blocks_pending: u32,
     /// Blocks dispatched and still executing.
     blocks_running: u32,
-    /// Blocks completed.
-    blocks_done: u32,
+    // Launch statics, cached at activation so dispatch and completion
+    // never touch the stream queue again.
+    block_threads: u32,
+    smem_per_block: u32,
+    regs_per_thread: u32,
+    flops_per_block: f64,
+    bytes_per_block: f64,
 }
 
 impl ActiveLaunch {
     fn demand(&self) -> BlockDemand {
         BlockDemand {
-            threads: self.config.block_threads,
-            smem: self.config.smem_per_block,
-            regs: self.config.regs_per_thread * self.config.block_threads,
+            threads: self.block_threads,
+            smem: self.smem_per_block,
+            regs: self.regs_per_thread * self.block_threads,
         }
     }
     fn finished(&self) -> bool {
@@ -54,29 +102,40 @@ impl ActiveLaunch {
     }
 }
 
-/// One resident (executing) thread block.
+/// One resident (executing) thread block (slab entry).
 ///
-/// Launch statics (threads/flops/bytes/warps) are cached here at dispatch
-/// time so the per-event rate refresh never touches the launch HashMap —
-/// the event loop's hottest path (EXPERIMENTS.md §Perf, change #1).
-#[derive(Debug)]
-struct ResidentBlock {
+/// Launch statics are cached here at dispatch time so the per-event rate
+/// refresh never touches the launch slab — the event loop's hottest path
+/// (EXPERIMENTS.md §Perf, changes #1/#4).
+#[derive(Debug, Clone)]
+struct BlockSlot {
+    /// Slot occupancy flag (dead slots are on the free list).
+    live: bool,
     tag: LaunchTag,
+    /// Index into the launch slab.
+    launch: u32,
     sm: u32,
-    /// Remaining work in FLOPs.
-    remaining: f64,
-    /// Current progress rate (FLOP/us), refreshed on every event.
-    rate: f64,
-    /// The rate this block would get alone on its SM with free bandwidth —
-    /// the denominator of the productive-occupancy weight (a warp stalled
-    /// by contention does not count as active, matching the profiler
-    /// semantics of the paper's achieved-occupancy metric, §8.1.4).
-    entitled: f64,
-    /// Cached launch statics.
+    /// Position inside `sm_resident[sm]` (maintained across swap-removes).
+    pos_in_sm: u32,
+    name_id: u32,
+    criticality: Criticality,
     threads: u32,
     warps: f64,
+    /// Standalone compute demand (FLOP/us) — also the entitled rate, the
+    /// denominator of the productive-occupancy weight (a warp stalled by
+    /// contention does not count as active, matching the profiler
+    /// semantics of the paper's achieved-occupancy metric, §8.1.4).
+    demand: f64,
     flops_per_block: f64,
     bytes_per_block: f64,
+    /// Couples to the global DRAM-bandwidth term.
+    memory_bound: bool,
+    /// Remaining work in FLOPs.
+    remaining: f64,
+    /// Compute rate (FLOP/us) from the per-SM terms; the effective
+    /// progress rate is `cr * bw_scale` for memory-bound blocks. In
+    /// reference mode `cr` holds the final rate and `bw_scale` stays 1.
+    cr: f64,
 }
 
 /// Completion event the engine reports to the driver.
@@ -109,12 +168,60 @@ pub struct Engine {
     pub params: ContentionParams,
     now_us: f64,
     streams: Vec<Stream>,
+    /// Stream indices in dispatch order (priority desc, id asc); rebuilt
+    /// only when a stream is added.
+    stream_order: Vec<u32>,
+    /// Active launch slot per stream (parallel to `streams`).
+    head_slot: Vec<Option<u32>>,
     sms: Vec<SmState>,
-    active: HashMap<LaunchTag, ActiveLaunch>,
-    resident: Vec<ResidentBlock>,
+    /// Per-SM list of live block-slot ids.
+    sm_resident: Vec<Vec<u32>>,
+    /// Per-SM bandwidth demand at current compute rates (running sum
+    /// contributions to `total_bw_demand`).
+    sm_bw_demand: Vec<f64>,
+    /// SMs whose residency changed since the last rate refresh.
+    dirty_sms: Vec<u32>,
+    sm_dirty: Vec<bool>,
+    /// Least-loaded-SM index: min-heap of (threads_used, sm, version)
+    /// with lazy invalidation; exactly one entry per SM is current.
+    sm_heap: BinaryHeap<Reverse<(u32, u32, u64)>>,
+    sm_ver: Vec<u64>,
+    sm_heap_scratch: Vec<(u32, u32, u64)>,
+    /// Launch slab + free list.
+    launches: Vec<Option<ActiveLaunch>>,
+    free_launches: Vec<u32>,
+    live_launches: usize,
+    /// Block slab + free list. The slab never exceeds peak residency,
+    /// which the hardware budgets cap at `num_sms * max_blocks_per_sm`
+    /// slots (480 on the RTX 2060 preset), so whole-slab sweeps in the
+    /// event loop stay bounded by the GPU size, not the workload.
+    blocks: Vec<BlockSlot>,
+    free_blocks: Vec<u32>,
+    live_blocks: usize,
+    /// SMs with >= 1 resident block (occupancy integral term).
+    busy_sms: u32,
+    /// Global bandwidth running sum and its derived scale.
+    total_bw_demand: f64,
+    bw_scale: f64,
+    /// Launch-overhead timers (ready_us, launch slot, tag), popped lazily.
+    ready_timers: BinaryHeap<Reverse<(Tm, u32, LaunchTag)>>,
+    /// Interned kernel names and flat per-name occupancy accumulators.
+    names: NameTable,
+    name_warp_time: Vec<f64>,
+    name_active_time: Vec<f64>,
+    name_seen_epoch: Vec<u64>,
+    epoch: u64,
+    /// Residency counters maintained incrementally for `snapshot`.
+    critical_blocks: u32,
+    normal_blocks: u32,
+    /// (block_threads, count) of resident critical blocks.
+    critical_thread_sizes: Vec<(u32, u32)>,
+    critical_pending: u32,
     metrics: SimMetrics,
     next_tag: LaunchTag,
     rates_dirty: bool,
+    /// Use the retained full-recompute rate model (differential oracle).
+    reference_rates: bool,
     /// Memoized absolute time of the next internal event. Finish times are
     /// absolute, so advancing the clock does not invalidate the cache —
     /// only rate changes and new timers do (§Perf change #2).
@@ -127,26 +234,70 @@ impl Engine {
     }
 
     pub fn with_params(spec: GpuSpec, params: ContentionParams) -> Self {
-        let sms = (0..spec.num_sms).map(|_| SmState::empty()).collect();
+        let n = spec.num_sms as usize;
+        let mut sm_heap = BinaryHeap::with_capacity(2 * n);
+        for s in 0..n {
+            sm_heap.push(Reverse((0u32, s as u32, 0u64)));
+        }
         Engine {
             spec,
             params,
             now_us: 0.0,
             streams: Vec::new(),
-            sms,
-            active: HashMap::new(),
-            resident: Vec::new(),
+            stream_order: Vec::new(),
+            head_slot: Vec::new(),
+            sms: (0..n).map(|_| SmState::empty()).collect(),
+            sm_resident: vec![Vec::new(); n],
+            sm_bw_demand: vec![0.0; n],
+            dirty_sms: Vec::with_capacity(n),
+            sm_dirty: vec![false; n],
+            sm_heap,
+            sm_ver: vec![0; n],
+            sm_heap_scratch: Vec::with_capacity(n),
+            launches: Vec::new(),
+            free_launches: Vec::new(),
+            live_launches: 0,
+            blocks: Vec::new(),
+            free_blocks: Vec::new(),
+            live_blocks: 0,
+            busy_sms: 0,
+            total_bw_demand: 0.0,
+            bw_scale: 1.0,
+            ready_timers: BinaryHeap::new(),
+            names: NameTable::new(),
+            name_warp_time: Vec::new(),
+            name_active_time: Vec::new(),
+            name_seen_epoch: Vec::new(),
+            epoch: 0,
+            critical_blocks: 0,
+            normal_blocks: 0,
+            critical_thread_sizes: Vec::new(),
+            critical_pending: 0,
             metrics: SimMetrics::default(),
             next_tag: 1,
             rates_dirty: true,
+            reference_rates: false,
             event_cache: None,
         }
+    }
+
+    /// Switch to the retained full-recompute rate model (the seed's
+    /// O(events × resident) algorithm). Used by differential property
+    /// tests and as the "before" leg of the engine-throughput bench.
+    pub fn with_reference_rates(mut self) -> Self {
+        self.reference_rates = true;
+        self
     }
 
     /// Create a stream with the given dispatch priority (higher wins).
     pub fn add_stream(&mut self, priority: i32) -> StreamId {
         let id = self.streams.len() as StreamId;
         self.streams.push(Stream::new(id, priority));
+        self.head_slot.push(None);
+        self.stream_order.push(id);
+        let streams = &self.streams;
+        self.stream_order
+            .sort_by_key(|&i| (-streams[i as usize].priority, i));
         id
     }
 
@@ -158,8 +309,29 @@ impl Engine {
         &self.metrics
     }
 
+    /// The interned kernel-name table.
+    pub fn names(&self) -> &NameTable {
+        &self.names
+    }
+
+    /// Consume the engine, resolving interned per-name occupancy
+    /// accumulators into the metrics maps (names are resolved once here,
+    /// not per event).
     pub fn into_metrics(mut self) -> SimMetrics {
         self.metrics.sim_time_us = self.now_us;
+        for (id, name) in self.names.iter() {
+            let at = self.name_active_time[id as usize];
+            if at > 0.0 {
+                self.metrics
+                    .occupancy
+                    .per_name_warp_time
+                    .insert(name.to_string(), self.name_warp_time[id as usize]);
+                self.metrics
+                    .occupancy
+                    .per_name_active_time
+                    .insert(name.to_string(), at);
+            }
+        }
         self.metrics
     }
 
@@ -182,8 +354,11 @@ impl Engine {
         assert!(config.flops > 0.0, "launch {} needs flops > 0", config.name);
         let tag = self.next_tag;
         self.next_tag += 1;
+        let name_id = self.names.intern(&config.name);
+        self.ensure_name_capacity(name_id);
         self.streams[stream as usize].push(QueuedLaunch {
             tag,
+            name_id,
             config,
             criticality,
             extra_delay_us,
@@ -196,44 +371,162 @@ impl Engine {
 
     /// True when nothing is queued, dispatching, or executing.
     pub fn idle(&self) -> bool {
-        self.active.is_empty() && self.streams.iter().all(|s| s.is_empty())
+        self.live_launches == 0 && self.streams.iter().all(|s| s.is_empty())
     }
 
     /// Number of launches not yet completed.
     pub fn inflight(&self) -> usize {
-        self.active.len()
+        self.live_launches
             + self.streams.iter().map(|s| s.depth()).sum::<usize>()
-            - self
-                .streams
-                .iter()
-                .filter(|s| s.head_active)
-                .count()
     }
 
-    /// Promote stream heads whose turn has come into `active`.
+    fn ensure_name_capacity(&mut self, id: u32) {
+        let need = id as usize + 1;
+        if self.name_warp_time.len() < need {
+            self.name_warp_time.resize(need, 0.0);
+            self.name_active_time.resize(need, 0.0);
+            self.name_seen_epoch.resize(need, 0);
+        }
+    }
+
+    fn alloc_launch(&mut self, launch: ActiveLaunch) -> u32 {
+        self.live_launches += 1;
+        if let Some(slot) = self.free_launches.pop() {
+            self.launches[slot as usize] = Some(launch);
+            slot
+        } else {
+            self.launches.push(Some(launch));
+            (self.launches.len() - 1) as u32
+        }
+    }
+
+    fn alloc_block(&mut self, block: BlockSlot) -> u32 {
+        self.live_blocks += 1;
+        if let Some(slot) = self.free_blocks.pop() {
+            self.blocks[slot as usize] = block;
+            slot
+        } else {
+            self.blocks.push(block);
+            (self.blocks.len() - 1) as u32
+        }
+    }
+
+    fn mark_sm_dirty(&mut self, sm: usize) {
+        if !self.sm_dirty[sm] {
+            self.sm_dirty[sm] = true;
+            self.dirty_sms.push(sm as u32);
+        }
+        self.rates_dirty = true;
+        self.event_cache = None;
+    }
+
+    /// Re-key `sm` in the placement heap after its load changed. Stale
+    /// entries are popped lazily by `pick_sm`; high-key stale entries can
+    /// linger at the bottom, so once the heap outgrows a small multiple of
+    /// the SM count it is rebuilt from the current entries — O(num_sms),
+    /// amortized O(1) per bump.
+    fn bump_sm_ver(&mut self, sm: usize) {
+        self.sm_ver[sm] += 1;
+        self.sm_heap
+            .push(Reverse((self.sms[sm].threads_used, sm as u32,
+                           self.sm_ver[sm])));
+        if self.sm_heap.len() > 8 * self.sms.len() {
+            self.sm_heap.clear();
+            for (s, state) in self.sms.iter().enumerate() {
+                self.sm_heap.push(Reverse((state.threads_used, s as u32,
+                                           self.sm_ver[s])));
+            }
+        }
+    }
+
+    fn crit_threads_inc(&mut self, threads: u32) {
+        match self
+            .critical_thread_sizes
+            .iter_mut()
+            .find(|(t, _)| *t == threads)
+        {
+            Some((_, c)) => *c += 1,
+            None => self.critical_thread_sizes.push((threads, 1)),
+        }
+    }
+
+    fn crit_threads_dec(&mut self, threads: u32) {
+        if let Some(pos) = self
+            .critical_thread_sizes
+            .iter()
+            .position(|(t, _)| *t == threads)
+        {
+            self.critical_thread_sizes[pos].1 -= 1;
+            if self.critical_thread_sizes[pos].1 == 0 {
+                self.critical_thread_sizes.swap_remove(pos);
+            }
+        }
+    }
+
+    /// Promote stream heads whose turn has come into the launch slab. The
+    /// queued launch is *moved* out of its stream (one ownership transfer,
+    /// no clone).
     fn activate_stream_heads(&mut self) {
         for s in 0..self.streams.len() {
             if self.streams[s].head_active || self.streams[s].is_empty() {
                 continue;
             }
-            let q = self.streams[s].queue.front().unwrap();
-            let ready = self.now_us + self.spec.kernel_launch_us + q.extra_delay_us;
-            let q = self.streams[s].queue.front().unwrap().clone();
+            let q = self.streams[s].queue.pop_front().unwrap();
+            let ready = self.now_us + self.spec.kernel_launch_us
+                + q.extra_delay_us;
             self.streams[s].head_active = true;
             self.event_cache = None; // new launch-overhead timer
-            self.active.insert(q.tag, ActiveLaunch {
+            if q.criticality == Criticality::Critical {
+                self.critical_pending += q.config.grid;
+            }
+            let launch = ActiveLaunch {
                 tag: q.tag,
                 stream: s as StreamId,
-                config: q.config.clone(),
+                name_id: q.name_id,
                 criticality: q.criticality,
                 submit_us: q.submit_us,
                 ready_us: ready,
                 start_us: None,
                 blocks_pending: q.config.grid,
                 blocks_running: 0,
-                blocks_done: 0,
-            });
+                block_threads: q.config.block_threads,
+                smem_per_block: q.config.smem_per_block,
+                regs_per_thread: q.config.regs_per_thread,
+                flops_per_block: q.config.flops_per_block(),
+                bytes_per_block: q.config.bytes_per_block(),
+            };
+            let tag = launch.tag;
+            let slot = self.alloc_launch(launch);
+            self.head_slot[s] = Some(slot);
+            self.ready_timers.push(Reverse((Tm(ready), slot, tag)));
         }
+    }
+
+    /// Least-loaded (by threads) SM that fits `d`, via the placement heap.
+    /// Pops stale entries lazily; current-but-unfit entries are set aside
+    /// and reinserted, so the heap invariant (one current entry per SM)
+    /// holds on return. Selection order matches a linear argmin scan:
+    /// smallest `threads_used`, ties broken by smallest SM id.
+    fn pick_sm(&mut self, d: &BlockDemand) -> Option<usize> {
+        let mut found = None;
+        while let Some(&Reverse(entry)) = self.sm_heap.peek() {
+            let (_, sm, ver) = entry;
+            let si = sm as usize;
+            if self.sm_ver[si] != ver {
+                self.sm_heap.pop(); // stale
+                continue;
+            }
+            if self.sms[si].fits(d, &self.spec) {
+                found = Some(si);
+                break;
+            }
+            self.sm_heap.pop();
+            self.sm_heap_scratch.push(entry);
+        }
+        for e in self.sm_heap_scratch.drain(..) {
+            self.sm_heap.push(Reverse(e));
+        }
+        found
     }
 
     /// Greedy block dispatcher: streams in priority order (FIFO within a
@@ -242,81 +535,143 @@ impl Engine {
     /// fill around a higher-priority launch that does not fit (hardware
     /// work-distributor behaviour per Gilman et al. [9]).
     fn try_dispatch(&mut self) {
-        // Streams sorted by (priority desc, id asc).
-        let mut order: Vec<usize> = (0..self.streams.len()).collect();
-        order.sort_by_key(|&i| (-self.streams[i].priority, i));
-        for si in order {
+        for oi in 0..self.stream_order.len() {
+            let si = self.stream_order[oi] as usize;
             if !self.streams[si].head_active {
                 continue;
             }
-            let tag = match self.streams[si].queue.front() {
-                Some(q) => q.tag,
-                None => continue,
+            let Some(slot) = self.head_slot[si] else { continue };
+            let (ready, pending0, demand, tag, crit, name_id, threads, fpb,
+                 bpb) = {
+                let l = self.launches[slot as usize].as_ref().unwrap();
+                (l.ready_us, l.blocks_pending, l.demand(), l.tag,
+                 l.criticality, l.name_id, l.block_threads,
+                 l.flops_per_block, l.bytes_per_block)
             };
-            let launch = self.active.get_mut(&tag).unwrap();
-            if launch.ready_us > self.now_us {
-                continue; // still in launch overhead
+            if ready > self.now_us || pending0 == 0 {
+                continue; // still in launch overhead, or fully dispatched
             }
-            let demand = launch.demand();
-            while launch.blocks_pending > 0 {
-                // Least-loaded (by threads) SM that fits.
-                let mut best: Option<(usize, u32)> = None;
-                for (i, sm) in self.sms.iter().enumerate() {
-                    if sm.fits(&demand, &self.spec) {
-                        let used = sm.threads_used;
-                        if best.map_or(true, |(_, u)| used < u) {
-                            best = Some((i, used));
-                        }
+            let demand_flops =
+                standalone_demand(&self.spec, &self.params, threads);
+            let warps = threads.div_ceil(self.spec.warp_size) as f64;
+            let memory_bound = bpb > 0.0 && fpb > 0.0;
+            let mut pending = pending0;
+            while pending > 0 {
+                let Some(sm_idx) = self.pick_sm(&demand) else { break };
+                self.sms[sm_idx].admit(&demand, tag, demand_flops);
+                if self.sms[sm_idx].blocks_resident == 1 {
+                    self.busy_sms += 1;
+                }
+                self.bump_sm_ver(sm_idx);
+                self.mark_sm_dirty(sm_idx);
+                pending -= 1;
+                {
+                    let l = self.launches[slot as usize].as_mut().unwrap();
+                    l.blocks_pending -= 1;
+                    l.blocks_running += 1;
+                    if l.start_us.is_none() {
+                        l.start_us = Some(self.now_us);
                     }
                 }
-                let Some((sm_idx, _)) = best else { break };
-                self.sms[sm_idx].admit(&demand);
-                launch.blocks_pending -= 1;
-                launch.blocks_running += 1;
-                if launch.start_us.is_none() {
-                    launch.start_us = Some(self.now_us);
+                match crit {
+                    Criticality::Critical => {
+                        self.critical_blocks += 1;
+                        self.critical_pending -= 1;
+                        self.crit_threads_inc(threads);
+                    }
+                    Criticality::Normal => self.normal_blocks += 1,
                 }
-                let share = (launch.config.block_threads as f64
-                    / self.spec.max_threads_per_sm as f64)
-                    * self.params.latency_hiding;
-                self.resident.push(ResidentBlock {
+                let pos = self.sm_resident[sm_idx].len() as u32;
+                let bslot = self.alloc_block(BlockSlot {
+                    live: true,
                     tag,
+                    launch: slot,
                     sm: sm_idx as u32,
-                    remaining: launch.config.flops_per_block(),
-                    rate: 0.0,
-                    entitled: self.spec.flops_per_sm_us * share.min(1.0),
-                    threads: launch.config.block_threads,
-                    warps: launch.config.block_threads
-                        .div_ceil(self.spec.warp_size) as f64,
-                    flops_per_block: launch.config.flops_per_block(),
-                    bytes_per_block: launch.config.bytes_per_block(),
+                    pos_in_sm: pos,
+                    name_id,
+                    criticality: crit,
+                    threads,
+                    warps,
+                    demand: demand_flops,
+                    flops_per_block: fpb,
+                    bytes_per_block: bpb,
+                    memory_bound,
+                    remaining: fpb,
+                    cr: 0.0,
                 });
-                self.rates_dirty = true;
-                self.event_cache = None;
+                self.sm_resident[sm_idx].push(bslot);
             }
         }
     }
 
+    /// Incremental rate refresh: only SMs whose residency changed are
+    /// revisited; the bandwidth term updates as a running per-SM sum.
     fn refresh_rates(&mut self) {
         if !self.rates_dirty {
             return;
         }
-        let works: Vec<BlockWork> = self
-            .resident
-            .iter()
-            .map(|b| BlockWork {
-                sm: b.sm,
-                threads: b.threads,
-                flops: b.flops_per_block,
-                bytes: b.bytes_per_block,
-                kernel: b.tag,
-            })
-            .collect();
-        let rates = block_rates(&self.spec, &self.params, &works);
-        for (b, r) in self.resident.iter_mut().zip(rates) {
-            b.rate = r;
+        if self.reference_rates {
+            self.refresh_rates_reference();
+            self.rates_dirty = false;
+            return;
         }
+        while let Some(s) = self.dirty_sms.pop() {
+            let si = s as usize;
+            self.sm_dirty[si] = false;
+            let scale = intra_sm_scale(&self.spec, self.sms[si].compute_demand);
+            let mut sm_bw = 0.0;
+            for k in 0..self.sm_resident[si].len() {
+                let bi = self.sm_resident[si][k] as usize;
+                let penalty = foreign_penalty(
+                    &self.spec,
+                    &self.params,
+                    self.sms[si].threads_used,
+                    self.sms[si].own_threads(self.blocks[bi].tag),
+                );
+                let b = &mut self.blocks[bi];
+                b.cr = b.demand * scale * penalty;
+                if b.memory_bound {
+                    sm_bw += b.cr * b.bytes_per_block / b.flops_per_block;
+                }
+            }
+            self.total_bw_demand += sm_bw - self.sm_bw_demand[si];
+            self.sm_bw_demand[si] = sm_bw;
+        }
+        if self.live_blocks == 0 {
+            // Exact reset: the running sum cannot drift across idle gaps.
+            self.total_bw_demand = 0.0;
+        }
+        self.bw_scale = bandwidth_scale(&self.spec, self.total_bw_demand);
         self.rates_dirty = false;
+    }
+
+    /// The seed's O(events × resident) algorithm: rebuild the full
+    /// `BlockWork` set and recompute every rate through the reference
+    /// model. Kept as the differential-testing oracle and the perf
+    /// baseline; the allocations here are the point.
+    fn refresh_rates_reference(&mut self) {
+        let mut works = Vec::with_capacity(self.live_blocks);
+        let mut slots = Vec::with_capacity(self.live_blocks);
+        for (i, b) in self.blocks.iter().enumerate() {
+            if b.live {
+                works.push(BlockWork {
+                    sm: b.sm,
+                    threads: b.threads,
+                    flops: b.flops_per_block,
+                    bytes: b.bytes_per_block,
+                    kernel: b.tag,
+                });
+                slots.push(i);
+            }
+        }
+        let rates = block_rates(&self.spec, &self.params, &works);
+        for (i, r) in slots.into_iter().zip(rates) {
+            self.blocks[i].cr = r;
+        }
+        self.bw_scale = 1.0; // final rates already carry the bw term
+        while let Some(s) = self.dirty_sms.pop() {
+            self.sm_dirty[s as usize] = false;
+        }
     }
 
     /// Time of the next internal event (block completion or launch-overhead
@@ -327,17 +682,30 @@ impl Engine {
             return if t.is_finite() { Some(t) } else { None };
         }
         let mut t = f64::INFINITY;
-        for b in &self.resident {
-            if b.rate > 0.0 {
-                t = t.min(self.now_us + b.remaining / b.rate);
+        let bw = self.bw_scale;
+        for b in &self.blocks {
+            if !b.live {
+                continue;
+            }
+            let rate = if b.memory_bound { b.cr * bw } else { b.cr };
+            if rate > 0.0 {
+                t = t.min(self.now_us + b.remaining / rate);
             }
         }
-        for l in self.active.values() {
-            // A launch waiting out its overhead (with pending blocks and a
-            // head position) wakes the engine at ready_us.
-            if l.blocks_pending > 0 && l.ready_us > self.now_us {
-                t = t.min(l.ready_us);
+        // A launch waiting out its overhead (with pending blocks) wakes
+        // the engine at ready_us. Expired or dead timers pop lazily.
+        while let Some(&Reverse((Tm(rt), slot, tag))) = self.ready_timers.peek()
+        {
+            let live = self
+                .launches
+                .get(slot as usize)
+                .and_then(|l| l.as_ref())
+                .is_some_and(|l| l.tag == tag && l.blocks_pending > 0);
+            if live && rt > self.now_us {
+                t = t.min(rt);
+                break;
             }
+            self.ready_timers.pop();
         }
         self.event_cache = Some(t);
         if t.is_finite() {
@@ -354,59 +722,96 @@ impl Engine {
         let dt = (t - self.now_us).max(0.0);
         if dt > 0.0 {
             self.refresh_rates();
-            // Occupancy integrals (productivity-weighted warps; see the
-            // per-name attribution comment below).
-            let mut active_sms = 0.0;
-            for sm in &self.sms {
-                if !sm.is_idle() {
-                    active_sms += 1.0;
-                }
-            }
+            self.metrics.occupancy.active_sm_time += self.busy_sms as f64 * dt;
+            // Per-name attribution, productivity-weighted: a warp making
+            // `rate/entitled` of its solo progress counts as that fraction
+            // of an active warp. Flat-Vec accumulators indexed by interned
+            // name id; the epoch stamp dedups active-time per interval.
+            self.epoch += 1;
+            let epoch = self.epoch;
+            let bw = self.bw_scale;
             let mut warp_time = 0.0;
-            for b in &self.resident {
-                let weight = if b.entitled > 0.0 {
-                    (b.rate / b.entitled).min(1.0)
+            for b in &mut self.blocks {
+                if !b.live {
+                    continue;
+                }
+                let rate = if b.memory_bound { b.cr * bw } else { b.cr };
+                let weight = if b.demand > 0.0 {
+                    (rate / b.demand).min(1.0)
                 } else {
                     1.0
                 };
-                warp_time += b.warps * weight;
+                let w = b.warps * weight;
+                warp_time += w;
+                let id = b.name_id as usize;
+                self.name_warp_time[id] += w * dt;
+                if self.name_seen_epoch[id] != epoch {
+                    self.name_seen_epoch[id] = epoch;
+                    self.name_active_time[id] += dt;
+                }
+                b.remaining -= rate * dt;
             }
             self.metrics.occupancy.warp_time += warp_time * dt;
-            self.metrics.occupancy.active_sm_time += active_sms * dt;
-            // Per-kernel-name attribution, productivity-weighted: a warp
-            // making `rate/entitled` of its solo progress counts as that
-            // fraction of an active warp.
-            let mut name_warps: HashMap<&str, f64> = HashMap::new();
-            for b in &self.resident {
-                let l = &self.active[&b.tag];
-                let weight = if b.entitled > 0.0 {
-                    (b.rate / b.entitled).min(1.0)
-                } else {
-                    1.0
-                };
-                *name_warps.entry(l.config.name.as_str()).or_default() +=
-                    b.warps * weight;
-            }
-            for (name, w) in name_warps {
-                *self
-                    .metrics
-                    .occupancy
-                    .per_name_warp_time
-                    .entry(name.to_string())
-                    .or_default() += w * dt;
-                *self
-                    .metrics
-                    .occupancy
-                    .per_name_active_time
-                    .entry(name.to_string())
-                    .or_default() += dt;
-            }
-            // Progress.
-            for b in &mut self.resident {
-                b.remaining -= b.rate * dt;
-            }
         }
         self.now_us = t;
+    }
+
+    /// Retire one finished block; emits a [`Completion`] when it was the
+    /// launch's last.
+    fn complete_block(&mut self, bi: usize,
+                      completions: &mut Vec<Completion>) {
+        let (tag, lslot, sm, pos, crit, threads) = {
+            let b = &mut self.blocks[bi];
+            b.live = false;
+            (b.tag, b.launch as usize, b.sm as usize, b.pos_in_sm as usize,
+             b.criticality, b.threads)
+        };
+        self.free_blocks.push(bi as u32);
+        self.live_blocks -= 1;
+        let _ = self.sm_resident[sm].swap_remove(pos);
+        if pos < self.sm_resident[sm].len() {
+            let moved = self.sm_resident[sm][pos] as usize;
+            self.blocks[moved].pos_in_sm = pos as u32;
+        }
+        let demand = self.launches[lslot].as_ref().unwrap().demand();
+        let demand_flops = standalone_demand(&self.spec, &self.params, threads);
+        self.sms[sm].release(&demand, tag, demand_flops);
+        if self.sms[sm].blocks_resident == 0 {
+            self.busy_sms -= 1;
+        }
+        self.bump_sm_ver(sm);
+        self.mark_sm_dirty(sm);
+        match crit {
+            Criticality::Critical => {
+                self.critical_blocks -= 1;
+                self.crit_threads_dec(threads);
+            }
+            Criticality::Normal => self.normal_blocks -= 1,
+        }
+        let finished = {
+            let l = self.launches[lslot].as_mut().unwrap();
+            l.blocks_running -= 1;
+            l.finished()
+        };
+        if finished {
+            let l = self.launches[lslot].take().unwrap();
+            self.free_launches.push(lslot as u32);
+            self.live_launches -= 1;
+            // Free the stream head, making the next launch eligible.
+            self.head_slot[l.stream as usize] = None;
+            self.streams[l.stream as usize].head_active = false;
+            let record = LaunchRecord {
+                tag: l.tag,
+                name: self.names.resolve(l.name_id).to_string(),
+                stream: l.stream,
+                criticality: l.criticality,
+                submit_us: l.submit_us,
+                start_us: l.start_us.unwrap_or(l.submit_us),
+                end_us: self.now_us,
+            };
+            self.metrics.records.push(record.clone());
+            completions.push(Completion { tag: l.tag, record });
+        }
     }
 
     /// Process the next internal event. Returns completions that fired.
@@ -429,38 +834,15 @@ impl Engine {
         // never decreases). `slack` is ~1000 ULPs of `now` plus a picosecond
         // floor — nanoseconds at most, far below kernel timescales.
         let slack = self.now_us.abs() * 1e-12 + 1e-6;
-        let mut i = 0;
-        while i < self.resident.len() {
-            if self.resident[i].remaining <= self.resident[i].rate * slack {
-                let blk = self.resident.swap_remove(i);
-                let launch = self.active.get_mut(&blk.tag).unwrap();
-                let demand = launch.demand();
-                self.sms[blk.sm as usize].release(&demand);
-                launch.blocks_running -= 1;
-                launch.blocks_done += 1;
-                self.rates_dirty = true;
-                self.event_cache = None;
-                if launch.finished() {
-                    let l = self.active.remove(&blk.tag).unwrap();
-                    let record = LaunchRecord {
-                        tag: l.tag,
-                        name: l.config.name.clone(),
-                        stream: l.stream,
-                        criticality: l.criticality,
-                        submit_us: l.submit_us,
-                        start_us: l.start_us.unwrap_or(l.submit_us),
-                        end_us: self.now_us,
-                    };
-                    self.metrics.records.push(record.clone());
-                    // Pop the stream head, making the next launch eligible.
-                    let s = &mut self.streams[l.stream as usize];
-                    let popped = s.queue.pop_front().unwrap();
-                    debug_assert_eq!(popped.tag, l.tag);
-                    s.head_active = false;
-                    completions.push(Completion { tag: l.tag, record });
-                }
-            } else {
-                i += 1;
+        let bw = self.bw_scale;
+        for bi in 0..self.blocks.len() {
+            let b = &self.blocks[bi];
+            if !b.live {
+                continue;
+            }
+            let rate = if b.memory_bound { b.cr * bw } else { b.cr };
+            if b.remaining <= rate * slack {
+                self.complete_block(bi, &mut completions);
             }
         }
         self.activate_stream_heads();
@@ -477,36 +859,23 @@ impl Engine {
         all
     }
 
-    /// Snapshot for scheduling policies.
+    /// Snapshot for scheduling policies. All counters are maintained
+    /// incrementally on dispatch/completion, so this never walks the
+    /// residency set.
     pub fn snapshot(&self) -> GpuSnapshot {
-        let mut critical_blocks = 0;
-        let mut critical_block_threads = 0;
-        let mut normal_blocks = 0;
-        for b in &self.resident {
-            let l = &self.active[&b.tag];
-            match l.criticality {
-                Criticality::Critical => {
-                    critical_blocks += 1;
-                    critical_block_threads = critical_block_threads
-                        .max(l.config.block_threads);
-                }
-                Criticality::Normal => normal_blocks += 1,
-            }
-        }
-        let critical_pending = self
-            .active
-            .values()
-            .filter(|l| l.criticality == Criticality::Critical)
-            .map(|l| l.blocks_pending)
-            .sum();
         GpuSnapshot {
             now_us: self.now_us,
             sm_threads_used: self.sms.iter().map(|s| s.threads_used).collect(),
             sm_blocks: self.sms.iter().map(|s| s.blocks_resident).collect(),
-            critical_blocks,
-            critical_block_threads,
-            critical_pending,
-            normal_blocks,
+            critical_blocks: self.critical_blocks,
+            critical_block_threads: self
+                .critical_thread_sizes
+                .iter()
+                .map(|&(t, _)| t)
+                .max()
+                .unwrap_or(0),
+            critical_pending: self.critical_pending,
+            normal_blocks: self.normal_blocks,
         }
     }
 }
@@ -698,5 +1067,93 @@ mod tests {
         assert!(e.next_event_time().is_none());
         assert!(e.idle());
         assert!(e.step().is_empty());
+    }
+
+    #[test]
+    fn indexed_placement_spreads_like_least_loaded() {
+        // 60 equal blocks on 30 SMs: the heap-driven placement must land
+        // exactly 2 per SM, like the linear least-loaded scan it replaces.
+        let spec = GpuSpec::rtx2060();
+        let mut e = Engine::new(spec.clone());
+        let s = e.add_stream(0);
+        e.submit(s, cfg("k", 60, 256, 60.0 * 215_000.0, 0.0),
+                 Criticality::Normal);
+        let t = e.next_event_time().unwrap();
+        e.advance_to(t);
+        e.step(); // overhead expiry -> dispatch
+        let snap = e.snapshot();
+        assert!(snap.sm_blocks.iter().all(|&b| b == 2),
+                "uneven placement: {:?}", snap.sm_blocks);
+        e.run_to_idle();
+    }
+
+    #[test]
+    fn names_are_interned_once() {
+        let mut e = Engine::new(GpuSpec::rtx2060());
+        let s = e.add_stream(0);
+        for _ in 0..3 {
+            e.submit(s, cfg("same", 1, 32, 1000.0, 0.0), Criticality::Normal);
+        }
+        e.submit(s, cfg("other", 1, 32, 1000.0, 0.0), Criticality::Normal);
+        assert_eq!(e.names().len(), 2);
+        let done = e.run_to_idle();
+        assert_eq!(done.len(), 4);
+        assert_eq!(done[0].record.name, "same");
+        assert_eq!(done[3].record.name, "other");
+    }
+
+    #[test]
+    fn snapshot_counters_return_to_zero_at_idle() {
+        let mut e = Engine::new(GpuSpec::rtx2060());
+        let hi = e.add_stream(10);
+        let lo = e.add_stream(0);
+        e.submit(hi, cfg("c", 40, 512, 4e6, 1e5), Criticality::Critical);
+        e.submit(lo, cfg("n", 40, 256, 4e6, 0.0), Criticality::Normal);
+        e.run_to_idle();
+        let snap = e.snapshot();
+        assert_eq!(snap.critical_blocks, 0);
+        assert_eq!(snap.normal_blocks, 0);
+        assert_eq!(snap.critical_pending, 0);
+        assert_eq!(snap.critical_block_threads, 0);
+        assert!(snap.sm_threads_used.iter().all(|&t| t == 0));
+        assert!(e.idle());
+    }
+
+    #[test]
+    fn reference_mode_matches_incremental_mode() {
+        // The retained full-recompute oracle and the incremental aggregate
+        // path must produce the same trajectory on a contended workload
+        // (same completion order; latencies equal to ~1e-9 relative).
+        let run = |reference: bool| {
+            let mut e = Engine::new(GpuSpec::tx2());
+            if reference {
+                e = e.with_reference_rates();
+            }
+            let s0 = e.add_stream(5);
+            let s1 = e.add_stream(0);
+            for i in 0..6 {
+                let stream = if i % 2 == 0 { s0 } else { s1 };
+                let crit = if i % 2 == 0 {
+                    Criticality::Critical
+                } else {
+                    Criticality::Normal
+                };
+                e.submit(stream,
+                         cfg(&format!("k{i}"), 4 + i, 128 + 64 * i,
+                             1e6 + i as f64 * 3e5, i as f64 * 2e4),
+                         crit);
+            }
+            e.run_to_idle()
+        };
+        let inc = run(false);
+        let refr = run(true);
+        assert_eq!(inc.len(), refr.len());
+        for (a, b) in inc.iter().zip(&refr) {
+            assert_eq!(a.tag, b.tag, "completion order diverged");
+            let denom = b.record.end_us.abs().max(1.0);
+            assert!((a.record.end_us - b.record.end_us).abs() / denom <= 1e-9,
+                    "tag {}: end {} vs {}", a.tag, a.record.end_us,
+                    b.record.end_us);
+        }
     }
 }

@@ -9,9 +9,12 @@
 //!
 //! * [`spec`] — hardware presets (RTX 2060 / Xavier / TX2).
 //! * [`kernel`] — kernel descriptors and launch configurations.
-//! * [`sm`] — per-SM resource ledger (dispatch admission).
+//! * [`sm`] — per-SM resource ledger (dispatch admission + contention
+//!   aggregates).
 //! * [`stream`] — FIFO priority streams.
-//! * [`contention`] — the intra-/inter-SM rate model.
+//! * [`contention`] — the intra-/inter-SM rate model (reference and
+//!   aggregate-indexed paths).
+//! * [`names`] — kernel-name interning for the hot path.
 //! * [`engine`] — the event loop.
 //! * [`metrics`] — achieved occupancy, timelines.
 
@@ -19,6 +22,7 @@ pub mod contention;
 pub mod engine;
 pub mod kernel;
 pub mod metrics;
+pub mod names;
 pub mod sm;
 pub mod spec;
 pub mod stream;
@@ -26,5 +30,6 @@ pub mod stream;
 pub use engine::{Completion, Engine, GpuSnapshot};
 pub use kernel::{Criticality, KernelDesc, LaunchConfig};
 pub use metrics::{LaunchRecord, SimMetrics};
+pub use names::NameTable;
 pub use spec::GpuSpec;
 pub use stream::{LaunchTag, StreamId};

@@ -1,0 +1,93 @@
+//! Kernel-name interning.
+//!
+//! The engine's hot path attributes occupancy per kernel name on every
+//! event. Interning names into dense `u32` ids at submit time turns that
+//! attribution into flat-`Vec` indexing (EXPERIMENTS.md §Perf change #4);
+//! strings are resolved back only when records and metrics are assembled.
+
+use std::collections::HashMap;
+
+/// Bidirectional string ⇄ id table. Ids are dense and start at 0, so they
+/// can index parallel `Vec` accumulators directly.
+#[derive(Debug, Default)]
+pub struct NameTable {
+    names: Vec<String>,
+    index: HashMap<String, u32>,
+}
+
+impl NameTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Id for `name`, allocating one on first sight.
+    pub fn intern(&mut self, name: &str) -> u32 {
+        if let Some(&id) = self.index.get(name) {
+            return id;
+        }
+        let id = self.names.len() as u32;
+        self.names.push(name.to_string());
+        self.index.insert(name.to_string(), id);
+        id
+    }
+
+    /// The string for `id`. Panics on an id this table never issued.
+    pub fn resolve(&self, id: u32) -> &str {
+        &self.names[id as usize]
+    }
+
+    /// Id for `name` if it was interned before.
+    pub fn lookup(&self, name: &str) -> Option<u32> {
+        self.index.get(name).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// All (id, name) pairs in id order.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, &str)> {
+        self.names
+            .iter()
+            .enumerate()
+            .map(|(i, s)| (i as u32, s.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_is_idempotent_and_dense() {
+        let mut t = NameTable::new();
+        let a = t.intern("alexnet/conv1");
+        let b = t.intern("alexnet/conv2");
+        assert_eq!(a, 0);
+        assert_eq!(b, 1);
+        assert_eq!(t.intern("alexnet/conv1"), a);
+        assert_eq!(t.len(), 2);
+    }
+
+    #[test]
+    fn resolve_round_trips() {
+        let mut t = NameTable::new();
+        let id = t.intern("k#es0");
+        assert_eq!(t.resolve(id), "k#es0");
+        assert_eq!(t.lookup("k#es0"), Some(id));
+        assert_eq!(t.lookup("missing"), None);
+    }
+
+    #[test]
+    fn iter_in_id_order() {
+        let mut t = NameTable::new();
+        t.intern("a");
+        t.intern("b");
+        let v: Vec<_> = t.iter().collect();
+        assert_eq!(v, vec![(0, "a"), (1, "b")]);
+    }
+}

@@ -5,6 +5,12 @@
 //! shared memory, registers, and block slots. Exhaustion of any budget
 //! forces the block to queue — the *inter-SM* wait component of kernel
 //! latency (§4).
+//!
+//! Besides the admission budgets, the ledger maintains the contention
+//! model's per-SM aggregates incrementally (EXPERIMENTS.md §Perf change
+//! #4): the summed standalone compute demand of resident blocks and the
+//! per-kernel resident thread totals. `admit`/`release` keep them current
+//! so the rate refresh never rebuilds them from the full residency.
 
 use crate::gpu::spec::GpuSpec;
 
@@ -23,11 +29,25 @@ pub struct SmState {
     pub smem_used: u32,
     pub regs_used: u32,
     pub blocks_resident: u32,
+    /// Sum of resident blocks' standalone compute demand (FLOP/us) — the
+    /// intra-SM oversubscription denominator of the rate model.
+    pub compute_demand: f64,
+    /// Resident thread totals per kernel (keyed by launch tag) — the
+    /// foreign-interference numerator. A small linear map: at most
+    /// `max_blocks_per_sm` kernels can share an SM.
+    pub kernel_threads: Vec<(u64, u32)>,
 }
 
 impl SmState {
     pub fn empty() -> Self {
-        SmState { threads_used: 0, smem_used: 0, regs_used: 0, blocks_resident: 0 }
+        SmState {
+            threads_used: 0,
+            smem_used: 0,
+            regs_used: 0,
+            blocks_resident: 0,
+            compute_demand: 0.0,
+            kernel_threads: Vec::new(),
+        }
     }
 
     /// Can `d` be dispatched here under `spec`'s budgets?
@@ -38,16 +58,23 @@ impl SmState {
             && self.blocks_resident + 1 <= spec.max_blocks_per_sm
     }
 
-    /// Admit a block (caller must have checked `fits`).
-    pub fn admit(&mut self, d: &BlockDemand) {
+    /// Admit a block of `kernel` with standalone compute demand `demand`
+    /// (caller must have checked `fits`).
+    pub fn admit(&mut self, d: &BlockDemand, kernel: u64, demand: f64) {
         self.threads_used += d.threads;
         self.smem_used += d.smem;
         self.regs_used += d.regs;
         self.blocks_resident += 1;
+        self.compute_demand += demand;
+        match self.kernel_threads.iter_mut().find(|(k, _)| *k == kernel) {
+            Some((_, t)) => *t += d.threads,
+            None => self.kernel_threads.push((kernel, d.threads)),
+        }
     }
 
-    /// Release a completed block's resources.
-    pub fn release(&mut self, d: &BlockDemand) {
+    /// Release a completed block's resources. `kernel` and `demand` must
+    /// match the values passed to `admit`.
+    pub fn release(&mut self, d: &BlockDemand, kernel: u64, demand: f64) {
         debug_assert!(self.threads_used >= d.threads);
         debug_assert!(self.smem_used >= d.smem);
         debug_assert!(self.regs_used >= d.regs);
@@ -56,6 +83,33 @@ impl SmState {
         self.smem_used -= d.smem;
         self.regs_used -= d.regs;
         self.blocks_resident -= 1;
+        self.compute_demand -= demand;
+        if let Some(pos) = self
+            .kernel_threads
+            .iter()
+            .position(|(k, _)| *k == kernel)
+        {
+            debug_assert!(self.kernel_threads[pos].1 >= d.threads);
+            self.kernel_threads[pos].1 -= d.threads;
+            if self.kernel_threads[pos].1 == 0 {
+                self.kernel_threads.swap_remove(pos);
+            }
+        }
+        if self.blocks_resident == 0 {
+            // Exact reset: the incremental f64 sum cannot drift across
+            // idle periods (additions are not exactly reversible in FP).
+            self.compute_demand = 0.0;
+            self.kernel_threads.clear();
+        }
+    }
+
+    /// Resident threads belonging to `kernel` (0 when absent).
+    pub fn own_threads(&self, kernel: u64) -> u32 {
+        self.kernel_threads
+            .iter()
+            .find(|(k, _)| *k == kernel)
+            .map(|(_, t)| *t)
+            .unwrap_or(0)
     }
 
     /// Free thread slots.
@@ -87,13 +141,17 @@ mod tests {
         let mut sm = SmState::empty();
         let b = d(256, 8192);
         assert!(sm.fits(&b, &spec));
-        sm.admit(&b);
+        sm.admit(&b, 1, 100.0);
         assert_eq!(sm.threads_used, 256);
         assert_eq!(sm.blocks_resident, 1);
         assert_eq!(sm.free_threads(&spec), 768);
-        sm.release(&b);
+        assert_eq!(sm.own_threads(1), 256);
+        assert!((sm.compute_demand - 100.0).abs() < 1e-12);
+        sm.release(&b, 1, 100.0);
         assert!(sm.is_idle());
         assert_eq!(sm.threads_used, 0);
+        assert_eq!(sm.own_threads(1), 0);
+        assert_eq!(sm.compute_demand, 0.0);
     }
 
     #[test]
@@ -103,7 +161,7 @@ mod tests {
         for _ in 0..4 {
             let b = d(256, 0);
             assert!(sm.fits(&b, &spec));
-            sm.admit(&b);
+            sm.admit(&b, 1, 0.0);
         }
         // 1024/1024 threads used: a 1-thread block must queue.
         assert!(!sm.fits(&d(1, 0), &spec));
@@ -113,7 +171,7 @@ mod tests {
     fn smem_exhaustion_blocks_admission() {
         let spec = GpuSpec::rtx2060();
         let mut sm = SmState::empty();
-        sm.admit(&d(32, 48 * 1024));
+        sm.admit(&d(32, 48 * 1024), 1, 0.0);
         assert!(!sm.fits(&d(32, 32 * 1024), &spec));
         assert!(sm.fits(&d(32, 16 * 1024), &spec));
     }
@@ -123,7 +181,7 @@ mod tests {
         let spec = GpuSpec::rtx2060();
         let mut sm = SmState::empty();
         for _ in 0..spec.max_blocks_per_sm {
-            sm.admit(&d(1, 0));
+            sm.admit(&d(1, 0), 1, 0.0);
         }
         assert!(!sm.fits(&d(1, 0), &spec));
     }
@@ -134,9 +192,9 @@ mod tests {
         let mut sm = SmState::empty();
         // 512 threads * 64 regs = 32768; two fit (65536), third does not.
         let b = BlockDemand { threads: 512, smem: 0, regs: 512 * 64 };
-        sm.admit(&b);
+        sm.admit(&b, 1, 0.0);
         assert!(sm.fits(&BlockDemand { threads: 256, smem: 0, regs: 256 * 64 }, &spec));
-        sm.admit(&BlockDemand { threads: 256, smem: 0, regs: 256 * 64 });
+        sm.admit(&BlockDemand { threads: 256, smem: 0, regs: 256 * 64 }, 1, 0.0);
         assert!(!sm.fits(&BlockDemand { threads: 256, smem: 0, regs: 256 * 128 }, &spec));
     }
 
@@ -144,7 +202,29 @@ mod tests {
     fn warp_rounding() {
         let spec = GpuSpec::rtx2060();
         let mut sm = SmState::empty();
-        sm.admit(&d(33, 0)); // 33 threads -> 2 warps
+        sm.admit(&d(33, 0), 1, 0.0); // 33 threads -> 2 warps
         assert_eq!(sm.active_warps(&spec), 2);
+    }
+
+    #[test]
+    fn kernel_threads_tracks_per_kernel_totals() {
+        let mut sm = SmState::empty();
+        sm.admit(&d(128, 0), 7, 10.0);
+        sm.admit(&d(128, 0), 7, 10.0);
+        sm.admit(&d(64, 0), 9, 5.0);
+        assert_eq!(sm.own_threads(7), 256);
+        assert_eq!(sm.own_threads(9), 64);
+        assert_eq!(sm.own_threads(4), 0);
+        assert!((sm.compute_demand - 25.0).abs() < 1e-12);
+        sm.release(&d(128, 0), 7, 10.0);
+        assert_eq!(sm.own_threads(7), 128);
+        sm.release(&d(128, 0), 7, 10.0);
+        assert_eq!(sm.own_threads(7), 0);
+        // Kernel 9 still resident: entry for 7 removed, 9 intact.
+        assert_eq!(sm.kernel_threads.len(), 1);
+        sm.release(&d(64, 0), 9, 5.0);
+        assert!(sm.is_idle());
+        assert!(sm.kernel_threads.is_empty());
+        assert_eq!(sm.compute_demand, 0.0);
     }
 }

@@ -17,6 +17,9 @@ pub type LaunchTag = u64;
 #[derive(Debug, Clone)]
 pub struct QueuedLaunch {
     pub tag: LaunchTag,
+    /// Interned id of `config.name` in the engine's
+    /// [`crate::gpu::names::NameTable`], assigned at submit.
+    pub name_id: u32,
     pub config: LaunchConfig,
     pub criticality: Criticality,
     /// Extra delay (us) before the launch may start dispatching once it
@@ -35,8 +38,10 @@ pub struct Stream {
     /// Larger value = higher dispatch priority.
     pub priority: i32,
     pub queue: VecDeque<QueuedLaunch>,
-    /// Whether the head launch is currently dispatching/executing (a
-    /// stream runs at most one kernel at a time).
+    /// Whether a launch from this stream is currently dispatching or
+    /// executing (a stream runs at most one kernel at a time). The active
+    /// launch is moved out of `queue` into the engine's launch slab at
+    /// activation, so `queue` only holds waiting launches.
     pub head_active: bool,
 }
 
@@ -53,7 +58,8 @@ impl Stream {
         self.queue.is_empty()
     }
 
-    /// Number of launches waiting (including an active head).
+    /// Number of launches waiting (the active head, if any, has already
+    /// been moved out of the queue).
     pub fn depth(&self) -> usize {
         self.queue.len()
     }
@@ -66,6 +72,7 @@ mod tests {
     fn launch(tag: u64) -> QueuedLaunch {
         QueuedLaunch {
             tag,
+            name_id: 0,
             config: LaunchConfig {
                 name: format!("k{tag}"),
                 grid: 1,

@@ -5,108 +5,174 @@
 //! /opt/xla-example/README.md): jax >= 0.5 serializes protos with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids and round-trips cleanly.
+//!
+//! The real implementation needs the `xla` crate (xla-rs bindings), which
+//! the offline build does not carry, so it is gated behind the `pjrt`
+//! feature. Without the feature a stub with the same API compiles in;
+//! `Runtime::new` then always errors, `Server::start` propagates that
+//! error, and the runtime integration tests skip themselves on
+//! non-`pjrt` builds.
 
-use std::collections::HashMap;
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use std::collections::HashMap;
 
-use anyhow::{anyhow, Context, Result};
+    use anyhow::{anyhow, Context, Result};
 
-use crate::runtime::artifacts::{ArtifactEntry, Manifest};
+    use crate::runtime::artifacts::{ArtifactEntry, Manifest};
 
-/// A compiled artifact ready to execute.
-pub struct ModelRuntime {
-    pub name: String,
-    pub input_shapes: Vec<Vec<usize>>,
-    pub output_shape: Vec<usize>,
-    exe: xla::PjRtLoadedExecutable,
-}
+    /// A compiled artifact ready to execute.
+    pub struct ModelRuntime {
+        pub name: String,
+        pub input_shapes: Vec<Vec<usize>>,
+        pub output_shape: Vec<usize>,
+        exe: xla::PjRtLoadedExecutable,
+    }
 
-impl ModelRuntime {
-    /// Execute on f32 inputs (one flat buffer per declared input).
-    /// Returns the flattened first output.
-    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
-        if inputs.len() != self.input_shapes.len() {
-            return Err(anyhow!("{}: expected {} inputs, got {}", self.name,
-                             self.input_shapes.len(), inputs.len()));
-        }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (buf, shape) in inputs.iter().zip(&self.input_shapes) {
-            let elems: usize = shape.iter().product();
-            if buf.len() != elems {
-                return Err(anyhow!("{}: input len {} != shape {:?}", self.name,
-                                 buf.len(), shape));
+    impl ModelRuntime {
+        /// Execute on f32 inputs (one flat buffer per declared input).
+        /// Returns the flattened first output.
+        pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+            if inputs.len() != self.input_shapes.len() {
+                return Err(anyhow!("{}: expected {} inputs, got {}", self.name,
+                                 self.input_shapes.len(), inputs.len()));
             }
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(buf)
-                .reshape(&dims)
-                .context("reshaping input literal")?;
-            literals.push(lit);
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (buf, shape) in inputs.iter().zip(&self.input_shapes) {
+                let elems: usize = shape.iter().product();
+                if buf.len() != elems {
+                    return Err(anyhow!("{}: input len {} != shape {:?}",
+                                     self.name, buf.len(), shape));
+                }
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(buf)
+                    .reshape(&dims)
+                    .context("reshaping input literal")?;
+                literals.push(lit);
+            }
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing {}", self.name))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .context("fetching result buffer")?;
+            // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+            let out = lit.to_tuple1().context("unwrapping result tuple")?;
+            out.to_vec::<f32>().context("reading f32 result")
         }
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {}", self.name))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .context("fetching result buffer")?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = lit.to_tuple1().context("unwrapping result tuple")?;
-        out.to_vec::<f32>().context("reading f32 result")
-    }
-}
-
-/// The PJRT runtime: a CPU client plus compiled executables by name.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    compiled: HashMap<String, ModelRuntime>,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client over the given artifact directory.
-    pub fn new(manifest: Manifest) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client, manifest, compiled: HashMap::new() })
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// The PJRT runtime: a CPU client plus compiled executables by name.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        pub manifest: Manifest,
+        compiled: HashMap<String, ModelRuntime>,
     }
 
-    /// Compile (or fetch the cached) executable for a manifest entry.
-    pub fn load(&mut self, name: &str) -> Result<&ModelRuntime> {
-        if !self.compiled.contains_key(name) {
-            let entry = self.manifest.entry(name)?.clone();
-            let rt = self.compile_entry(&entry)?;
-            self.compiled.insert(name.to_string(), rt);
+    impl Runtime {
+        /// Create a CPU PJRT client over the given artifact directory.
+        pub fn new(manifest: Manifest) -> Result<Self> {
+            let client =
+                xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime { client, manifest, compiled: HashMap::new() })
         }
-        Ok(&self.compiled[name])
-    }
 
-    fn compile_entry(&self, entry: &ArtifactEntry) -> Result<ModelRuntime> {
-        let path = self.manifest.hlo_path(entry)?;
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", entry.name))?;
-        Ok(ModelRuntime {
-            name: entry.name.clone(),
-            input_shapes: entry.inputs.iter().map(|t| t.shape.clone()).collect(),
-            output_shape: entry
-                .outputs
-                .first()
-                .map(|t| t.shape.clone())
-                .unwrap_or_default(),
-            exe,
-        })
-    }
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
 
-    /// Names of all loadable model artifacts.
-    pub fn model_names(&self) -> Vec<String> {
-        self.manifest.of_kind("model").map(|e| e.name.clone()).collect()
+        /// Compile (or fetch the cached) executable for a manifest entry.
+        pub fn load(&mut self, name: &str) -> Result<&ModelRuntime> {
+            if !self.compiled.contains_key(name) {
+                let entry = self.manifest.entry(name)?.clone();
+                let rt = self.compile_entry(&entry)?;
+                self.compiled.insert(name.to_string(), rt);
+            }
+            Ok(&self.compiled[name])
+        }
+
+        fn compile_entry(&self, entry: &ArtifactEntry) -> Result<ModelRuntime> {
+            let path = self.manifest.hlo_path(entry)?;
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", entry.name))?;
+            Ok(ModelRuntime {
+                name: entry.name.clone(),
+                input_shapes: entry.inputs.iter().map(|t| t.shape.clone()).collect(),
+                output_shape: entry
+                    .outputs
+                    .first()
+                    .map(|t| t.shape.clone())
+                    .unwrap_or_default(),
+                exe,
+            })
+        }
+
+        /// Names of all loadable model artifacts.
+        pub fn model_names(&self) -> Vec<String> {
+            self.manifest.of_kind("model").map(|e| e.name.clone()).collect()
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use anyhow::{anyhow, Result};
+
+    use crate::runtime::artifacts::Manifest;
+
+    const UNAVAILABLE: &str = "PJRT runtime unavailable: miriam was built \
+        without the `pjrt` feature (the offline build carries no xla crate); \
+        rebuild with `--features pjrt` and the xla dependency vendored";
+
+    /// Stub with the real [`ModelRuntime`] API; never constructible because
+    /// [`Runtime::new`] always errors in this build.
+    pub struct ModelRuntime {
+        pub name: String,
+        pub input_shapes: Vec<Vec<usize>>,
+        pub output_shape: Vec<usize>,
+    }
+
+    impl ModelRuntime {
+        pub fn run_f32(&self, _inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+            Err(anyhow!(UNAVAILABLE))
+        }
+    }
+
+    /// Stub runtime: same surface as the PJRT-backed one, unavailable at
+    /// run time.
+    pub struct Runtime {
+        pub manifest: Manifest,
+    }
+
+    impl Runtime {
+        pub fn new(_manifest: Manifest) -> Result<Self> {
+            Err(anyhow!(UNAVAILABLE))
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".to_string()
+        }
+
+        pub fn load(&mut self, _name: &str) -> Result<&ModelRuntime> {
+            Err(anyhow!(UNAVAILABLE))
+        }
+
+        /// Names of all loadable model artifacts.
+        pub fn model_names(&self) -> Vec<String> {
+            self.manifest.of_kind("model").map(|e| e.name.clone()).collect()
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::{ModelRuntime, Runtime};
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::{ModelRuntime, Runtime};

@@ -2,13 +2,19 @@
 //! produced by python/compile/aot.py executed through the Rust PJRT
 //! runtime, checked against the manifest goldens.
 //!
-//! These tests skip (with a message) when `make artifacts` has not run —
-//! everything else in the crate is artifact-independent.
+//! These tests skip (with a message) when `make artifacts` has not run,
+//! or when the crate was built without the `pjrt` feature (the stub
+//! runtime cannot execute anything) — everything else in the crate is
+//! artifact-independent.
 
 use miriam::runtime::artifacts::npy_rand;
 use miriam::runtime::{Manifest, Runtime};
 
 fn manifest() -> Option<Manifest> {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping runtime tests: built without the `pjrt` feature");
+        return None;
+    }
     let dir = Manifest::default_dir();
     if !dir.join("manifest.json").exists() {
         eprintln!("skipping runtime tests: run `make artifacts`");
@@ -99,10 +105,10 @@ fn runtime_rejects_bad_inputs() {
 fn server_routes_critical_first_and_serves() {
     use miriam::gpu::kernel::Criticality;
     use miriam::server::Server;
-    let dir = Manifest::default_dir();
-    if !dir.join("manifest.json").exists() {
+    if manifest().is_none() {
         return;
     }
+    let dir = Manifest::default_dir();
     let server = Server::start(&dir, &["cifarnet".into(), "gru".into()])
         .expect("server starts");
     let h = server.handle.clone();

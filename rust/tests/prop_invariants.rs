@@ -4,14 +4,19 @@
 //! in-tree seeded RNG to sweep hundreds of randomized cases per property —
 //! same idea, deterministic by construction (failures print the case).
 
+use miriam::coordinator::driver::{self, RunOpts};
+use miriam::coordinator::scheduler_for;
 use miriam::coordinator::shaded_tree::{Leftover, ShadedTree};
 use miriam::elastic::candidate::Candidate;
 use miriam::elastic::shrink::{self, CriticalProfile, ShrinkConfig};
 use miriam::elastic::transformer;
-use miriam::gpu::contention::{block_rates, BlockWork, ContentionParams};
+use miriam::gpu::contention::{
+    block_rates, block_rates_indexed, BlockWork, ContentionParams,
+};
 use miriam::gpu::engine::Engine;
 use miriam::gpu::kernel::{Criticality, KernelDesc, LaunchConfig};
 use miriam::gpu::spec::GpuSpec;
+use miriam::workloads::mdtb;
 use miriam::workloads::rng::Rng;
 
 fn rand_kernel(rng: &mut Rng) -> KernelDesc {
@@ -159,6 +164,78 @@ fn prop_rates_positive_bounded_monotone() {
                         "case {case}: removing a block slowed block {i}");
             }
         }
+    }
+}
+
+/// Property (differential, §Perf change #4): for randomized residency
+/// sets, the aggregate-indexed rate path must produce rates bitwise-close
+/// (<= 1e-9 relative) to the retained full-recompute reference
+/// implementation of `block_rates`.
+#[test]
+fn prop_indexed_rates_match_reference() {
+    let mut rng = Rng::new(0x1D1);
+    let params = ContentionParams::default();
+    for case in 0..300 {
+        let spec = if case % 3 == 0 { GpuSpec::tx2() } else { GpuSpec::rtx2060() };
+        let n = 1 + rng.next_below(96) as usize;
+        let blocks: Vec<BlockWork> = (0..n)
+            .map(|_| BlockWork {
+                sm: rng.next_below(spec.num_sms as u64) as u32,
+                threads: 1 + rng.next_below(1024) as u32,
+                flops: 1.0 + rng.next_f64() * 1e7,
+                bytes: if rng.next_f64() < 0.3 {
+                    0.0
+                } else {
+                    rng.next_f64() * 1e6
+                },
+                kernel: rng.next_below(8),
+            })
+            .collect();
+        let reference = block_rates(&spec, &params, &blocks);
+        let indexed = block_rates_indexed(&spec, &params, &blocks);
+        assert_eq!(reference.len(), indexed.len());
+        for (i, (a, b)) in reference.iter().zip(&indexed).enumerate() {
+            let rel = (a - b).abs() / a.abs().max(1e-12);
+            assert!(rel <= 1e-9,
+                    "case {case} block {i}: reference {a} indexed {b} ({rel:e})");
+        }
+    }
+}
+
+/// Property (differential, §Perf change #4): driving seeded MDTB
+/// workloads through the incremental engine and through the retained
+/// full-recompute reference engine must produce identical completion
+/// orders, equal event counts, and per-launch times within 1e-9 relative.
+#[test]
+fn prop_incremental_engine_matches_reference_trajectory() {
+    for (wl_name, sched) in [("A", "multistream"), ("D", "miriam"),
+                             ("C", "sequential"), ("B", "ib")] {
+        let wl = mdtb::by_name(wl_name, 150_000.0).unwrap().build();
+        let mut s1 = scheduler_for(sched, &wl).unwrap();
+        let inc = driver::run_with(GpuSpec::rtx2060(), &wl, s1.as_mut(),
+                                   RunOpts::default());
+        let mut s2 = scheduler_for(sched, &wl).unwrap();
+        let refr = driver::run_with(GpuSpec::rtx2060(), &wl, s2.as_mut(),
+                                    RunOpts { reference_rates: true });
+        assert_eq!(inc.timeline.len(), refr.timeline.len(),
+                   "{wl_name}/{sched}: launch count diverged");
+        assert!(!inc.timeline.is_empty(), "{wl_name}/{sched}: empty run");
+        for (a, b) in inc.timeline.iter().zip(&refr.timeline) {
+            assert_eq!(a.tag, b.tag,
+                       "{wl_name}/{sched}: completion order diverged");
+            assert_eq!(a.name, b.name);
+            let denom = b.end_us.abs().max(1.0);
+            assert!((a.end_us - b.end_us).abs() / denom <= 1e-9,
+                    "{wl_name}/{sched} tag {}: end {} vs {}", a.tag,
+                    a.end_us, b.end_us);
+            assert!((a.start_us - b.start_us).abs() / denom <= 1e-9,
+                    "{wl_name}/{sched} tag {}: start {} vs {}", a.tag,
+                    a.start_us, b.start_us);
+        }
+        assert_eq!(inc.events, refr.events,
+                   "{wl_name}/{sched}: event count diverged");
+        let occ = (inc.achieved_occupancy - refr.achieved_occupancy).abs();
+        assert!(occ <= 1e-9, "{wl_name}/{sched}: occupancy diverged {occ}");
     }
 }
 

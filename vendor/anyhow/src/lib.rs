@@ -1,0 +1,174 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! This build environment is fully offline with no vendored registry, so
+//! the handful of `anyhow` APIs this workspace uses — [`Error`],
+//! [`Result`], the [`anyhow!`] macro and the [`Context`] extension trait —
+//! are reimplemented here and wired in as a path dependency. Error values
+//! carry a flattened cause chain: `{err}` prints the top message,
+//! `{err:#}` the whole chain joined with `": "`, matching anyhow's
+//! alternate formatting closely enough for logs and test output.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Drop-in for `anyhow::Error`: an owned error with a cause chain
+/// (outermost context first).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a printable message (what the [`anyhow!`] macro
+    /// expands to).
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Error { chain: vec![msg.to_string()] }
+    }
+
+    fn from_std(err: &(dyn StdError + 'static)) -> Self {
+        let mut chain = vec![err.to_string()];
+        let mut src = err.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+
+    /// Push a higher-level context message onto the front of the chain.
+    pub fn context(mut self, msg: impl fmt::Display) -> Self {
+        self.chain.insert(0, msg.to_string());
+        self
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain.join(": "))
+        } else {
+            f.write_str(&self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain[0])?;
+        if self.chain.len() > 1 {
+            f.write_str("\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::from_std(&e)
+    }
+}
+
+/// Drop-in for `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Drop-in for `anyhow::Context`: attach context while converting into
+/// [`Error`]. Implemented for `Result` over any std error and for
+/// `Option` (where `None` becomes the context message).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: StdError + Send + Sync + 'static> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::from_std(&e).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from_std(&e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Drop-in for `anyhow::anyhow!`: build an [`Error`] from a format string
+/// or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(format!($msg)) };
+    ($fmt:literal, $($arg:tt)*) => { $crate::Error::msg(format!($fmt, $($arg)*)) };
+    ($err:expr $(,)?) => { $crate::Error::msg($err) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = anyhow!("plain");
+        assert_eq!(format!("{e}"), "plain");
+        let n = 3;
+        let e = anyhow!("got {}", n);
+        assert_eq!(format!("{e}"), "got 3");
+        let e = anyhow!(String::from("owned"));
+        assert_eq!(format!("{e}"), "owned");
+    }
+
+    #[test]
+    fn context_chains_and_alternate_prints_chain() {
+        let r: Result<()> = Err(io_err()).context("reading manifest");
+        let e = r.unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: gone");
+        assert_eq!(e.chain().count(), 2);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(format!("{}", inner().unwrap_err()), "gone");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+        assert_eq!(Some(1).context("unused").unwrap(), 1);
+    }
+
+    #[test]
+    fn with_context_is_lazy() {
+        let mut called = false;
+        let ok: Result<u32, std::io::Error> = Ok(7);
+        let v = ok.with_context(|| {
+            called = true;
+            "ctx"
+        });
+        assert!(matches!(v, Ok(7)));
+        assert!(!called);
+    }
+}
