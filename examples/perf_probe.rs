@@ -15,7 +15,8 @@ fn main() {
         for reference in [true, false] {
             let mut s = scheduler_for(sched, &wl).unwrap();
             let st = driver::run_with(GpuSpec::rtx2060(), &wl, s.as_mut(),
-                                      RunOpts { reference_rates: reference });
+                                      RunOpts { reference_rates: reference,
+                                                trace: false });
             cell.push(st.events_per_sec());
             let leg = if reference { "reference  " } else { "incremental" };
             println!("{wl_name}/{sched:<12} {leg} events {:>9}  wall {:>6.2}s  \

@@ -68,16 +68,19 @@ fn main() {
                 model: Arc::new(models::alexnet()),
                 arrival: Arrival::ClosedLoop { clients: 1 },
                 criticality: Criticality::Critical,
+                deadline_us: None,
             },
             Source {
                 model: Arc::new(models::cifarnet()),
                 arrival: Arrival::ClosedLoop { clients: 2 },
                 criticality: Criticality::Normal,
+                deadline_us: None,
             },
             Source {
                 model: Arc::new(models::squeezenet()),
                 arrival: Arrival::ClosedLoop { clients: 1 },
                 criticality: Criticality::Normal,
+                deadline_us: None,
             },
         ],
         duration_us: duration,

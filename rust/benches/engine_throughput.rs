@@ -37,7 +37,7 @@ fn run_cell(mode: &'static str, wl_name: &str, sched: &'static str,
             duration_us: f64) -> Cell {
     let wl = mdtb::by_name(wl_name, duration_us).unwrap().build();
     let mut s = scheduler_for(sched, &wl).unwrap();
-    let opts = RunOpts { reference_rates: mode == "reference" };
+    let opts = RunOpts { reference_rates: mode == "reference", trace: false };
     let t0 = Instant::now();
     let st = driver::run_with(GpuSpec::rtx2060(), &wl, s.as_mut(), opts);
     let wall_s = t0.elapsed().as_secs_f64();

@@ -30,12 +30,14 @@ fn run_pair(co: Option<&str>, duration_us: f64) -> Vec<f64> {
         model: Arc::new(models::resnet50()),
         arrival: Arrival::ClosedLoop { clients: 1 },
         criticality: Criticality::Critical,
+        deadline_us: None,
     }];
     if let Some(name) = co {
         sources.push(Source {
             model: Arc::new(models::by_name(name).unwrap()),
             arrival: Arrival::ClosedLoop { clients: 1 },
             criticality: Criticality::Normal,
+            deadline_us: None,
         });
     }
     let wl = Workload {

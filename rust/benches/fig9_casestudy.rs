@@ -26,6 +26,7 @@ fn workload(duration_us: f64) -> Workload {
                 model: Arc::new(models::alexnet()),
                 arrival: Arrival::ClosedLoop { clients: 1 },
                 criticality: Criticality::Critical,
+                deadline_us: None,
             },
             Source {
                 // Rename the normal instance's kernels so per-layer
@@ -40,6 +41,7 @@ fn workload(duration_us: f64) -> Workload {
                 }),
                 arrival: Arrival::ClosedLoop { clients: 1 },
                 criticality: Criticality::Normal,
+                deadline_us: None,
             },
         ],
         duration_us,

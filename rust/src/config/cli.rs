@@ -58,6 +58,13 @@ impl Args {
         }
     }
 
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: bad integer {v}")),
+        }
+    }
+
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
@@ -93,5 +100,13 @@ mod tests {
         let a = parse(&["--duration", "abc"]);
         assert!(a.get_f64("duration", 1.0).is_err());
         assert!(a.get_usize("duration", 1).is_err());
+        assert!(a.get_u64("duration", 1).is_err());
+    }
+
+    #[test]
+    fn u64_flags_parse_and_default() {
+        let a = parse(&["--seed", "12345"]);
+        assert_eq!(a.get_u64("seed", 7).unwrap(), 12345);
+        assert_eq!(a.get_u64("missing", 7).unwrap(), 7);
     }
 }

@@ -102,11 +102,13 @@ mod tests {
                     model: Arc::new(models::cifarnet()),
                     arrival: Arrival::ClosedLoop { clients: 1 },
                     criticality: Criticality::Critical,
+                    deadline_us: None,
                 },
                 Source {
                     model: Arc::new(models::cifarnet()),
                     arrival: Arrival::ClosedLoop { clients: 1 },
                     criticality: Criticality::Normal,
+                    deadline_us: None,
                 },
             ],
             duration_us: 30_000.0,
@@ -134,11 +136,13 @@ mod tests {
                     model: Arc::new(models::gru()),
                     arrival: Arrival::Uniform { rate_hz: 10.0 },
                     criticality: Criticality::Critical,
+                    deadline_us: None,
                 },
                 Source {
                     model: Arc::new(models::cifarnet()),
                     arrival: Arrival::ClosedLoop { clients: 1 },
                     criticality: Criticality::Normal,
+                    deadline_us: None,
                 },
             ],
             duration_us: 400_000.0,

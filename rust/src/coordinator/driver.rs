@@ -38,6 +38,10 @@ pub struct RunOpts {
     /// change #4): the differential-testing oracle and the "before" leg
     /// of `benches/engine_throughput.rs`.
     pub reference_rates: bool,
+    /// Record the full engine event trace ([`crate::gpu::trace`]) into
+    /// [`RunStats::trace`]. Off by default — the conformance suite and
+    /// the `scenarios --trace-out/--record-golden` CLI turn it on.
+    pub trace: bool,
 }
 
 /// Run `workload` under `scheduler` on `spec`. Deterministic for a given
@@ -54,6 +58,9 @@ pub fn run_with(spec: GpuSpec, workload: &Workload,
     let mut eng = Engine::new(spec);
     if opts.reference_rates {
         eng = eng.with_reference_rates();
+    }
+    if opts.trace {
+        eng = eng.with_trace();
     }
     scheduler.init(&mut eng);
 
@@ -119,16 +126,24 @@ pub fn run_with(spec: GpuSpec, workload: &Workload,
                             .remove(&fid)
                             .expect("scheduler finished unknown request");
                         let lat = eng.now_us() - arr;
+                        let s = &workload.sources[src];
+                        let missed =
+                            s.deadline_us.is_some_and(|d| lat > d);
                         match crit {
                             Criticality::Critical => {
-                                stats.critical_latencies_us.push(lat)
+                                stats.critical_latencies_us.push(lat);
+                                if missed {
+                                    stats.deadline_misses_critical += 1;
+                                }
                             }
                             Criticality::Normal => {
-                                stats.normal_latencies_us.push(lat)
+                                stats.normal_latencies_us.push(lat);
+                                if missed {
+                                    stats.deadline_misses_normal += 1;
+                                }
                             }
                         }
                         // Closed-loop: next request the moment this returns.
-                        let s = &workload.sources[src];
                         if s.arrival.is_closed_loop()
                             && eng.now_us() < workload.duration_us
                         {
@@ -144,6 +159,7 @@ pub fn run_with(spec: GpuSpec, workload: &Workload,
     }
 
     stats.span_us = eng.now_us();
+    stats.trace = eng.take_trace();
     let spec = eng.spec.clone();
     let metrics = eng.into_metrics();
     stats.achieved_occupancy = metrics.occupancy.achieved(&spec);
@@ -156,6 +172,36 @@ pub fn run_with(spec: GpuSpec, workload: &Workload,
     stats.events = metrics.events;
     stats.wall_ns = wall.elapsed().as_nanos() as u64;
     stats
+}
+
+/// Record the pinned golden-trace cells ([`scenario::GOLDEN_CELLS`] at
+/// [`scenario::GOLDEN_PLATFORM`] / [`scenario::GOLDEN_DURATION_US`]) into
+/// `dir` as canonical JSON. Returns (path, event count) per cell. The
+/// single writer shared by the `scenarios --record-golden` CLI and the
+/// conformance suite's bootstrap/UPDATE_GOLDEN path, so the two can
+/// never desynchronize on platform, duration, options, or file naming.
+pub fn record_golden_traces(
+    dir: &std::path::Path,
+) -> std::io::Result<Vec<(std::path::PathBuf, usize)>> {
+    use crate::workloads::scenario;
+    std::fs::create_dir_all(dir)?;
+    let spec = GpuSpec::by_name(scenario::GOLDEN_PLATFORM)
+        .expect("golden platform preset exists");
+    let mut out = Vec::new();
+    for (sc_name, sched) in scenario::GOLDEN_CELLS {
+        let sc = scenario::by_name(sc_name, scenario::GOLDEN_DURATION_US)
+            .expect("golden cell scenario exists");
+        let wl = sc.build();
+        let mut s = crate::coordinator::scheduler_for(sched, &wl)
+            .expect("golden cell scheduler exists");
+        let st = run_with(spec.clone(), &wl, s.as_mut(),
+                          RunOpts { reference_rates: false, trace: true });
+        let trace = st.trace.expect("trace was requested");
+        let path = dir.join(scenario::golden_file_name(sc_name, sched));
+        std::fs::write(&path, trace.to_canonical_json())?;
+        out.push((path, trace.len()));
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -200,9 +246,67 @@ mod tests {
         let wl = mdtb::mdtb_a(50_000.0).build();
         let inc = run(GpuSpec::rtx2060(), &wl, &mut Sequential::new());
         let refr = run_with(GpuSpec::rtx2060(), &wl, &mut Sequential::new(),
-                            RunOpts { reference_rates: true });
+                            RunOpts { reference_rates: true, trace: false });
         assert_eq!(inc.completed_critical(), refr.completed_critical());
         assert_eq!(inc.completed_normal(), refr.completed_normal());
         assert_eq!(inc.events, refr.events);
+    }
+
+    #[test]
+    fn trace_opt_captures_a_trace_and_default_does_not() {
+        let wl = mdtb::mdtb_a(50_000.0).build();
+        let plain = run(GpuSpec::rtx2060(), &wl, &mut Sequential::new());
+        assert!(plain.trace.is_none());
+        let traced = run_with(GpuSpec::rtx2060(), &wl, &mut Sequential::new(),
+                              RunOpts { reference_rates: false, trace: true });
+        let tr = traced.trace.as_ref().expect("trace requested");
+        assert!(!tr.is_empty());
+        // One submit and one completion event per timeline launch.
+        let submits = tr.count_of(crate::gpu::trace::TraceEventKind::Submit);
+        let completes =
+            tr.count_of(crate::gpu::trace::TraceEventKind::Complete);
+        assert_eq!(submits, traced.timeline.len());
+        assert_eq!(completes, traced.timeline.len());
+        // Recording is observation-only: results match the plain run.
+        assert_eq!(plain.events, traced.events);
+        assert_eq!(plain.completed_critical(), traced.completed_critical());
+        assert_eq!(plain.completed_normal(), traced.completed_normal());
+    }
+
+    #[test]
+    fn impossible_deadlines_are_counted_as_misses() {
+        use std::sync::Arc;
+
+        use crate::workloads::mdtb::{Source, Workload};
+        use crate::workloads::models;
+        use crate::workloads::Arrival;
+
+        let wl = Workload {
+            name: "deadline-test".into(),
+            sources: vec![
+                Source {
+                    model: Arc::new(models::cifarnet()),
+                    arrival: Arrival::Uniform { rate_hz: 100.0 },
+                    criticality: Criticality::Critical,
+                    // 1us end-to-end is unachievable: every completion
+                    // must be scored as a miss.
+                    deadline_us: Some(1.0),
+                },
+                Source {
+                    model: Arc::new(models::cifarnet()),
+                    arrival: Arrival::ClosedLoop { clients: 1 },
+                    criticality: Criticality::Normal,
+                    deadline_us: None,
+                },
+            ],
+            duration_us: 50_000.0,
+            seed: 3,
+        };
+        let st = run(GpuSpec::rtx2060(), &wl, &mut Sequential::new());
+        assert!(st.completed_critical() > 0);
+        assert_eq!(st.deadline_misses_critical as usize,
+                   st.completed_critical());
+        // The normal source carries no deadline: never scored.
+        assert_eq!(st.deadline_misses_normal, 0);
     }
 }

@@ -341,6 +341,7 @@ mod tests {
                 model: Arc::new(models::alexnet()),
                 arrival: crate::workloads::Arrival::ClosedLoop { clients: 1 },
                 criticality: Criticality::Critical,
+                deadline_us: None,
             }],
             duration_us: 100_000.0,
             seed: 1,

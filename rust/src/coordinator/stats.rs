@@ -5,6 +5,7 @@
 use std::collections::HashMap;
 
 use crate::gpu::metrics::LaunchRecord;
+use crate::gpu::trace::Trace;
 
 /// Outcome of one simulated run.
 #[derive(Debug, Clone, Default)]
@@ -34,12 +35,32 @@ pub struct RunStats {
     pub sched_decision_ns: u64,
     /// Number of scheduler decisions taken.
     pub sched_decisions: u64,
+    /// Completed critical tasks that exceeded their source's deadline
+    /// (only sources with `deadline_us` set are scored).
+    pub deadline_misses_critical: u64,
+    /// Completed normal tasks that exceeded their source's deadline.
+    pub deadline_misses_normal: u64,
+    /// Full engine event trace, when `RunOpts::trace` was set.
+    pub trace: Option<Trace>,
 }
 
+/// Quantile of a sorted sample. Pinned semantics (ISSUE 2 satellite):
+///
+/// * linear interpolation between closest order statistics (Hyndman–Fan
+///   type 7, the numpy/R default) — so the p99 of n < 100 samples
+///   interpolates between the two largest values rather than simply
+///   returning the maximum;
+/// * a single sample is every quantile of itself;
+/// * an empty sample has no quantiles: NaN, never a panic (callers of
+///   `critical_latency_p99_us` on a run with zero completions rely on
+///   this);
+/// * `q` is clamped into [0, 1], so an out-of-range request degrades to
+///   min/max instead of indexing out of bounds.
 fn quantile(sorted: &[f64], q: f64) -> f64 {
     if sorted.is_empty() {
         return f64::NAN;
     }
+    let q = q.clamp(0.0, 1.0);
     let pos = q * (sorted.len() - 1) as f64;
     let lo = pos.floor() as usize;
     let hi = pos.ceil() as usize;
@@ -70,19 +91,28 @@ impl RunStats {
     }
 
     pub fn critical_latency_p99_us(&self) -> f64 {
-        let mut v = self.critical_latencies_us.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        quantile(&v, 0.99)
+        self.critical_latency_quantile_us(0.99)
     }
 
     pub fn critical_latency_quantile_us(&self, q: f64) -> f64 {
-        let mut v = self.critical_latencies_us.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        quantile(&v, q)
+        sorted_quantile(&self.critical_latencies_us, q)
     }
 
     pub fn normal_latency_mean_us(&self) -> f64 {
         mean(&self.normal_latencies_us)
+    }
+
+    pub fn normal_latency_quantile_us(&self, q: f64) -> f64 {
+        sorted_quantile(&self.normal_latencies_us, q)
+    }
+
+    /// Fraction of completed critical tasks that missed their deadline
+    /// (0.0 when nothing completed or no deadline was set).
+    pub fn critical_deadline_miss_rate(&self) -> f64 {
+        if self.completed_critical() == 0 {
+            return 0.0;
+        }
+        self.deadline_misses_critical as f64 / self.completed_critical() as f64
     }
 
     /// Mean scheduler decision time in microseconds (§8.6).
@@ -120,6 +150,13 @@ fn mean(v: &[f64]) -> f64 {
     }
 }
 
+/// [`quantile`] over an unsorted sample (sorts a copy).
+fn sorted_quantile(v: &[f64], q: f64) -> f64 {
+    let mut v = v.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile(&v, q)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,7 +185,61 @@ mod tests {
         let s = RunStats::default();
         assert!(s.critical_latency_mean_us().is_nan());
         assert!(s.critical_latency_p99_us().is_nan());
+        assert!(s.normal_latency_quantile_us(0.5).is_nan());
         assert_eq!(s.throughput_rps(), 0.0);
+        assert_eq!(s.critical_deadline_miss_rate(), 0.0);
+        assert!(s.trace.is_none());
+    }
+
+    #[test]
+    fn p99_of_small_samples_interpolates_between_top_order_stats() {
+        // Pinned semantics (Hyndman–Fan type 7): with n=2, p99 sits at
+        // pos 0.99 -> 0.01*v[0] + 0.99*v[1].
+        let s = RunStats {
+            critical_latencies_us: vec![2.0, 1.0],
+            ..Default::default()
+        };
+        assert!((s.critical_latency_p99_us() - 1.99).abs() < 1e-12);
+        // n=10: pos = 0.99 * 9 = 8.91 between v[8] and v[9].
+        let s = RunStats {
+            critical_latencies_us: (1..=10).map(f64::from).collect(),
+            ..Default::default()
+        };
+        let want = 9.0 * 0.09 + 10.0 * 0.91;
+        assert!((s.critical_latency_p99_us() - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_sample_is_every_quantile_of_itself() {
+        let v = [7.5];
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            assert!((quantile(&v, q) - 7.5).abs() < 1e-12, "q={q}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_quantiles_clamp_to_min_max() {
+        let v = [1.0, 2.0, 3.0];
+        assert!((quantile(&v, -0.5) - 1.0).abs() < 1e-12);
+        assert!((quantile(&v, 1.5) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exactly_100_samples_p99_lands_on_interpolated_99th() {
+        let v: Vec<f64> = (1..=100).map(f64::from).collect();
+        // pos = 0.99 * 99 = 98.01 -> between v[98]=99 and v[99]=100.
+        let want = 99.0 * 0.99 + 100.0 * 0.01;
+        assert!((quantile(&v, 0.99) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deadline_miss_rate() {
+        let s = RunStats {
+            critical_latencies_us: vec![1.0; 8],
+            deadline_misses_critical: 2,
+            ..Default::default()
+        };
+        assert!((s.critical_deadline_miss_rate() - 0.25).abs() < 1e-12);
     }
 
     #[test]

@@ -46,6 +46,7 @@ use crate::gpu::names::NameTable;
 use crate::gpu::sm::{BlockDemand, SmState};
 use crate::gpu::spec::GpuSpec;
 use crate::gpu::stream::{LaunchTag, QueuedLaunch, Stream, StreamId};
+use crate::gpu::trace::{Trace, TraceEventKind, TraceRecorder};
 
 /// Total-ordered f64 time key for the launch-overhead timer heap.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -222,6 +223,9 @@ pub struct Engine {
     rates_dirty: bool,
     /// Use the retained full-recompute rate model (differential oracle).
     reference_rates: bool,
+    /// Optional event recorder ([`crate::gpu::trace`]). `None` (the
+    /// default) costs one branch per hook — nothing is captured.
+    trace: Option<TraceRecorder>,
     /// Memoized absolute time of the next internal event. Finish times are
     /// absolute, so advancing the clock does not invalidate the cache —
     /// only rate changes and new timers do (§Perf change #2).
@@ -277,6 +281,7 @@ impl Engine {
             next_tag: 1,
             rates_dirty: true,
             reference_rates: false,
+            trace: None,
             event_cache: None,
         }
     }
@@ -287,6 +292,27 @@ impl Engine {
     pub fn with_reference_rates(mut self) -> Self {
         self.reference_rates = true;
         self
+    }
+
+    /// Enable the event-trace recorder: every submit, launch activation,
+    /// block placement and launch completion is captured as a compact
+    /// [`crate::gpu::trace::TraceEvent`]. Collect with [`Engine::take_trace`].
+    pub fn with_trace(mut self) -> Self {
+        self.trace = Some(TraceRecorder::new());
+        self
+    }
+
+    /// Whether the trace recorder is active.
+    pub fn trace_enabled(&self) -> bool {
+        self.trace.is_some()
+    }
+
+    /// Detach the recorded trace (if recording was enabled), resolving
+    /// interned kernel names so the trace outlives the engine. Recording
+    /// stops once taken.
+    pub fn take_trace(&mut self) -> Option<Trace> {
+        let names = &self.names;
+        self.trace.take().map(|r| r.into_trace(names))
     }
 
     /// Create a stream with the given dispatch priority (higher wins).
@@ -356,6 +382,10 @@ impl Engine {
         self.next_tag += 1;
         let name_id = self.names.intern(&config.name);
         self.ensure_name_capacity(name_id);
+        if let Some(tr) = self.trace.as_mut() {
+            tr.record(TraceEventKind::Submit, self.now_us, tag, name_id,
+                      stream);
+        }
         self.streams[stream as usize].push(QueuedLaunch {
             tag,
             name_id,
@@ -496,9 +526,14 @@ impl Engine {
                 bytes_per_block: q.config.bytes_per_block(),
             };
             let tag = launch.tag;
+            let name_id = launch.name_id;
             let slot = self.alloc_launch(launch);
             self.head_slot[s] = Some(slot);
             self.ready_timers.push(Reverse((Tm(ready), slot, tag)));
+            if let Some(tr) = self.trace.as_mut() {
+                tr.record(TraceEventKind::Activate, self.now_us, tag, name_id,
+                          s as u32);
+            }
         }
     }
 
@@ -600,6 +635,10 @@ impl Engine {
                     cr: 0.0,
                 });
                 self.sm_resident[sm_idx].push(bslot);
+                if let Some(tr) = self.trace.as_mut() {
+                    tr.record(TraceEventKind::BlockPlace, self.now_us, tag,
+                              name_id, sm_idx as u32);
+                }
             }
         }
     }
@@ -800,6 +839,10 @@ impl Engine {
             // Free the stream head, making the next launch eligible.
             self.head_slot[l.stream as usize] = None;
             self.streams[l.stream as usize].head_active = false;
+            if let Some(tr) = self.trace.as_mut() {
+                tr.record(TraceEventKind::Complete, self.now_us, l.tag,
+                          l.name_id, l.stream);
+            }
             let record = LaunchRecord {
                 tag: l.tag,
                 name: self.names.resolve(l.name_id).to_string(),
@@ -1117,6 +1160,49 @@ mod tests {
         assert_eq!(snap.critical_block_threads, 0);
         assert!(snap.sm_threads_used.iter().all(|&t| t == 0));
         assert!(e.idle());
+    }
+
+    #[test]
+    fn trace_records_lifecycle_in_order() {
+        let spec = GpuSpec::rtx2060();
+        let mut e = Engine::new(spec.clone()).with_trace();
+        assert!(e.trace_enabled());
+        let s = e.add_stream(0);
+        e.submit(s, cfg("k", 2, 256, 2.0 * 215_000.0, 0.0),
+                 Criticality::Normal);
+        e.run_to_idle();
+        let t = e.take_trace().expect("trace was enabled");
+        assert!(e.take_trace().is_none(), "trace taken twice");
+        use crate::gpu::trace::TraceEventKind as K;
+        assert_eq!(t.count_of(K::Submit), 1);
+        assert_eq!(t.count_of(K::Activate), 1);
+        assert_eq!(t.count_of(K::BlockPlace), 2);
+        assert_eq!(t.count_of(K::Complete), 1);
+        // Lifecycle order: submit first, complete last, places after the
+        // launch-overhead window.
+        assert_eq!(t.events.first().unwrap().kind, K::Submit);
+        assert_eq!(t.events.last().unwrap().kind, K::Complete);
+        for ev in &t.events {
+            assert_eq!(t.name_of(ev), "k");
+            if ev.kind == K::BlockPlace {
+                assert!(ev.loc < spec.num_sms);
+                assert!(ev.t_us >= spec.kernel_launch_us - 1e-9);
+            }
+        }
+        // Times are monotone along the event list.
+        for w in t.events.windows(2) {
+            assert!(w[1].t_us >= w[0].t_us - 1e-9);
+        }
+    }
+
+    #[test]
+    fn trace_is_absent_when_disabled() {
+        let mut e = Engine::new(GpuSpec::rtx2060());
+        assert!(!e.trace_enabled());
+        let s = e.add_stream(0);
+        e.submit(s, cfg("k", 1, 32, 1000.0, 0.0), Criticality::Normal);
+        e.run_to_idle();
+        assert!(e.take_trace().is_none());
     }
 
     #[test]

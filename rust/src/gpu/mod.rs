@@ -17,6 +17,8 @@
 //! * [`names`] — kernel-name interning for the hot path.
 //! * [`engine`] — the event loop.
 //! * [`metrics`] — achieved occupancy, timelines.
+//! * [`trace`] — optional event recorder + canonical trace serialization
+//!   and trace diffing (the conformance-suite observation surface).
 
 pub mod contention;
 pub mod engine;
@@ -26,6 +28,7 @@ pub mod names;
 pub mod sm;
 pub mod spec;
 pub mod stream;
+pub mod trace;
 
 pub use engine::{Completion, Engine, GpuSnapshot};
 pub use kernel::{Criticality, KernelDesc, LaunchConfig};
@@ -33,3 +36,4 @@ pub use metrics::{LaunchRecord, SimMetrics};
 pub use names::NameTable;
 pub use spec::GpuSpec;
 pub use stream::{LaunchTag, StreamId};
+pub use trace::{Divergence, Trace, TraceEvent, TraceEventKind};

@@ -1,0 +1,472 @@
+//! Engine trace recording: an optional observation surface over the
+//! event loop (ISSUE 2 tentpole).
+//!
+//! When enabled ([`crate::gpu::engine::Engine::with_trace`]) the engine
+//! appends one compact [`TraceEvent`] per submit, launch activation,
+//! block placement, and launch completion — interned name id, stream/SM
+//! id, and timestamp; no strings or allocations beyond the event vector
+//! push, so recording stays off the critical path and costs nothing at
+//! all when disabled (a single `Option` branch per hook).
+//!
+//! A finished [`Trace`] serializes canonically through
+//! [`crate::runtime::json`] (sorted keys, shortest-round-trip floats):
+//! two runs are behaviourally identical iff their canonical strings are
+//! byte-identical, which is exactly the determinism contract the
+//! conformance suite (`rust/tests/conformance_traces.rs`) pins. For
+//! cross-implementation comparison (incremental vs reference rate paths,
+//! golden files recorded on another host) [`Trace::diff`] compares
+//! structurally with a relative time tolerance and reports
+//! [`Divergence`]s instead of a bare bool.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::gpu::names::NameTable;
+use crate::runtime::json::{self, Json};
+
+/// What happened at a trace event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceEventKind {
+    /// A launch entered a stream queue.
+    Submit,
+    /// A queued launch became its stream's active head (launch overhead
+    /// starts running).
+    Activate,
+    /// One thread block of the active launch landed on an SM.
+    BlockPlace,
+    /// The launch's last block retired.
+    Complete,
+}
+
+impl TraceEventKind {
+    /// One-letter code used in the canonical serialization.
+    pub fn code(self) -> &'static str {
+        match self {
+            TraceEventKind::Submit => "S",
+            TraceEventKind::Activate => "A",
+            TraceEventKind::BlockPlace => "P",
+            TraceEventKind::Complete => "C",
+        }
+    }
+
+    pub fn from_code(code: &str) -> Option<Self> {
+        match code {
+            "S" => Some(TraceEventKind::Submit),
+            "A" => Some(TraceEventKind::Activate),
+            "P" => Some(TraceEventKind::BlockPlace),
+            "C" => Some(TraceEventKind::Complete),
+            _ => None,
+        }
+    }
+}
+
+/// One recorded engine event, compact form: 8-byte time, launch tag,
+/// interned name id, and a location that is the stream id for
+/// submit/activate/complete and the SM id for block placements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub kind: TraceEventKind,
+    pub t_us: f64,
+    pub tag: u64,
+    pub name_id: u32,
+    pub loc: u32,
+}
+
+/// The engine-side accumulator (lives inside the engine; strings are
+/// resolved only when the trace is taken).
+#[derive(Debug, Default)]
+pub struct TraceRecorder {
+    events: Vec<TraceEvent>,
+}
+
+impl TraceRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record(
+        &mut self,
+        kind: TraceEventKind,
+        t_us: f64,
+        tag: u64,
+        name_id: u32,
+        loc: u32,
+    ) {
+        self.events.push(TraceEvent { kind, t_us, tag, name_id, loc });
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Freeze into a [`Trace`], snapshotting the engine's name table so
+    /// interned ids resolve without the engine.
+    pub fn into_trace(self, names: &NameTable) -> Trace {
+        Trace {
+            names: names.iter().map(|(_, n)| n.to_string()).collect(),
+            events: self.events,
+        }
+    }
+}
+
+/// A complete recorded run: the event list plus the interned-name table
+/// snapshot (index = name id).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub names: Vec<String>,
+    pub events: Vec<TraceEvent>,
+}
+
+/// One point where two traces disagree.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Divergence {
+    /// Event index (or the shorter trace's length for a length mismatch).
+    pub index: usize,
+    pub field: &'static str,
+    pub expected: String,
+    pub actual: String,
+}
+
+impl fmt::Display for Divergence {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "event {}: {} expected {}, got {}",
+            self.index, self.field, self.expected, self.actual
+        )
+    }
+}
+
+/// Divergences reported per diff are capped here; beyond the cap the two
+/// traces have materially different trajectories and more rows add noise.
+const MAX_DIVERGENCES: usize = 64;
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Resolved kernel name of an event ("?" for an id outside the table).
+    pub fn name_of(&self, ev: &TraceEvent) -> &str {
+        self.names
+            .get(ev.name_id as usize)
+            .map(String::as_str)
+            .unwrap_or("?")
+    }
+
+    /// Events of one kind.
+    pub fn count_of(&self, kind: TraceEventKind) -> usize {
+        self.events.iter().filter(|e| e.kind == kind).count()
+    }
+
+    /// Canonical serialization: `{"events":[[code,t,tag,name,loc],...],
+    /// "names":[...],"version":1}` with sorted object keys and
+    /// shortest-round-trip number formatting — byte-stable for identical
+    /// runs, machine-readable through [`json::parse`].
+    pub fn to_canonical_json(&self) -> String {
+        let mut obj = BTreeMap::new();
+        obj.insert("version".to_string(), Json::Num(1.0));
+        obj.insert(
+            "names".to_string(),
+            Json::Arr(self.names.iter().map(|n| Json::Str(n.clone())).collect()),
+        );
+        obj.insert(
+            "events".to_string(),
+            Json::Arr(
+                self.events
+                    .iter()
+                    .map(|e| {
+                        Json::Arr(vec![
+                            Json::Str(e.kind.code().to_string()),
+                            Json::Num(e.t_us),
+                            Json::Num(e.tag as f64),
+                            Json::Num(e.name_id as f64),
+                            Json::Num(e.loc as f64),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(obj).to_canonical_string()
+    }
+
+    /// Parse a canonical (or any schema-compatible) trace document.
+    pub fn from_json_str(text: &str) -> Result<Trace, String> {
+        let doc = json::parse(text).map_err(|e| e.to_string())?;
+        let version = doc
+            .get("version")
+            .and_then(Json::as_u64)
+            .ok_or("missing version")?;
+        if version != 1 {
+            return Err(format!("unsupported trace version {version}"));
+        }
+        let names = doc
+            .get("names")
+            .and_then(Json::as_arr)
+            .ok_or("missing names")?
+            .iter()
+            .map(|n| n.as_str().map(str::to_string).ok_or("non-string name"))
+            .collect::<Result<Vec<_>, _>>()?;
+        let mut events = Vec::new();
+        for (i, row) in doc
+            .get("events")
+            .and_then(Json::as_arr)
+            .ok_or("missing events")?
+            .iter()
+            .enumerate()
+        {
+            let row = row.as_arr().ok_or_else(|| format!("event {i}: not an array"))?;
+            if row.len() != 5 {
+                return Err(format!("event {i}: expected 5 fields, got {}", row.len()));
+            }
+            let kind = row[0]
+                .as_str()
+                .and_then(TraceEventKind::from_code)
+                .ok_or_else(|| format!("event {i}: bad kind"))?;
+            let num = |j: usize| {
+                row[j]
+                    .as_f64()
+                    .ok_or_else(|| format!("event {i}: field {j} not a number"))
+            };
+            events.push(TraceEvent {
+                kind,
+                t_us: num(1)?,
+                tag: num(2)? as u64,
+                name_id: num(3)? as u32,
+                loc: num(4)? as u32,
+            });
+        }
+        Ok(Trace { names, events })
+    }
+
+    /// Compare against another trace at the default tolerance (1e-9
+    /// relative on timestamps — the bound the differential engine tests
+    /// already hold the two rate paths to). Empty result = conformant.
+    pub fn diff(&self, other: &Trace) -> Vec<Divergence> {
+        self.diff_with_tolerance(other, 1e-9)
+    }
+
+    /// Structural comparison: event kinds, tags, resolved kernel names and
+    /// locations must match exactly in sequence; timestamps may differ by
+    /// `rel_tol * max(1, |t|)`. `other` is the expected side.
+    pub fn diff_with_tolerance(
+        &self,
+        other: &Trace,
+        rel_tol: f64,
+    ) -> Vec<Divergence> {
+        let mut out = Vec::new();
+        if self.events.len() != other.events.len() {
+            out.push(Divergence {
+                index: self.events.len().min(other.events.len()),
+                field: "length",
+                expected: other.events.len().to_string(),
+                actual: self.events.len().to_string(),
+            });
+        }
+        for (i, (a, b)) in self.events.iter().zip(&other.events).enumerate() {
+            if out.len() >= MAX_DIVERGENCES {
+                break;
+            }
+            if a.kind != b.kind {
+                out.push(Divergence {
+                    index: i,
+                    field: "kind",
+                    expected: b.kind.code().to_string(),
+                    actual: a.kind.code().to_string(),
+                });
+                continue;
+            }
+            if a.tag != b.tag {
+                out.push(Divergence {
+                    index: i,
+                    field: "tag",
+                    expected: b.tag.to_string(),
+                    actual: a.tag.to_string(),
+                });
+                continue;
+            }
+            // Names compare resolved, not by id, so a benign interning
+            // renumber is not flagged as drift.
+            if self.name_of(a) != other.name_of(b) {
+                out.push(Divergence {
+                    index: i,
+                    field: "name",
+                    expected: other.name_of(b).to_string(),
+                    actual: self.name_of(a).to_string(),
+                });
+                continue;
+            }
+            if a.loc != b.loc {
+                out.push(Divergence {
+                    index: i,
+                    field: "loc",
+                    expected: b.loc.to_string(),
+                    actual: a.loc.to_string(),
+                });
+                continue;
+            }
+            let bound = rel_tol * b.t_us.abs().max(1.0);
+            if (a.t_us - b.t_us).abs() > bound {
+                out.push(Divergence {
+                    index: i,
+                    field: "t_us",
+                    expected: b.t_us.to_string(),
+                    actual: a.t_us.to_string(),
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Trace {
+        Trace {
+            names: vec!["m/conv1".into(), "m/fc1".into()],
+            events: vec![
+                TraceEvent {
+                    kind: TraceEventKind::Submit,
+                    t_us: 0.0,
+                    tag: 1,
+                    name_id: 0,
+                    loc: 0,
+                },
+                TraceEvent {
+                    kind: TraceEventKind::Activate,
+                    t_us: 0.0,
+                    tag: 1,
+                    name_id: 0,
+                    loc: 0,
+                },
+                TraceEvent {
+                    kind: TraceEventKind::BlockPlace,
+                    t_us: 5.0,
+                    tag: 1,
+                    name_id: 0,
+                    loc: 17,
+                },
+                TraceEvent {
+                    kind: TraceEventKind::Complete,
+                    t_us: 6.25,
+                    tag: 1,
+                    name_id: 0,
+                    loc: 0,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn canonical_json_round_trips_byte_identically() {
+        let t = sample();
+        let s1 = t.to_canonical_json();
+        let parsed = Trace::from_json_str(&s1).unwrap();
+        assert_eq!(parsed, t);
+        assert_eq!(parsed.to_canonical_json(), s1);
+        // Keys come out sorted (BTreeMap order).
+        let ev = s1.find("\"events\"").unwrap();
+        let na = s1.find("\"names\"").unwrap();
+        let ve = s1.find("\"version\"").unwrap();
+        assert!(ev < na && na < ve, "{s1}");
+    }
+
+    #[test]
+    fn identical_traces_have_no_diff() {
+        assert!(sample().diff(&sample()).is_empty());
+    }
+
+    #[test]
+    fn diff_flags_structural_changes() {
+        let t = sample();
+        let mut other = sample();
+        other.events[2].loc = 3;
+        let d = t.diff(&other);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].field, "loc");
+        assert_eq!(d[0].index, 2);
+
+        let mut shorter = sample();
+        shorter.events.pop();
+        let d = t.diff(&shorter);
+        assert!(d.iter().any(|x| x.field == "length"), "{d:?}");
+
+        let mut renamed = sample();
+        renamed.names[0] = "other/conv1".into();
+        assert!(t.diff(&renamed).iter().any(|x| x.field == "name"));
+    }
+
+    #[test]
+    fn diff_tolerates_tiny_time_skew_only() {
+        let t = sample();
+        let mut close = sample();
+        close.events[3].t_us += 1e-11;
+        assert!(t.diff(&close).is_empty());
+        let mut far = sample();
+        far.events[3].t_us += 1e-3;
+        let d = t.diff(&far);
+        assert_eq!(d.len(), 1);
+        assert_eq!(d[0].field, "t_us");
+        // ...unless the tolerance is widened explicitly.
+        assert!(t.diff_with_tolerance(&far, 1e-2).is_empty());
+    }
+
+    #[test]
+    fn from_json_rejects_malformed_documents() {
+        assert!(Trace::from_json_str("not json").is_err());
+        assert!(Trace::from_json_str("{}").is_err());
+        assert!(Trace::from_json_str(
+            r#"{"events":[],"names":[],"version":2}"#
+        )
+        .is_err());
+        assert!(Trace::from_json_str(
+            r#"{"events":[["X",0,1,0,0]],"names":[],"version":1}"#
+        )
+        .is_err());
+        assert!(Trace::from_json_str(
+            r#"{"events":[["S",0,1]],"names":[],"version":1}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn divergence_display_is_informative() {
+        let mut other = sample();
+        other.events[0].tag = 9;
+        let d = sample().diff(&other);
+        let msg = d[0].to_string();
+        assert!(msg.contains("tag"), "{msg}");
+        assert!(msg.contains('9'), "{msg}");
+    }
+
+    #[test]
+    fn diff_caps_reported_divergences() {
+        let t = sample();
+        let mut other = sample();
+        // Completely different trajectory.
+        for e in &mut other.events {
+            e.tag += 100;
+        }
+        let mut many_events = Vec::new();
+        let mut wide_events = Vec::new();
+        for _ in 0..50 {
+            many_events.extend(other.events.clone());
+            wide_events.extend(t.events.clone());
+        }
+        let many = Trace { names: t.names.clone(), events: many_events };
+        let wide = Trace { names: t.names.clone(), events: wide_events };
+        let d = wide.diff(&many);
+        assert!(d.len() <= MAX_DIVERGENCES + 1, "{}", d.len());
+    }
+}

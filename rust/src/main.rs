@@ -1,8 +1,10 @@
 //! `miriam` CLI — simulate workloads, regenerate paper figures, run
-//! inference through the PJRT runtime.
+//! inference through the PJRT runtime, drive the scenario harness.
 //!
 //! Subcommands:
 //!   simulate   --platform rtx2060 --workload A --schedulers all --duration 1.0
+//!   scenarios  [--list] [--scenario NAME|all] [--gen N --seed S]
+//!              [--trace-out FILE] [--record-golden DIR]
 //!   infer      --model cifarnet [--artifacts artifacts]
 //!   artifacts  [--artifacts artifacts]
 
@@ -13,7 +15,7 @@ use miriam::config::RunConfig;
 use miriam::coordinator::{self, driver};
 use miriam::gpu::spec::GpuSpec;
 use miriam::runtime::Manifest;
-use miriam::workloads::{lgsvl, mdtb};
+use miriam::workloads::{lgsvl, mdtb, scenario};
 
 const USAGE: &str = "\
 miriam — elastic-kernel multi-DNN coordination on a simulated edge GPU
@@ -22,6 +24,10 @@ USAGE:
   miriam simulate [--platform rtx2060|xavier|tx2] [--workload A|B|C|D|lgsvl]
                   [--schedulers sequential,multistream,ib,miriam]
                   [--duration SECONDS]
+  miriam scenarios [--list] [--platform P] [--duration SECONDS]
+                   [--scenario NAME|all] [--gen N] [--seed S]
+                   [--schedulers s1,s2,...] [--trace-out FILE]
+                   [--record-golden DIR]
   miriam infer --model NAME [--artifacts DIR]
   miriam artifacts [--artifacts DIR]
 ";
@@ -74,6 +80,102 @@ fn simulate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The scenario harness: list/run the named scenario family (plus seeded
+/// generated scenarios), optionally recording canonical engine traces
+/// (`--trace-out` for one cell, `--record-golden` for the pinned
+/// conformance subset — see EXPERIMENTS.md §Scenarios).
+fn scenarios(args: &Args) -> Result<()> {
+    let platform = args.get("platform", "rtx2060");
+    let spec = GpuSpec::by_name(platform)
+        .ok_or_else(|| anyhow!("unknown platform {platform}"))?;
+    let duration = args.get_f64("duration", 0.2).map_err(|e| anyhow!(e))?;
+    if duration <= 0.0 {
+        return Err(anyhow!("duration must be positive"));
+    }
+    let dur_us = duration * 1e6;
+
+    if args.has("list") {
+        for sc in scenario::family(dur_us) {
+            println!("{:<16} {} tenants ({} critical), seed {:#x}",
+                     sc.name, sc.tenants(), sc.criticals(), sc.seed);
+        }
+        return Ok(());
+    }
+
+    if let Some(dir) = args.flags.get("record-golden") {
+        // Goldens are pinned to one platform (and duration); recording on
+        // anything else would poison the conformance anchors.
+        if platform != scenario::GOLDEN_PLATFORM {
+            return Err(anyhow!(
+                "--record-golden is pinned to --platform {} (got {platform})",
+                scenario::GOLDEN_PLATFORM));
+        }
+        for (path, events) in
+            driver::record_golden_traces(std::path::Path::new(dir))?
+        {
+            println!("recorded {} ({events} events)", path.display());
+        }
+        return Ok(());
+    }
+
+    let which = args.get("scenario", "all");
+    let gen_n = args.get_usize("gen", 0).map_err(|e| anyhow!(e))?;
+    let seed = args.get_u64("seed", 0x5CE7).map_err(|e| anyhow!(e))?;
+    let mut specs = if which.eq_ignore_ascii_case("all") {
+        scenario::family(dur_us)
+    } else {
+        vec![scenario::by_name(which, dur_us)
+            .ok_or_else(|| anyhow!("unknown scenario {which}"))?]
+    };
+    if gen_n > 0 {
+        specs.extend(scenario::ScenarioGen::new(seed, dur_us).take(gen_n));
+    }
+    let schedulers: Vec<String> = args
+        .get("schedulers", "sequential,multistream,ib,miriam")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .collect();
+    let trace_out = args.flags.get("trace-out");
+    if trace_out.is_some() && (specs.len() != 1 || schedulers.len() != 1) {
+        return Err(anyhow!(
+            "--trace-out needs exactly one --scenario and one scheduler"));
+    }
+
+    println!("# {} scenario(s) on {} ({} SMs), {duration}s simulated",
+             specs.len(), spec.name, spec.num_sms);
+    println!("{:<16} {:<12} {:>10} {:>10} {:>8} {:>12} {:>8}",
+             "scenario", "scheduler", "crit p50", "crit p99", "miss",
+             "throughput", "occup");
+    println!("{:<16} {:<12} {:>10} {:>10} {:>8} {:>12} {:>8}",
+             "", "", "(ms)", "(ms)", "(crit)", "(req/s)", "");
+    for sc in &specs {
+        let wl = sc.build();
+        for name in &schedulers {
+            let mut sched = coordinator::scheduler_for(name, &wl)
+                .ok_or_else(|| anyhow!("unknown scheduler {name}"))?;
+            let opts = driver::RunOpts {
+                reference_rates: false,
+                trace: trace_out.is_some(),
+            };
+            let stats = driver::run_with(spec.clone(), &wl, sched.as_mut(),
+                                         opts);
+            println!("{:<16} {:<12} {:>10.2} {:>10.2} {:>8} {:>12.1} {:>8.3}",
+                     sc.name, name,
+                     stats.critical_latency_quantile_us(0.5) / 1e3,
+                     stats.critical_latency_p99_us() / 1e3,
+                     stats.deadline_misses_critical,
+                     stats.throughput_rps(),
+                     stats.achieved_occupancy);
+            if let Some(path) = trace_out {
+                let trace = stats.trace.expect("trace was requested");
+                std::fs::write(path, trace.to_canonical_json())?;
+                println!("wrote {} ({} events)", path, trace.len());
+            }
+        }
+    }
+    Ok(())
+}
+
 fn infer(args: &Args) -> Result<()> {
     use miriam::runtime::artifacts::npy_rand;
     let model = args
@@ -113,6 +215,7 @@ fn main() -> Result<()> {
     let args = Args::from_env().map_err(|e| anyhow!(e))?;
     match args.positional.first().map(String::as_str) {
         Some("simulate") => simulate(&args),
+        Some("scenarios") => scenarios(&args),
         Some("infer") => infer(&args),
         Some("artifacts") => {
             let m = Manifest::load(args.get("artifacts", "artifacts"))?;

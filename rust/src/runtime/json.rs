@@ -1,13 +1,20 @@
-//! Minimal JSON parser for the artifact manifest.
+//! Minimal JSON parser and canonical writer.
 //!
 //! The build environment is fully offline and `serde_json` is not in the
 //! vendored crate set, so the manifest (a small, machine-generated file)
 //! is parsed with this self-contained recursive-descent parser. It
 //! supports the full JSON grammar except `\u` surrogate pairs beyond the
 //! BMP (the manifest is ASCII).
+//!
+//! [`Json::to_canonical_string`] is the inverse direction, used by the
+//! engine trace recorder (`gpu::trace`): object keys in sorted
+//! (`BTreeMap`) order, no whitespace, and shortest-round-trip number
+//! formatting — equal values always serialize to byte-identical strings,
+//! the property the golden-trace conformance suite relies on.
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::fmt::Write as _;
 
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
@@ -56,6 +63,72 @@ impl Json {
             _ => None,
         }
     }
+
+    /// Canonical serialization: sorted object keys, no whitespace,
+    /// shortest-round-trip float formatting (Rust's `Display` for `f64`,
+    /// which round-trips exactly through [`parse`]). Non-finite numbers
+    /// have no JSON representation and serialize as `null`.
+    pub fn to_canonical_string(&self) -> String {
+        let mut out = String::new();
+        self.write_canonical(&mut out);
+        out
+    }
+
+    fn write_canonical(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    let _ = write!(out, "{n}");
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, item) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_canonical(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write_canonical(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 /// Parse error with byte offset.
@@ -327,6 +400,39 @@ mod tests {
         assert_eq!(parse("{}").unwrap(), Json::Obj(BTreeMap::new()));
         assert_eq!(parse("[]").unwrap(), Json::Arr(vec![]));
         assert_eq!(parse("  [ ]  ").unwrap(), Json::Arr(vec![]));
+    }
+
+    #[test]
+    fn canonical_writer_sorts_keys_and_round_trips() {
+        let v = parse(r#"{"b": [1, 2.5, true, null], "a": {"y": "s", "x": -3}}"#)
+            .unwrap();
+        let s = v.to_canonical_string();
+        assert_eq!(s, r#"{"a":{"x":-3,"y":"s"},"b":[1,2.5,true,null]}"#);
+        // Round trip is exact and idempotent.
+        let v2 = parse(&s).unwrap();
+        assert_eq!(v2, v);
+        assert_eq!(v2.to_canonical_string(), s);
+    }
+
+    #[test]
+    fn canonical_writer_escapes_strings() {
+        let v = Json::Str("a\"b\\c\nd\u{1}".into());
+        let s = v.to_canonical_string();
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\\u0001\"");
+        assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn canonical_writer_number_forms() {
+        assert_eq!(Json::Num(5.0).to_canonical_string(), "5");
+        assert_eq!(Json::Num(-0.25).to_canonical_string(), "-0.25");
+        assert_eq!(Json::Num(f64::NAN).to_canonical_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_canonical_string(), "null");
+        // Shortest-repr round trip: parse(write(x)) == x bit-for-bit.
+        for x in [1.0 / 3.0, 1e-9, 123_456_789.123_456_79, 2.5e17] {
+            let s = Json::Num(x).to_canonical_string();
+            assert_eq!(parse(&s).unwrap(), Json::Num(x), "{s}");
+        }
     }
 
     #[test]

@@ -22,6 +22,27 @@ use anyhow::Result;
 use crate::gpu::kernel::Criticality;
 use crate::runtime::{Manifest, Runtime};
 
+/// A model-execution backend: maps (model name, input) to an output
+/// buffer. The PJRT-backed executor is built by [`Server::start`]; tests
+/// inject synthetic executors through [`Server::start_with_executor`] so
+/// the queue discipline is exercised without the `pjrt` feature.
+///
+/// Deliberately not `Send`: the executor is constructed *inside* the
+/// worker thread (only the factory crosses threads), matching the
+/// non-`Send` XLA client.
+pub trait Executor {
+    fn execute(&mut self, model: &str, input: &[f32]) -> Result<Vec<f32>>;
+}
+
+impl<F> Executor for F
+where
+    F: FnMut(&str, &[f32]) -> Result<Vec<f32>>,
+{
+    fn execute(&mut self, model: &str, input: &[f32]) -> Result<Vec<f32>> {
+        self(model, input)
+    }
+}
+
 /// One inference request.
 pub struct InferRequest {
     pub model: String,
@@ -133,23 +154,39 @@ impl Server {
                  models: &[String]) -> Result<Self> {
         let dir = artifact_dir.into();
         let models: Vec<String> = models.to_vec();
-        let queues = Arc::new((Mutex::new(Queues::default()), Condvar::new()));
-        let stats = Arc::new(ServerStats::default());
-        let handle = ServerHandle { queues: queues.clone(), stats: stats.clone() };
-        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
-
-        let worker = std::thread::spawn(move || {
-            let mut runtime = match Manifest::load(&dir)
+        Self::start_with_executor(move || -> Result<Box<dyn Executor>> {
+            let mut runtime = Manifest::load(&dir)
                 .and_then(Runtime::new)
                 .and_then(|mut rt| {
                     for m in &models {
                         rt.load(m)?;
                     }
                     Ok(rt)
-                }) {
-                Ok(rt) => {
+                })?;
+            Ok(Box::new(move |model: &str, input: &[f32]| {
+                runtime.load(model)?.run_f32(&[input.to_vec()])
+            }))
+        })
+    }
+
+    /// Start the serving loop over an arbitrary [`Executor`]. `make` runs
+    /// once on the worker thread to build the executor (so non-`Send`
+    /// backends work); a factory error is propagated out of `start_with_executor`
+    /// before any request is accepted.
+    pub fn start_with_executor<F>(make: F) -> Result<Self>
+    where
+        F: FnOnce() -> Result<Box<dyn Executor>> + Send + 'static,
+    {
+        let queues = Arc::new((Mutex::new(Queues::default()), Condvar::new()));
+        let stats = Arc::new(ServerStats::default());
+        let handle = ServerHandle { queues: queues.clone(), stats: stats.clone() };
+        let (ready_tx, ready_rx) = std::sync::mpsc::channel::<Result<()>>();
+
+        let worker = std::thread::spawn(move || {
+            let mut exec = match make() {
+                Ok(e) => {
                     let _ = ready_tx.send(Ok(()));
-                    rt
+                    e
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
@@ -174,9 +211,7 @@ impl Server {
                     }
                 };
                 let crit = req.criticality;
-                let result = runtime
-                    .load(&req.model)
-                    .and_then(|m| m.run_f32(&[req.input.clone()]));
+                let result = exec.execute(&req.model, &req.input);
                 let latency_us = enq.elapsed().as_secs_f64() * 1e6;
                 let reply = match result {
                     Ok(output) => InferReply {

@@ -26,11 +26,13 @@ pub fn workload(duration_us: f64) -> Workload {
                 model: Arc::new(models::resnet()),
                 arrival: Arrival::Uniform { rate_hz: 10.0 },
                 criticality: Criticality::Critical,
+                deadline_us: None,
             },
             Source {
                 model: Arc::new(models::squeezenet()),
                 arrival: Arrival::Uniform { rate_hz: 12.5 },
                 criticality: Criticality::Normal,
+                deadline_us: None,
             },
         ],
         duration_us,

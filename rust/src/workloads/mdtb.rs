@@ -23,6 +23,10 @@ pub struct Source {
     pub model: ModelRef,
     pub arrival: Arrival,
     pub criticality: Criticality,
+    /// Optional end-to-end deadline (us). Completions later than this are
+    /// counted in `RunStats::deadline_misses_*`; `None` means best-effort
+    /// latency only (the MDTB default — Table 2 specifies no deadlines).
+    pub deadline_us: Option<f64>,
 }
 
 /// A complete benchmark workload.
@@ -59,13 +63,15 @@ impl WorkloadSpec {
             sources: vec![
                 Source {
                     model: Arc::new(critical),
-                    arrival: self.critical_arrival,
+                    arrival: self.critical_arrival.clone(),
                     criticality: Criticality::Critical,
+                    deadline_us: None,
                 },
                 Source {
                     model: Arc::new(normal),
-                    arrival: self.normal_arrival,
+                    arrival: self.normal_arrival.clone(),
                     criticality: Criticality::Normal,
+                    deadline_us: None,
                 },
             ],
             duration_us: self.duration_us,

@@ -1,13 +1,17 @@
 //! DNN workloads: model kernel descriptors, arrival processes, the MDTB
-//! benchmark (paper Table 2) and the LGSVL case-study trace (§8.5).
+//! benchmark (paper Table 2), the LGSVL case-study trace (§8.5), and the
+//! declarative scenario harness (N-tenant mixed-criticality scenarios
+//! beyond the paper's benchmark).
 
 pub mod arrival;
 pub mod lgsvl;
 pub mod mdtb;
 pub mod models;
 pub mod rng;
+pub mod scenario;
 
 pub use arrival::Arrival;
 pub use mdtb::{Source, Workload, WorkloadSpec};
 pub use models::{ModelDesc, ModelRef};
 pub use rng::Rng;
+pub use scenario::{ScenarioGen, ScenarioSpec, SourceSpec};

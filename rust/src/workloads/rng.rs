@@ -77,4 +77,30 @@ mod tests {
         assert_ne!(r.next_u64(), 0);
         assert_ne!(r.next_u64(), r.next_u64());
     }
+
+    #[test]
+    fn f64_mean_near_half_over_10k_draws() {
+        // sd of the mean of 10k U(0,1) draws is ~0.0029; 0.015 is ~5 sd.
+        let mut r = Rng::new(0x5EED);
+        let n = 10_000;
+        let mean: f64 = (0..n).map(|_| r.next_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.015, "mean {mean}");
+    }
+
+    #[test]
+    fn next_below_is_roughly_uniform() {
+        // 8 buckets x 8000 draws: expected 1000 per bucket, sd ~30;
+        // +-150 is 5 sd.
+        let mut r = Rng::new(0xB0C);
+        let mut buckets = [0u32; 8];
+        for _ in 0..8_000 {
+            buckets[r.next_below(8) as usize] += 1;
+        }
+        for (i, b) in buckets.iter().enumerate() {
+            assert!(
+                (850..=1150).contains(b),
+                "bucket {i} has {b} of 8000 draws"
+            );
+        }
+    }
 }

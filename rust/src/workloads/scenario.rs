@@ -1,0 +1,564 @@
+//! Declarative mixed-criticality scenarios beyond MDTB (ISSUE 2
+//! tentpole).
+//!
+//! The paper evaluates on four fixed two-source workloads (Table 2) plus
+//! the LGSVL trace; the ROADMAP north star asks for "as many scenarios as
+//! you can imagine". A [`ScenarioSpec`] describes an N-tenant workload
+//! declaratively — per-source model, criticality, optional deadline, and
+//! arrival process (including the bursty MMPP / ramp / trace-replay
+//! processes of [`crate::workloads::arrival`]) — and [`family`] enumerates
+//! a named family of deadline-tagged, bursty, skewed scenarios (2–6
+//! tenants) that the conformance-trace suite
+//! (`rust/tests/conformance_traces.rs`) drives through every scheduler.
+//! [`ScenarioGen`] extends the family with seeded random scenarios for
+//! open-ended sweeps (`miriam scenarios --gen N`).
+
+use std::sync::Arc;
+
+use crate::gpu::kernel::Criticality;
+use crate::workloads::arrival::Arrival;
+use crate::workloads::mdtb::{Source, Workload};
+use crate::workloads::models;
+use crate::workloads::rng::Rng;
+
+/// One declarative request source of a scenario.
+#[derive(Debug, Clone)]
+pub struct SourceSpec {
+    /// Model name, resolved through [`models::by_name`] at build time.
+    pub model: String,
+    pub criticality: Criticality,
+    pub arrival: Arrival,
+    /// Optional end-to-end deadline (us); completions later than this are
+    /// counted in `RunStats::deadline_misses_*`.
+    pub deadline_us: Option<f64>,
+}
+
+/// A complete declarative scenario: N tenants over a simulated window.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub sources: Vec<SourceSpec>,
+    pub duration_us: f64,
+    /// RNG seed for stochastic arrivals (the driver derives every random
+    /// draw of the run from it, so a scenario is fully reproducible).
+    pub seed: u64,
+}
+
+impl ScenarioSpec {
+    pub fn tenants(&self) -> usize {
+        self.sources.len()
+    }
+
+    pub fn criticals(&self) -> usize {
+        self.sources
+            .iter()
+            .filter(|s| s.criticality == Criticality::Critical)
+            .count()
+    }
+
+    /// Resolve model names and materialize the runnable [`Workload`].
+    /// Panics on an unknown model name, mirroring `WorkloadSpec::build`.
+    pub fn build(&self) -> Workload {
+        Workload {
+            name: self.name.clone(),
+            sources: self
+                .sources
+                .iter()
+                .map(|s| Source {
+                    model: Arc::new(models::by_name(&s.model).unwrap_or_else(
+                        || {
+                            panic!(
+                                "unknown model {} in scenario {}",
+                                s.model, self.name
+                            )
+                        },
+                    )),
+                    arrival: s.arrival.clone(),
+                    criticality: s.criticality,
+                    deadline_us: s.deadline_us,
+                })
+                .collect(),
+            duration_us: self.duration_us,
+            seed: self.seed,
+        }
+    }
+}
+
+fn crit(model: &str, arrival: Arrival, deadline_us: Option<f64>) -> SourceSpec {
+    SourceSpec {
+        model: model.into(),
+        criticality: Criticality::Critical,
+        arrival,
+        deadline_us,
+    }
+}
+
+fn norm(model: &str, arrival: Arrival) -> SourceSpec {
+    SourceSpec {
+        model: model.into(),
+        criticality: Criticality::Normal,
+        arrival,
+        deadline_us: None,
+    }
+}
+
+/// A jittered-periodic recorded arrival list (what a rosbag replay of a
+/// sensor topic looks like), regenerated deterministically from `seed` —
+/// the input to [`Arrival::Replay`] scenarios.
+pub fn recorded_trace(
+    duration_us: f64,
+    rate_hz: f64,
+    jitter_us: f64,
+    seed: u64,
+) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let period = 1e6 / rate_hz;
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    while t < duration_us {
+        let j = (rng.next_f64() * 2.0 - 1.0) * jitter_us;
+        out.push((t + j).max(0.0));
+        t += period;
+    }
+    out
+}
+
+/// The named scenario family (>= 8 scenarios, 2–6 tenants each, mixed
+/// criticality, skewed and bursty load — all beyond the MDTB shapes).
+/// Rates are deliberately high (the ROADMAP's heavy-traffic regime) so
+/// even short windows exercise queueing; deadlines tag the critical
+/// tenants that model hard real-time tasks.
+pub fn family(duration_us: f64) -> Vec<ScenarioSpec> {
+    vec![
+        // 2 tenants: bursty critical RNN vs closed-loop filler.
+        ScenarioSpec {
+            name: "duo-burst".into(),
+            sources: vec![
+                crit(
+                    "gru",
+                    Arrival::Mmpp {
+                        on_hz: 200.0,
+                        off_hz: 5.0,
+                        mean_on_us: 5_000.0,
+                        mean_off_us: 10_000.0,
+                    },
+                    Some(30_000.0),
+                ),
+                norm("cifarnet", Arrival::ClosedLoop { clients: 2 }),
+            ],
+            duration_us,
+            seed: 0x2B1,
+        },
+        // 2 tenants: trace-replay critical (recorded jittered 50 Hz sensor)
+        // vs closed-loop filler.
+        ScenarioSpec {
+            name: "duo-replay".into(),
+            sources: vec![
+                crit(
+                    "squeezenet",
+                    Arrival::replay(recorded_trace(
+                        duration_us,
+                        50.0,
+                        1_500.0,
+                        0x2B2,
+                    )),
+                    Some(40_000.0),
+                ),
+                norm("cifarnet", Arrival::ClosedLoop { clients: 2 }),
+            ],
+            duration_us,
+            seed: 0x2B2,
+        },
+        // 3 tenants, skewed: one fat closed-loop normal plus a trickle.
+        ScenarioSpec {
+            name: "trio-skew".into(),
+            sources: vec![
+                crit(
+                    "alexnet",
+                    Arrival::Uniform { rate_hz: 50.0 },
+                    Some(25_000.0),
+                ),
+                norm("cifarnet", Arrival::ClosedLoop { clients: 4 }),
+                norm("squeezenet", Arrival::Poisson { rate_hz: 40.0 }),
+            ],
+            duration_us,
+            seed: 0x2B3,
+        },
+        // 3 tenants: critical load ramps 10x across the window.
+        ScenarioSpec {
+            name: "trio-ramp".into(),
+            sources: vec![
+                crit(
+                    "gru",
+                    Arrival::Ramp { start_hz: 10.0, end_hz: 100.0 },
+                    Some(20_000.0),
+                ),
+                norm("cifarnet", Arrival::ClosedLoop { clients: 2 }),
+                norm("alexnet", Arrival::Poisson { rate_hz: 30.0 }),
+            ],
+            duration_us,
+            seed: 0x2B4,
+        },
+        // 4 tenants, two critical classes with different arrival shapes.
+        ScenarioSpec {
+            name: "quad-dual-crit".into(),
+            sources: vec![
+                crit(
+                    "squeezenet",
+                    Arrival::Uniform { rate_hz: 40.0 },
+                    Some(30_000.0),
+                ),
+                crit(
+                    "gru",
+                    Arrival::Mmpp {
+                        on_hz: 150.0,
+                        off_hz: 0.0,
+                        mean_on_us: 4_000.0,
+                        mean_off_us: 8_000.0,
+                    },
+                    Some(25_000.0),
+                ),
+                norm("cifarnet", Arrival::ClosedLoop { clients: 3 }),
+                norm("alexnet", Arrival::ClosedLoop { clients: 1 }),
+            ],
+            duration_us,
+            seed: 0x2B5,
+        },
+        // 4 tenants: steady critical vs three desynchronized bursty
+        // best-effort tenants.
+        ScenarioSpec {
+            name: "quad-bursty".into(),
+            sources: vec![
+                crit(
+                    "alexnet",
+                    Arrival::Uniform { rate_hz: 30.0 },
+                    Some(35_000.0),
+                ),
+                norm(
+                    "cifarnet",
+                    Arrival::Mmpp {
+                        on_hz: 300.0,
+                        off_hz: 10.0,
+                        mean_on_us: 3_000.0,
+                        mean_off_us: 9_000.0,
+                    },
+                ),
+                norm(
+                    "cifarnet",
+                    Arrival::Mmpp {
+                        on_hz: 200.0,
+                        off_hz: 0.0,
+                        mean_on_us: 6_000.0,
+                        mean_off_us: 6_000.0,
+                    },
+                ),
+                norm("squeezenet", Arrival::Poisson { rate_hz: 25.0 }),
+            ],
+            duration_us,
+            seed: 0x2B6,
+        },
+        // 5 tenants: everything at once (the saturation storm).
+        ScenarioSpec {
+            name: "five-storm".into(),
+            sources: vec![
+                crit(
+                    "gru",
+                    Arrival::Uniform { rate_hz: 60.0 },
+                    Some(18_000.0),
+                ),
+                crit(
+                    "squeezenet",
+                    Arrival::Poisson { rate_hz: 30.0 },
+                    Some(40_000.0),
+                ),
+                norm("cifarnet", Arrival::ClosedLoop { clients: 3 }),
+                norm(
+                    "cifarnet",
+                    Arrival::Mmpp {
+                        on_hz: 250.0,
+                        off_hz: 5.0,
+                        mean_on_us: 2_000.0,
+                        mean_off_us: 10_000.0,
+                    },
+                ),
+                norm("alexnet", Arrival::Poisson { rate_hz: 20.0 }),
+            ],
+            duration_us,
+            seed: 0x2B7,
+        },
+        // 6 tenants: the widest mix — two critical, four skewed normals,
+        // one of them ramping.
+        ScenarioSpec {
+            name: "six-saturate".into(),
+            sources: vec![
+                crit(
+                    "alexnet",
+                    Arrival::Uniform { rate_hz: 25.0 },
+                    Some(45_000.0),
+                ),
+                crit(
+                    "gru",
+                    Arrival::Poisson { rate_hz: 40.0 },
+                    Some(22_000.0),
+                ),
+                norm("cifarnet", Arrival::ClosedLoop { clients: 2 }),
+                norm("cifarnet", Arrival::ClosedLoop { clients: 2 }),
+                norm(
+                    "squeezenet",
+                    Arrival::Mmpp {
+                        on_hz: 120.0,
+                        off_hz: 8.0,
+                        mean_on_us: 5_000.0,
+                        mean_off_us: 7_000.0,
+                    },
+                ),
+                norm(
+                    "cifarnet",
+                    Arrival::Ramp { start_hz: 5.0, end_hz: 80.0 },
+                ),
+            ],
+            duration_us,
+            seed: 0x2B8,
+        },
+    ]
+}
+
+/// Look up a family scenario by name (case-insensitive).
+pub fn by_name(name: &str, duration_us: f64) -> Option<ScenarioSpec> {
+    family(duration_us)
+        .into_iter()
+        .find(|s| s.name.eq_ignore_ascii_case(name))
+}
+
+/// Pinned (scenario, scheduler) cells whose canonical engine traces are
+/// kept as golden files under `rust/tests/golden/` — the semantic-drift
+/// anchors of the conformance suite. Record/refresh with
+/// `miriam scenarios --record-golden rust/tests/golden`
+/// (see EXPERIMENTS.md §Scenarios).
+pub const GOLDEN_CELLS: [(&str, &str); 4] = [
+    ("duo-burst", "sequential"),
+    ("duo-replay", "miriam"),
+    ("trio-skew", "multistream"),
+    ("quad-dual-crit", "ib"),
+];
+
+/// Pinned simulated duration (us) for golden traces. Goldens recorded at
+/// any other duration will not match.
+pub const GOLDEN_DURATION_US: f64 = 40_000.0;
+
+/// Pinned GPU preset for golden traces — the conformance suite replays
+/// goldens on this platform only, so recording must use it too.
+pub const GOLDEN_PLATFORM: &str = "rtx2060";
+
+/// File name of a golden trace cell.
+pub fn golden_file_name(scenario: &str, scheduler: &str) -> String {
+    format!("{scenario}__{scheduler}.trace.json")
+}
+
+/// Seeded random-scenario generator: extends the named family with an
+/// unbounded stream of valid (2–6 tenant, >= 1 critical, >= 1 normal)
+/// scenarios for sweeps. Deterministic per seed.
+pub struct ScenarioGen {
+    rng: Rng,
+    duration_us: f64,
+    next_idx: usize,
+}
+
+/// Model pool for generated scenarios: the lighter MDTB models, so a
+/// generated scenario stays simulable in milliseconds.
+const GEN_MODELS: [&str; 4] = ["cifarnet", "squeezenet", "alexnet", "gru"];
+
+impl ScenarioGen {
+    pub fn new(seed: u64, duration_us: f64) -> Self {
+        ScenarioGen { rng: Rng::new(seed), duration_us, next_idx: 0 }
+    }
+
+    fn random_arrival(&mut self, closed_loop_ok: bool) -> Arrival {
+        let kinds = if closed_loop_ok { 5 } else { 4 };
+        match self.rng.next_below(kinds) {
+            0 => Arrival::Uniform {
+                rate_hz: 10.0 + self.rng.next_f64() * 60.0,
+            },
+            1 => Arrival::Poisson {
+                rate_hz: 10.0 + self.rng.next_f64() * 60.0,
+            },
+            2 => Arrival::Mmpp {
+                on_hz: 50.0 + self.rng.next_f64() * 250.0,
+                off_hz: self.rng.next_f64() * 10.0,
+                mean_on_us: 2_000.0 + self.rng.next_f64() * 8_000.0,
+                mean_off_us: 2_000.0 + self.rng.next_f64() * 12_000.0,
+            },
+            3 => {
+                let a = 5.0 + self.rng.next_f64() * 40.0;
+                let b = 5.0 + self.rng.next_f64() * 80.0;
+                Arrival::Ramp { start_hz: a, end_hz: b }
+            }
+            _ => Arrival::ClosedLoop {
+                clients: 1 + self.rng.next_below(3) as u32,
+            },
+        }
+    }
+
+    /// The next generated scenario.
+    pub fn next_scenario(&mut self) -> ScenarioSpec {
+        let idx = self.next_idx;
+        self.next_idx += 1;
+        let tenants = 2 + self.rng.next_below(5) as usize; // 2..=6
+        let mut sources = Vec::with_capacity(tenants);
+        for i in 0..tenants {
+            let model =
+                GEN_MODELS[self.rng.next_below(GEN_MODELS.len() as u64) as usize];
+            // Tenant 0 is always critical and tenant 1 always normal so
+            // every scenario is genuinely mixed-criticality; the rest coin-
+            // flip. Critical sources stay open-loop (a hard-real-time task
+            // does not self-throttle on completions).
+            let critical = match i {
+                0 => true,
+                1 => false,
+                _ => self.rng.next_f64() < 0.4,
+            };
+            if critical {
+                let deadline = if self.rng.next_f64() < 0.7 {
+                    Some(10_000.0 + self.rng.next_f64() * 60_000.0)
+                } else {
+                    None
+                };
+                let arrival = self.random_arrival(false);
+                sources.push(crit(model, arrival, deadline));
+            } else {
+                let arrival = self.random_arrival(true);
+                sources.push(norm(model, arrival));
+            }
+        }
+        ScenarioSpec {
+            name: format!("gen-{idx}-{tenants}t"),
+            sources,
+            duration_us: self.duration_us,
+            seed: self.rng.next_u64(),
+        }
+    }
+
+    /// Generate the next `n` scenarios.
+    pub fn take(&mut self, n: usize) -> Vec<ScenarioSpec> {
+        (0..n).map(|_| self.next_scenario()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_is_large_mixed_and_uniquely_named() {
+        let fam = family(50_000.0);
+        assert!(fam.len() >= 8, "family has {}", fam.len());
+        let mut names: Vec<&str> =
+            fam.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), fam.len(), "duplicate scenario names");
+        for sc in &fam {
+            assert!(
+                (2..=6).contains(&sc.tenants()),
+                "{}: {} tenants",
+                sc.name,
+                sc.tenants()
+            );
+            assert!(sc.criticals() >= 1, "{}: no critical tenant", sc.name);
+            assert!(
+                sc.criticals() < sc.tenants(),
+                "{}: no normal tenant",
+                sc.name
+            );
+        }
+    }
+
+    #[test]
+    fn family_builds_runnable_workloads() {
+        for sc in family(50_000.0) {
+            let wl = sc.build();
+            assert_eq!(wl.sources.len(), sc.tenants());
+            assert_eq!(wl.name, sc.name);
+            for src in &wl.sources {
+                assert!(!src.model.kernels.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn family_exercises_the_new_arrival_processes() {
+        let fam = family(50_000.0);
+        let has = |pred: fn(&Arrival) -> bool| {
+            fam.iter().flat_map(|s| &s.sources).any(|s| pred(&s.arrival))
+        };
+        assert!(has(|a| matches!(a, Arrival::Mmpp { .. })), "no MMPP");
+        assert!(has(|a| matches!(a, Arrival::Ramp { .. })), "no ramp");
+        assert!(has(|a| matches!(a, Arrival::Replay { .. })), "no replay");
+        assert!(
+            fam.iter()
+                .flat_map(|s| &s.sources)
+                .any(|s| s.deadline_us.is_some()),
+            "no deadline-tagged source"
+        );
+    }
+
+    #[test]
+    fn by_name_resolves_and_golden_cells_exist() {
+        assert!(by_name("duo-burst", 1e5).is_some());
+        assert!(by_name("DUO-BURST", 1e5).is_some());
+        assert!(by_name("mdtb-a", 1e5).is_none());
+        for (sc, _sched) in GOLDEN_CELLS {
+            assert!(
+                by_name(sc, GOLDEN_DURATION_US).is_some(),
+                "golden cell references unknown scenario {sc}"
+            );
+        }
+        assert_eq!(
+            golden_file_name("duo-burst", "ib"),
+            "duo-burst__ib.trace.json"
+        );
+    }
+
+    #[test]
+    fn generator_is_deterministic_and_valid() {
+        let a = ScenarioGen::new(7, 40_000.0).take(12);
+        let b = ScenarioGen::new(7, 40_000.0).take(12);
+        assert_eq!(a.len(), 12);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.seed, y.seed);
+            assert_eq!(x.tenants(), y.tenants());
+        }
+        for sc in &a {
+            assert!((2..=6).contains(&sc.tenants()), "{}", sc.name);
+            assert!(sc.criticals() >= 1 && sc.criticals() < sc.tenants());
+            sc.build(); // all model names resolve
+            for s in &sc.sources {
+                if s.criticality == Criticality::Critical {
+                    assert!(
+                        !s.arrival.is_closed_loop(),
+                        "{}: closed-loop critical",
+                        sc.name
+                    );
+                }
+            }
+        }
+        let c = ScenarioGen::new(8, 40_000.0).take(12);
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.seed != y.seed),
+            "different gen seeds produced identical scenarios"
+        );
+    }
+
+    #[test]
+    fn recorded_trace_is_sorted_after_replay_wrap() {
+        let times = recorded_trace(100_000.0, 50.0, 1_500.0, 42);
+        assert_eq!(times.len(), 5);
+        let a = Arrival::replay(times);
+        let s = a.schedule(100_000.0, &mut Rng::new(1));
+        for w in s.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+        assert!(s.iter().all(|t| *t >= 0.0));
+    }
+}

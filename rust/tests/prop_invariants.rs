@@ -125,6 +125,93 @@ fn prop_shrink_keeps_only_feasible() {
     }
 }
 
+/// Property (ISSUE 2 satellite): every candidate the shrink keeps stays
+/// inside the `GpuSpec` resource envelope at shard-launch granularity —
+/// threads per block, blocks per SM, shared memory — and its shard
+/// launches preserve the kernel's total work exactly.
+#[test]
+fn prop_shrink_candidates_respect_resource_limits_and_work() {
+    let mut rng = Rng::new(0xE1A57);
+    for case in 0..150 {
+        let spec = if case % 2 == 0 {
+            GpuSpec::rtx2060()
+        } else {
+            GpuSpec::xavier()
+        };
+        let k = rand_kernel(&mut rng);
+        let profiles: Vec<CriticalProfile> = (0..3)
+            .map(|_| CriticalProfile {
+                n_blk_rt: 1 + rng.next_below(128) as u32,
+                s_blk_rt: 1 + rng.next_below(1024) as u32,
+            })
+            .collect();
+        let cfg = ShrinkConfig::default();
+        let out = shrink::shrink_design_space(&k, &profiles, &spec, &cfg);
+        for c in &out.kept {
+            assert!(c.n_blocks >= 1, "case {case}: empty shard {c:?}");
+            assert!(c.block_threads >= 1
+                        && c.block_threads <= spec.max_threads_per_sm,
+                    "case {case}: threads/block out of range {c:?}");
+            // A shard spread over the SMs never needs more resident block
+            // slots per SM than the hardware offers.
+            assert!(c.n_blocks.div_ceil(spec.num_sms)
+                        <= spec.max_blocks_per_sm,
+                    "case {case}: blocks/SM overflow {c:?}");
+            let launches = c.launches(&k);
+            let blocks: u32 = launches.iter().map(|l| l.grid).sum();
+            let flops: f64 = launches.iter().map(|l| l.flops).sum();
+            let bytes: f64 = launches.iter().map(|l| l.bytes).sum();
+            assert_eq!(blocks, k.grid, "case {case}: lost blocks {c:?}");
+            assert!((flops - k.flops).abs() <= 1e-6 * k.flops.max(1.0),
+                    "case {case}: flops drift {c:?}");
+            assert!((bytes - k.bytes).abs() <= 1e-6 * k.bytes.max(1.0),
+                    "case {case}: bytes drift {c:?}");
+            for l in &launches {
+                assert!(l.block_threads <= spec.max_threads_per_sm);
+                assert!(l.smem_per_block <= k.smem_per_block,
+                        "case {case}: smem grew {c:?}");
+                assert!(l.smem_per_block <= spec.smem_per_sm);
+                assert!(l.regs_per_thread * l.block_threads
+                            <= spec.regs_per_sm,
+                        "case {case}: register overflow {c:?}");
+            }
+        }
+    }
+}
+
+/// Regression (ISSUE 2 satellite): the degenerate 1-block grid — the
+/// slicing plan collapses to `[1]`, every candidate is a single shard,
+/// and nothing panics or loses work.
+#[test]
+fn shrink_handles_degenerate_one_block_grid() {
+    let spec = GpuSpec::rtx2060();
+    let k = KernelDesc {
+        name: "prop/one-block".into(),
+        grid: 1,
+        block_threads: 64,
+        smem_per_block: 2048,
+        regs_per_thread: 32,
+        flops: 1e5,
+        bytes: 4e4,
+    };
+    let crit = CriticalProfile { n_blk_rt: 10, s_blk_rt: 512 };
+    let out = shrink::shrink_design_space(&k, &[crit], &spec,
+                                          &ShrinkConfig::default());
+    assert!(out.total >= 1);
+    assert!(!out.kept.is_empty(),
+            "a 1-block kernel always has a feasible identity-ish candidate");
+    for c in &out.kept {
+        assert_eq!(c.n_blocks, 1, "{c:?}");
+        assert_eq!(c.num_shards(&k), 1, "{c:?}");
+        let launches = c.launches(&k);
+        assert_eq!(launches.len(), 1);
+        assert_eq!(launches[0].grid, 1);
+        assert!((launches[0].flops - k.flops).abs() < 1e-9);
+        assert!((launches[0].bytes - k.bytes).abs() < 1e-9);
+        assert!(launches[0].smem_per_block <= k.smem_per_block);
+    }
+}
+
 /// Property: contention rates are positive and bounded by the SM peak for
 /// arbitrary residencies; and for pure-compute workloads (no bandwidth
 /// coupling) removing a block never slows the others. Full monotonicity
@@ -216,7 +303,8 @@ fn prop_incremental_engine_matches_reference_trajectory() {
                                    RunOpts::default());
         let mut s2 = scheduler_for(sched, &wl).unwrap();
         let refr = driver::run_with(GpuSpec::rtx2060(), &wl, s2.as_mut(),
-                                    RunOpts { reference_rates: true });
+                                    RunOpts { reference_rates: true,
+                                              trace: false });
         assert_eq!(inc.timeline.len(), refr.timeline.len(),
                    "{wl_name}/{sched}: launch count diverged");
         assert!(!inc.timeline.is_empty(), "{wl_name}/{sched}: empty run");
