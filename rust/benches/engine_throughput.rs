@@ -1,63 +1,77 @@
-//! Engine event-throughput benchmark (EXPERIMENTS.md §Perf change #4).
+//! Engine event-throughput benchmark (EXPERIMENTS.md §Perf), re-based on
+//! the parallel sweep runner (ISSUE 3).
 //!
-//! Drives ~10k launches of MDTB-shaped kernels (MDTB-A and MDTB-D,
-//! closed-loop critical + normal sources) through every scheduler, twice:
+//! Three legs, all over MDTB-shaped cells expressed as scenarios:
 //!
-//! * `reference`  — the retained full-recompute rate model, the seed's
-//!   O(events × resident) per-event algorithm ("before");
-//! * `incremental` — the O(Δ)-per-event aggregate path ("after").
+//! 1. **Rate model** — the full scheduler grid (MDTB-A and MDTB-D ×
+//!    sequential/multistream/ib/miriam), once on the retained
+//!    full-recompute `reference` rate model (the seed's O(events ×
+//!    resident) per-event algorithm, the "before") and once on the
+//!    `incremental` O(Δ) path. Cells run on one worker so per-cell wall
+//!    times are uncontended.
+//! 2. **Coordinator-in-the-loop** — `miriam` (zero-clone fast path)
+//!    vs `miriam-ref` (retained String-keyed/cloning coordinator) on the
+//!    incremental engine: measures the ISSUE 3 coordinator win, not just
+//!    the engine win.
+//! 3. **Sweep scaling** — the same grid at `--threads 1` vs all cores:
+//!    wall-clock speedup of the parallel sweep runner itself (per-cell
+//!    results are byte-identical; `rust/tests/sweep_determinism.rs` pins
+//!    that).
 //!
-//! Reports per-cell launches, events, wall time and events/sec, plus the
-//! aggregate speedup, and writes everything as JSON to `BENCH_engine.json`
-//! so the perf trajectory is tracked from this PR onward.
-//!
-//! Run: `cargo bench --bench engine_throughput`
-//! CI smoke mode (short duration): append `-- --smoke` (or set
-//! `BENCH_SMOKE=1`).
+//! Writes `BENCH_engine.json` (schema keys of the PR 1 harness kept, new
+//! `coordinator` and `sweep_scaling` sections added). CI smoke mode:
+//! append `-- --smoke` (or set `BENCH_SMOKE=1`).
 
 use std::fmt::Write as _;
-use std::time::Instant;
 
-use miriam::coordinator::driver::{self, RunOpts};
-use miriam::coordinator::{scheduler_for, SCHEDULERS};
-use miriam::gpu::spec::GpuSpec;
-use miriam::workloads::mdtb;
+use miriam::coordinator::sweep::{run_sweep, SweepReport, SweepSpec};
+use miriam::coordinator::SCHEDULERS;
+use miriam::workloads::scenario;
 
-struct Cell {
-    mode: &'static str,
-    workload: String,
-    scheduler: &'static str,
-    launches: usize,
-    events: u64,
-    wall_s: f64,
-    events_per_sec: f64,
+fn mdtb_ad(duration_us: f64) -> Vec<scenario::ScenarioSpec> {
+    scenario::mdtb_scenarios(duration_us)
+        .into_iter()
+        .filter(|s| s.name == "MDTB-A" || s.name == "MDTB-D")
+        .collect()
 }
 
-fn run_cell(mode: &'static str, wl_name: &str, sched: &'static str,
-            duration_us: f64) -> Cell {
-    let wl = mdtb::by_name(wl_name, duration_us).unwrap().build();
-    let mut s = scheduler_for(sched, &wl).unwrap();
-    let opts = RunOpts { reference_rates: mode == "reference", trace: false };
-    let t0 = Instant::now();
-    let st = driver::run_with(GpuSpec::rtx2060(), &wl, s.as_mut(), opts);
-    let wall_s = t0.elapsed().as_secs_f64();
-    Cell {
-        mode,
-        workload: format!("MDTB-{wl_name}"),
-        scheduler: sched,
-        launches: st.timeline.len(),
-        events: st.events,
-        wall_s,
-        events_per_sec: st.events as f64 / wall_s.max(1e-12),
+fn grid_spec(duration_us: f64, schedulers: &[&str], seeds: u32,
+             reference_rates: bool) -> SweepSpec {
+    SweepSpec {
+        platform: "rtx2060".into(),
+        duration_us,
+        scenarios: mdtb_ad(duration_us),
+        schedulers: schedulers.iter().map(|s| s.to_string()).collect(),
+        seeds,
+        trace: false,
+        reference_rates,
     }
 }
 
-fn aggregate_events_per_sec(cells: &[Cell], mode: &str) -> f64 {
-    let (events, wall) = cells
-        .iter()
-        .filter(|c| c.mode == mode)
-        .fold((0u64, 0.0f64), |(e, w), c| (e + c.events, w + c.wall_s));
-    events as f64 / wall.max(1e-12)
+fn print_cells(mode: &str, report: &SweepReport) {
+    for c in &report.cells {
+        println!("{:<12} {:<8} {:<12} {:>9} {:>10} {:>9.3} {:>12.0}",
+                 mode, c.scenario, c.scheduler, c.launches, c.events,
+                 c.wall_ns as f64 / 1e9, c.events_per_sec());
+    }
+}
+
+fn cells_json(out: &mut String, mode: &str, report: &SweepReport,
+              first: &mut bool) {
+    for c in &report.cells {
+        if !*first {
+            out.push_str(",\n");
+        }
+        *first = false;
+        let _ = write!(
+            out,
+            "    {{\"mode\": \"{}\", \"workload\": \"{}\", \
+             \"scheduler\": \"{}\", \"launches\": {}, \"events\": {}, \
+             \"wall_s\": {:.6}, \"events_per_sec\": {:.1}}}",
+            mode, c.scenario, c.scheduler, c.launches, c.events,
+            c.wall_ns as f64 / 1e9, c.events_per_sec()
+        );
+    }
 }
 
 fn main() {
@@ -72,32 +86,47 @@ fn main() {
              "mode", "wl", "scheduler", "launches", "events", "wall(s)",
              "events/s");
 
-    let mut cells = Vec::new();
-    for mode in ["reference", "incremental"] {
-        for wl in ["A", "D"] {
-            for sched in SCHEDULERS {
-                let c = run_cell(mode, wl, sched, duration_us);
-                println!("{:<12} {:<8} {:<12} {:>9} {:>10} {:>9.3} {:>12.0}",
-                         c.mode, c.workload, c.scheduler, c.launches,
-                         c.events, c.wall_s, c.events_per_sec);
-                cells.push(c);
-            }
-        }
-    }
-
-    let total_launches: usize = cells
-        .iter()
-        .filter(|c| c.mode == "incremental")
-        .map(|c| c.launches)
-        .sum();
-    let before = aggregate_events_per_sec(&cells, "reference");
-    let after = aggregate_events_per_sec(&cells, "incremental");
+    // ---- leg 1: rate model, before/after -------------------------------
+    let refr = run_sweep(&grid_spec(duration_us, &SCHEDULERS, 1, true), 1)
+        .expect("reference sweep");
+    print_cells("reference", &refr);
+    let incr = run_sweep(&grid_spec(duration_us, &SCHEDULERS, 1, false), 1)
+        .expect("incremental sweep");
+    print_cells("incremental", &incr);
+    let before = refr.events_per_sec();
+    let after = incr.events_per_sec();
     let speedup = after / before.max(1e-12);
+    let total_launches: usize = incr.cells.iter().map(|c| c.launches).sum();
     println!("\ntotal launches (incremental leg): {total_launches}");
     println!("aggregate events/s: reference {before:.0}, \
               incremental {after:.0}, speedup {speedup:.2}x");
 
-    // Hand-rolled JSON (no serde in the offline crate set).
+    // ---- leg 2: coordinator in the loop --------------------------------
+    let coord = run_sweep(
+        &grid_spec(duration_us, &["miriam-ref", "miriam"], 1, false), 1)
+        .expect("coordinator sweep");
+    print_cells("coordinator", &coord);
+    let coord_ref = coord.events_per_sec_for("miriam-ref");
+    let coord_fast = coord.events_per_sec_for("miriam");
+    let coord_gain = coord_fast / coord_ref.max(1e-12) - 1.0;
+    println!("coordinator leg: miriam {coord_fast:.0} events/s vs \
+              miriam-ref {coord_ref:.0} ({:+.1}%)", coord_gain * 100.0);
+
+    // ---- leg 3: sweep scaling (threads 1 vs all cores) -----------------
+    let max_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let scale_dur = if smoke { 20_000.0 } else { 400_000.0 };
+    let scale_seeds = if smoke { 2 } else { 4 };
+    let sspec = grid_spec(scale_dur, &SCHEDULERS, scale_seeds, false);
+    let s1 = run_sweep(&sspec, 1).expect("scaling sweep, 1 thread");
+    let sn = run_sweep(&sspec, max_threads).expect("scaling sweep, N threads");
+    let scale = s1.wall_s / sn.wall_s.max(1e-12);
+    println!("sweep scaling: {} cells, wall {:.3}s @1 thread vs {:.3}s \
+              @{max_threads} threads ({scale:.2}x)",
+             s1.cells.len(), s1.wall_s, sn.wall_s);
+
+    // ---- BENCH_engine.json ---------------------------------------------
     let mut j = String::new();
     j.push_str("{\n");
     let _ = writeln!(j, "  \"bench\": \"engine_throughput\",");
@@ -108,19 +137,20 @@ fn main() {
     let _ = writeln!(j, "  \"events_per_sec_reference\": {before:.1},");
     let _ = writeln!(j, "  \"events_per_sec_incremental\": {after:.1},");
     let _ = writeln!(j, "  \"speedup\": {speedup:.3},");
+    let _ = writeln!(j, "  \"coordinator\": {{\"events_per_sec_ref\": \
+                          {coord_ref:.1}, \"events_per_sec_fast\": \
+                          {coord_fast:.1}, \"improvement\": \
+                          {coord_gain:.4}}},");
+    let _ = writeln!(j, "  \"sweep_scaling\": {{\"cells\": {}, \
+                          \"threads\": {max_threads}, \"wall_s_1\": {:.4}, \
+                          \"wall_s_n\": {:.4}, \"speedup\": {scale:.3}}},",
+                     s1.cells.len(), s1.wall_s, sn.wall_s);
     j.push_str("  \"cells\": [\n");
-    for (i, c) in cells.iter().enumerate() {
-        let _ = write!(
-            j,
-            "    {{\"mode\": \"{}\", \"workload\": \"{}\", \
-             \"scheduler\": \"{}\", \"launches\": {}, \"events\": {}, \
-             \"wall_s\": {:.6}, \"events_per_sec\": {:.1}}}",
-            c.mode, c.workload, c.scheduler, c.launches, c.events, c.wall_s,
-            c.events_per_sec
-        );
-        j.push_str(if i + 1 < cells.len() { ",\n" } else { "\n" });
-    }
-    j.push_str("  ]\n}\n");
+    let mut first = true;
+    cells_json(&mut j, "reference", &refr, &mut first);
+    cells_json(&mut j, "incremental", &incr, &mut first);
+    cells_json(&mut j, "coordinator", &coord, &mut first);
+    j.push_str("\n  ]\n}\n");
     std::fs::write("BENCH_engine.json", &j).expect("write BENCH_engine.json");
     println!("wrote BENCH_engine.json");
 }

@@ -12,6 +12,7 @@
 //!
 //! Run: `cargo bench --bench overhead_sched`
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use miriam::coordinator::shaded_tree::{Leftover, ShadedTree};
@@ -54,16 +55,17 @@ fn main() {
         // Timed part: carve every shard of every kernel (the O(N) candidate
         // scan §8.6 describes), repeated for stable statistics.
         let iters = 50;
+        let shared: Vec<Arc<ElasticKernel>> =
+            elastic.iter().cloned().map(Arc::new).collect();
         let mut samples = Vec::new();
         for _ in 0..iters {
             let t0 = Instant::now();
             let mut shards = 0u64;
-            for ek in &elastic {
-                let mut tree = ShadedTree::new(ek.kernel.clone(),
-                                               ek.candidates.clone());
+            for ek in &shared {
+                let mut tree = ShadedTree::new(ek.clone());
                 while let Some(s) = tree.next_shard(&left) {
                     shards += 1;
-                    tree.shard_done(s.grid);
+                    tree.shard_done(s.shape.grid);
                 }
             }
             let dt = t0.elapsed().as_secs_f64() * 1e6;
@@ -73,12 +75,11 @@ fn main() {
         let mean: f64 = samples.iter().sum::<f64>() / samples.len() as f64;
         // Decisions per served model ~ shards per inference.
         let mut tree_total = 0u64;
-        for ek in &elastic {
-            let mut tree = ShadedTree::new(ek.kernel.clone(),
-                                           ek.candidates.clone());
+        for ek in &shared {
+            let mut tree = ShadedTree::new(ek.clone());
             while let Some(s) = tree.next_shard(&left) {
                 tree_total += 1;
-                tree.shard_done(s.grid);
+                tree.shard_done(s.shape.grid);
             }
         }
         println!("{:<12} {:>9} {:>12.3} {:>12.3} {:>12.1}",

@@ -68,6 +68,18 @@ impl Args {
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }
+
+    /// Comma-separated list flag: `--key a,b,c` (whitespace around items
+    /// trimmed, empty items dropped). Falls back to parsing `default` the
+    /// same way when the flag is absent.
+    pub fn get_list(&self, key: &str, default: &str) -> Vec<String> {
+        self.get(key, default)
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -108,5 +120,13 @@ mod tests {
         let a = parse(&["--seed", "12345"]);
         assert_eq!(a.get_u64("seed", 7).unwrap(), 12345);
         assert_eq!(a.get_u64("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn list_flags_split_trim_and_default() {
+        let a = parse(&["--schedulers", " miriam , ib ,,sequential"]);
+        assert_eq!(a.get_list("schedulers", "x"),
+                   vec!["miriam", "ib", "sequential"]);
+        assert_eq!(a.get_list("missing", "a,b"), vec!["a", "b"]);
     }
 }

@@ -116,8 +116,8 @@ impl Scheduler for InterStreamBarrier {
         }
     }
 
-    fn on_completion(&mut self, comp: &Completion, eng: &mut Engine) -> Vec<u64> {
-        let mut finished = Vec::new();
+    fn on_completion(&mut self, comp: &Completion, eng: &mut Engine,
+                     finished: &mut Vec<u64>) {
         match comp.record.criticality {
             Criticality::Critical => {
                 self.critical_kernels_inflight -= 1;
@@ -147,7 +147,6 @@ impl Scheduler for InterStreamBarrier {
             }
         }
         self.release_normal(eng);
-        finished
     }
 }
 

@@ -68,11 +68,10 @@ impl Scheduler for MultiStream {
         self.open.push((req.id, last));
     }
 
-    fn on_completion(&mut self, comp: &Completion, _eng: &mut Engine) -> Vec<u64> {
+    fn on_completion(&mut self, comp: &Completion, _eng: &mut Engine,
+                     finished: &mut Vec<u64>) {
         if let Some(pos) = self.open.iter().position(|(_, t)| *t == comp.tag) {
-            vec![self.open.swap_remove(pos).0]
-        } else {
-            Vec::new()
+            finished.push(self.open.swap_remove(pos).0);
         }
     }
 }

@@ -69,8 +69,8 @@ impl Scheduler for Sequential {
         self.start_next(eng);
     }
 
-    fn on_completion(&mut self, comp: &Completion, eng: &mut Engine) -> Vec<u64> {
-        let mut finished = Vec::new();
+    fn on_completion(&mut self, comp: &Completion, eng: &mut Engine,
+                     finished: &mut Vec<u64>) {
         if let Some((id, last)) = self.running {
             if comp.tag == last {
                 finished.push(id);
@@ -78,7 +78,6 @@ impl Scheduler for Sequential {
                 self.start_next(eng);
             }
         }
-        finished
     }
 }
 

@@ -4,11 +4,12 @@
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::coordinator::scheduler::{Req, Scheduler};
 use crate::coordinator::stats::RunStats;
-use crate::gpu::engine::Engine;
+use crate::gpu::engine::{Completion, Engine};
 use crate::gpu::kernel::Criticality;
 use crate::gpu::spec::GpuSpec;
 use crate::workloads::mdtb::Workload;
@@ -64,11 +65,25 @@ pub fn run_with(spec: GpuSpec, workload: &Workload,
     }
     scheduler.init(&mut eng);
 
+    // Intern every source model's kernel names once, up front, in
+    // deterministic (source, kernel) order — requests then carry dense ids
+    // (`Req::name_ids`) and no scheduler hashes a name `String` on the
+    // per-request path (ISSUE 3 zero-clone fast path).
+    let name_ids: Vec<Arc<Vec<u32>>> = workload
+        .sources
+        .iter()
+        .map(|s| Arc::new(s.model.intern_kernels(|n| eng.intern_name(n))))
+        .collect();
+
     let mut rng = Rng::new(workload.seed);
     // (time, source) min-heap of pending arrivals.
     let mut arrivals: BinaryHeap<Reverse<(T, usize)>> = BinaryHeap::new();
     for (i, src) in workload.sources.iter().enumerate() {
         for t in src.arrival.schedule(workload.duration_us, &mut rng) {
+            // A NaN arrival would corrupt the heap ordering silently —
+            // same contract as the engine's timer heap (ISSUE 3 satellite).
+            debug_assert!(t.is_finite(),
+                          "source {i} produced non-finite arrival {t}");
             arrivals.push(Reverse((T(t), i)));
         }
     }
@@ -83,6 +98,10 @@ pub fn run_with(spec: GpuSpec, workload: &Workload,
     // req id -> (arrival time, criticality, source)
     let mut open: std::collections::HashMap<u64, (f64, Criticality, usize)> =
         std::collections::HashMap::new();
+    // Scratch buffers reused across every event (ISSUE 3 satellite: the
+    // steady-state loop performs no per-event allocation).
+    let mut completions: Vec<Completion> = Vec::new();
+    let mut finished: Vec<u64> = Vec::new();
     let wall = Instant::now();
 
     loop {
@@ -103,6 +122,7 @@ pub fn run_with(spec: GpuSpec, workload: &Workload,
                         id: next_id,
                         source: src,
                         model: s.model.clone(),
+                        name_ids: name_ids[src].clone(),
                         criticality: s.criticality,
                         arrival_us: t,
                     };
@@ -115,13 +135,14 @@ pub fn run_with(spec: GpuSpec, workload: &Workload,
                 }
             }
             (_, Some(_)) => {
-                let completions = eng.step();
-                for c in completions {
+                eng.step_into(&mut completions);
+                for c in &completions {
                     let d0 = Instant::now();
-                    let finished = scheduler.on_completion(&c, &mut eng);
+                    finished.clear();
+                    scheduler.on_completion(c, &mut eng, &mut finished);
                     stats.sched_decision_ns += d0.elapsed().as_nanos() as u64;
                     stats.sched_decisions += 1;
-                    for fid in finished {
+                    for &fid in &finished {
                         let (arr, crit, src) = open
                             .remove(&fid)
                             .expect("scheduler finished unknown request");
@@ -183,20 +204,31 @@ pub fn run_with(spec: GpuSpec, workload: &Workload,
 pub fn record_golden_traces(
     dir: &std::path::Path,
 ) -> std::io::Result<Vec<(std::path::PathBuf, usize)>> {
+    use crate::coordinator::sweep;
     use crate::workloads::scenario;
     std::fs::create_dir_all(dir)?;
     let spec = GpuSpec::by_name(scenario::GOLDEN_PLATFORM)
         .expect("golden platform preset exists");
+    let cells: Vec<(scenario::ScenarioSpec, String)> = scenario::GOLDEN_CELLS
+        .iter()
+        .map(|&(sc_name, sched)| {
+            (scenario::by_name(sc_name, scenario::GOLDEN_DURATION_US)
+                 .expect("golden cell scenario exists"),
+             sched.to_string())
+        })
+        .collect();
+    // Recorded through the sweep executor (ISSUE 3): cells run in
+    // parallel, and per-cell traces are independent of worker count, so
+    // parallel recording cannot change the goldens.
+    let stats = sweep::run_cells(
+        &spec, &cells,
+        RunOpts { reference_rates: false, trace: true },
+        cells.len().min(4));
     let mut out = Vec::new();
-    for (sc_name, sched) in scenario::GOLDEN_CELLS {
-        let sc = scenario::by_name(sc_name, scenario::GOLDEN_DURATION_US)
-            .expect("golden cell scenario exists");
-        let wl = sc.build();
-        let mut s = crate::coordinator::scheduler_for(sched, &wl)
-            .expect("golden cell scheduler exists");
-        let st = run_with(spec.clone(), &wl, s.as_mut(),
-                          RunOpts { reference_rates: false, trace: true });
-        let trace = st.trace.expect("trace was requested");
+    for (&(sc_name, sched), mut st) in
+        scenario::GOLDEN_CELLS.iter().zip(stats)
+    {
+        let trace = st.trace.take().expect("trace was requested");
         let path = dir.join(scenario::golden_file_name(sc_name, sched));
         std::fs::write(&path, trace.to_canonical_json())?;
         out.push((path, trace.len()));

@@ -12,22 +12,43 @@
 //! * when the GPU is free of critical work, the remainder of the kernel
 //!   launches at its original geometry ("allocate all available
 //!   resources").
+//!
+//! Per-decision cost (ISSUE 3 zero-clone fast path): the elastic cache is
+//! keyed by interned kernel-name id (`Req::name_ids`) and holds
+//! `Arc<ElasticKernel>`, so cache hits clone a pointer, not a candidate
+//! vector; shard names are interned once per (kernel, shard index) and
+//! submitted through [`Engine::submit_interned`]; per-pad-stream load is a
+//! flat `Vec` indexed by stream id; and the leftover read is the scalar
+//! [`Engine::residency`] — once caches are warm the pump + completion path
+//! allocates nothing per event (pinned by
+//! `rust/tests/alloc_steady_state.rs`). The pre-change path — String-keyed
+//! cache, deep `ElasticKernel` clones per kernel advance, `LaunchConfig`
+//! submits — is retained behind [`Miriam::with_reference_path`] as the
+//! "before" leg of the coordinator-in-the-loop bench
+//! (`rust/benches/engine_throughput.rs`, scheduler name `miriam-ref`); it
+//! makes identical decisions, only slower.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 use crate::coordinator::scheduler::{Req, Scheduler};
 use crate::coordinator::shaded_tree::{Leftover, ShadedTree};
 use crate::elastic::shrink::{CriticalProfile, ShrinkConfig};
 use crate::elastic::ElasticKernel;
-use crate::gpu::engine::{Completion, Engine, GpuSnapshot};
-use crate::gpu::kernel::{Criticality, LaunchConfig};
+use crate::gpu::engine::{Completion, Engine, GpuSnapshot, Residency};
+use crate::gpu::kernel::{Criticality, LaunchConfig, LaunchShape};
 use crate::gpu::stream::{LaunchTag, StreamId};
 use crate::workloads::models::ModelRef;
+
+/// Sentinel for a not-yet-interned shard name id.
+const UNINTERNED: u32 = u32::MAX;
 
 /// A normal task making its way through its kernels.
 struct NormalTask {
     req_id: u64,
     model: ModelRef,
+    /// Interned base-kernel name ids, parallel to `model.kernels`.
+    name_ids: Arc<Vec<u32>>,
     /// Index of the kernel the tree currently covers.
     kernel_idx: usize,
     tree: ShadedTree,
@@ -50,8 +71,16 @@ pub struct Miriam {
     /// Fraction of the intra-SM thread leftover one elastic block may use
     /// while critical work is resident (the interference bound).
     pad_fill_frac: f64,
-    /// Offline-generated elastic candidate sets per kernel name.
-    elastic: HashMap<String, ElasticKernel>,
+    /// Offline-generated elastic candidate sets, indexed by the interned
+    /// name id of the base kernel. Hits clone the `Arc`, never the
+    /// candidates.
+    elastic: Vec<Option<Arc<ElasticKernel>>>,
+    /// The retained pre-change cache (String-keyed, deep-cloned per use);
+    /// only touched when `reference_path` is set.
+    elastic_by_name: HashMap<String, Arc<ElasticKernel>>,
+    /// Interned `"{kernel}#es{i}"` ids: `shard_name_ids[base_id][i]`,
+    /// `UNINTERNED` until first use. Warm carves never format a name.
+    shard_name_ids: Vec<Vec<u32>>,
     /// Representative critical launch geometries for the offline shrink.
     crit_profiles: Vec<CriticalProfile>,
     shrink_cfg: ShrinkConfig,
@@ -61,14 +90,17 @@ pub struct Miriam {
     normal_queue: VecDeque<NormalTask>,
     /// Outstanding shard tags -> (pad stream, grid blocks, task req id).
     inflight_shards: HashMap<LaunchTag, (StreamId, u32, u64)>,
-    /// Shards outstanding per pad stream (bounded to one so carving stays
-    /// late-bound — geometry is chosen against the *current* critical
-    /// context, the shaded tree's virtual-shard property).
-    stream_load: HashMap<StreamId, usize>,
+    /// Shards outstanding per stream, indexed by stream id (bounded to one
+    /// per pad stream so carving stays late-bound — geometry is chosen
+    /// against the *current* critical context, the shaded tree's
+    /// virtual-shard property).
+    stream_load: Vec<u32>,
     /// Ablation switch: carve every shard at the top offline candidate's
     /// geometry instead of re-fitting against the live leftover (§7's
     /// "fixed size ... easily become inefficient" failure mode).
     static_sharding: bool,
+    /// Run the retained pre-change decision plumbing (bench "before" leg).
+    reference_path: bool,
     initialized: bool,
 }
 
@@ -95,14 +127,17 @@ impl Miriam {
             pad_streams: Vec::new(),
             num_pad_streams: 3,
             pad_fill_frac: 0.6,
-            elastic: HashMap::new(),
+            elastic: Vec::new(),
+            elastic_by_name: HashMap::new(),
+            shard_name_ids: Vec::new(),
             crit_profiles: profiles,
             shrink_cfg: ShrinkConfig::default(),
             critical_tasks: Vec::new(),
             normal_queue: VecDeque::new(),
             inflight_shards: HashMap::new(),
-            stream_load: HashMap::new(),
+            stream_load: Vec::new(),
             static_sharding: false,
+            reference_path: false,
             initialized: false,
         }
     }
@@ -119,27 +154,82 @@ impl Miriam {
         self
     }
 
+    /// Builder: run the retained pre-change decision plumbing —
+    /// String-keyed elastic cache with a deep clone per kernel advance and
+    /// `String`-named submits. Identical scheduling decisions, pre-ISSUE-3
+    /// cost profile; the "before" leg of the coordinator-in-the-loop bench.
+    pub fn with_reference_path(mut self, enabled: bool) -> Self {
+        self.reference_path = enabled;
+        self
+    }
+
     /// Elastic candidates for a kernel, generated on first use and cached
     /// (the real system does this fully offline; lazy generation keeps the
-    /// cache warm across requests of the same model).
-    fn elastic_for(&mut self, eng: &Engine, kernel_name: &str,
-                   model: &ModelRef, kernel_idx: usize) -> ElasticKernel {
-        if let Some(e) = self.elastic.get(kernel_name) {
+    /// cache warm across requests of the same model). Fast path: flat-Vec
+    /// lookup by interned id, `Arc` clone out. Reference path: the
+    /// pre-change String lookup plus deep clone.
+    fn elastic_for(&mut self, eng: &Engine, name_id: u32, model: &ModelRef,
+                   kernel_idx: usize) -> Arc<ElasticKernel> {
+        if self.reference_path {
+            let name = &model.kernels[kernel_idx].name;
+            if let Some(e) = self.elastic_by_name.get(name) {
+                // Deep clone per use — the pre-change cost being measured.
+                return Arc::new(ElasticKernel {
+                    kernel: e.kernel.clone(),
+                    candidates: e.candidates.clone(),
+                });
+            }
+            let k = model.kernels[kernel_idx].clone();
+            let e = Arc::new(ElasticKernel::generate(
+                k, &self.crit_profiles, &eng.spec, &self.shrink_cfg));
+            self.elastic_by_name.insert(name.clone(), e.clone());
+            return Arc::new(ElasticKernel {
+                kernel: e.kernel.clone(),
+                candidates: e.candidates.clone(),
+            });
+        }
+        let idx = name_id as usize;
+        if self.elastic.len() <= idx {
+            self.elastic.resize_with(idx + 1, || None);
+        }
+        if let Some(e) = &self.elastic[idx] {
             return e.clone();
         }
         let k = model.kernels[kernel_idx].clone();
-        let e = ElasticKernel::generate(k, &self.crit_profiles, &eng.spec,
-                                        &self.shrink_cfg);
-        self.elastic.insert(kernel_name.to_string(), e.clone());
+        let e = Arc::new(ElasticKernel::generate(
+            k, &self.crit_profiles, &eng.spec, &self.shrink_cfg));
+        self.elastic[idx] = Some(e.clone());
         e
     }
 
-    /// Leftover resources for padding, from the engine snapshot (Eq. 2
-    /// applied to the *current* residency instead of offline profiles),
-    /// with the intra-SM bound tightened by `pad_fill_frac`.
-    fn leftover(&self, snap: &GpuSnapshot, eng: &Engine) -> Leftover {
+    /// Interned id of `"{base}#es{shard_idx}"`, formatted and interned at
+    /// most once per (kernel, shard index) — warm carves never allocate.
+    fn shard_name_id(&mut self, eng: &mut Engine, base: u32, shard_idx: u32)
+                     -> u32 {
+        let b = base as usize;
+        if self.shard_name_ids.len() <= b {
+            self.shard_name_ids.resize_with(b + 1, Vec::new);
+        }
+        let i = shard_idx as usize;
+        if self.shard_name_ids[b].len() <= i {
+            self.shard_name_ids[b].resize(i + 1, UNINTERNED);
+        }
+        if self.shard_name_ids[b][i] == UNINTERNED {
+            let name = format!("{}#es{shard_idx}", eng.names().resolve(base));
+            let id = eng.intern_name(&name);
+            debug_assert_ne!(id, UNINTERNED,
+                             "interned id collides with the sentinel");
+            self.shard_name_ids[b][i] = id;
+        }
+        self.shard_name_ids[b][i]
+    }
+
+    /// Leftover resources for padding, from the scalar residency counters
+    /// (Eq. 2 applied to the *current* residency instead of offline
+    /// profiles), with the intra-SM bound tightened by `pad_fill_frac`.
+    fn leftover(&self, res: &Residency, eng: &Engine) -> Leftover {
         let spec = &eng.spec;
-        let critical_active = snap.critical_blocks > 0 || snap.critical_pending > 0;
+        let critical_active = res.critical_blocks > 0 || res.critical_pending > 0;
         if !critical_active {
             return Leftover {
                 blocks: spec.num_sms,
@@ -147,10 +237,10 @@ impl Miriam {
                 critical_active: false,
             };
         }
-        let resident_wave = snap.critical_blocks % spec.num_sms;
+        let resident_wave = res.critical_blocks % spec.num_sms;
         let blocks = spec.num_sms - resident_wave;
-        let crit_threads = if snap.critical_block_threads > 0 {
-            snap.critical_block_threads
+        let crit_threads = if res.critical_block_threads > 0 {
+            res.critical_block_threads
         } else {
             // Critical launch still in overhead: assume a fat block until
             // it lands (conservative).
@@ -161,75 +251,120 @@ impl Miriam {
         Leftover { blocks, threads, critical_active: true }
     }
 
+    /// [`Miriam::leftover`] through a full [`GpuSnapshot`] — the
+    /// pre-change read path (two per-SM `Vec` allocations per carving
+    /// decision), kept for the `miriam-ref` bench leg. Same values, same
+    /// decisions; only the cost differs.
+    fn leftover_from_snapshot(&self, snap: &GpuSnapshot, eng: &Engine)
+                              -> Leftover {
+        let res = Residency {
+            now_us: snap.now_us,
+            critical_blocks: snap.critical_blocks,
+            critical_block_threads: snap.critical_block_threads,
+            critical_pending: snap.critical_pending,
+            normal_blocks: snap.normal_blocks,
+        };
+        self.leftover(&res, eng)
+    }
+
     /// The padding pump: keep each pad stream primed with at most one
     /// outstanding shard; any queued normal task with undispatched work
     /// may be carved (multiple clients pad concurrently).
     fn pump(&mut self, eng: &mut Engine) {
         for si in 0..self.pad_streams.len() {
             let stream = self.pad_streams[si];
-            if self.stream_load.get(&stream).copied().unwrap_or(0) > 0 {
+            if self.stream_load[stream as usize] > 0 {
                 continue;
             }
-            // Fresh snapshot per carving decision: a shard submitted for
+            // Fresh residency per carving decision: a shard submitted for
             // the previous stream may already be resident, and the next
             // shard must be sized against that reality (late binding).
             // (§Perf change #3 cached this; reverted — neutral wall-clock,
-            // stale-leftover semantics.)
-            let snap = eng.snapshot();
-            let mut left = self.leftover(&snap, eng);
-            // First task with work to dispatch.
-            let Some(task) = self
-                .normal_queue
-                .iter_mut()
-                .find(|t| !t.tree.fully_dispatched())
-            else {
-                return;
+            // stale-leftover semantics. The scalar read costs nothing.)
+            let mut left = if self.reference_path {
+                // Pre-change read: a full per-SM snapshot per decision.
+                let snap = eng.snapshot();
+                self.leftover_from_snapshot(&snap, eng)
+            } else {
+                let res = eng.residency();
+                self.leftover(&res, eng)
             };
-            if self.static_sharding {
-                // Ablation: pin the geometry to the best offline candidate
-                // regardless of what is resident right now.
-                let c = task.tree.first_candidate();
-                left = crate::coordinator::shaded_tree::Leftover {
-                    blocks: c.n_blocks,
-                    threads: c.block_threads,
-                    critical_active: true,
+            let (shard, base, req_id) = {
+                // First task with work to dispatch.
+                let Some(task) = self
+                    .normal_queue
+                    .iter_mut()
+                    .find(|t| !t.tree.fully_dispatched())
+                else {
+                    return;
                 };
-            }
-            let Some(shard) = task.tree.next_shard(&left) else { continue };
-            let grid = shard.grid;
-            let req_id = task.req_id;
-            let tag = eng.submit(stream, shard, Criticality::Normal);
-            self.inflight_shards.insert(tag, (stream, grid, req_id));
-            *self.stream_load.entry(stream).or_insert(0) += 1;
+                if self.static_sharding {
+                    // Ablation: pin the geometry to the best offline
+                    // candidate regardless of what is resident right now.
+                    let c = task.tree.first_candidate();
+                    left = Leftover {
+                        blocks: c.n_blocks,
+                        threads: c.block_threads,
+                        critical_active: true,
+                    };
+                }
+                let Some(shard) = task.tree.next_shard(&left) else {
+                    continue;
+                };
+                (shard, task.name_ids[task.kernel_idx], task.req_id)
+            };
+            let tag = if self.reference_path {
+                // Pre-change submit: format the shard name every carve and
+                // go through the String-keyed `LaunchConfig` path.
+                let name =
+                    format!("{}#es{}", eng.names().resolve(base), shard.index);
+                let cfg = LaunchConfig {
+                    name,
+                    grid: shard.shape.grid,
+                    block_threads: shard.shape.block_threads,
+                    smem_per_block: shard.shape.smem_per_block,
+                    regs_per_thread: shard.shape.regs_per_thread,
+                    flops: shard.shape.flops,
+                    bytes: shard.shape.bytes,
+                };
+                eng.submit(stream, cfg, Criticality::Normal)
+            } else {
+                let sid = self.shard_name_id(eng, base, shard.index);
+                eng.submit_interned(stream, sid, shard.shape,
+                                    Criticality::Normal, 0.0)
+            };
+            self.inflight_shards
+                .insert(tag, (stream, shard.shape.grid, req_id));
+            self.stream_load[stream as usize] += 1;
         }
     }
 
     /// Advance a task past a finished kernel (or retire it). Returns the
-    /// finished request id when the whole model completed.
+    /// finished request id when the whole model completed. Arc clones
+    /// only — no model, name, or candidate copies.
     fn advance_task(&mut self, eng: &Engine, req_id: u64) -> Option<u64> {
         let pos = self.normal_queue.iter().position(|t| t.req_id == req_id)?;
         if !self.normal_queue[pos].tree.finished() {
             return None;
         }
-        let (model, next_idx) = {
+        let (model, ids, next_idx) = {
             let t = &mut self.normal_queue[pos];
             t.kernel_idx += 1;
-            (t.model.clone(), t.kernel_idx)
+            (t.model.clone(), t.name_ids.clone(), t.kernel_idx)
         };
         if next_idx >= model.kernels.len() {
             let done = self.normal_queue.remove(pos).unwrap();
             return Some(done.req_id);
         }
-        let name = model.kernels[next_idx].name.clone();
-        let ek = self.elastic_for(eng, &name, &model, next_idx);
-        self.normal_queue[pos].tree = ShadedTree::new(ek.kernel, ek.candidates);
+        let ek = self.elastic_for(eng, ids[next_idx], &model, next_idx);
+        self.normal_queue[pos].tree = ShadedTree::new(ek);
         None
     }
 }
 
 impl Scheduler for Miriam {
     fn name(&self) -> &'static str {
-        "miriam"
+        if self.reference_path { "miriam-ref" } else { "miriam" }
     }
 
     fn init(&mut self, eng: &mut Engine) {
@@ -238,18 +373,33 @@ impl Scheduler for Miriam {
         for _ in 0..self.num_pad_streams {
             self.pad_streams.push(eng.add_stream(0));
         }
+        self.stream_load = vec![0; eng.num_streams()];
         self.initialized = true;
     }
 
     fn on_request(&mut self, req: Req, eng: &mut Engine) {
         match req.criticality {
             Criticality::Critical => {
-                // Critical kernels run untouched, enqueued immediately.
+                // Critical kernels run untouched, enqueued immediately —
+                // through the interned path, so a critical arrival clones
+                // no kernel-name Strings (the per-request cost the paper
+                // says must stay cheap).
                 let mut last = 0;
-                for k in &req.model.kernels {
-                    last = eng.submit(self.critical_stream,
-                                      LaunchConfig::from_kernel(k),
-                                      Criticality::Critical);
+                if self.reference_path {
+                    for k in &req.model.kernels {
+                        last = eng.submit(self.critical_stream,
+                                          LaunchConfig::from_kernel(k),
+                                          Criticality::Critical);
+                    }
+                } else {
+                    for (k, &nid) in
+                        req.model.kernels.iter().zip(req.name_ids.iter())
+                    {
+                        last = eng.submit_interned(
+                            self.critical_stream, nid,
+                            LaunchShape::from_kernel(k),
+                            Criticality::Critical, 0.0);
+                    }
                 }
                 self.critical_tasks.push(CriticalTask {
                     req_id: req.id,
@@ -261,25 +411,26 @@ impl Scheduler for Miriam {
                 // contention" claim).
             }
             Criticality::Normal => {
-                let model = req.model.clone();
-                let name = model.kernels[0].name.clone();
-                let ek = self.elastic_for(eng, &name, &model, 0);
+                let ek = self.elastic_for(eng, req.name_ids[0], &req.model, 0);
                 self.normal_queue.push_back(NormalTask {
                     req_id: req.id,
-                    model,
+                    model: req.model,
+                    name_ids: req.name_ids,
                     kernel_idx: 0,
-                    tree: ShadedTree::new(ek.kernel, ek.candidates),
+                    tree: ShadedTree::new(ek),
                 });
             }
         }
         self.pump(eng);
     }
 
-    fn on_completion(&mut self, comp: &Completion, eng: &mut Engine) -> Vec<u64> {
-        let mut finished = Vec::new();
-        if let Some((stream, grid, req_id)) = self.inflight_shards.remove(&comp.tag) {
+    fn on_completion(&mut self, comp: &Completion, eng: &mut Engine,
+                     finished: &mut Vec<u64>) {
+        if let Some((stream, grid, req_id)) =
+            self.inflight_shards.remove(&comp.tag)
+        {
             // A shard of a normal task completed.
-            *self.stream_load.get_mut(&stream).unwrap() -= 1;
+            self.stream_load[stream as usize] -= 1;
             if let Some(t) = self
                 .normal_queue
                 .iter_mut()
@@ -299,14 +450,12 @@ impl Scheduler for Miriam {
         }
         // Either way resources were freed: pad.
         self.pump(eng);
-        finished
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Arc;
 
     use crate::coordinator::driver;
     use crate::gpu::spec::GpuSpec;
@@ -371,5 +520,27 @@ mod tests {
             .iter()
             .filter(|r| r.criticality == Criticality::Normal)
             .all(|r| r.name.contains("#es")));
+    }
+
+    #[test]
+    fn reference_path_makes_identical_decisions() {
+        // The retained pre-change plumbing is a cost model, not a policy
+        // change: trajectories must match the fast path exactly.
+        let wl = mdtb::mdtb_a(40_000.0).build();
+        let mut fast = miriam_for(&wl);
+        let mut refp = miriam_for(&wl).with_reference_path(true);
+        assert_eq!(refp.name(), "miriam-ref");
+        let a = driver::run(GpuSpec::rtx2060(), &wl, &mut fast);
+        let b = driver::run(GpuSpec::rtx2060(), &wl, &mut refp);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.timeline.len(), b.timeline.len());
+        assert_eq!(a.completed_critical(), b.completed_critical());
+        assert_eq!(a.completed_normal(), b.completed_normal());
+        for (x, y) in a.timeline.iter().zip(&b.timeline) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.tag, y.tag);
+            assert!((x.end_us - y.end_us).abs() < 1e-9,
+                    "{}: {} vs {}", x.name, x.end_us, y.end_us);
+        }
     }
 }

@@ -7,6 +7,8 @@
 //! * [`miriam`] — the Miriam coordinator (elastic padding).
 //! * [`baselines`] — Sequential, Multi-stream+Priority, Inter-stream
 //!   Barrier.
+//! * [`sweep`] — parallel deterministic sweep runner over the
+//!   scenario × scheduler × seed grid (ISSUE 3).
 
 pub mod baselines;
 pub mod driver;
@@ -14,6 +16,7 @@ pub mod miriam;
 pub mod scheduler;
 pub mod shaded_tree;
 pub mod stats;
+pub mod sweep;
 
 pub use baselines::{InterStreamBarrier, MultiStream, Sequential};
 pub use miriam::Miriam;
@@ -25,20 +28,27 @@ use crate::workloads::mdtb::Workload;
 use crate::workloads::models::ModelRef;
 
 /// Build a scheduler by name, wired for `workload` (Miriam needs the
-/// critical model set for its offline shrink).
+/// critical model set for its offline shrink). Besides the four paper
+/// schedulers, `"miriam-ref"` builds Miriam on its retained pre-change
+/// decision plumbing ([`Miriam::with_reference_path`]) — identical
+/// trajectories, pre-ISSUE-3 cost profile; the coordinator-in-the-loop
+/// bench's "before" leg.
 pub fn scheduler_for(name: &str, workload: &Workload) -> Option<Box<dyn Scheduler>> {
+    let miriam_crits = || -> Vec<ModelRef> {
+        workload
+            .sources
+            .iter()
+            .filter(|s| s.criticality == Criticality::Critical)
+            .map(|s| s.model.clone())
+            .collect()
+    };
     match name {
         "sequential" => Some(Box::new(Sequential::new())),
         "multistream" => Some(Box::new(MultiStream::new())),
         "ib" => Some(Box::new(InterStreamBarrier::new())),
-        "miriam" => {
-            let crits: Vec<ModelRef> = workload
-                .sources
-                .iter()
-                .filter(|s| s.criticality == Criticality::Critical)
-                .map(|s| s.model.clone())
-                .collect();
-            Some(Box::new(Miriam::new(&crits)))
+        "miriam" => Some(Box::new(Miriam::new(&miriam_crits()))),
+        "miriam-ref" => {
+            Some(Box::new(Miriam::new(&miriam_crits()).with_reference_path(true)))
         }
         _ => None,
     }

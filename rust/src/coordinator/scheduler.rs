@@ -5,6 +5,8 @@
 //! and when* — exactly the degrees of freedom the paper's baselines and
 //! Miriam differ in.
 
+use std::sync::Arc;
+
 use crate::gpu::engine::{Completion, Engine};
 use crate::gpu::kernel::Criticality;
 use crate::workloads::models::ModelRef;
@@ -16,6 +18,11 @@ pub struct Req {
     /// Index of the originating source in the workload.
     pub source: usize,
     pub model: ModelRef,
+    /// Interned engine name id of each kernel in `model.kernels` (parallel
+    /// vector), interned once per run by the driver at workload load — so
+    /// per-request scheduling never hashes a kernel-name `String` (ISSUE 3
+    /// zero-clone fast path). Valid for the engine of the current run only.
+    pub name_ids: Arc<Vec<u32>>,
     pub criticality: Criticality,
     pub arrival_us: f64,
 }
@@ -30,26 +37,35 @@ pub trait Scheduler {
     /// A request arrived (engine time == req.arrival_us).
     fn on_request(&mut self, req: Req, eng: &mut Engine);
 
-    /// A launch completed. Returns ids of requests that finished with it.
-    fn on_completion(&mut self, comp: &Completion, eng: &mut Engine) -> Vec<u64>;
+    /// A launch completed. Ids of requests that finished with it are
+    /// *appended* to `finished` — a scratch buffer the driver clears and
+    /// reuses across calls, so the steady-state completion path performs
+    /// no per-event allocation (ISSUE 3 satellite).
+    fn on_completion(&mut self, comp: &Completion, eng: &mut Engine,
+                     finished: &mut Vec<u64>);
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Arc;
     use crate::workloads::models;
 
     #[test]
-    fn req_is_cloneable_and_carries_model() {
+    fn req_is_cloneable_and_carries_model_and_ids() {
+        let model: ModelRef = Arc::new(models::cifarnet());
+        let n = model.kernels.len();
         let r = Req {
             id: 1,
             source: 0,
-            model: Arc::new(models::cifarnet()),
+            model,
+            name_ids: Arc::new((0..n as u32).collect()),
             criticality: Criticality::Normal,
             arrival_us: 0.0,
         };
         let r2 = r.clone();
         assert_eq!(r2.model.name, "cifarnet");
+        assert_eq!(r2.name_ids.len(), r2.model.kernels.len());
+        // Cloning a request clones Arcs, not the underlying vectors.
+        assert!(Arc::ptr_eq(&r.name_ids, &r2.name_ids));
     }
 }

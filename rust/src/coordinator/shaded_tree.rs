@@ -9,12 +9,22 @@
 //! ("actual shards"), leaving the rest of the kernel as "virtual shards"
 //! to be re-evaluated against whatever critical kernel is resident when
 //! their turn comes.
+//!
+//! The tree borrows its kernel and candidate lattice from a shared
+//! [`Arc<ElasticKernel>`] (the coordinator's per-name cache entry), so
+//! rebuilding the tree for the next kernel of a task reuses the candidate
+//! storage instead of cloning it (ISSUE 3 zero-clone fast path); a carved
+//! [`Shard`] is a `Copy` [`LaunchShape`] plus its shard index — naming is
+//! the coordinator's job, which interns each `name#esN` string once.
+
+use std::sync::Arc;
 
 use crate::elastic::candidate::Candidate;
-use crate::gpu::kernel::{KernelDesc, LaunchConfig};
+use crate::elastic::ElasticKernel;
+use crate::gpu::kernel::{KernelDesc, LaunchShape};
 
 /// Resources currently left over for padding (derived from a
-/// [`crate::gpu::engine::GpuSnapshot`]).
+/// [`crate::gpu::engine::Residency`]).
 #[derive(Debug, Clone, Copy)]
 pub struct Leftover {
     /// Thread blocks that can dispatch without displacing critical work
@@ -28,12 +38,19 @@ pub struct Leftover {
     pub critical_active: bool,
 }
 
+/// One carved ("actual") shard: the launch geometry/work plus the shard
+/// index within its kernel instance (names as `kernel#es{index}`).
+#[derive(Debug, Clone, Copy)]
+pub struct Shard {
+    pub index: u32,
+    pub shape: LaunchShape,
+}
+
 /// Tracks the shard decomposition of one elastic kernel instance.
 #[derive(Debug, Clone)]
 pub struct ShadedTree {
-    kernel: KernelDesc,
-    /// Candidate schedules, best-ranked first (from the offline shrink).
-    candidates: Vec<Candidate>,
+    /// Shared offline artifact: kernel descriptor + ranked candidates.
+    ek: Arc<ElasticKernel>,
     /// Logical blocks not yet dispatched.
     remaining: u32,
     /// Logical blocks dispatched but not yet completed.
@@ -43,20 +60,21 @@ pub struct ShadedTree {
 }
 
 impl ShadedTree {
-    pub fn new(kernel: KernelDesc, candidates: Vec<Candidate>) -> Self {
-        assert!(!candidates.is_empty(), "need at least the identity candidate");
-        let remaining = kernel.grid;
-        ShadedTree { kernel, candidates, remaining, inflight_blocks: 0, shards_cut: 0 }
+    pub fn new(ek: Arc<ElasticKernel>) -> Self {
+        assert!(!ek.candidates.is_empty(),
+                "need at least the identity candidate");
+        let remaining = ek.kernel.grid;
+        ShadedTree { ek, remaining, inflight_blocks: 0, shards_cut: 0 }
     }
 
     pub fn kernel(&self) -> &KernelDesc {
-        &self.kernel
+        &self.ek.kernel
     }
 
     /// The top-ranked offline candidate (used by the static-sharding
     /// ablation; the dynamic policy re-fits per carve instead).
     pub fn first_candidate(&self) -> Candidate {
-        self.candidates[0]
+        self.ek.candidates[0]
     }
 
     /// Logical blocks still to dispatch.
@@ -84,19 +102,20 @@ impl ShadedTree {
     /// respects Eq. 2 against the resident critical kernel; with no
     /// critical work resident, the whole remainder goes out at the
     /// original block size — "allocate all available resources".
-    pub fn next_shard(&mut self, left: &Leftover) -> Option<LaunchConfig> {
+    pub fn next_shard(&mut self, left: &Leftover) -> Option<Shard> {
         if self.remaining == 0 {
             return None;
         }
         let (blocks, threads) = if !left.critical_active {
             // Run-alone fast path: identity geometry for the remainder.
-            (self.remaining, self.kernel.block_threads)
+            (self.remaining, self.ek.kernel.block_threads)
         } else {
             if left.blocks == 0 || left.threads == 0 {
                 return None;
             }
             // Largest-first fit over the ranked candidate lattice.
             let fit = self
+                .ek
                 .candidates
                 .iter()
                 .filter(|c| {
@@ -105,23 +124,25 @@ impl ShadedTree {
                 .max_by_key(|c| (c.n_blocks, c.block_threads))?;
             (fit.n_blocks.min(self.remaining), fit.block_threads)
         };
-        let frac = blocks as f64 / self.kernel.grid as f64;
+        let k = &self.ek.kernel;
+        let frac = blocks as f64 / k.grid as f64;
         self.remaining -= blocks;
         self.inflight_blocks += blocks;
         self.shards_cut += 1;
-        Some(LaunchConfig {
-            name: format!("{}#es{}", self.kernel.name, self.shards_cut - 1),
-            grid: blocks,
-            block_threads: threads.min(self.kernel.block_threads).max(1),
-            smem_per_block: self.kernel.smem_per_block.min(
-                ((self.kernel.smem_per_block as f64
-                    * (threads as f64 / self.kernel.block_threads as f64)
-                        .min(1.0))
-                    .ceil()) as u32,
-            ),
-            regs_per_thread: self.kernel.regs_per_thread,
-            flops: self.kernel.flops * frac,
-            bytes: self.kernel.bytes * frac,
+        Some(Shard {
+            index: self.shards_cut - 1,
+            shape: LaunchShape {
+                grid: blocks,
+                block_threads: threads.min(k.block_threads).max(1),
+                smem_per_block: k.smem_per_block.min(
+                    ((k.smem_per_block as f64
+                        * (threads as f64 / k.block_threads as f64).min(1.0))
+                        .ceil()) as u32,
+                ),
+                regs_per_thread: k.regs_per_thread,
+                flops: k.flops * frac,
+                bytes: k.bytes * frac,
+            },
         })
     }
 
@@ -158,13 +179,21 @@ mod tests {
         ]
     }
 
+    fn tree(grid: u32) -> ShadedTree {
+        ShadedTree::new(Arc::new(ElasticKernel {
+            kernel: kernel(grid),
+            candidates: cands(),
+        }))
+    }
+
     #[test]
     fn no_critical_dispatches_identity_remainder() {
-        let mut t = ShadedTree::new(kernel(64), cands());
+        let mut t = tree(64);
         let l = Leftover { blocks: 0, threads: 0, critical_active: false };
         let s = t.next_shard(&l).unwrap();
-        assert_eq!(s.grid, 64);
-        assert_eq!(s.block_threads, 256);
+        assert_eq!(s.shape.grid, 64);
+        assert_eq!(s.shape.block_threads, 256);
+        assert_eq!(s.index, 0);
         assert!(t.fully_dispatched());
         assert!(!t.finished());
         t.shard_done(64);
@@ -173,20 +202,20 @@ mod tests {
 
     #[test]
     fn critical_active_carves_fitting_shards() {
-        let mut t = ShadedTree::new(kernel(64), cands());
+        let mut t = tree(64);
         let l = Leftover { blocks: 10, threads: 200, critical_active: true };
         // Largest fit: blocks<=10 & threads<=200 -> (8, 128).
         let s = t.next_shard(&l).unwrap();
-        assert_eq!(s.grid, 8);
-        assert_eq!(s.block_threads, 128);
+        assert_eq!(s.shape.grid, 8);
+        assert_eq!(s.shape.block_threads, 128);
         assert_eq!(t.remaining(), 56);
         // Work fraction proportional to carved blocks.
-        assert!((s.flops - 1e7 * 8.0 / 64.0).abs() < 1.0);
+        assert!((s.shape.flops - 1e7 * 8.0 / 64.0).abs() < 1.0);
     }
 
     #[test]
     fn tight_leftover_blocks_padding() {
-        let mut t = ShadedTree::new(kernel(64), cands());
+        let mut t = tree(64);
         let l = Leftover { blocks: 1, threads: 16, critical_active: true };
         assert!(t.next_shard(&l).is_none(), "nothing fits");
         assert_eq!(t.remaining(), 64);
@@ -195,44 +224,68 @@ mod tests {
     }
 
     #[test]
-    fn shards_partition_grid() {
-        let mut t = ShadedTree::new(kernel(50), cands());
+    fn shards_partition_grid_with_sequential_indexes() {
+        let mut t = tree(50);
         let l = Leftover { blocks: 16, threads: 512, critical_active: true };
         let mut total = 0;
+        let mut expect_idx = 0;
         while let Some(s) = t.next_shard(&l) {
-            total += s.grid;
+            assert_eq!(s.index, expect_idx);
+            expect_idx += 1;
+            total += s.shape.grid;
         }
         assert_eq!(total, 50);
         assert!(t.fully_dispatched());
+        assert_eq!(t.shards_cut(), expect_idx);
     }
 
     #[test]
     fn tail_shard_clipped_to_remainder() {
-        let mut t = ShadedTree::new(kernel(10), cands());
+        let mut t = tree(10);
         let l = Leftover { blocks: 16, threads: 512, critical_active: true };
         let s1 = t.next_shard(&l).unwrap();
-        assert_eq!(s1.grid, 10); // candidate 16 clipped to remaining 10
+        assert_eq!(s1.shape.grid, 10); // candidate 16 clipped to remaining 10
         assert!(t.fully_dispatched());
     }
 
     #[test]
     fn work_fraction_sums_to_total() {
-        let mut t = ShadedTree::new(kernel(64), cands());
+        let mut t = tree(64);
         let l = Leftover { blocks: 4, threads: 128, critical_active: true };
         let mut flops = 0.0;
         let mut bytes = 0.0;
         while let Some(s) = t.next_shard(&l) {
-            flops += s.flops;
-            bytes += s.bytes;
+            flops += s.shape.flops;
+            bytes += s.shape.bytes;
         }
         assert!((flops - 1e7).abs() < 1e-3);
         assert!((bytes - 2e5).abs() < 1e-6);
     }
 
     #[test]
+    fn rebuilds_share_candidate_storage() {
+        // The zero-clone contract: trees built from the same cache entry
+        // alias the same ElasticKernel allocation.
+        let ek = Arc::new(ElasticKernel { kernel: kernel(8), candidates: cands() });
+        let t1 = ShadedTree::new(ek.clone());
+        let t2 = ShadedTree::new(ek.clone());
+        assert!(std::ptr::eq(
+            t1.first_candidate_ptr(), t2.first_candidate_ptr()));
+        assert_eq!(Arc::strong_count(&ek), 3);
+    }
+
+    #[test]
     #[should_panic(expected = "more blocks than inflight")]
     fn over_completion_panics() {
-        let mut t = ShadedTree::new(kernel(8), cands());
+        let mut t = tree(8);
         t.shard_done(1);
+    }
+}
+
+#[cfg(test)]
+impl ShadedTree {
+    /// Test hook: address of the shared candidate storage.
+    fn first_candidate_ptr(&self) -> *const Candidate {
+        &self.ek.candidates[0]
     }
 }

@@ -1,0 +1,551 @@
+//! Parallel deterministic sweep runner (ISSUE 3 tentpole).
+//!
+//! Miriam's evaluation story is a *grid* — scenarios × schedulers × seeds
+//! — and every cell is an independent simulation. [`run_sweep`] fans a
+//! [`SweepSpec`] across a scoped worker pool: workers pull cell indexes
+//! from an atomic counter, each cell runs its own engine + scheduler, and
+//! results land in per-cell slots — so every *simulated* per-cell result
+//! (events, completions, latencies, canonical traces) is **byte-identical
+//! for any thread count**, a contract pinned by
+//! `rust/tests/sweep_determinism.rs`. Host-timing fields (`wall_s`,
+//! per-cell `wall_ns`/events-per-sec) necessarily vary run-to-run.
+//! Wall-clock scales with cores because cells share nothing.
+//!
+//! Seed derivation rule: replica 0 of a cell keeps the scenario's pinned
+//! seed (so sweep cells subsume the conformance/golden cells); replica
+//! `r > 0` uses `splitmix64(scenario_seed XOR r * GOLDEN_GAMMA)` — a
+//! stateless mix, so any cell can be re-run in isolation without walking
+//! an RNG stream ([`derive_seed`]).
+//!
+//! The same executor ([`run_cells`]) backs golden-trace recording
+//! (`driver::record_golden_traces`) and the engine-throughput bench, and
+//! `miriam sweep --threads N` (see `config/cli.rs` / `main.rs`) writes the
+//! aggregate report as `BENCH_sweep.json` (schema in EXPERIMENTS.md
+//! §Sweep).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::coordinator::driver::{self, RunOpts};
+use crate::coordinator::scheduler_for;
+use crate::coordinator::stats::RunStats;
+use crate::gpu::spec::GpuSpec;
+use crate::runtime::json::Json;
+use crate::workloads::scenario::ScenarioSpec;
+
+/// A sweep: the cartesian grid (scenarios × schedulers × seed replicas).
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// GPU preset name (resolved through `GpuSpec::by_name`).
+    pub platform: String,
+    /// Simulated window per cell (us) — metadata; the scenarios carry
+    /// their own duration.
+    pub duration_us: f64,
+    pub scenarios: Vec<ScenarioSpec>,
+    pub schedulers: Vec<String>,
+    /// Seed replicas per (scenario, scheduler) cell; replica seeds come
+    /// from [`derive_seed`].
+    pub seeds: u32,
+    /// Record per-cell canonical engine traces into
+    /// [`CellResult::trace_json`] (the determinism suite turns this on;
+    /// `BENCH_sweep.json` never embeds traces).
+    pub trace: bool,
+    /// Run every cell on the retained full-recompute rate oracle instead
+    /// of the incremental engine path (the bench "before" leg).
+    pub reference_rates: bool,
+}
+
+/// One completed grid cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub scenario: String,
+    pub scheduler: String,
+    pub replica: u32,
+    /// The derived workload seed the cell actually ran with.
+    pub seed: u64,
+    pub completed_critical: usize,
+    pub completed_normal: usize,
+    pub launches: usize,
+    pub crit_p50_us: f64,
+    pub crit_p99_us: f64,
+    pub crit_mean_us: f64,
+    pub normal_p50_us: f64,
+    pub throughput_rps: f64,
+    pub deadline_misses_critical: u64,
+    pub deadline_misses_normal: u64,
+    pub achieved_occupancy: f64,
+    pub events: u64,
+    /// Host wall time of this cell's run (ns) — measured inside the run,
+    /// so it is meaningful per cell even under parallel execution.
+    pub wall_ns: u64,
+    /// Canonical trace when `SweepSpec::trace` was set.
+    pub trace_json: Option<String>,
+}
+
+impl CellResult {
+    fn from_stats(scenario: &str, scheduler: &str, replica: u32, seed: u64,
+                  mut st: RunStats) -> Self {
+        let trace_json = st.trace.take().map(|t| t.to_canonical_json());
+        CellResult {
+            scenario: scenario.to_string(),
+            scheduler: scheduler.to_string(),
+            replica,
+            seed,
+            completed_critical: st.completed_critical(),
+            completed_normal: st.completed_normal(),
+            launches: st.timeline.len(),
+            crit_p50_us: st.critical_latency_quantile_us(0.5),
+            crit_p99_us: st.critical_latency_p99_us(),
+            crit_mean_us: st.critical_latency_mean_us(),
+            normal_p50_us: st.normal_latency_quantile_us(0.5),
+            throughput_rps: st.throughput_rps(),
+            deadline_misses_critical: st.deadline_misses_critical,
+            deadline_misses_normal: st.deadline_misses_normal,
+            achieved_occupancy: st.achieved_occupancy,
+            events: st.events,
+            wall_ns: st.wall_ns,
+            trace_json,
+        }
+    }
+
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.events as f64 / (self.wall_ns as f64 / 1e9)
+    }
+}
+
+/// Per-(scenario, scheduler) aggregate across seed replicas.
+#[derive(Debug, Clone)]
+pub struct Aggregate {
+    pub scenario: String,
+    pub scheduler: String,
+    pub replicas: u32,
+    /// Means over replicas with a finite value (NaN when none had one,
+    /// e.g. zero critical completions everywhere).
+    pub mean_crit_p50_us: f64,
+    pub mean_crit_p99_us: f64,
+    pub mean_throughput_rps: f64,
+    pub deadline_misses_critical: u64,
+    pub deadline_misses_normal: u64,
+    pub events: u64,
+    pub wall_ns: u64,
+}
+
+impl Aggregate {
+    pub fn events_per_sec(&self) -> f64 {
+        if self.wall_ns == 0 {
+            return 0.0;
+        }
+        self.events as f64 / (self.wall_ns as f64 / 1e9)
+    }
+}
+
+/// A completed sweep.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub platform: String,
+    pub duration_us: f64,
+    pub threads: usize,
+    pub seeds: u32,
+    pub scenarios: Vec<String>,
+    pub schedulers: Vec<String>,
+    /// Cells in deterministic grid order (scenario-major, then scheduler,
+    /// then replica) — independent of worker interleaving.
+    pub cells: Vec<CellResult>,
+    /// Whole-sweep host wall time (seconds). Host timing (this and the
+    /// per-cell `wall_ns`) varies run-to-run; every simulated field and
+    /// trace is deterministic.
+    pub wall_s: f64,
+}
+
+impl SweepReport {
+    pub fn total_events(&self) -> u64 {
+        self.cells.iter().map(|c| c.events).sum()
+    }
+
+    /// Aggregate simulation throughput: total events over summed per-cell
+    /// wall time (not sweep wall time, which shrinks with threads).
+    pub fn events_per_sec(&self) -> f64 {
+        let wall: u64 = self.cells.iter().map(|c| c.wall_ns).sum();
+        if wall == 0 {
+            return 0.0;
+        }
+        self.total_events() as f64 / (wall as f64 / 1e9)
+    }
+
+    /// Events/sec over the cells of one scheduler (the coordinator bench
+    /// leg compares `miriam` against `miriam-ref` with this).
+    pub fn events_per_sec_for(&self, scheduler: &str) -> f64 {
+        let (ev, wall) = self
+            .cells
+            .iter()
+            .filter(|c| c.scheduler == scheduler)
+            .fold((0u64, 0u64), |(e, w), c| (e + c.events, w + c.wall_ns));
+        if wall == 0 {
+            return 0.0;
+        }
+        ev as f64 / (wall as f64 / 1e9)
+    }
+
+    /// Per-(scenario, scheduler) aggregates in grid order.
+    pub fn aggregates(&self) -> Vec<Aggregate> {
+        let mut out = Vec::new();
+        for sc in &self.scenarios {
+            for sched in &self.schedulers {
+                let cells: Vec<&CellResult> = self
+                    .cells
+                    .iter()
+                    .filter(|c| &c.scenario == sc && &c.scheduler == sched)
+                    .collect();
+                if cells.is_empty() {
+                    continue;
+                }
+                let finite_mean = |f: &dyn Fn(&CellResult) -> f64| {
+                    let v: Vec<f64> =
+                        cells.iter().map(|c| f(c)).filter(|x| x.is_finite())
+                            .collect();
+                    if v.is_empty() {
+                        f64::NAN
+                    } else {
+                        v.iter().sum::<f64>() / v.len() as f64
+                    }
+                };
+                out.push(Aggregate {
+                    scenario: sc.clone(),
+                    scheduler: sched.clone(),
+                    replicas: cells.len() as u32,
+                    mean_crit_p50_us: finite_mean(&|c| c.crit_p50_us),
+                    mean_crit_p99_us: finite_mean(&|c| c.crit_p99_us),
+                    mean_throughput_rps: finite_mean(&|c| c.throughput_rps),
+                    deadline_misses_critical: cells
+                        .iter()
+                        .map(|c| c.deadline_misses_critical)
+                        .sum(),
+                    deadline_misses_normal: cells
+                        .iter()
+                        .map(|c| c.deadline_misses_normal)
+                        .sum(),
+                    events: cells.iter().map(|c| c.events).sum(),
+                    wall_ns: cells.iter().map(|c| c.wall_ns).sum(),
+                })
+            }
+        }
+        out
+    }
+
+    /// The `BENCH_sweep.json` document (canonical key order, traces
+    /// excluded; schema in EXPERIMENTS.md §Sweep). When both `miriam` and
+    /// `miriam-ref` ran, a `coordinator_bench` section reports the
+    /// zero-clone fast path's events/sec improvement over the retained
+    /// pre-change path.
+    pub fn to_json(&self) -> String {
+        let num = |x: f64| Json::Num(x);
+        let mut obj = BTreeMap::new();
+        obj.insert("bench".into(), Json::Str("sweep".into()));
+        obj.insert("platform".into(), Json::Str(self.platform.clone()));
+        obj.insert("duration_us".into(), num(self.duration_us));
+        obj.insert("threads".into(), num(self.threads as f64));
+        obj.insert("seeds".into(), num(f64::from(self.seeds)));
+        obj.insert("wall_s".into(), num(self.wall_s));
+        obj.insert("total_events".into(), num(self.total_events() as f64));
+        obj.insert("events_per_sec".into(), num(self.events_per_sec()));
+        obj.insert(
+            "scenarios".into(),
+            Json::Arr(self.scenarios.iter().cloned().map(Json::Str).collect()),
+        );
+        obj.insert(
+            "schedulers".into(),
+            Json::Arr(self.schedulers.iter().cloned().map(Json::Str).collect()),
+        );
+        let has = |s: &str| self.schedulers.iter().any(|x| x == s);
+        if has("miriam") && has("miriam-ref") {
+            let fast = self.events_per_sec_for("miriam");
+            let refp = self.events_per_sec_for("miriam-ref");
+            let mut cb = BTreeMap::new();
+            cb.insert("events_per_sec_fast".into(), num(fast));
+            cb.insert("events_per_sec_ref".into(), num(refp));
+            cb.insert(
+                "improvement".into(),
+                num(if refp > 0.0 { fast / refp - 1.0 } else { f64::NAN }),
+            );
+            obj.insert("coordinator_bench".into(), Json::Obj(cb));
+        }
+        obj.insert(
+            "aggregates".into(),
+            Json::Arr(
+                self.aggregates()
+                    .iter()
+                    .map(|a| {
+                        let mut m = BTreeMap::new();
+                        m.insert("scenario".into(),
+                                 Json::Str(a.scenario.clone()));
+                        m.insert("scheduler".into(),
+                                 Json::Str(a.scheduler.clone()));
+                        m.insert("replicas".into(),
+                                 num(f64::from(a.replicas)));
+                        m.insert("mean_crit_p50_us".into(),
+                                 num(a.mean_crit_p50_us));
+                        m.insert("mean_crit_p99_us".into(),
+                                 num(a.mean_crit_p99_us));
+                        m.insert("mean_throughput_rps".into(),
+                                 num(a.mean_throughput_rps));
+                        m.insert("deadline_misses_critical".into(),
+                                 num(a.deadline_misses_critical as f64));
+                        m.insert("deadline_misses_normal".into(),
+                                 num(a.deadline_misses_normal as f64));
+                        m.insert("events".into(), num(a.events as f64));
+                        m.insert("events_per_sec".into(),
+                                 num(a.events_per_sec()));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "cells".into(),
+            Json::Arr(
+                self.cells
+                    .iter()
+                    .map(|c| {
+                        let mut m = BTreeMap::new();
+                        m.insert("scenario".into(),
+                                 Json::Str(c.scenario.clone()));
+                        m.insert("scheduler".into(),
+                                 Json::Str(c.scheduler.clone()));
+                        m.insert("replica".into(), num(f64::from(c.replica)));
+                        m.insert("seed".into(), num(c.seed as f64));
+                        m.insert("completed_critical".into(),
+                                 num(c.completed_critical as f64));
+                        m.insert("completed_normal".into(),
+                                 num(c.completed_normal as f64));
+                        m.insert("launches".into(), num(c.launches as f64));
+                        m.insert("crit_p50_us".into(), num(c.crit_p50_us));
+                        m.insert("crit_p99_us".into(), num(c.crit_p99_us));
+                        m.insert("crit_mean_us".into(), num(c.crit_mean_us));
+                        m.insert("normal_p50_us".into(),
+                                 num(c.normal_p50_us));
+                        m.insert("throughput_rps".into(),
+                                 num(c.throughput_rps));
+                        m.insert("deadline_misses_critical".into(),
+                                 num(c.deadline_misses_critical as f64));
+                        m.insert("deadline_misses_normal".into(),
+                                 num(c.deadline_misses_normal as f64));
+                        m.insert("achieved_occupancy".into(),
+                                 num(c.achieved_occupancy));
+                        m.insert("events".into(), num(c.events as f64));
+                        m.insert("wall_ns".into(), num(c.wall_ns as f64));
+                        m.insert("events_per_sec".into(),
+                                 num(c.events_per_sec()));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        obj.insert("version".into(), Json::Num(1.0));
+        Json::Obj(obj).to_canonical_string()
+    }
+}
+
+/// The per-replica workload seed (see module docs for the rule). Replica 0
+/// keeps the scenario's pinned seed; higher replicas decorrelate through a
+/// stateless splitmix64 finalizer, so cell seeds never depend on sweep
+/// shape, enumeration order, or thread count.
+pub fn derive_seed(scenario_seed: u64, replica: u32) -> u64 {
+    if replica == 0 {
+        return scenario_seed;
+    }
+    let mut z = scenario_seed
+        ^ (replica as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Run explicit (scenario, scheduler) cells across a scoped worker pool,
+/// returning per-cell [`RunStats`] **in cell order** regardless of worker
+/// interleaving. The shared executor behind [`run_sweep`], golden-trace
+/// recording, and the engine-throughput bench. Panics on an unknown
+/// scheduler name (callers validate first).
+pub fn run_cells(gpu: &GpuSpec, cells: &[(ScenarioSpec, String)],
+                 opts: RunOpts, threads: usize) -> Vec<RunStats> {
+    let n = cells.len();
+    let workers = threads.max(1).min(n.max(1));
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<RunStats>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    let run_one = |i: usize| {
+        let (sc, sched) = &cells[i];
+        let wl = sc.build();
+        let mut s = scheduler_for(sched, &wl)
+            .unwrap_or_else(|| panic!("unknown scheduler {sched}"));
+        let st = driver::run_with(gpu.clone(), &wl, s.as_mut(), opts);
+        *results[i].lock().unwrap() = Some(st);
+    };
+    if workers <= 1 {
+        for i in 0..n {
+            run_one(i);
+        }
+    } else {
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    run_one(i);
+                });
+            }
+        });
+    }
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("cell ran"))
+        .collect()
+}
+
+/// Run the whole grid. Deterministic for a given spec: the report's cells
+/// (and traces, when enabled) are byte-identical across `threads` values.
+pub fn run_sweep(spec: &SweepSpec, threads: usize)
+                 -> Result<SweepReport, String> {
+    let gpu = GpuSpec::by_name(&spec.platform)
+        .ok_or_else(|| format!("unknown platform {}", spec.platform))?;
+    if spec.scenarios.is_empty() {
+        return Err("sweep needs at least one scenario".into());
+    }
+    if spec.schedulers.is_empty() {
+        return Err("sweep needs at least one scheduler".into());
+    }
+    if spec.seeds == 0 {
+        return Err("sweep needs seeds >= 1".into());
+    }
+    let probe = spec.scenarios[0].build();
+    for s in &spec.schedulers {
+        if scheduler_for(s, &probe).is_none() {
+            return Err(format!("unknown scheduler {s}"));
+        }
+    }
+    let mut keys: Vec<(usize, usize, u32)> = Vec::new();
+    let mut cells: Vec<(ScenarioSpec, String)> = Vec::new();
+    for (si, sc) in spec.scenarios.iter().enumerate() {
+        for (ki, sched) in spec.schedulers.iter().enumerate() {
+            for rep in 0..spec.seeds {
+                let mut c = sc.clone();
+                c.seed = derive_seed(sc.seed, rep);
+                keys.push((si, ki, rep));
+                cells.push((c, sched.clone()));
+            }
+        }
+    }
+    let opts = RunOpts { reference_rates: spec.reference_rates,
+                         trace: spec.trace };
+    let t0 = Instant::now();
+    let stats = run_cells(&gpu, &cells, opts, threads);
+    let wall_s = t0.elapsed().as_secs_f64();
+    let results = keys
+        .iter()
+        .zip(cells.iter())
+        .zip(stats)
+        .map(|((&(si, ki, rep), (c, _)), st)| {
+            CellResult::from_stats(&spec.scenarios[si].name,
+                                   &spec.schedulers[ki], rep, c.seed, st)
+        })
+        .collect();
+    Ok(SweepReport {
+        platform: spec.platform.clone(),
+        duration_us: spec.duration_us,
+        threads: threads.max(1),
+        seeds: spec.seeds,
+        scenarios: spec.scenarios.iter().map(|s| s.name.clone()).collect(),
+        schedulers: spec.schedulers.clone(),
+        cells: results,
+        wall_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::scenario;
+
+    #[test]
+    fn derive_seed_rule() {
+        // Replica 0 is the identity (sweep cells subsume conformance
+        // cells); higher replicas are stable, distinct, decorrelated.
+        assert_eq!(derive_seed(0x2B1, 0), 0x2B1);
+        let a: Vec<u64> = (0..32).map(|r| derive_seed(0x2B1, r)).collect();
+        let b: Vec<u64> = (0..32).map(|r| derive_seed(0x2B1, r)).collect();
+        assert_eq!(a, b);
+        let mut d = a.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), a.len(), "replica seeds collide");
+        assert_ne!(derive_seed(1, 1), derive_seed(2, 1));
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        let base = SweepSpec {
+            platform: "rtx2060".into(),
+            duration_us: 10_000.0,
+            scenarios: scenario::family(10_000.0).into_iter().take(1).collect(),
+            schedulers: vec!["sequential".into()],
+            seeds: 1,
+            trace: false,
+            reference_rates: false,
+        };
+        let mut bad = base.clone();
+        bad.platform = "h100".into();
+        assert!(run_sweep(&bad, 1).is_err());
+        let mut bad = base.clone();
+        bad.schedulers = vec!["fifo".into()];
+        assert!(run_sweep(&bad, 1).is_err());
+        let mut bad = base.clone();
+        bad.seeds = 0;
+        assert!(run_sweep(&bad, 1).is_err());
+        let mut bad = base.clone();
+        bad.scenarios.clear();
+        assert!(run_sweep(&bad, 1).is_err());
+    }
+
+    #[test]
+    fn report_shape_and_json() {
+        let spec = SweepSpec {
+            platform: "rtx2060".into(),
+            duration_us: 8_000.0,
+            scenarios: scenario::mdtb_scenarios(8_000.0)
+                .into_iter()
+                .take(1)
+                .collect(),
+            schedulers: vec!["sequential".into(), "multistream".into()],
+            seeds: 2,
+            trace: false,
+            reference_rates: false,
+        };
+        let r = run_sweep(&spec, 2).unwrap();
+        assert_eq!(r.cells.len(), 4);
+        // Grid order: scenario-major, scheduler, replica.
+        assert_eq!(r.cells[0].scheduler, "sequential");
+        assert_eq!(r.cells[0].replica, 0);
+        assert_eq!(r.cells[1].replica, 1);
+        assert_eq!(r.cells[2].scheduler, "multistream");
+        assert!(r.cells.iter().all(|c| c.events > 0 && c.wall_ns > 0));
+        assert!(r.cells.iter().all(|c| c.trace_json.is_none()));
+        assert!(r.total_events() > 0);
+        let aggs = r.aggregates();
+        assert_eq!(aggs.len(), 2);
+        assert_eq!(aggs[0].replicas, 2);
+        let j = r.to_json();
+        let doc = crate::runtime::json::parse(&j).expect("valid JSON");
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("sweep"));
+        assert_eq!(
+            doc.get("cells").and_then(Json::as_arr).map(|a| a.len()),
+            Some(4)
+        );
+        assert!(doc.get("coordinator_bench").is_none());
+    }
+}

@@ -40,7 +40,7 @@ use crate::gpu::contention::{
     bandwidth_scale, block_rates, foreign_penalty, intra_sm_scale,
     standalone_demand, BlockWork, ContentionParams,
 };
-use crate::gpu::kernel::{Criticality, LaunchConfig};
+use crate::gpu::kernel::{Criticality, LaunchConfig, LaunchShape};
 use crate::gpu::metrics::{LaunchRecord, SimMetrics};
 use crate::gpu::names::NameTable;
 use crate::gpu::sm::{BlockDemand, SmState};
@@ -51,6 +51,16 @@ use crate::gpu::trace::{Trace, TraceEventKind, TraceRecorder};
 /// Total-ordered f64 time key for the launch-overhead timer heap.
 #[derive(Debug, Clone, Copy, PartialEq)]
 struct Tm(f64);
+impl Tm {
+    /// All timer keys are built here: a NaN key would order arbitrarily
+    /// against everything and silently corrupt the `BinaryHeap` (ISSUE 3
+    /// satellite — a bad arrival process must fail loudly, in debug, not
+    /// wedge the event loop).
+    fn new(t: f64) -> Self {
+        debug_assert!(t.is_finite(), "non-finite simulated time {t}");
+        Tm(t)
+    }
+}
 impl Eq for Tm {}
 impl PartialOrd for Tm {
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
@@ -144,6 +154,25 @@ struct BlockSlot {
 pub struct Completion {
     pub tag: LaunchTag,
     pub record: LaunchRecord,
+}
+
+/// Scalar residency counters, `Copy` and allocation-free — the
+/// per-carving-decision read Miriam's pump does (paper §7's Eq. 2 only
+/// needs these totals; the old per-decision [`GpuSnapshot`] built two
+/// per-SM `Vec`s each time — ISSUE 3 zero-clone fast path). All counters
+/// are maintained incrementally on dispatch/completion, so this is a
+/// handful of loads; late binding of shard geometry stays intact because
+/// reading it fresh per carve costs nothing.
+#[derive(Debug, Clone, Copy)]
+pub struct Residency {
+    pub now_us: f64,
+    /// Resident critical blocks count (total) and their block size.
+    pub critical_blocks: u32,
+    pub critical_block_threads: u32,
+    /// Pending (undispatched) critical blocks across streams.
+    pub critical_pending: u32,
+    /// Resident normal blocks count.
+    pub normal_blocks: u32,
 }
 
 /// Read-only snapshot of GPU residency used by scheduling policies
@@ -315,6 +344,12 @@ impl Engine {
         self.trace.take().map(|r| r.into_trace(names))
     }
 
+    /// Number of streams created so far (ids are dense `0..num_streams`),
+    /// so schedulers can size flat per-stream state.
+    pub fn num_streams(&self) -> usize {
+        self.streams.len()
+    }
+
     /// Create a stream with the given dispatch priority (higher wins).
     pub fn add_stream(&mut self, priority: i32) -> StreamId {
         let id = self.streams.len() as StreamId;
@@ -372,16 +407,47 @@ impl Engine {
     pub fn submit_delayed(&mut self, stream: StreamId, config: LaunchConfig,
                           criticality: Criticality, extra_delay_us: f64)
                           -> LaunchTag {
-        assert!(config.grid > 0, "launch {} has empty grid", config.name);
-        assert!(config.block_threads > 0
-                    && config.block_threads <= self.spec.max_threads_per_sm,
+        let name_id = self.intern_name(&config.name);
+        self.submit_interned(stream, name_id, config.shape(), criticality,
+                             extra_delay_us)
+    }
+
+    /// Intern `name` into this engine's [`NameTable`], sizing the per-name
+    /// accumulators. The returned id is valid for
+    /// [`Engine::submit_interned`] on *this* engine only.
+    pub fn intern_name(&mut self, name: &str) -> u32 {
+        let id = self.names.intern(name);
+        self.ensure_name_capacity(id);
+        id
+    }
+
+    /// The zero-allocation submit path (ISSUE 3 fast path): geometry and
+    /// work come as a `Copy` [`LaunchShape`] and the kernel name as a
+    /// pre-interned id from [`Engine::intern_name`], so steady-state
+    /// submitters (the Miriam coordinator's shard and critical paths)
+    /// never build a name `String` per launch.
+    pub fn submit_interned(&mut self, stream: StreamId, name_id: u32,
+                           shape: LaunchShape, criticality: Criticality,
+                           extra_delay_us: f64) -> LaunchTag {
+        assert!((name_id as usize) < self.names.len(),
+                "submit_interned: id {name_id} was never interned");
+        assert!(shape.grid > 0, "launch {} has empty grid",
+                self.names.resolve(name_id));
+        assert!(shape.block_threads > 0
+                    && shape.block_threads <= self.spec.max_threads_per_sm,
                 "launch {} block size {} outside (0, {}]",
-                config.name, config.block_threads, self.spec.max_threads_per_sm);
-        assert!(config.flops > 0.0, "launch {} needs flops > 0", config.name);
+                self.names.resolve(name_id), shape.block_threads,
+                self.spec.max_threads_per_sm);
+        assert!(shape.flops > 0.0, "launch {} needs flops > 0",
+                self.names.resolve(name_id));
+        // A non-finite delay becomes a NaN ready time, and NaN heap keys
+        // corrupt the timer ordering silently (see [`Tm::new`]).
+        debug_assert!(extra_delay_us.is_finite(),
+                      "launch {} has non-finite extra delay {extra_delay_us}",
+                      self.names.resolve(name_id));
+        self.ensure_name_capacity(name_id);
         let tag = self.next_tag;
         self.next_tag += 1;
-        let name_id = self.names.intern(&config.name);
-        self.ensure_name_capacity(name_id);
         if let Some(tr) = self.trace.as_mut() {
             tr.record(TraceEventKind::Submit, self.now_us, tag, name_id,
                       stream);
@@ -389,7 +455,7 @@ impl Engine {
         self.streams[stream as usize].push(QueuedLaunch {
             tag,
             name_id,
-            config,
+            shape,
             criticality,
             extra_delay_us,
             submit_us: self.now_us,
@@ -507,7 +573,7 @@ impl Engine {
             self.streams[s].head_active = true;
             self.event_cache = None; // new launch-overhead timer
             if q.criticality == Criticality::Critical {
-                self.critical_pending += q.config.grid;
+                self.critical_pending += q.shape.grid;
             }
             let launch = ActiveLaunch {
                 tag: q.tag,
@@ -517,19 +583,19 @@ impl Engine {
                 submit_us: q.submit_us,
                 ready_us: ready,
                 start_us: None,
-                blocks_pending: q.config.grid,
+                blocks_pending: q.shape.grid,
                 blocks_running: 0,
-                block_threads: q.config.block_threads,
-                smem_per_block: q.config.smem_per_block,
-                regs_per_thread: q.config.regs_per_thread,
-                flops_per_block: q.config.flops_per_block(),
-                bytes_per_block: q.config.bytes_per_block(),
+                block_threads: q.shape.block_threads,
+                smem_per_block: q.shape.smem_per_block,
+                regs_per_thread: q.shape.regs_per_thread,
+                flops_per_block: q.shape.flops_per_block(),
+                bytes_per_block: q.shape.bytes_per_block(),
             };
             let tag = launch.tag;
             let name_id = launch.name_id;
             let slot = self.alloc_launch(launch);
             self.head_slot[s] = Some(slot);
-            self.ready_timers.push(Reverse((Tm(ready), slot, tag)));
+            self.ready_timers.push(Reverse((Tm::new(ready), slot, tag)));
             if let Some(tr) = self.trace.as_mut() {
                 tr.record(TraceEventKind::Activate, self.now_us, tag, name_id,
                           s as u32);
@@ -858,18 +924,28 @@ impl Engine {
     }
 
     /// Process the next internal event. Returns completions that fired.
-    /// The caller must have advanced to (or past) the event time via
-    /// `advance_to(next_event_time())`; `step()` combines both.
+    /// `step()` advances to the event time itself; callers that want to
+    /// avoid the per-event `Vec` use [`Engine::step_into`].
     pub fn step(&mut self) -> Vec<Completion> {
+        let mut completions = Vec::new();
+        self.step_into(&mut completions);
+        completions
+    }
+
+    /// [`Engine::step`] into a caller-owned buffer (cleared first), so an
+    /// event loop reuses one completions allocation across events — the
+    /// driver's steady state allocates nothing per event beyond the one
+    /// record `String` per *launch* completion (EXPERIMENTS.md §Perf).
+    pub fn step_into(&mut self, completions: &mut Vec<Completion>) {
+        completions.clear();
         let Some(t) = self.next_event_time() else {
-            return Vec::new();
+            return;
         };
         self.advance_to(t);
         self.metrics.events += 1;
         // The event at `t` is being consumed (completion or timer expiry):
         // the cached next-event time is spent either way.
         self.event_cache = None;
-        let mut completions = Vec::new();
         // Collect finished blocks. The threshold is *time*-relative: a block
         // whose remaining work amounts to less simulated time than f64 can
         // resolve at `now` must complete now, or `now + remaining/rate`
@@ -885,12 +961,11 @@ impl Engine {
             }
             let rate = if b.memory_bound { b.cr * bw } else { b.cr };
             if b.remaining <= rate * slack {
-                self.complete_block(bi, &mut completions);
+                self.complete_block(bi, completions);
             }
         }
         self.activate_stream_heads();
         self.try_dispatch();
-        completions
     }
 
     /// Run until the engine is idle; returns all completions in order.
@@ -902,14 +977,10 @@ impl Engine {
         all
     }
 
-    /// Snapshot for scheduling policies. All counters are maintained
-    /// incrementally on dispatch/completion, so this never walks the
-    /// residency set.
-    pub fn snapshot(&self) -> GpuSnapshot {
-        GpuSnapshot {
+    /// The scalar residency counters (no allocation; see [`Residency`]).
+    pub fn residency(&self) -> Residency {
+        Residency {
             now_us: self.now_us,
-            sm_threads_used: self.sms.iter().map(|s| s.threads_used).collect(),
-            sm_blocks: self.sms.iter().map(|s| s.blocks_resident).collect(),
             critical_blocks: self.critical_blocks,
             critical_block_threads: self
                 .critical_thread_sizes
@@ -919,6 +990,23 @@ impl Engine {
                 .unwrap_or(0),
             critical_pending: self.critical_pending,
             normal_blocks: self.normal_blocks,
+        }
+    }
+
+    /// Snapshot for scheduling policies and tests. All counters are
+    /// maintained incrementally on dispatch/completion, so this never
+    /// walks the residency set — but it does allocate the per-SM vectors;
+    /// policies that only need totals should use [`Engine::residency`].
+    pub fn snapshot(&self) -> GpuSnapshot {
+        let r = self.residency();
+        GpuSnapshot {
+            now_us: r.now_us,
+            sm_threads_used: self.sms.iter().map(|s| s.threads_used).collect(),
+            sm_blocks: self.sms.iter().map(|s| s.blocks_resident).collect(),
+            critical_blocks: r.critical_blocks,
+            critical_block_threads: r.critical_block_threads,
+            critical_pending: r.critical_pending,
+            normal_blocks: r.normal_blocks,
         }
     }
 }
@@ -1101,6 +1189,82 @@ mod tests {
         let mut e = Engine::new(GpuSpec::rtx2060());
         let s = e.add_stream(0);
         e.submit(s, cfg("bad", 0, 32, 1.0, 0.0), Criticality::Normal);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "non-finite extra delay")]
+    fn non_finite_delay_rejected_in_debug() {
+        // A NaN delay would produce a NaN timer key and corrupt the
+        // BinaryHeap ordering silently (ISSUE 3 satellite).
+        let mut e = Engine::new(GpuSpec::rtx2060());
+        let s = e.add_stream(0);
+        e.submit_delayed(s, cfg("k", 1, 32, 1000.0, 0.0),
+                         Criticality::Normal, f64::NAN);
+    }
+
+    #[test]
+    #[should_panic(expected = "never interned")]
+    fn uninterned_id_rejected() {
+        let mut e = Engine::new(GpuSpec::rtx2060());
+        let s = e.add_stream(0);
+        let shape = cfg("k", 1, 32, 1000.0, 0.0).shape();
+        e.submit_interned(s, 7, shape, Criticality::Normal, 0.0);
+    }
+
+    #[test]
+    fn interned_submit_matches_string_submit() {
+        // The id+shape path and the LaunchConfig path must be the same
+        // launch: identical trajectory and resolved record names.
+        let run = |interned: bool| {
+            let mut e = Engine::new(GpuSpec::rtx2060());
+            let s = e.add_stream(0);
+            for i in 0..3 {
+                let c = cfg("k", 4 + i, 256, 4e6, 1e4);
+                if interned {
+                    let id = e.intern_name("k");
+                    e.submit_interned(s, id, c.shape(), Criticality::Normal,
+                                      0.0);
+                } else {
+                    e.submit(s, c, Criticality::Normal);
+                }
+            }
+            e.run_to_idle()
+        };
+        let a = run(false);
+        let b = run(true);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.tag, y.tag);
+            assert_eq!(x.record.name, y.record.name);
+            assert!((x.record.end_us - y.record.end_us).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn step_into_reuses_buffer_and_matches_step() {
+        let mut e = Engine::new(GpuSpec::rtx2060());
+        let s = e.add_stream(0);
+        for i in 0..4 {
+            e.submit(s, cfg(&format!("k{i}"), 2, 256, 5e5, 0.0),
+                     Criticality::Normal);
+        }
+        let mut buf = Vec::new();
+        let mut seen = Vec::new();
+        while e.next_event_time().is_some() {
+            e.step_into(&mut buf);
+            seen.extend(buf.iter().map(|c| c.tag));
+        }
+        assert_eq!(seen.len(), 4);
+        let mut sorted = seen.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![1, 2, 3, 4]);
+        // Residency totals agree with the allocating snapshot.
+        let r = e.residency();
+        let snap = e.snapshot();
+        assert_eq!(r.critical_blocks, snap.critical_blocks);
+        assert_eq!(r.normal_blocks, snap.normal_blocks);
+        assert_eq!(r.critical_pending, snap.critical_pending);
     }
 
     #[test]

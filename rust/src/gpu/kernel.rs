@@ -96,6 +96,55 @@ impl LaunchConfig {
         }
     }
 
+    /// The name-free part of this launch (see [`LaunchShape`]).
+    pub fn shape(&self) -> LaunchShape {
+        LaunchShape {
+            grid: self.grid,
+            block_threads: self.block_threads,
+            smem_per_block: self.smem_per_block,
+            regs_per_thread: self.regs_per_thread,
+            flops: self.flops,
+            bytes: self.bytes,
+        }
+    }
+
+    pub fn flops_per_block(&self) -> f64 {
+        self.flops / self.grid as f64
+    }
+
+    pub fn bytes_per_block(&self) -> f64 {
+        self.bytes / self.grid as f64
+    }
+}
+
+/// A launch without its name: geometry plus work, `Copy`. The engine's
+/// interned submit path ([`crate::gpu::engine::Engine::submit_interned`])
+/// takes a `LaunchShape` and a pre-interned name id instead of a
+/// [`LaunchConfig`], so steady-state submitters (the Miriam coordinator's
+/// shard and critical paths) never allocate a name `String` per launch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LaunchShape {
+    pub grid: u32,
+    pub block_threads: u32,
+    pub smem_per_block: u32,
+    pub regs_per_thread: u32,
+    pub flops: f64,
+    pub bytes: f64,
+}
+
+impl LaunchShape {
+    /// The identity shape of an untransformed kernel.
+    pub fn from_kernel(k: &KernelDesc) -> Self {
+        LaunchShape {
+            grid: k.grid,
+            block_threads: k.block_threads,
+            smem_per_block: k.smem_per_block,
+            regs_per_thread: k.regs_per_thread,
+            flops: k.flops,
+            bytes: k.bytes,
+        }
+    }
+
     pub fn flops_per_block(&self) -> f64 {
         self.flops / self.grid as f64
     }
@@ -144,5 +193,17 @@ mod tests {
         assert_eq!(l.block_threads, k.block_threads);
         assert_eq!(l.flops, k.flops);
         assert_eq!(l.bytes, k.bytes);
+    }
+
+    #[test]
+    fn shape_matches_config_and_kernel() {
+        let k = k();
+        let l = LaunchConfig::from_kernel(&k);
+        let s = l.shape();
+        assert_eq!(s, LaunchShape::from_kernel(&k));
+        assert_eq!(s.grid, k.grid);
+        assert_eq!(s.smem_per_block, k.smem_per_block);
+        assert!((s.flops_per_block() - l.flops_per_block()).abs() < 1e-12);
+        assert!((s.bytes_per_block() - l.bytes_per_block()).abs() < 1e-12);
     }
 }

@@ -8,19 +8,22 @@
 
 use std::collections::VecDeque;
 
-use crate::gpu::kernel::{Criticality, LaunchConfig};
+use crate::gpu::kernel::{Criticality, LaunchShape};
 
 pub type StreamId = u32;
 pub type LaunchTag = u64;
 
-/// A launch queued on a stream, waiting for its turn.
-#[derive(Debug, Clone)]
+/// A launch queued on a stream, waiting for its turn. Carries only the
+/// interned name id and the `Copy` geometry/work [`LaunchShape`] — no
+/// `String`, so queueing a launch never allocates beyond the queue slot
+/// itself (ISSUE 3 zero-clone fast path).
+#[derive(Debug, Clone, Copy)]
 pub struct QueuedLaunch {
     pub tag: LaunchTag,
-    /// Interned id of `config.name` in the engine's
+    /// Interned id of the launch name in the engine's
     /// [`crate::gpu::names::NameTable`], assigned at submit.
     pub name_id: u32,
-    pub config: LaunchConfig,
+    pub shape: LaunchShape,
     pub criticality: Criticality,
     /// Extra delay (us) before the launch may start dispatching once it
     /// reaches the head of its stream — models sync/barrier costs the
@@ -72,9 +75,8 @@ mod tests {
     fn launch(tag: u64) -> QueuedLaunch {
         QueuedLaunch {
             tag,
-            name_id: 0,
-            config: LaunchConfig {
-                name: format!("k{tag}"),
+            name_id: tag as u32,
+            shape: LaunchShape {
                 grid: 1,
                 block_threads: 32,
                 smem_per_block: 0,

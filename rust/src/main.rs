@@ -5,6 +5,9 @@
 //!   simulate   --platform rtx2060 --workload A --schedulers all --duration 1.0
 //!   scenarios  [--list] [--scenario NAME|all] [--gen N --seed S]
 //!              [--trace-out FILE] [--record-golden DIR]
+//!   sweep      [--threads N] [--seeds N] [--scenario all|names] — parallel
+//!              deterministic scenario×scheduler×seed grid, writes
+//!              BENCH_sweep.json (ISSUE 3)
 //!   infer      --model cifarnet [--artifacts artifacts]
 //!   artifacts  [--artifacts artifacts]
 
@@ -12,7 +15,7 @@ use anyhow::{anyhow, Result};
 
 use miriam::config::cli::Args;
 use miriam::config::RunConfig;
-use miriam::coordinator::{self, driver};
+use miriam::coordinator::{self, driver, sweep};
 use miriam::gpu::spec::GpuSpec;
 use miriam::runtime::Manifest;
 use miriam::workloads::{lgsvl, mdtb, scenario};
@@ -28,6 +31,9 @@ USAGE:
                    [--scenario NAME|all] [--gen N] [--seed S]
                    [--schedulers s1,s2,...] [--trace-out FILE]
                    [--record-golden DIR]
+  miriam sweep [--platform P] [--duration SECONDS] [--scenario all|n1,n2,...]
+               [--schedulers s1,s2,...] [--seeds N] [--threads N]
+               [--out BENCH_sweep.json]
   miriam infer --model NAME [--artifacts DIR]
   miriam artifacts [--artifacts DIR]
 ";
@@ -176,6 +182,96 @@ fn scenarios(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The parallel deterministic sweep (ISSUE 3 tentpole): scenario family ×
+/// scheduler set × seed replicas across a worker pool, aggregate report to
+/// stdout and `BENCH_sweep.json`. Results are byte-identical for any
+/// `--threads`; the default scheduler set includes `miriam-ref` (the
+/// retained pre-change coordinator) so the report always carries the
+/// coordinator-in-the-loop before/after comparison.
+fn sweep_cmd(args: &Args) -> Result<()> {
+    let platform = args.get("platform", "rtx2060");
+    let duration = args.get_f64("duration", 0.04).map_err(|e| anyhow!(e))?;
+    if duration <= 0.0 {
+        return Err(anyhow!("duration must be positive"));
+    }
+    let dur_us = duration * 1e6;
+    let which = args.get("scenario", "all");
+    let scenarios = if which.eq_ignore_ascii_case("all") {
+        scenario::family(dur_us)
+    } else {
+        // Named cells resolve against the family *and* the MDTB workloads
+        // (the bench's grid), so any BENCH_*.json cell is reproducible by
+        // name here.
+        let pool: Vec<_> = scenario::family(dur_us)
+            .into_iter()
+            .chain(scenario::mdtb_scenarios(dur_us))
+            .collect();
+        args.get_list("scenario", "")
+            .iter()
+            .map(|n| {
+                pool.iter()
+                    .find(|s| s.name.eq_ignore_ascii_case(n))
+                    .cloned()
+                    .ok_or_else(|| anyhow!("unknown scenario {n}"))
+            })
+            .collect::<Result<Vec<_>>>()?
+    };
+    let schedulers = args.get_list(
+        "schedulers", "sequential,multistream,ib,miriam,miriam-ref");
+    let seeds = args.get_usize("seeds", 8).map_err(|e| anyhow!(e))? as u32;
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let threads = args
+        .get_usize("threads", default_threads)
+        .map_err(|e| anyhow!(e))?;
+    let out = args.get("out", "BENCH_sweep.json");
+
+    let spec = sweep::SweepSpec {
+        platform: platform.into(),
+        duration_us: dur_us,
+        scenarios,
+        schedulers,
+        seeds,
+        trace: false,
+        reference_rates: false,
+    };
+    let cells = spec.scenarios.len() * spec.schedulers.len() * seeds as usize;
+    println!("# sweep: {} scenario(s) x {} scheduler(s) x {} seed(s) = \
+              {cells} cells, {duration}s simulated each, {threads} thread(s)",
+             spec.scenarios.len(), spec.schedulers.len(), seeds);
+    let report = sweep::run_sweep(&spec, threads).map_err(|e| anyhow!(e))?;
+
+    println!("{:<16} {:<12} {:>10} {:>10} {:>8} {:>12} {:>12}",
+             "scenario", "scheduler", "crit p50", "crit p99", "miss",
+             "throughput", "events/s");
+    println!("{:<16} {:<12} {:>10} {:>10} {:>8} {:>12} {:>12}",
+             "", "", "(ms)", "(ms)", "(crit)", "(req/s)", "");
+    for a in report.aggregates() {
+        println!("{:<16} {:<12} {:>10.2} {:>10.2} {:>8} {:>12.1} {:>12.0}",
+                 a.scenario, a.scheduler,
+                 a.mean_crit_p50_us / 1e3,
+                 a.mean_crit_p99_us / 1e3,
+                 a.deadline_misses_critical,
+                 a.mean_throughput_rps,
+                 a.events_per_sec());
+    }
+    println!("\n{} cells in {:.3}s wall ({} threads), {} events, \
+              {:.0} events/s aggregate",
+             report.cells.len(), report.wall_s, report.threads,
+             report.total_events(), report.events_per_sec());
+    let fast = report.events_per_sec_for("miriam");
+    let refp = report.events_per_sec_for("miriam-ref");
+    if fast > 0.0 && refp > 0.0 {
+        println!("coordinator fast path: {:.0} events/s vs {:.0} reference \
+                  ({:+.1}%)",
+                 fast, refp, (fast / refp - 1.0) * 100.0);
+    }
+    std::fs::write(out, report.to_json())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
 fn infer(args: &Args) -> Result<()> {
     use miriam::runtime::artifacts::npy_rand;
     let model = args
@@ -216,6 +312,7 @@ fn main() -> Result<()> {
     match args.positional.first().map(String::as_str) {
         Some("simulate") => simulate(&args),
         Some("scenarios") => scenarios(&args),
+        Some("sweep") => sweep_cmd(&args),
         Some("infer") => infer(&args),
         Some("artifacts") => {
             let m = Manifest::load(args.get("artifacts", "artifacts"))?;

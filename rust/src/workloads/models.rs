@@ -55,6 +55,17 @@ impl ModelDesc {
     pub fn total_blocks(&self) -> u64 {
         self.kernels.iter().map(|k| k.grid as u64).sum()
     }
+
+    /// Intern every kernel's name through `intern` (typically
+    /// [`crate::gpu::engine::Engine::intern_name`]), returning per-kernel
+    /// ids parallel to `kernels`. The driver calls this once per source at
+    /// workload load, so requests carry pre-interned `u32` ids and the
+    /// per-request scheduling path never hashes a kernel-name `String`
+    /// (ISSUE 3 zero-clone fast path).
+    pub fn intern_kernels(&self, mut intern: impl FnMut(&str) -> u32)
+                          -> Vec<u32> {
+        self.kernels.iter().map(|k| intern(&k.name)).collect()
+    }
 }
 
 fn grid_for(out_elems: u64, tpb: u32) -> u32 {
@@ -429,6 +440,24 @@ mod tests {
         // is comparable to AlexNet's (~1.7 vs ~1.4 GFLOP theoretical).
         assert!(squeezenet().total_flops() < resnet50().total_flops());
         assert!(lstm().total_flops() > gru().total_flops());
+    }
+
+    #[test]
+    fn intern_kernels_is_parallel_and_order_stable() {
+        let m = cifarnet();
+        let mut seen: Vec<String> = Vec::new();
+        let ids = m.intern_kernels(|n| {
+            if let Some(i) = seen.iter().position(|s| s == n) {
+                i as u32
+            } else {
+                seen.push(n.to_string());
+                (seen.len() - 1) as u32
+            }
+        });
+        assert_eq!(ids.len(), m.kernels.len());
+        for (k, &id) in m.kernels.iter().zip(&ids) {
+            assert_eq!(seen[id as usize], k.name);
+        }
     }
 
     #[test]

@@ -330,6 +330,27 @@ pub fn by_name(name: &str, duration_us: f64) -> Option<ScenarioSpec> {
         .find(|s| s.name.eq_ignore_ascii_case(name))
 }
 
+/// An MDTB Table-2 workload expressed as a [`ScenarioSpec`], so the sweep
+/// runner and the engine-throughput bench treat MDTB cells and family
+/// scenarios uniformly (ISSUE 3). `build()` of the result materializes the
+/// same `Workload` as `WorkloadSpec::build` (same sources, seed, duration).
+pub fn from_mdtb(spec: &crate::workloads::mdtb::WorkloadSpec) -> ScenarioSpec {
+    ScenarioSpec {
+        name: spec.name.clone(),
+        sources: vec![
+            crit(&spec.critical_model, spec.critical_arrival.clone(), None),
+            norm(&spec.normal_model, spec.normal_arrival.clone()),
+        ],
+        duration_us: spec.duration_us,
+        seed: spec.seed,
+    }
+}
+
+/// All four MDTB workloads as scenarios.
+pub fn mdtb_scenarios(duration_us: f64) -> Vec<ScenarioSpec> {
+    crate::workloads::mdtb::all(duration_us).iter().map(from_mdtb).collect()
+}
+
 /// Pinned (scenario, scheduler) cells whose canonical engine traces are
 /// kept as golden files under `rust/tests/golden/` — the semantic-drift
 /// anchors of the conformance suite. Record/refresh with
@@ -548,6 +569,27 @@ mod tests {
             a.iter().zip(&c).any(|(x, y)| x.seed != y.seed),
             "different gen seeds produced identical scenarios"
         );
+    }
+
+    #[test]
+    fn mdtb_scenarios_match_their_workload_specs() {
+        let scens = mdtb_scenarios(1e5);
+        let specs = crate::workloads::mdtb::all(1e5);
+        assert_eq!(scens.len(), 4);
+        for (sc, spec) in scens.iter().zip(&specs) {
+            assert_eq!(sc.name, spec.name);
+            assert_eq!(sc.seed, spec.seed);
+            let a = sc.build();
+            let b = spec.build();
+            assert_eq!(a.sources.len(), b.sources.len());
+            for (x, y) in a.sources.iter().zip(&b.sources) {
+                assert_eq!(x.model.name, y.model.name);
+                assert_eq!(x.criticality, y.criticality);
+                assert_eq!(x.deadline_us, y.deadline_us);
+            }
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.duration_us, b.duration_us);
+        }
     }
 
     #[test]

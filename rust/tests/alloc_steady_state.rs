@@ -1,0 +1,287 @@
+//! Steady-state allocation contract (ISSUE 3 satellite): once caches are
+//! warm, the Miriam pump + completion path performs **zero** heap
+//! allocations per event, and the engine event loop allocates only the
+//! per-*launch* record strings (EXPERIMENTS.md §Perf).
+//!
+//! A counting `#[global_allocator]` wraps the system allocator with
+//! per-thread (const-initialized TLS) counters, so parallel test threads
+//! cannot pollute each other's windows. Counting is toggled only around
+//! the code under measurement; everything the harness itself does
+//! (request construction, bookkeeping, asserts) stays outside the
+//! windows. All runs are deterministic, so these bounds are exact
+//! regressions gates, not flaky heuristics.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::Arc;
+
+use miriam::coordinator::miriam::Miriam;
+use miriam::coordinator::scheduler::{Req, Scheduler};
+use miriam::gpu::engine::{Completion, Engine};
+use miriam::gpu::kernel::Criticality;
+use miriam::gpu::spec::GpuSpec;
+use miriam::workloads::models::{self, ModelRef};
+
+thread_local! {
+    static COUNTING: Cell<bool> = const { Cell::new(false) };
+    static ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+struct CountingAlloc;
+
+impl CountingAlloc {
+    fn bump() {
+        // `try_with`: the allocator may run during TLS teardown.
+        let _ = COUNTING.try_with(|on| {
+            if on.get() {
+                let _ = ALLOCS.try_with(|n| n.set(n.get() + 1));
+            }
+        });
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        Self::bump();
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        Self::bump();
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize)
+                      -> *mut u8 {
+        Self::bump();
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn counting(on: bool) {
+    COUNTING.with(|c| c.set(on));
+}
+
+fn allocs() -> u64 {
+    ALLOCS.with(|n| n.get())
+}
+
+fn make_req(model: &ModelRef, ids: &Arc<Vec<u32>>, next_id: &mut u64,
+            crit: Criticality, now: f64) -> Req {
+    let req = Req {
+        id: *next_id,
+        source: if crit == Criticality::Critical { 0 } else { 1 },
+        model: model.clone(),
+        name_ids: ids.clone(),
+        criticality: crit,
+        arrival_us: now,
+    };
+    *next_id += 1;
+    req
+}
+
+#[test]
+fn warm_pump_and_completion_path_allocates_nothing() {
+    // Normal-only closed loop (2 clients of cifarnet): after warmup every
+    // elastic cache entry, shard name id, slab slot, and container
+    // capacity exists, and the scheduler windows must be allocation-free.
+    let mut eng = Engine::new(GpuSpec::rtx2060());
+    let mut m = Miriam::new(&[]);
+    m.init(&mut eng);
+    let model: ModelRef = Arc::new(models::cifarnet());
+    let ids = Arc::new(model.intern_kernels(|n| eng.intern_name(n)));
+    let mut next_id: u64 = 1;
+    let mut completions: Vec<Completion> = Vec::new();
+    let mut finished: Vec<u64> = Vec::new();
+    for _ in 0..2 {
+        let req = make_req(&model, &ids, &mut next_id, Criticality::Normal,
+                           eng.now_us());
+        m.on_request(req, &mut eng);
+    }
+
+    const WARMUP: u64 = 2000;
+    const TOTAL: u64 = 5000;
+    let mut events: u64 = 0;
+    let mut measured_calls: u64 = 0;
+    let mut measured_allocs: u64 = 0;
+    while events < TOTAL {
+        if eng.next_event_time().is_none() {
+            break;
+        }
+        eng.step_into(&mut completions);
+        events += 1;
+        let warm = events > WARMUP;
+        for c in &completions {
+            finished.clear();
+            let a0 = allocs();
+            counting(true);
+            m.on_completion(c, &mut eng, &mut finished);
+            counting(false);
+            if warm {
+                measured_allocs += allocs() - a0;
+                measured_calls += 1;
+            }
+            for _ in 0..finished.len() {
+                // Closed loop: replace the finished request immediately.
+                let req = make_req(&model, &ids, &mut next_id,
+                                   Criticality::Normal, eng.now_us());
+                let a0 = allocs();
+                counting(true);
+                m.on_request(req, &mut eng);
+                counting(false);
+                if warm {
+                    measured_allocs += allocs() - a0;
+                }
+            }
+        }
+    }
+    assert_eq!(events, TOTAL, "event loop stalled early");
+    assert!(measured_calls > 200,
+            "too few warm completions measured: {measured_calls}");
+    assert_eq!(measured_allocs, 0,
+               "warm Miriam pump+completion path allocated \
+                {measured_allocs} time(s) over {measured_calls} calls");
+}
+
+#[test]
+fn engine_event_loop_allocates_only_per_launch_records() {
+    // Same workload, counting the *engine* windows: the only steady-state
+    // allocations are the launch-record strings (one resolve + one clone
+    // per completed launch) plus amortized metrics-vector growth.
+    let mut eng = Engine::new(GpuSpec::rtx2060());
+    let mut m = Miriam::new(&[]);
+    m.init(&mut eng);
+    let model: ModelRef = Arc::new(models::cifarnet());
+    let ids = Arc::new(model.intern_kernels(|n| eng.intern_name(n)));
+    let mut next_id: u64 = 1;
+    let mut completions: Vec<Completion> = Vec::new();
+    let mut finished: Vec<u64> = Vec::new();
+    for _ in 0..2 {
+        let req = make_req(&model, &ids, &mut next_id, Criticality::Normal,
+                           eng.now_us());
+        m.on_request(req, &mut eng);
+    }
+
+    const WARMUP: u64 = 2000;
+    const TOTAL: u64 = 5000;
+    let mut events: u64 = 0;
+    let mut measured_allocs: u64 = 0;
+    let mut measured_launches: u64 = 0;
+    while events < TOTAL {
+        if eng.next_event_time().is_none() {
+            break;
+        }
+        let warm = events > WARMUP;
+        let a0 = allocs();
+        counting(true);
+        eng.step_into(&mut completions);
+        counting(false);
+        events += 1;
+        if warm {
+            measured_allocs += allocs() - a0;
+            measured_launches += completions.len() as u64;
+        }
+        for c in &completions {
+            finished.clear();
+            m.on_completion(c, &mut eng, &mut finished);
+            for _ in 0..finished.len() {
+                let req = make_req(&model, &ids, &mut next_id,
+                                   Criticality::Normal, eng.now_us());
+                m.on_request(req, &mut eng);
+            }
+        }
+    }
+    assert_eq!(events, TOTAL, "event loop stalled early");
+    assert!(measured_launches > 100, "too few launches: {measured_launches}");
+    let bound = 4 * measured_launches + 64;
+    assert!(measured_allocs <= bound,
+            "engine loop allocated {measured_allocs} times for \
+             {measured_launches} launches (bound {bound})");
+}
+
+#[test]
+fn contended_scheduler_path_stays_sub_allocation_per_event() {
+    // Critical AlexNet (kept one inflight, closed loop) against two
+    // closed-loop CifarNet clients: real contention, so shards carve at
+    // varying geometry. Shard-name interning may still fault in a few
+    // late-first-seen indexes, so the contract here is a hard sub-linear
+    // bound rather than strict zero — pre-ISSUE-3 plumbing (deep clones +
+    // snapshots per pump) sat at several allocations per event and fails
+    // this by an order of magnitude.
+    let crit_model: ModelRef = Arc::new(models::alexnet());
+    let norm_model: ModelRef = Arc::new(models::cifarnet());
+    let mut eng = Engine::new(GpuSpec::rtx2060());
+    let mut m = Miriam::new(&[crit_model.clone()]);
+    m.init(&mut eng);
+    let crit_ids = Arc::new(crit_model.intern_kernels(|n| eng.intern_name(n)));
+    let norm_ids = Arc::new(norm_model.intern_kernels(|n| eng.intern_name(n)));
+    let mut next_id: u64 = 1;
+    let mut completions: Vec<Completion> = Vec::new();
+    let mut finished: Vec<u64> = Vec::new();
+
+    let crit_req = make_req(&crit_model, &crit_ids, &mut next_id,
+                            Criticality::Critical, 0.0);
+    let mut crit_live = crit_req.id;
+    m.on_request(crit_req, &mut eng);
+    for _ in 0..2 {
+        let req = make_req(&norm_model, &norm_ids, &mut next_id,
+                           Criticality::Normal, eng.now_us());
+        m.on_request(req, &mut eng);
+    }
+
+    const WARMUP: u64 = 4000;
+    const TOTAL: u64 = 8000;
+    let mut events: u64 = 0;
+    let mut measured_events: u64 = 0;
+    let mut measured_allocs: u64 = 0;
+    while events < TOTAL {
+        if eng.next_event_time().is_none() {
+            break;
+        }
+        eng.step_into(&mut completions);
+        events += 1;
+        let warm = events > WARMUP;
+        if warm {
+            measured_events += 1;
+        }
+        for c in &completions {
+            finished.clear();
+            let a0 = allocs();
+            counting(true);
+            m.on_completion(c, &mut eng, &mut finished);
+            counting(false);
+            if warm {
+                measured_allocs += allocs() - a0;
+            }
+            for &done in &finished {
+                let (model, ids, crit) = if done == crit_live {
+                    (&crit_model, &crit_ids, Criticality::Critical)
+                } else {
+                    (&norm_model, &norm_ids, Criticality::Normal)
+                };
+                let req = make_req(model, ids, &mut next_id, crit,
+                                   eng.now_us());
+                if crit == Criticality::Critical {
+                    crit_live = req.id;
+                }
+                let a0 = allocs();
+                counting(true);
+                m.on_request(req, &mut eng);
+                counting(false);
+                if warm {
+                    measured_allocs += allocs() - a0;
+                }
+            }
+        }
+    }
+    assert_eq!(events, TOTAL, "event loop stalled early");
+    assert!(measured_events > 1000);
+    let bound = measured_events / 4 + 64;
+    assert!(measured_allocs <= bound,
+            "contended scheduler path allocated {measured_allocs} times \
+             over {measured_events} events (bound {bound})");
+}

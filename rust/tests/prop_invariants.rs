@@ -9,6 +9,7 @@ use miriam::coordinator::scheduler_for;
 use miriam::coordinator::shaded_tree::{Leftover, ShadedTree};
 use miriam::elastic::candidate::Candidate;
 use miriam::elastic::shrink::{self, CriticalProfile, ShrinkConfig};
+use miriam::elastic::ElasticKernel;
 use miriam::elastic::transformer;
 use miriam::gpu::contention::{
     block_rates, block_rates_indexed, BlockWork, ContentionParams,
@@ -71,7 +72,10 @@ fn prop_shaded_tree_partitions_grid_and_work() {
                         block_threads: 64 },
             Candidate { n_blocks: k.grid, block_threads: k.block_threads },
         ];
-        let mut tree = ShadedTree::new(k.clone(), candidates);
+        let mut tree = ShadedTree::new(std::sync::Arc::new(ElasticKernel {
+            kernel: k.clone(),
+            candidates,
+        }));
         let mut blocks = 0u32;
         let mut flops = 0.0;
         let mut guard = 0;
@@ -84,9 +88,9 @@ fn prop_shaded_tree_partitions_grid_and_work() {
                 critical_active: rng.next_f64() < 0.7,
             };
             if let Some(s) = tree.next_shard(&left) {
-                blocks += s.grid;
-                flops += s.flops;
-                tree.shard_done(s.grid);
+                blocks += s.shape.grid;
+                flops += s.shape.flops;
+                tree.shard_done(s.shape.grid);
             }
             guard += 1;
             assert!(guard < 10_000, "case {case}: tree did not drain");

@@ -1,0 +1,130 @@
+//! Thread-count determinism of the parallel sweep runner (ISSUE 3
+//! tentpole contract): a sweep's per-cell results — including canonical
+//! engine traces — are byte-identical whether the grid runs on one worker
+//! or many, because cells share nothing and land in slots indexed by grid
+//! position. Also pins the seed-derivation rule and that the retained
+//! `miriam-ref` coordinator path walks the exact trajectory of the
+//! zero-clone fast path (so the bench legs measure cost, not behavior).
+
+use miriam::coordinator::driver::{self, RunOpts};
+use miriam::coordinator::scheduler_for;
+use miriam::coordinator::sweep::{self, SweepSpec};
+use miriam::gpu::spec::GpuSpec;
+use miriam::workloads::scenario;
+
+const DUR_US: f64 = 12_000.0;
+
+fn small_spec(trace: bool) -> SweepSpec {
+    SweepSpec {
+        platform: "rtx2060".into(),
+        duration_us: DUR_US,
+        scenarios: scenario::family(DUR_US).into_iter().take(2).collect(),
+        schedulers: vec!["sequential".into(), "miriam".into()],
+        seeds: 2,
+        trace,
+        reference_rates: false,
+    }
+}
+
+#[test]
+fn one_thread_and_many_threads_produce_byte_identical_cells() {
+    let spec = small_spec(true);
+    let a = sweep::run_sweep(&spec, 1).expect("1-thread sweep");
+    let b = sweep::run_sweep(&spec, 4).expect("4-thread sweep");
+    assert_eq!(a.cells.len(), 8); // 2 scenarios x 2 schedulers x 2 seeds
+    assert_eq!(a.cells.len(), b.cells.len());
+    for (x, y) in a.cells.iter().zip(&b.cells) {
+        assert_eq!(x.scenario, y.scenario);
+        assert_eq!(x.scheduler, y.scheduler);
+        assert_eq!(x.replica, y.replica);
+        assert_eq!(x.seed, y.seed);
+        assert_eq!(x.events, y.events, "{}/{}", x.scenario, x.scheduler);
+        assert_eq!(x.launches, y.launches);
+        assert_eq!(x.completed_critical, y.completed_critical);
+        assert_eq!(x.completed_normal, y.completed_normal);
+        assert_eq!(x.deadline_misses_critical, y.deadline_misses_critical);
+        // Latency stats must agree to the bit (NaN-safe comparison).
+        assert_eq!(x.crit_p50_us.to_bits(), y.crit_p50_us.to_bits());
+        assert_eq!(x.crit_p99_us.to_bits(), y.crit_p99_us.to_bits());
+        assert_eq!(x.throughput_rps.to_bits(), y.throughput_rps.to_bits());
+        // The tentpole contract: byte-identical canonical traces per cell.
+        let tx = x.trace_json.as_ref().expect("trace requested");
+        let ty = y.trace_json.as_ref().expect("trace requested");
+        assert!(!tx.is_empty());
+        assert_eq!(tx, ty,
+                   "{}/{}/replica {}: canonical traces differ across \
+                    thread counts", x.scenario, x.scheduler, x.replica);
+    }
+}
+
+#[test]
+fn replica_zero_reproduces_a_direct_driver_run() {
+    // Sweep cells at replica 0 keep the scenario's pinned seed, so they
+    // are the same runs the conformance suite pins.
+    let sc = scenario::by_name("duo-burst", DUR_US).unwrap();
+    let wl = sc.build();
+    let mut s = scheduler_for("sequential", &wl).unwrap();
+    let direct = driver::run_with(
+        GpuSpec::rtx2060(), &wl, s.as_mut(),
+        RunOpts { reference_rates: false, trace: true });
+    let direct_json = direct.trace.as_ref().unwrap().to_canonical_json();
+
+    let spec = SweepSpec {
+        platform: "rtx2060".into(),
+        duration_us: DUR_US,
+        scenarios: vec![sc],
+        schedulers: vec!["sequential".into()],
+        seeds: 1,
+        trace: true,
+        reference_rates: false,
+    };
+    let report = sweep::run_sweep(&spec, 2).unwrap();
+    assert_eq!(report.cells.len(), 1);
+    let cell = &report.cells[0];
+    assert_eq!(cell.replica, 0);
+    assert_eq!(cell.seed, 0x2B1);
+    assert_eq!(cell.trace_json.as_deref(), Some(direct_json.as_str()));
+    assert_eq!(cell.events, direct.events);
+}
+
+#[test]
+fn different_replicas_actually_decorrelate() {
+    // Replica 1 must be a different run than replica 0 on a stochastic
+    // scenario (otherwise "8 seeds" would be 8 copies of one sample).
+    let spec = SweepSpec {
+        platform: "rtx2060".into(),
+        duration_us: DUR_US,
+        scenarios: vec![scenario::by_name("duo-burst", DUR_US).unwrap()],
+        schedulers: vec!["sequential".into()],
+        seeds: 2,
+        trace: true,
+        reference_rates: false,
+    };
+    let report = sweep::run_sweep(&spec, 2).unwrap();
+    assert_eq!(report.cells.len(), 2);
+    assert_ne!(report.cells[0].seed, report.cells[1].seed);
+    assert_ne!(report.cells[0].trace_json, report.cells[1].trace_json);
+}
+
+#[test]
+fn miriam_ref_trace_matches_miriam_trace() {
+    // The retained pre-change coordinator plumbing must be decision-
+    // identical to the zero-clone fast path on a contended scenario.
+    let sc = scenario::by_name("duo-burst", DUR_US).unwrap();
+    let run = |sched: &str| {
+        let wl = sc.build();
+        let mut s = scheduler_for(sched, &wl).unwrap();
+        let mut st = driver::run_with(
+            GpuSpec::rtx2060(), &wl, s.as_mut(),
+            RunOpts { reference_rates: false, trace: true });
+        (st.trace.take().unwrap(), st)
+    };
+    let (t_fast, st_fast) = run("miriam");
+    let (t_ref, st_ref) = run("miriam-ref");
+    assert_eq!(st_fast.events, st_ref.events);
+    assert_eq!(st_fast.timeline.len(), st_ref.timeline.len());
+    let divs = t_fast.diff(&t_ref);
+    assert!(divs.is_empty(),
+            "miriam vs miriam-ref diverge at {} point(s); first: {}",
+            divs.len(), divs[0]);
+}

@@ -1,0 +1,86 @@
+#!/usr/bin/env python3
+"""Bench regression gate (ISSUE 3 satellite).
+
+Compares a freshly produced BENCH_engine.json against a committed baseline
+and fails on a >20% events/sec regression of the incremental engine path.
+
+Usage:
+    bench_gate.py MEASURED_JSON BASELINE_JSON [--tolerance 0.20]
+
+Bootstrap behaviour: if the baseline is missing, or carries
+``"bootstrap": true``, or has no numeric ``events_per_sec_incremental``,
+the gate prints the measured numbers and exits 0.
+
+Arming the gate — compare like-for-like: the baseline MUST be recorded
+under the same conditions the gate measures, i.e. promote the
+``BENCH_engine.json`` *artifact from a healthy CI run* (which is a
+``--smoke`` run on a CI runner) to ``benchmarks/BENCH_engine.baseline.json``.
+Do NOT commit a full run from a fast dev machine as the baseline: CI
+smoke throughput on a shared runner is far below a quiet workstation's
+full-run numbers and the gate would fail on every push. Full-run numbers
+belong in EXPERIMENTS.md §Perf (and cross-machine comparisons should use
+the machine-independent ``speedup`` / ``coordinator.improvement``
+ratios), not in this baseline. The 20% tolerance is sized for CI-runner
+noise around a CI-recorded baseline.
+"""
+
+import json
+import sys
+
+
+def main(argv):
+    if len(argv) < 3:
+        print(__doc__)
+        return 2
+    measured_path, baseline_path = argv[1], argv[2]
+    tolerance = 0.20
+    if "--tolerance" in argv:
+        tolerance = float(argv[argv.index("--tolerance") + 1])
+
+    with open(measured_path) as f:
+        measured = json.load(f)
+    m_inc = measured.get("events_per_sec_incremental")
+    m_ref = measured.get("events_per_sec_reference")
+    m_speedup = measured.get("speedup")
+    coord = measured.get("coordinator", {})
+    print(f"measured: incremental {m_inc} ev/s, reference {m_ref} ev/s, "
+          f"speedup {m_speedup}x, coordinator improvement "
+          f"{coord.get('improvement')}")
+
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        print(f"gate: no baseline at {baseline_path} — bootstrap pass. "
+              f"Promote a CI-run BENCH_engine.json artifact there to arm "
+              f"the gate (like-for-like conditions; see module docstring).")
+        return 0
+    b_inc = baseline.get("events_per_sec_incremental")
+    if baseline.get("bootstrap") or not isinstance(b_inc, (int, float)):
+        print("gate: baseline is a bootstrap placeholder — pass. "
+              "Promote a CI-run BENCH_engine.json artifact to arm the gate "
+              "(like-for-like conditions; see module docstring).")
+        return 0
+    if baseline.get("smoke") is not None and baseline.get("smoke") != \
+            measured.get("smoke"):
+        print("gate: baseline and measured runs used different modes "
+              f"(baseline smoke={baseline.get('smoke')}, measured "
+              f"smoke={measured.get('smoke')}) — not comparable, pass. "
+              "Re-record the baseline under the gate's conditions.")
+        return 0
+
+    if not isinstance(m_inc, (int, float)) or m_inc <= 0:
+        print("gate: FAIL — measured JSON has no events_per_sec_incremental")
+        return 1
+    floor = (1.0 - tolerance) * b_inc
+    if m_inc < floor:
+        print(f"gate: FAIL — incremental {m_inc:.0f} ev/s is below "
+              f"{floor:.0f} (baseline {b_inc:.0f} - {tolerance:.0%})")
+        return 1
+    print(f"gate: OK — incremental {m_inc:.0f} ev/s vs baseline "
+          f"{b_inc:.0f} (floor {floor:.0f})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
