@@ -1,0 +1,86 @@
+//! Admission-policy comparison across the 8-scenario family (ISSUE 4).
+//!
+//! One leg: the whole scenario family served through the live Miriam
+//! coordinator under each admission policy (`none` baseline,
+//! `token-bucket`, `deadline-feasible`). Per cell the table reports the
+//! SLO split (offered/admitted/shed/served), critical p99 latency,
+//! critical deadline misses, and best-effort throughput; a summary line
+//! per scenario states the acceptance comparison — under
+//! `deadline-feasible`, critical p99 must be no worse than the `none`
+//! baseline (admission only trims best-effort load) while best-effort
+//! throughput is reported per policy as the explicit trade.
+//!
+//! Writes `BENCH_serve.json` (canonical, byte-deterministic per seed —
+//! schema in EXPERIMENTS.md §Serve). CI smoke mode: append `-- --smoke`
+//! (or set `BENCH_SMOKE=1`).
+
+use miriam::coordinator::admission::{AdmissionPolicy, POLICIES};
+use miriam::gpu::spec::GpuSpec;
+use miriam::server::online::{run_serve_grid, ServeOpts};
+use miriam::workloads::scenario;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").is_ok();
+    let duration_us = if smoke { 25_000.0 } else { 500_000.0 };
+    let gpu = GpuSpec::rtx2060();
+    let scenarios = scenario::family(duration_us);
+    let opts = ServeOpts::default();
+
+    println!("# serve_online: {} scenarios x {} policies, {}s of arrivals \
+              per cell{}",
+             scenarios.len(), POLICIES.len(), duration_us / 1e6,
+             if smoke { " (smoke)" } else { "" });
+    println!("{:<16} {:<18} {:>8} {:>6} {:>8} {:>10} {:>6} {:>10}",
+             "scenario", "policy", "offered", "shed", "served", "crit p99",
+             "miss", "norm/s");
+    println!("{:<16} {:<18} {:>8} {:>6} {:>8} {:>10} {:>6} {:>10}",
+             "", "", "", "", "", "(ms)", "(crit)", "(req/s)");
+
+    let grid = run_serve_grid(&gpu, &scenarios, &POLICIES, &opts)
+        .expect("serve grid");
+    for c in &grid.cells {
+        println!("{:<16} {:<18} {:>8} {:>6} {:>8} {:>10.2} {:>6} {:>10.1}",
+                 c.scenario, c.policy.name(), c.offered(), c.shed(),
+                 c.served(), c.crit_p99_us() / 1e3,
+                 c.deadline_misses_critical(), c.normal_throughput_rps());
+    }
+
+    // Acceptance comparison: deadline-feasible critical p99 vs baseline.
+    println!("\n{:<16} {:>14} {:>14} {:>8} {:>12} {:>12}",
+             "scenario", "p99 none(ms)", "p99 feas(ms)", "ok",
+             "norm/s none", "norm/s feas");
+    let mut all_ok = true;
+    for sc in &grid.scenarios {
+        let base = grid.cell(sc, AdmissionPolicy::Open).expect("baseline");
+        let feas = grid
+            .cell(sc, AdmissionPolicy::DeadlineFeasible)
+            .expect("deadline-feasible cell");
+        let p_base = base.crit_p99_us();
+        let p_feas = feas.crit_p99_us();
+        // NaN-tolerant: a cell with zero critical completions (possible in
+        // very short smoke windows) compares as ok. The 5% + 5us slack
+        // covers FP-level padding-interleaving noise; anything beyond it
+        // is a real regression and fails the bench (and CI).
+        let ok = !(p_feas.is_finite() && p_base.is_finite())
+            || p_feas <= p_base * 1.05 + 5.0;
+        all_ok &= ok;
+        println!("{:<16} {:>14.2} {:>14.2} {:>8} {:>12.1} {:>12.1}",
+                 sc, p_base / 1e3, p_feas / 1e3,
+                 if ok { "yes" } else { "NO" },
+                 base.normal_throughput_rps(), feas.normal_throughput_rps());
+    }
+    println!("\ndeadline-feasible critical p99 no worse than baseline on \
+              every scenario: {}",
+             if all_ok { "yes" } else { "NO" });
+
+    std::fs::write("BENCH_serve.json", grid.to_json())
+        .expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
+
+    // The acceptance comparison is a gate, not a remark: a run where
+    // admission control worsened critical p99 must fail the CI step.
+    if !all_ok {
+        std::process::exit(1);
+    }
+}

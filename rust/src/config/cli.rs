@@ -6,7 +6,10 @@ use std::collections::HashMap;
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// Positional arguments, in order (the subcommand comes first).
     pub positional: Vec<String>,
+    /// `--key value` / `--key=value` flags (value-less flags map to
+    /// `"true"`).
     pub flags: HashMap<String, String>,
 }
 
@@ -36,14 +39,17 @@ impl Args {
         Ok(out)
     }
 
+    /// Parse the process arguments (argv[0] excluded).
     pub fn from_env() -> Result<Self, String> {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// String flag with a default.
     pub fn get<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.flags.get(key).map(String::as_str).unwrap_or(default)
     }
 
+    /// Float flag with a default; errors on an unparsable value.
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -51,6 +57,7 @@ impl Args {
         }
     }
 
+    /// Unsigned integer flag with a default; errors on an unparsable value.
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize, String> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -58,6 +65,7 @@ impl Args {
         }
     }
 
+    /// 64-bit unsigned flag with a default; errors on an unparsable value.
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64, String> {
         match self.flags.get(key) {
             None => Ok(default),
@@ -65,6 +73,7 @@ impl Args {
         }
     }
 
+    /// Whether the flag was given at all (with or without a value).
     pub fn has(&self, key: &str) -> bool {
         self.flags.contains_key(key)
     }

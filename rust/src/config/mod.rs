@@ -35,14 +35,17 @@ impl Default for RunConfig {
 }
 
 impl RunConfig {
+    /// The GPU preset this config names, if known.
     pub fn spec(&self) -> Option<GpuSpec> {
         GpuSpec::by_name(&self.platform)
     }
 
+    /// The MDTB workload this config names, if any.
     pub fn workload_spec(&self) -> Option<WorkloadSpec> {
         mdtb::by_name(&self.workload, self.duration_s * 1e6)
     }
 
+    /// Check platform, workload, scheduler names and duration.
     pub fn validate(&self) -> Result<(), String> {
         if self.spec().is_none() {
             return Err(format!("unknown platform {}", self.platform));

@@ -1,0 +1,516 @@
+//! Online admission control for the serving pipeline (ISSUE 4 tentpole).
+//!
+//! The batch driver ([`crate::coordinator::driver`]) admits every arrival
+//! unconditionally — fine for closed evaluation runs, wrong for the
+//! deployment regime the ROADMAP targets, where bursty tenants can bury
+//! the GPU far past any deadline (the DeepRT / EdgeServing observation).
+//! This module decides, *at arrival time and in simulated time*, whether
+//! a request enters the live coordinator or is shed:
+//!
+//! * [`AdmissionPolicy::Open`] (`none`) — admit everything; the
+//!   no-admission baseline every comparison is made against.
+//! * [`AdmissionPolicy::TokenBucket`] (`token-bucket`) — classic
+//!   per-tenant rate limiting: each tenant holds a bucket of
+//!   [`AdmissionConfig::bucket_capacity`] tokens refilled at
+//!   [`AdmissionConfig::refill_hz`]; a best-effort request is shed when
+//!   its tenant's bucket is empty.
+//! * [`AdmissionPolicy::DeadlineFeasible`] (`deadline-feasible`) —
+//!   model-aware control built on **elastic-kernel latency envelopes**
+//!   ([`ModelEnvelope`]): a best-effort request is shed when the
+//!   estimated backlog already exceeds [`AdmissionConfig::max_queue_us`]
+//!   (load shedding under burst), or when even the queue-drain estimate
+//!   plus the request's own padded envelope cannot meet its deadline.
+//!
+//! **Critical requests are never shed, under any policy** — the whole
+//! point of Miriam is that critical work owns the high-priority stream;
+//! admission control exists to protect it by trimming *best-effort*
+//! load. `rust/tests/prop_invariants.rs` pins this invariant together
+//! with token conservation and shed + admitted == offered accounting.
+//!
+//! Every decision is pure arithmetic over simulated time, so a serving
+//! run is byte-deterministic per seed (`rust/tests/serve_determinism.rs`).
+//!
+//! ```
+//! use miriam::coordinator::admission::{
+//!     AdmissionConfig, AdmissionController, AdmissionPolicy, Decision,
+//! };
+//! use miriam::gpu::contention::ContentionParams;
+//! use miriam::gpu::spec::GpuSpec;
+//! use miriam::workloads::mdtb;
+//!
+//! let wl = mdtb::mdtb_a(10_000.0).build();
+//! let mut ctrl = AdmissionController::new(
+//!     AdmissionPolicy::TokenBucket,
+//!     AdmissionConfig::default(),
+//!     &wl,
+//!     &GpuSpec::rtx2060(),
+//!     &ContentionParams::default(),
+//! );
+//! // Source 0 is MDTB-A's critical tenant: admitted under any policy.
+//! assert_eq!(ctrl.decide(0, 0.0), Decision::Admitted);
+//! ```
+
+use crate::gpu::contention::{standalone_demand, ContentionParams};
+use crate::gpu::kernel::Criticality;
+use crate::gpu::spec::GpuSpec;
+use crate::workloads::mdtb::Workload;
+use crate::workloads::models::ModelDesc;
+
+/// Smallest elastic block the coordinator will carve
+/// (`Miriam::leftover` floors pad blocks at 32 threads); the padded
+/// envelope assumes every shard degrades to this size.
+const ELASTIC_MIN_THREADS: u32 = 32;
+
+/// The admission policy applied to best-effort arrivals
+/// (CLI: `miriam serve-sim --policy <none|token-bucket|deadline-feasible>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AdmissionPolicy {
+    /// Admit everything (the no-admission baseline; CLI name `none`).
+    Open,
+    /// Per-tenant token buckets (CLI name `token-bucket`).
+    TokenBucket,
+    /// Envelope-based deadline feasibility + burst load shedding
+    /// (CLI name `deadline-feasible`).
+    DeadlineFeasible,
+}
+
+/// All policies, in presentation order (baseline first) — the default
+/// `serve-sim` / `benches/serve_online.rs` comparison set.
+pub const POLICIES: [AdmissionPolicy; 3] = [
+    AdmissionPolicy::Open,
+    AdmissionPolicy::TokenBucket,
+    AdmissionPolicy::DeadlineFeasible,
+];
+
+impl AdmissionPolicy {
+    /// The CLI / report name of the policy.
+    pub fn name(self) -> &'static str {
+        match self {
+            AdmissionPolicy::Open => "none",
+            AdmissionPolicy::TokenBucket => "token-bucket",
+            AdmissionPolicy::DeadlineFeasible => "deadline-feasible",
+        }
+    }
+
+    /// Parse a CLI policy name (case-insensitive).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" | "open" => Some(AdmissionPolicy::Open),
+            "token-bucket" | "token_bucket" => Some(AdmissionPolicy::TokenBucket),
+            "deadline-feasible" | "deadline_feasible" => {
+                Some(AdmissionPolicy::DeadlineFeasible)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Tunables shared by the admission policies. Every field has a CLI flag
+/// on `miriam serve-sim` (see `config/cli.rs` usage in `main.rs`).
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Token-bucket capacity per tenant (tokens; buckets start full).
+    pub bucket_capacity: f64,
+    /// Token refill rate per tenant (tokens per second).
+    pub refill_hz: f64,
+    /// Deadline-feasible burst guard: best-effort arrivals are shed while
+    /// the estimated admitted-but-unserved backlog exceeds this (us).
+    pub max_queue_us: f64,
+    /// How many ways the best-effort backlog drains concurrently — the
+    /// coordinator's pad-stream count (Miriam runs 3 pad streams;
+    /// CLI: `--drain-ways`).
+    pub drain_ways: f64,
+    /// How long a shed *closed-loop* client waits before retrying (us).
+    /// Open-loop shed requests are simply lost; a closed-loop client
+    /// would otherwise stall forever on its first shed.
+    pub shed_backoff_us: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            bucket_capacity: 16.0,
+            refill_hz: 40.0,
+            max_queue_us: 100_000.0,
+            drain_ways: 3.0,
+            shed_backoff_us: 2_000.0,
+        }
+    }
+}
+
+/// Why a request was shed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// Token bucket empty (tenant over its sustained rate).
+    RateLimited,
+    /// Best-effort backlog above [`AdmissionConfig::max_queue_us`].
+    Overloaded,
+    /// Even the drain estimate plus the request's own padded envelope
+    /// cannot meet its deadline.
+    Infeasible,
+}
+
+/// One admission decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// The request enters the coordinator.
+    Admitted,
+    /// The request is dropped before touching the GPU.
+    Shed(ShedReason),
+}
+
+/// End-to-end latency envelope of one model, derived offline from its
+/// kernel descriptors against a [`GpuSpec`] — the same inputs the elastic
+/// shrink consumes, so no simulation is needed to estimate feasibility.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelEnvelope {
+    /// Best-case end-to-end latency (us): the model alone on an idle GPU,
+    /// every kernel spread over all SMs at its standalone rate, bounded by
+    /// SM peak and DRAM bandwidth. A *lower* bound: if even this misses a
+    /// deadline, the request is infeasible on this hardware.
+    pub solo_us: f64,
+    /// Degraded end-to-end latency (us): every kernel carved to
+    /// minimum-size elastic shards (32-thread blocks, one per SM) as the
+    /// coordinator does under critical load, plus per-shard launch
+    /// overhead. An *upper*-flavored estimate of best-effort service time
+    /// while critical work is resident.
+    pub padded_us: f64,
+}
+
+/// Best-case envelope of one kernel: contention-free, every SM available.
+fn kernel_solo_us(
+    k: &crate::gpu::kernel::KernelDesc,
+    spec: &GpuSpec,
+    params: &ContentionParams,
+) -> f64 {
+    let d = standalone_demand(spec, params, k.block_threads);
+    // Blocks one SM can host concurrently under its thread/slot budgets.
+    let per_sm = (spec.max_threads_per_sm / k.block_threads.max(1))
+        .min(spec.max_blocks_per_sm)
+        .max(1);
+    let concurrent = (per_sm * spec.num_sms).min(k.grid.max(1)) as f64;
+    let total_rate =
+        (concurrent * d).min(spec.num_sms as f64 * spec.flops_per_sm_us);
+    let compute = k.flops / total_rate.max(1e-12);
+    let memory = if k.bytes > 0.0 {
+        k.bytes / spec.dram_bw_bytes_us
+    } else {
+        0.0
+    };
+    spec.kernel_launch_us + compute.max(memory)
+}
+
+/// Degraded envelope of one kernel: thin elastic shards under critical
+/// residency (one [`ELASTIC_MIN_THREADS`]-thread block per SM), charging
+/// launch overhead per shard wave.
+fn kernel_padded_us(
+    k: &crate::gpu::kernel::KernelDesc,
+    spec: &GpuSpec,
+    params: &ContentionParams,
+) -> f64 {
+    let d = standalone_demand(spec, params, ELASTIC_MIN_THREADS);
+    let total_rate = spec.num_sms as f64 * d;
+    let compute = k.flops / total_rate.max(1e-12);
+    let memory = if k.bytes > 0.0 {
+        k.bytes / spec.dram_bw_bytes_us
+    } else {
+        0.0
+    };
+    let shard_waves = k.grid.div_ceil(spec.num_sms).max(1) as f64;
+    shard_waves * spec.kernel_launch_us + compute.max(memory)
+}
+
+impl ModelEnvelope {
+    /// Compute both envelope bounds for `model` on `spec`.
+    pub fn of(model: &ModelDesc, spec: &GpuSpec, params: &ContentionParams)
+              -> Self {
+        let mut solo = 0.0;
+        let mut padded = 0.0;
+        for k in &model.kernels {
+            let ks = kernel_solo_us(k, spec, params);
+            solo += ks;
+            // Degraded service can never beat the contention-free bound
+            // (a 1-block kernel "spread" as thin shards would otherwise
+            // see more SMs than it ever uses).
+            padded += kernel_padded_us(k, spec, params).max(ks);
+        }
+        ModelEnvelope { solo_us: solo, padded_us: padded }
+    }
+}
+
+/// Per-tenant admission state.
+#[derive(Debug, Clone)]
+struct TenantState {
+    criticality: Criticality,
+    deadline_us: Option<f64>,
+    /// Token-bucket fill; starts at capacity.
+    tokens: f64,
+    /// Simulated time of the last refill.
+    last_refill_us: f64,
+}
+
+/// The admission controller: one per serving run, consulted on every
+/// arrival before the request reaches the coordinator. All state advances
+/// in simulated time, so decisions are deterministic per seed.
+#[derive(Debug)]
+pub struct AdmissionController {
+    policy: AdmissionPolicy,
+    cfg: AdmissionConfig,
+    tenants: Vec<TenantState>,
+    envelopes: Vec<ModelEnvelope>,
+    /// Estimated best-effort work admitted but not yet served (us of solo
+    /// service time) — the burst-guard signal.
+    backlog_us: f64,
+    critical_at_risk: u64,
+}
+
+impl AdmissionController {
+    /// Build a controller for `workload` on `spec`: envelopes are derived
+    /// per source model up front; buckets start full.
+    pub fn new(
+        policy: AdmissionPolicy,
+        cfg: AdmissionConfig,
+        workload: &Workload,
+        spec: &GpuSpec,
+        params: &ContentionParams,
+    ) -> Self {
+        let tenants = workload
+            .sources
+            .iter()
+            .map(|s| TenantState {
+                criticality: s.criticality,
+                deadline_us: s.deadline_us,
+                tokens: cfg.bucket_capacity,
+                last_refill_us: 0.0,
+            })
+            .collect();
+        let envelopes = workload
+            .sources
+            .iter()
+            .map(|s| ModelEnvelope::of(&s.model, spec, params))
+            .collect();
+        AdmissionController {
+            policy,
+            cfg,
+            tenants,
+            envelopes,
+            backlog_us: 0.0,
+            critical_at_risk: 0,
+        }
+    }
+
+    /// The policy this controller applies.
+    pub fn policy(&self) -> AdmissionPolicy {
+        self.policy
+    }
+
+    /// The latency envelope of `source`'s model.
+    pub fn envelope(&self, source: usize) -> &ModelEnvelope {
+        &self.envelopes[source]
+    }
+
+    /// Estimated admitted-but-unserved best-effort work (us).
+    pub fn backlog_us(&self) -> f64 {
+        self.backlog_us
+    }
+
+    /// Critical arrivals whose own deadline was already infeasible by the
+    /// solo envelope (admitted anyway — critical is never shed — but
+    /// worth surfacing: the deadline, not the scheduler, is the problem).
+    pub fn critical_at_risk(&self) -> u64 {
+        self.critical_at_risk
+    }
+
+    /// Decide whether the arrival from `source` at simulated time
+    /// `now_us` enters the coordinator. Critical sources are always
+    /// admitted; best-effort sources go through the configured policy.
+    pub fn decide(&mut self, source: usize, now_us: f64) -> Decision {
+        let env = self.envelopes[source];
+        let t = &mut self.tenants[source];
+        if t.criticality == Criticality::Critical {
+            // Counted under every policy (the quantity is a property of
+            // the deadline vs the hardware, not of the admission policy),
+            // so the field compares cleanly across BENCH_serve.json cells.
+            if let Some(d) = t.deadline_us {
+                if env.solo_us > d {
+                    self.critical_at_risk += 1;
+                }
+            }
+            return Decision::Admitted;
+        }
+        match self.policy {
+            AdmissionPolicy::Open => {
+                self.backlog_us += env.solo_us;
+                Decision::Admitted
+            }
+            AdmissionPolicy::TokenBucket => {
+                let dt = (now_us - t.last_refill_us).max(0.0);
+                t.tokens = (t.tokens + dt * self.cfg.refill_hz / 1e6)
+                    .min(self.cfg.bucket_capacity);
+                t.last_refill_us = now_us;
+                if t.tokens >= 1.0 {
+                    t.tokens -= 1.0;
+                    self.backlog_us += env.solo_us;
+                    Decision::Admitted
+                } else {
+                    Decision::Shed(ShedReason::RateLimited)
+                }
+            }
+            AdmissionPolicy::DeadlineFeasible => {
+                if self.backlog_us > self.cfg.max_queue_us {
+                    return Decision::Shed(ShedReason::Overloaded);
+                }
+                let est = self.backlog_us / self.cfg.drain_ways.max(1.0)
+                    + env.padded_us;
+                if t.deadline_us.is_some_and(|d| est > d) {
+                    return Decision::Shed(ShedReason::Infeasible);
+                }
+                self.backlog_us += env.solo_us;
+                Decision::Admitted
+            }
+        }
+    }
+
+    /// A previously admitted request from `source` finished: release its
+    /// backlog contribution (critical requests carry none).
+    pub fn on_served(&mut self, source: usize) {
+        if self.tenants[source].criticality == Criticality::Normal {
+            self.backlog_us =
+                (self.backlog_us - self.envelopes[source].solo_us).max(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::mdtb;
+
+    fn ctrl(policy: AdmissionPolicy, cfg: AdmissionConfig)
+            -> AdmissionController {
+        let wl = mdtb::mdtb_a(50_000.0).build();
+        AdmissionController::new(policy, cfg, &wl, &GpuSpec::rtx2060(),
+                                 &ContentionParams::default())
+    }
+
+    #[test]
+    fn policy_names_round_trip() {
+        for p in POLICIES {
+            assert_eq!(AdmissionPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(AdmissionPolicy::parse("NONE"),
+                   Some(AdmissionPolicy::Open));
+        assert!(AdmissionPolicy::parse("drop-everything").is_none());
+    }
+
+    #[test]
+    fn envelopes_are_positive_and_ordered() {
+        let wl = mdtb::mdtb_a(1.0).build();
+        let spec = GpuSpec::rtx2060();
+        let params = ContentionParams::default();
+        for s in &wl.sources {
+            let e = ModelEnvelope::of(&s.model, &spec, &params);
+            assert!(e.solo_us > 0.0);
+            assert!(e.padded_us >= e.solo_us,
+                    "padded {} < solo {}", e.padded_us, e.solo_us);
+        }
+    }
+
+    #[test]
+    fn open_policy_admits_everything() {
+        let mut c = ctrl(AdmissionPolicy::Open, AdmissionConfig::default());
+        for i in 0..1000 {
+            assert_eq!(c.decide(1, i as f64), Decision::Admitted);
+        }
+        assert!(c.backlog_us() > 0.0);
+    }
+
+    #[test]
+    fn critical_is_never_shed_even_with_empty_bucket() {
+        let cfg = AdmissionConfig {
+            bucket_capacity: 0.0,
+            refill_hz: 0.0,
+            ..AdmissionConfig::default()
+        };
+        let mut c = ctrl(AdmissionPolicy::TokenBucket, cfg);
+        for i in 0..100 {
+            assert_eq!(c.decide(0, i as f64), Decision::Admitted);
+            assert_eq!(c.decide(1, i as f64),
+                       Decision::Shed(ShedReason::RateLimited));
+        }
+    }
+
+    #[test]
+    fn token_bucket_drains_and_refills() {
+        let cfg = AdmissionConfig {
+            bucket_capacity: 2.0,
+            refill_hz: 1000.0, // 1 token per ms
+            ..AdmissionConfig::default()
+        };
+        let mut c = ctrl(AdmissionPolicy::TokenBucket, cfg);
+        assert_eq!(c.decide(1, 0.0), Decision::Admitted);
+        assert_eq!(c.decide(1, 0.0), Decision::Admitted);
+        assert_eq!(c.decide(1, 0.0),
+                   Decision::Shed(ShedReason::RateLimited));
+        // 1ms later one token has refilled.
+        assert_eq!(c.decide(1, 1_000.0), Decision::Admitted);
+        assert_eq!(c.decide(1, 1_000.0),
+                   Decision::Shed(ShedReason::RateLimited));
+    }
+
+    #[test]
+    fn burst_guard_sheds_when_backlog_exceeds_bound() {
+        let cfg = AdmissionConfig {
+            max_queue_us: 1.0, // absurdly tight: second admit must shed
+            ..AdmissionConfig::default()
+        };
+        let mut c = ctrl(AdmissionPolicy::DeadlineFeasible, cfg);
+        assert_eq!(c.decide(1, 0.0), Decision::Admitted);
+        assert_eq!(c.decide(1, 0.0),
+                   Decision::Shed(ShedReason::Overloaded));
+        // Serving the first request frees the backlog again.
+        c.on_served(1);
+        assert_eq!(c.decide(1, 0.0), Decision::Admitted);
+    }
+
+    #[test]
+    fn infeasible_deadline_sheds_normal_but_not_critical() {
+        use std::sync::Arc;
+
+        use crate::workloads::arrival::Arrival;
+        use crate::workloads::mdtb::{Source, Workload};
+        use crate::workloads::models;
+
+        let mk = |crit| Source {
+            model: Arc::new(models::alexnet()),
+            arrival: Arrival::Uniform { rate_hz: 10.0 },
+            criticality: crit,
+            deadline_us: Some(1.0), // far below any envelope
+        };
+        let wl = Workload {
+            name: "t".into(),
+            sources: vec![mk(Criticality::Critical), mk(Criticality::Normal)],
+            duration_us: 10_000.0,
+            seed: 1,
+        };
+        let mut c = AdmissionController::new(
+            AdmissionPolicy::DeadlineFeasible, AdmissionConfig::default(),
+            &wl, &GpuSpec::rtx2060(), &ContentionParams::default());
+        assert_eq!(c.decide(0, 0.0), Decision::Admitted);
+        assert_eq!(c.critical_at_risk(), 1);
+        assert_eq!(c.decide(1, 0.0),
+                   Decision::Shed(ShedReason::Infeasible));
+    }
+
+    #[test]
+    fn served_backlog_never_goes_negative() {
+        let mut c = ctrl(AdmissionPolicy::Open, AdmissionConfig::default());
+        c.on_served(1);
+        c.on_served(1);
+        assert_eq!(c.backlog_us(), 0.0);
+        // Critical completions never touch the backlog.
+        c.decide(0, 0.0);
+        c.on_served(0);
+        assert_eq!(c.backlog_us(), 0.0);
+    }
+}

@@ -28,6 +28,7 @@ struct TaskState {
     next_kernel: usize,
 }
 
+/// The Inter-stream Barrier baseline scheduler.
 pub struct InterStreamBarrier {
     critical_stream: StreamId,
     normal_stream: StreamId,
@@ -44,6 +45,8 @@ pub struct InterStreamBarrier {
 }
 
 impl InterStreamBarrier {
+    /// A fresh IB scheduler with the default barrier cost (call `init`
+    /// before use).
     pub fn new() -> Self {
         InterStreamBarrier {
             critical_stream: 0,

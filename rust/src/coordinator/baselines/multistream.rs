@@ -10,6 +10,7 @@ use crate::gpu::engine::{Completion, Engine};
 use crate::gpu::kernel::{Criticality, LaunchConfig};
 use crate::gpu::stream::{LaunchTag, StreamId};
 
+/// The Multi-stream + Priority baseline scheduler.
 pub struct MultiStream {
     critical_stream: StreamId,
     /// Normal tasks round-robin across several streams (one per
@@ -22,6 +23,7 @@ pub struct MultiStream {
 }
 
 impl MultiStream {
+    /// A fresh Multi-stream scheduler (call `init` before use).
     pub fn new() -> Self {
         MultiStream {
             critical_stream: 0,

@@ -12,6 +12,8 @@ use crate::gpu::engine::{Completion, Engine};
 use crate::gpu::kernel::{Criticality, LaunchConfig};
 use crate::gpu::stream::{LaunchTag, StreamId};
 
+/// The Sequential baseline scheduler: one task on the GPU at a time,
+/// critical queue always served first.
 pub struct Sequential {
     stream: StreamId,
     critical: VecDeque<Req>,
@@ -21,6 +23,7 @@ pub struct Sequential {
 }
 
 impl Sequential {
+    /// A fresh Sequential scheduler (call `init` before use).
     pub fn new() -> Self {
         Sequential {
             stream: 0,

@@ -15,19 +15,43 @@ use crate::gpu::spec::GpuSpec;
 use crate::workloads::mdtb::Workload;
 use crate::workloads::rng::Rng;
 
-/// Total-ordered f64 key for the arrival heap.
+/// Total-ordered f64 key for the arrival heap — shared with the online
+/// serving loop (`crate::server::online`), which runs the same
+/// merge-arrivals-with-engine-events discipline.
 #[derive(Debug, Clone, Copy, PartialEq)]
-struct T(f64);
-impl Eq for T {}
-impl PartialOrd for T {
+pub(crate) struct TimeKey(pub(crate) f64);
+impl Eq for TimeKey {}
+impl PartialOrd for TimeKey {
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(other))
     }
 }
-impl Ord for T {
+impl Ord for TimeKey {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         self.0.partial_cmp(&other.0).unwrap_or(std::cmp::Ordering::Equal)
     }
+}
+
+/// The pending-arrival heap: a (time, source index) min-heap.
+pub(crate) type ArrivalHeap = BinaryHeap<Reverse<(TimeKey, usize)>>;
+
+/// Pre-generate every source's open-loop arrivals (closed-loop sources
+/// contribute their t=0 seeds) into a fresh [`ArrivalHeap`]. Shared by
+/// [`run_with`] and the online serving loop so the two paths draw the
+/// exact same arrival stream from a given `(workload, rng)` state.
+pub(crate) fn initial_arrivals(workload: &Workload, rng: &mut Rng)
+                               -> ArrivalHeap {
+    let mut arrivals = ArrivalHeap::new();
+    for (i, src) in workload.sources.iter().enumerate() {
+        for t in src.arrival.schedule(workload.duration_us, rng) {
+            // A NaN arrival would corrupt the heap ordering silently —
+            // same contract as the engine's timer heap (ISSUE 3 satellite).
+            debug_assert!(t.is_finite(),
+                          "source {i} produced non-finite arrival {t}");
+            arrivals.push(Reverse((TimeKey(t), i)));
+        }
+    }
+    arrivals
 }
 
 /// Engine configuration for a run; perf experiments and differential
@@ -76,17 +100,7 @@ pub fn run_with(spec: GpuSpec, workload: &Workload,
         .collect();
 
     let mut rng = Rng::new(workload.seed);
-    // (time, source) min-heap of pending arrivals.
-    let mut arrivals: BinaryHeap<Reverse<(T, usize)>> = BinaryHeap::new();
-    for (i, src) in workload.sources.iter().enumerate() {
-        for t in src.arrival.schedule(workload.duration_us, &mut rng) {
-            // A NaN arrival would corrupt the heap ordering silently —
-            // same contract as the engine's timer heap (ISSUE 3 satellite).
-            debug_assert!(t.is_finite(),
-                          "source {i} produced non-finite arrival {t}");
-            arrivals.push(Reverse((T(t), i)));
-        }
-    }
+    let mut arrivals = initial_arrivals(workload, &mut rng);
 
     let mut stats = RunStats {
         scheduler: scheduler.name().to_string(),
@@ -105,14 +119,16 @@ pub fn run_with(spec: GpuSpec, workload: &Workload,
     let wall = Instant::now();
 
     loop {
-        let t_arr = arrivals.peek().map(|Reverse((T(t), _))| *t);
+        let t_arr = arrivals.peek().map(|Reverse((TimeKey(t), _))| *t);
         let t_ev = eng.next_event_time();
         match (t_arr, t_ev) {
             (None, None) => break,
             (Some(ta), te) if te.map_or(true, |te| ta <= te) => {
                 // Deliver every arrival at time ta.
                 eng.advance_to(ta);
-                while let Some(Reverse((T(t), src))) = arrivals.peek().copied() {
+                while let Some(Reverse((TimeKey(t), src))) =
+                    arrivals.peek().copied()
+                {
                     if t > ta {
                         break;
                     }
@@ -168,7 +184,8 @@ pub fn run_with(spec: GpuSpec, workload: &Workload,
                         if s.arrival.is_closed_loop()
                             && eng.now_us() < workload.duration_us
                         {
-                            arrivals.push(Reverse((T(eng.now_us()), src)));
+                            arrivals
+                                .push(Reverse((TimeKey(eng.now_us()), src)));
                         }
                     }
                 }
@@ -195,8 +212,10 @@ pub fn run_with(spec: GpuSpec, workload: &Workload,
     stats
 }
 
-/// Record the pinned golden-trace cells ([`scenario::GOLDEN_CELLS`] at
-/// [`scenario::GOLDEN_PLATFORM`] / [`scenario::GOLDEN_DURATION_US`]) into
+/// Record the pinned golden-trace cells
+/// ([`crate::workloads::scenario::GOLDEN_CELLS`] at
+/// [`crate::workloads::scenario::GOLDEN_PLATFORM`] /
+/// [`crate::workloads::scenario::GOLDEN_DURATION_US`]) into
 /// `dir` as canonical JSON. Returns (path, event count) per cell. The
 /// single writer shared by the `scenarios --record-golden` CLI and the
 /// conformance suite's bootstrap/UPDATE_GOLDEN path, so the two can

@@ -451,6 +451,10 @@ impl Scheduler for Miriam {
         // Either way resources were freed: pad.
         self.pump(eng);
     }
+
+    fn pending_normal(&self) -> Option<usize> {
+        Some(self.normal_queue.len())
+    }
 }
 
 #[cfg(test)]

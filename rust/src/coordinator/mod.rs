@@ -9,7 +9,11 @@
 //!   Barrier.
 //! * [`sweep`] — parallel deterministic sweep runner over the
 //!   scenario × scheduler × seed grid (ISSUE 3).
+//! * [`admission`] — online admission control (token buckets,
+//!   deadline-feasibility envelopes, burst shedding) in front of the
+//!   coordinator (ISSUE 4); driven by `crate::server::online`.
 
+pub mod admission;
 pub mod baselines;
 pub mod driver;
 pub mod miriam;
@@ -18,6 +22,7 @@ pub mod shaded_tree;
 pub mod stats;
 pub mod sweep;
 
+pub use admission::{AdmissionConfig, AdmissionController, AdmissionPolicy};
 pub use baselines::{InterStreamBarrier, MultiStream, Sequential};
 pub use miriam::Miriam;
 pub use scheduler::{Req, Scheduler};

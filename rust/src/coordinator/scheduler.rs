@@ -14,21 +14,26 @@ use crate::workloads::models::ModelRef;
 /// One inference request flowing through the system.
 #[derive(Debug, Clone)]
 pub struct Req {
+    /// Driver-assigned request id, unique within a run.
     pub id: u64,
     /// Index of the originating source in the workload.
     pub source: usize,
+    /// The model this request runs (shared, never deep-cloned per request).
     pub model: ModelRef,
     /// Interned engine name id of each kernel in `model.kernels` (parallel
     /// vector), interned once per run by the driver at workload load — so
     /// per-request scheduling never hashes a kernel-name `String` (ISSUE 3
     /// zero-clone fast path). Valid for the engine of the current run only.
     pub name_ids: Arc<Vec<u32>>,
+    /// Task class (critical tasks get the high-priority treatment).
     pub criticality: Criticality,
+    /// Simulated arrival time (us).
     pub arrival_us: f64,
 }
 
 /// Coordination policy.
 pub trait Scheduler {
+    /// Stable scheduler name (CLI / report key).
     fn name(&self) -> &'static str;
 
     /// Create streams, pre-generate elastic kernels, etc.
@@ -43,6 +48,15 @@ pub trait Scheduler {
     /// no per-event allocation (ISSUE 3 satellite).
     fn on_completion(&mut self, comp: &Completion, eng: &mut Engine,
                      finished: &mut Vec<u64>);
+
+    /// Number of best-effort requests currently queued inside the policy,
+    /// when the policy tracks one (`None` otherwise — the baselines keep
+    /// per-class queues with different semantics). The online serving
+    /// loop ([`crate::server::online`]) samples this after each arrival
+    /// batch to report the peak best-effort queue depth per run.
+    fn pending_normal(&self) -> Option<usize> {
+        None
+    }
 }
 
 #[cfg(test)]

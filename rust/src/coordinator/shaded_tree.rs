@@ -42,7 +42,9 @@ pub struct Leftover {
 /// index within its kernel instance (names as `kernel#es{index}`).
 #[derive(Debug, Clone, Copy)]
 pub struct Shard {
+    /// Shard index within its kernel instance.
     pub index: u32,
+    /// The shard's launch geometry and covered work.
     pub shape: LaunchShape,
 }
 
@@ -60,6 +62,7 @@ pub struct ShadedTree {
 }
 
 impl ShadedTree {
+    /// A fresh tree over one elastic-kernel instance (all work pending).
     pub fn new(ek: Arc<ElasticKernel>) -> Self {
         assert!(!ek.candidates.is_empty(),
                 "need at least the identity candidate");
@@ -67,6 +70,7 @@ impl ShadedTree {
         ShadedTree { ek, remaining, inflight_blocks: 0, shards_cut: 0 }
     }
 
+    /// The base kernel this tree decomposes.
     pub fn kernel(&self) -> &KernelDesc {
         &self.ek.kernel
     }
@@ -92,6 +96,7 @@ impl ShadedTree {
         self.remaining == 0 && self.inflight_blocks == 0
     }
 
+    /// Shards dispatched so far (the sharding degree achieved).
     pub fn shards_cut(&self) -> u32 {
         self.shards_cut
     }

@@ -10,8 +10,11 @@ use crate::gpu::trace::Trace;
 /// Outcome of one simulated run.
 #[derive(Debug, Clone, Default)]
 pub struct RunStats {
+    /// Scheduler the run used.
     pub scheduler: String,
+    /// Workload name.
     pub workload: String,
+    /// GPU preset name.
     pub platform: String,
     /// End-to-end latency (us) of each completed critical task.
     pub critical_latencies_us: Vec<f64>,
@@ -69,10 +72,12 @@ fn quantile(sorted: &[f64], q: f64) -> f64 {
 }
 
 impl RunStats {
+    /// Completed critical tasks.
     pub fn completed_critical(&self) -> usize {
         self.critical_latencies_us.len()
     }
 
+    /// Completed normal tasks.
     pub fn completed_normal(&self) -> usize {
         self.normal_latencies_us.len()
     }
@@ -86,22 +91,27 @@ impl RunStats {
             / (self.span_us / 1e6)
     }
 
+    /// Mean critical-task latency (us; NaN when none completed).
     pub fn critical_latency_mean_us(&self) -> f64 {
         mean(&self.critical_latencies_us)
     }
 
+    /// p99 critical-task latency (us; NaN when none completed).
     pub fn critical_latency_p99_us(&self) -> f64 {
         self.critical_latency_quantile_us(0.99)
     }
 
+    /// Critical-task latency quantile (Hyndman–Fan type 7 semantics).
     pub fn critical_latency_quantile_us(&self, q: f64) -> f64 {
         sorted_quantile(&self.critical_latencies_us, q)
     }
 
+    /// Mean normal-task latency (us; NaN when none completed).
     pub fn normal_latency_mean_us(&self) -> f64 {
         mean(&self.normal_latencies_us)
     }
 
+    /// Normal-task latency quantile (HF-7 semantics).
     pub fn normal_latency_quantile_us(&self, q: f64) -> f64 {
         sorted_quantile(&self.normal_latencies_us, q)
     }
@@ -142,7 +152,9 @@ impl RunStats {
     }
 }
 
-fn mean(v: &[f64]) -> f64 {
+/// Arithmetic mean; NaN on an empty sample. Shared with the online
+/// serving loop's per-tenant accounting, like [`sorted_quantile`].
+pub(crate) fn mean(v: &[f64]) -> f64 {
     if v.is_empty() {
         f64::NAN
     } else {
@@ -150,8 +162,11 @@ fn mean(v: &[f64]) -> f64 {
     }
 }
 
-/// [`quantile`] over an unsorted sample (sorts a copy).
-fn sorted_quantile(v: &[f64], q: f64) -> f64 {
+/// [`quantile`] over an unsorted sample (sorts a copy). Shared with the
+/// online serving loop's per-tenant outcome accounting
+/// (`crate::server::online`), so "p99" means the same thing in
+/// `BENCH_serve.json` as it does in `BENCH_sweep.json`.
+pub(crate) fn sorted_quantile(v: &[f64], q: f64) -> f64 {
     let mut v = v.to_vec();
     v.sort_by(|a, b| a.partial_cmp(b).unwrap());
     quantile(&v, q)

@@ -43,7 +43,9 @@ pub struct SweepSpec {
     /// Simulated window per cell (us) — metadata; the scenarios carry
     /// their own duration.
     pub duration_us: f64,
+    /// The scenarios spanning the grid's first axis.
     pub scenarios: Vec<ScenarioSpec>,
+    /// Scheduler names spanning the second axis.
     pub schedulers: Vec<String>,
     /// Seed replicas per (scenario, scheduler) cell; replica seeds come
     /// from [`derive_seed`].
@@ -60,22 +62,37 @@ pub struct SweepSpec {
 /// One completed grid cell.
 #[derive(Debug, Clone)]
 pub struct CellResult {
+    /// Scenario name.
     pub scenario: String,
+    /// Scheduler name.
     pub scheduler: String,
+    /// Seed-replica index within the cell's (scenario, scheduler) pair.
     pub replica: u32,
     /// The derived workload seed the cell actually ran with.
     pub seed: u64,
+    /// Completed critical tasks.
     pub completed_critical: usize,
+    /// Completed normal tasks.
     pub completed_normal: usize,
+    /// Kernel launches recorded on the timeline.
     pub launches: usize,
+    /// Median critical-task latency (us; NaN when none completed).
     pub crit_p50_us: f64,
+    /// p99 critical-task latency (us; NaN when none completed).
     pub crit_p99_us: f64,
+    /// Mean critical-task latency (us; NaN when none completed).
     pub crit_mean_us: f64,
+    /// Median normal-task latency (us; NaN when none completed).
     pub normal_p50_us: f64,
+    /// Overall completed requests per second of simulated span.
     pub throughput_rps: f64,
+    /// Critical completions past their deadline.
     pub deadline_misses_critical: u64,
+    /// Normal completions past their deadline.
     pub deadline_misses_normal: u64,
+    /// Average achieved occupancy over active SM time, [0, 1].
     pub achieved_occupancy: f64,
+    /// Simulator events processed.
     pub events: u64,
     /// Host wall time of this cell's run (ns) — measured inside the run,
     /// so it is meaningful per cell even under parallel execution.
@@ -110,6 +127,7 @@ impl CellResult {
         }
     }
 
+    /// Simulator events per host second of this cell's own run.
     pub fn events_per_sec(&self) -> f64 {
         if self.wall_ns == 0 {
             return 0.0;
@@ -121,21 +139,31 @@ impl CellResult {
 /// Per-(scenario, scheduler) aggregate across seed replicas.
 #[derive(Debug, Clone)]
 pub struct Aggregate {
+    /// Scenario name.
     pub scenario: String,
+    /// Scheduler name.
     pub scheduler: String,
+    /// Number of replicas aggregated.
     pub replicas: u32,
     /// Means over replicas with a finite value (NaN when none had one,
     /// e.g. zero critical completions everywhere).
     pub mean_crit_p50_us: f64,
+    /// Mean p99 critical latency over replicas with a finite value.
     pub mean_crit_p99_us: f64,
+    /// Mean throughput over replicas with a finite value.
     pub mean_throughput_rps: f64,
+    /// Critical deadline misses summed over replicas.
     pub deadline_misses_critical: u64,
+    /// Normal deadline misses summed over replicas.
     pub deadline_misses_normal: u64,
+    /// Simulator events summed over replicas.
     pub events: u64,
+    /// Per-cell wall time summed over replicas (ns).
     pub wall_ns: u64,
 }
 
 impl Aggregate {
+    /// Events per second over the aggregate's summed wall time.
     pub fn events_per_sec(&self) -> f64 {
         if self.wall_ns == 0 {
             return 0.0;
@@ -147,11 +175,17 @@ impl Aggregate {
 /// A completed sweep.
 #[derive(Debug, Clone)]
 pub struct SweepReport {
+    /// GPU preset name.
     pub platform: String,
+    /// Simulated window per cell (us).
     pub duration_us: f64,
+    /// Worker threads the sweep ran on.
     pub threads: usize,
+    /// Seed replicas per (scenario, scheduler) cell.
     pub seeds: u32,
+    /// Scenario names, in grid order.
     pub scenarios: Vec<String>,
+    /// Scheduler names, in grid order.
     pub schedulers: Vec<String>,
     /// Cells in deterministic grid order (scenario-major, then scheduler,
     /// then replica) — independent of worker interleaving.
@@ -163,6 +197,7 @@ pub struct SweepReport {
 }
 
 impl SweepReport {
+    /// Simulator events summed over all cells.
     pub fn total_events(&self) -> u64 {
         self.cells.iter().map(|c| c.events).sum()
     }

@@ -26,6 +26,7 @@ use crate::gpu::spec::GpuSpec;
 /// artifact Miriam's offline phase hands to the runtime coordinator.
 #[derive(Debug, Clone)]
 pub struct ElasticKernel {
+    /// The original (untransformed) kernel.
     pub kernel: KernelDesc,
     /// Shrunk candidate set, best (highest WIScore*OScore) first.
     pub candidates: Vec<Candidate>,

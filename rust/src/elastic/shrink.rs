@@ -23,11 +23,14 @@ use crate::gpu::spec::GpuSpec;
 /// (`N_blk_rt`, `S_blk_rt` in Table 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CriticalProfile {
+    /// Grid size of the critical co-runner (`N_blk_rt`).
     pub n_blk_rt: u32,
+    /// Block threads of the critical co-runner (`S_blk_rt`).
     pub s_blk_rt: u32,
 }
 
 impl CriticalProfile {
+    /// The profile a kernel presents when launched untransformed.
     pub fn from_kernel(k: &KernelDesc) -> Self {
         CriticalProfile { n_blk_rt: k.grid, s_blk_rt: k.block_threads }
     }

@@ -23,10 +23,15 @@ use crate::gpu::kernel::KernelDesc;
 /// generated CUDA/Pallas code.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ElasticMapping {
+    /// First logical block this shard covers.
     pub logical_start: u32,
+    /// Logical blocks this shard covers.
     pub logical_blocks: u32,
+    /// Logical threads per logical block (the original block size).
     pub logical_threads: u32,
+    /// Physical blocks dispatched.
     pub phys_blocks: u32,
+    /// Persistent threads per physical block.
     pub phys_threads: u32,
 }
 

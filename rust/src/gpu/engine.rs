@@ -152,7 +152,9 @@ struct BlockSlot {
 /// Completion event the engine reports to the driver.
 #[derive(Debug, Clone)]
 pub struct Completion {
+    /// Tag of the launch that completed.
     pub tag: LaunchTag,
+    /// The finished launch's timeline record.
     pub record: LaunchRecord,
 }
 
@@ -165,9 +167,11 @@ pub struct Completion {
 /// reading it fresh per carve costs nothing.
 #[derive(Debug, Clone, Copy)]
 pub struct Residency {
+    /// Current simulated time (us).
     pub now_us: f64,
     /// Resident critical blocks count (total) and their block size.
     pub critical_blocks: u32,
+    /// Largest resident critical block size (threads; 0 when none).
     pub critical_block_threads: u32,
     /// Pending (undispatched) critical blocks across streams.
     pub critical_pending: u32,
@@ -179,12 +183,15 @@ pub struct Residency {
 /// (Miriam's coordinator reads leftover resources from this; paper §7).
 #[derive(Debug, Clone)]
 pub struct GpuSnapshot {
+    /// Current simulated time (us).
     pub now_us: f64,
-    /// Per-SM (threads_used, blocks_resident).
+    /// Per-SM thread slots in use.
     pub sm_threads_used: Vec<u32>,
+    /// Per-SM resident block counts.
     pub sm_blocks: Vec<u32>,
     /// Resident critical blocks count (total) and their block size.
     pub critical_blocks: u32,
+    /// Largest resident critical block size (threads; 0 when none).
     pub critical_block_threads: u32,
     /// Pending (undispatched) critical blocks across streams.
     pub critical_pending: u32,
@@ -194,7 +201,9 @@ pub struct GpuSnapshot {
 
 /// The simulator.
 pub struct Engine {
+    /// Hardware parameters of the simulated GPU.
     pub spec: GpuSpec,
+    /// Contention-model tunables.
     pub params: ContentionParams,
     now_us: f64,
     streams: Vec<Stream>,
@@ -262,10 +271,13 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// An idle engine over `spec` with default contention parameters.
     pub fn new(spec: GpuSpec) -> Self {
         Self::with_params(spec, ContentionParams::default())
     }
 
+    /// An idle engine with explicit contention parameters (calibration
+    /// experiments; see EXPERIMENTS.md §Calib).
     pub fn with_params(spec: GpuSpec, params: ContentionParams) -> Self {
         let n = spec.num_sms as usize;
         let mut sm_heap = BinaryHeap::with_capacity(2 * n);
@@ -362,10 +374,13 @@ impl Engine {
         id
     }
 
+    /// Current simulated time (us).
     pub fn now_us(&self) -> f64 {
         self.now_us
     }
 
+    /// The metrics accumulated so far (per-name occupancy is resolved
+    /// only by [`Engine::into_metrics`]).
     pub fn metrics(&self) -> &SimMetrics {
         &self.metrics
     }

@@ -11,7 +11,10 @@
 /// requirements; normal tasks run best-effort).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Criticality {
+    /// Hard real-time task: latency protected, never shed.
     Critical,
+    /// Best-effort task: padded into leftover resources, may be shed by
+    /// the online admission controller.
     Normal,
 }
 
@@ -108,10 +111,12 @@ impl LaunchConfig {
         }
     }
 
+    /// FLOPs carried by one thread block of this launch.
     pub fn flops_per_block(&self) -> f64 {
         self.flops / self.grid as f64
     }
 
+    /// DRAM bytes carried by one thread block of this launch.
     pub fn bytes_per_block(&self) -> f64 {
         self.bytes / self.grid as f64
     }
@@ -124,11 +129,17 @@ impl LaunchConfig {
 /// shard and critical paths) never allocate a name `String` per launch.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LaunchShape {
+    /// Physical thread blocks to dispatch.
     pub grid: u32,
+    /// Threads per physical block.
     pub block_threads: u32,
+    /// Shared memory per block, bytes.
     pub smem_per_block: u32,
+    /// Registers per thread.
     pub regs_per_thread: u32,
+    /// FLOPs this launch performs.
     pub flops: f64,
+    /// DRAM bytes this launch moves.
     pub bytes: f64,
 }
 
@@ -145,10 +156,12 @@ impl LaunchShape {
         }
     }
 
+    /// FLOPs carried by one thread block of this shape.
     pub fn flops_per_block(&self) -> f64 {
         self.flops / self.grid as f64
     }
 
+    /// DRAM bytes carried by one thread block of this shape.
     pub fn bytes_per_block(&self) -> f64 {
         self.bytes / self.grid as f64
     }

@@ -9,9 +9,13 @@ use crate::gpu::stream::{LaunchTag, StreamId};
 /// Completed-launch record (one row of the Fig. 9 timeline).
 #[derive(Debug, Clone)]
 pub struct LaunchRecord {
+    /// The launch's engine-assigned tag.
     pub tag: LaunchTag,
+    /// Resolved kernel name (shards carry their `#esN` suffix).
     pub name: String,
+    /// Stream the launch ran on.
     pub stream: StreamId,
+    /// Task class of the submitting request.
     pub criticality: Criticality,
     /// Submission time (us).
     pub submit_us: f64,
@@ -71,7 +75,9 @@ impl OccupancyAccum {
 /// Everything a simulation run reports.
 #[derive(Debug, Clone, Default)]
 pub struct SimMetrics {
+    /// Completed launches in completion order.
     pub records: Vec<LaunchRecord>,
+    /// Occupancy integrals (paper §8.1.4).
     pub occupancy: OccupancyAccum,
     /// Total simulated time (us).
     pub sim_time_us: f64,
@@ -80,6 +86,7 @@ pub struct SimMetrics {
 }
 
 impl SimMetrics {
+    /// Completed launches of one task class.
     pub fn records_for(&self, crit: Criticality) -> impl Iterator<Item = &LaunchRecord> {
         self.records.iter().filter(move |r| r.criticality == crit)
     }

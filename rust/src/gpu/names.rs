@@ -16,6 +16,7 @@ pub struct NameTable {
 }
 
 impl NameTable {
+    /// An empty table.
     pub fn new() -> Self {
         Self::default()
     }
@@ -41,10 +42,12 @@ impl NameTable {
         self.index.get(name).copied()
     }
 
+    /// Number of interned names.
     pub fn len(&self) -> usize {
         self.names.len()
     }
 
+    /// Whether no names were interned yet.
     pub fn is_empty(&self) -> bool {
         self.names.is_empty()
     }

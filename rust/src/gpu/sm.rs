@@ -17,17 +17,24 @@ use crate::gpu::spec::GpuSpec;
 /// Resource demand of one thread block.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BlockDemand {
+    /// Threads the block occupies.
     pub threads: u32,
+    /// Shared memory the block occupies, bytes.
     pub smem: u32,
-    pub regs: u32, // total registers = regs_per_thread * threads
+    /// Total registers the block occupies (= regs_per_thread * threads).
+    pub regs: u32,
 }
 
 /// Mutable occupancy state of one SM.
 #[derive(Debug, Clone)]
 pub struct SmState {
+    /// Thread slots in use.
     pub threads_used: u32,
+    /// Shared memory in use, bytes.
     pub smem_used: u32,
+    /// Registers in use.
     pub regs_used: u32,
+    /// Thread blocks currently resident.
     pub blocks_resident: u32,
     /// Sum of resident blocks' standalone compute demand (FLOP/us) — the
     /// intra-SM oversubscription denominator of the rate model.
@@ -39,6 +46,7 @@ pub struct SmState {
 }
 
 impl SmState {
+    /// A fully idle SM.
     pub fn empty() -> Self {
         SmState {
             threads_used: 0,
@@ -122,6 +130,7 @@ impl SmState {
         self.threads_used.div_ceil(spec.warp_size)
     }
 
+    /// Whether no blocks are resident.
     pub fn is_idle(&self) -> bool {
         self.blocks_resident == 0
     }

@@ -10,7 +10,9 @@ use std::collections::VecDeque;
 
 use crate::gpu::kernel::{Criticality, LaunchShape};
 
+/// Dense stream identifier (`0..Engine::num_streams`).
 pub type StreamId = u32;
+/// Unique, monotonically increasing id the engine assigns per launch.
 pub type LaunchTag = u64;
 
 /// A launch queued on a stream, waiting for its turn. Carries only the
@@ -19,11 +21,14 @@ pub type LaunchTag = u64;
 /// itself (ISSUE 3 zero-clone fast path).
 #[derive(Debug, Clone, Copy)]
 pub struct QueuedLaunch {
+    /// The launch's engine-assigned tag.
     pub tag: LaunchTag,
     /// Interned id of the launch name in the engine's
     /// [`crate::gpu::names::NameTable`], assigned at submit.
     pub name_id: u32,
+    /// Launch geometry and work.
     pub shape: LaunchShape,
+    /// Task class of the submitting request.
     pub criticality: Criticality,
     /// Extra delay (us) before the launch may start dispatching once it
     /// reaches the head of its stream — models sync/barrier costs the
@@ -37,9 +42,11 @@ pub struct QueuedLaunch {
 /// One GPU stream.
 #[derive(Debug)]
 pub struct Stream {
+    /// This stream's id.
     pub id: StreamId,
     /// Larger value = higher dispatch priority.
     pub priority: i32,
+    /// Launches waiting behind the active head.
     pub queue: VecDeque<QueuedLaunch>,
     /// Whether a launch from this stream is currently dispatching or
     /// executing (a stream runs at most one kernel at a time). The active
@@ -49,14 +56,18 @@ pub struct Stream {
 }
 
 impl Stream {
+    /// An empty stream with the given dispatch priority.
     pub fn new(id: StreamId, priority: i32) -> Self {
         Stream { id, priority, queue: VecDeque::new(), head_active: false }
     }
 
+    /// Enqueue a launch at the back (FIFO within the stream).
     pub fn push(&mut self, launch: QueuedLaunch) {
         self.queue.push_back(launch);
     }
 
+    /// Whether no launches are waiting (the active head, if any, has
+    /// already left the queue).
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }

@@ -49,6 +49,7 @@ impl TraceEventKind {
         }
     }
 
+    /// Inverse of [`TraceEventKind::code`].
     pub fn from_code(code: &str) -> Option<Self> {
         match code {
             "S" => Some(TraceEventKind::Submit),
@@ -65,10 +66,15 @@ impl TraceEventKind {
 /// submit/activate/complete and the SM id for block placements.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceEvent {
+    /// What happened.
     pub kind: TraceEventKind,
+    /// Simulated time of the event (us).
     pub t_us: f64,
+    /// Launch tag the event belongs to.
     pub tag: u64,
+    /// Interned kernel-name id (resolved through [`Trace::names`]).
     pub name_id: u32,
+    /// Stream id for submit/activate/complete, SM id for block placements.
     pub loc: u32,
 }
 
@@ -80,10 +86,12 @@ pub struct TraceRecorder {
 }
 
 impl TraceRecorder {
+    /// An empty recorder.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Append one event (called from the engine's lifecycle hooks).
     #[inline]
     pub fn record(
         &mut self,
@@ -96,10 +104,12 @@ impl TraceRecorder {
         self.events.push(TraceEvent { kind, t_us, tag, name_id, loc });
     }
 
+    /// Number of events recorded so far.
     pub fn len(&self) -> usize {
         self.events.len()
     }
 
+    /// Whether nothing was recorded yet.
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
     }
@@ -118,7 +128,9 @@ impl TraceRecorder {
 /// snapshot (index = name id).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct Trace {
+    /// Interned-name table snapshot (index = name id).
     pub names: Vec<String>,
+    /// The recorded events, in emission order.
     pub events: Vec<TraceEvent>,
 }
 
@@ -127,8 +139,12 @@ pub struct Trace {
 pub struct Divergence {
     /// Event index (or the shorter trace's length for a length mismatch).
     pub index: usize,
+    /// Which event field disagreed (`kind`/`tag`/`name`/`loc`/`t_us`/
+    /// `length`).
     pub field: &'static str,
+    /// The expected side's value, rendered.
     pub expected: String,
+    /// The actual side's value, rendered.
     pub actual: String,
 }
 
@@ -147,10 +163,12 @@ impl fmt::Display for Divergence {
 const MAX_DIVERGENCES: usize = 64;
 
 impl Trace {
+    /// Number of recorded events.
     pub fn len(&self) -> usize {
         self.events.len()
     }
 
+    /// Whether the trace holds no events.
     pub fn is_empty(&self) -> bool {
         self.events.is_empty()
     }

@@ -19,8 +19,17 @@
 //!   artifacts (`artifacts/*.hlo.txt`) — real model compute on the serving
 //!   path, Python never involved at runtime.
 //! * [`server`] — std-thread serving loop binding the coordinator to the
-//!   runtime.
+//!   runtime, plus the online admission-controlled serving pipeline
+//!   ([`server::online`], `miriam serve-sim`).
 //! * [`config`] — run configuration.
+//!
+//! ARCHITECTURE.md (repo root) walks one request's life through these
+//! layers and maps where to add a new scheduler, arrival process, or
+//! admission policy; README.md covers every CLI subcommand.
+
+// Documentation is enforced: every public item carries rustdoc, and CI
+// runs `cargo doc --no-deps` with `RUSTDOCFLAGS="-D warnings"` (ISSUE 4).
+#![warn(missing_docs)]
 
 pub mod config;
 pub mod coordinator;

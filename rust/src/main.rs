@@ -8,6 +8,9 @@
 //!   sweep      [--threads N] [--seeds N] [--scenario all|names] — parallel
 //!              deterministic scenario×scheduler×seed grid, writes
 //!              BENCH_sweep.json (ISSUE 3)
+//!   serve-sim  [--scenario all|names] [--policy none,token-bucket,
+//!              deadline-feasible] [--seed N] — online admission-controlled
+//!              serving loop, writes BENCH_serve.json (ISSUE 4)
 //!   infer      --model cifarnet [--artifacts artifacts]
 //!   artifacts  [--artifacts artifacts]
 
@@ -15,9 +18,11 @@ use anyhow::{anyhow, Result};
 
 use miriam::config::cli::Args;
 use miriam::config::RunConfig;
+use miriam::coordinator::admission::{AdmissionConfig, AdmissionPolicy};
 use miriam::coordinator::{self, driver, sweep};
 use miriam::gpu::spec::GpuSpec;
 use miriam::runtime::Manifest;
+use miriam::server::online;
 use miriam::workloads::{lgsvl, mdtb, scenario};
 
 const USAGE: &str = "\
@@ -34,6 +39,11 @@ USAGE:
   miriam sweep [--platform P] [--duration SECONDS] [--scenario all|n1,n2,...]
                [--schedulers s1,s2,...] [--seeds N] [--threads N]
                [--out BENCH_sweep.json]
+  miriam serve-sim [--platform P] [--duration SECONDS]
+                   [--scenario all|n1,n2,...] [--scheduler miriam]
+                   [--policy none,token-bucket,deadline-feasible] [--seed N]
+                   [--bucket-cap 16] [--refill-hz 40] [--max-queue-ms 100]
+                   [--drain-ways 3] [--backoff-ms 2] [--out BENCH_serve.json]
   miriam infer --model NAME [--artifacts DIR]
   miriam artifacts [--artifacts DIR]
 ";
@@ -272,6 +282,101 @@ fn sweep_cmd(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// The online admission-controlled serving loop (ISSUE 4 tentpole):
+/// scenario arrivals flow through an admission policy into the live
+/// coordinator; per-tenant SLO outcomes (admitted/shed/served/missed,
+/// p50/p99) go to stdout and `BENCH_serve.json`. Byte-deterministic per
+/// seed — the report carries no host timing
+/// (`rust/tests/serve_determinism.rs` pins repeat-run equality).
+fn serve_sim(args: &Args) -> Result<()> {
+    let platform = args.get("platform", "rtx2060");
+    let gpu = GpuSpec::by_name(platform)
+        .ok_or_else(|| anyhow!("unknown platform {platform}"))?;
+    let duration = args.get_f64("duration", 0.2).map_err(|e| anyhow!(e))?;
+    if duration <= 0.0 {
+        return Err(anyhow!("duration must be positive"));
+    }
+    let dur_us = duration * 1e6;
+    let which = args.get("scenario", "all");
+    let scenarios = if which.eq_ignore_ascii_case("all") {
+        scenario::family(dur_us)
+    } else {
+        // Named cells resolve against the family *and* the MDTB workloads,
+        // like `miriam sweep`.
+        let pool: Vec<_> = scenario::family(dur_us)
+            .into_iter()
+            .chain(scenario::mdtb_scenarios(dur_us))
+            .collect();
+        args.get_list("scenario", "")
+            .iter()
+            .map(|n| {
+                pool.iter()
+                    .find(|s| s.name.eq_ignore_ascii_case(n))
+                    .cloned()
+                    .ok_or_else(|| anyhow!("unknown scenario {n}"))
+            })
+            .collect::<Result<Vec<_>>>()?
+    };
+    let policies = args
+        .get_list("policy", "none,token-bucket,deadline-feasible")
+        .iter()
+        .map(|p| {
+            AdmissionPolicy::parse(p)
+                .ok_or_else(|| anyhow!("unknown policy {p}"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let admission = AdmissionConfig {
+        bucket_capacity: args.get_f64("bucket-cap", 16.0)
+            .map_err(|e| anyhow!(e))?,
+        refill_hz: args.get_f64("refill-hz", 40.0).map_err(|e| anyhow!(e))?,
+        max_queue_us: args.get_f64("max-queue-ms", 100.0)
+            .map_err(|e| anyhow!(e))?
+            * 1e3,
+        drain_ways: args.get_f64("drain-ways", 3.0)
+            .map_err(|e| anyhow!(e))?,
+        shed_backoff_us: args.get_f64("backoff-ms", 2.0)
+            .map_err(|e| anyhow!(e))?
+            * 1e3,
+    };
+    let seed = if args.has("seed") {
+        Some(args.get_u64("seed", 0).map_err(|e| anyhow!(e))?)
+    } else {
+        None
+    };
+    let opts = online::ServeOpts {
+        scheduler: args.get("scheduler", "miriam").to_string(),
+        policy: AdmissionPolicy::Open, // per-cell policy comes from the grid
+        admission,
+        seed,
+    };
+    let out = args.get("out", "BENCH_serve.json");
+
+    println!("# serve-sim: {} scenario(s) x {} policy(ies) on {} ({} SMs), \
+              {duration}s of arrivals each, scheduler {}",
+             scenarios.len(), policies.len(), gpu.name, gpu.num_sms,
+             opts.scheduler);
+    println!("{:<16} {:<18} {:>8} {:>8} {:>6} {:>8} {:>10} {:>10} {:>6} {:>10}",
+             "scenario", "policy", "offered", "admit", "shed", "served",
+             "crit p50", "crit p99", "miss", "norm/s");
+    println!("{:<16} {:<18} {:>8} {:>8} {:>6} {:>8} {:>10} {:>10} {:>6} {:>10}",
+             "", "", "", "", "", "", "(ms)", "(ms)", "(crit)", "(req/s)");
+    let grid = online::run_serve_grid(&gpu, &scenarios, &policies, &opts)
+        .map_err(|e| anyhow!(e))?;
+    for c in &grid.cells {
+        println!("{:<16} {:<18} {:>8} {:>8} {:>6} {:>8} {:>10.2} {:>10.2} \
+                  {:>6} {:>10.1}",
+                 c.scenario, c.policy.name(), c.offered(), c.admitted(),
+                 c.shed(), c.served(),
+                 c.crit_quantile_us(0.5) / 1e3,
+                 c.crit_p99_us() / 1e3,
+                 c.deadline_misses_critical(),
+                 c.normal_throughput_rps());
+    }
+    std::fs::write(out, grid.to_json())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
 fn infer(args: &Args) -> Result<()> {
     use miriam::runtime::artifacts::npy_rand;
     let model = args
@@ -313,6 +418,7 @@ fn main() -> Result<()> {
         Some("simulate") => simulate(&args),
         Some("scenarios") => scenarios(&args),
         Some("sweep") => sweep_cmd(&args),
+        Some("serve-sim") => serve_sim(&args),
         Some("infer") => infer(&args),
         Some("artifacts") => {
             let m = Manifest::load(args.get("artifacts", "artifacts"))?;

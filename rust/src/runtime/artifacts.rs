@@ -10,11 +10,14 @@ use crate::runtime::json::{self, Json};
 /// Tensor spec in the manifest.
 #[derive(Debug, Clone)]
 pub struct TensorSpec {
+    /// Tensor dimensions.
     pub shape: Vec<usize>,
+    /// Element dtype name (the manifest uses "f32").
     pub dtype: String,
 }
 
 impl TensorSpec {
+    /// Total element count.
     pub fn elements(&self) -> usize {
         self.shape.iter().product()
     }
@@ -39,29 +42,44 @@ impl TensorSpec {
 /// Golden input/output vector for a model artifact.
 #[derive(Debug, Clone)]
 pub struct Golden {
+    /// numpy RandomState seed that generated the golden input.
     pub input_seed: u64,
+    /// SHA of the golden input buffer (integrity check).
     pub input_sha: String,
+    /// Expected output vector.
     pub output: Vec<f32>,
 }
 
 /// One manifest entry.
 #[derive(Debug, Clone)]
 pub struct ArtifactEntry {
+    /// Artifact name (e.g. "cifarnet").
     pub name: String,
+    /// HLO-text file name relative to the manifest directory.
     pub file: Option<String>,
+    /// Artifact kind ("model", "matmul_shard", "golden").
     pub kind: String,
+    /// Declared input tensors.
     pub inputs: Vec<TensorSpec>,
+    /// Declared output tensors.
     pub outputs: Vec<TensorSpec>,
+    /// Golden input/output pair, when recorded.
     pub golden: Option<Golden>,
-    // matmul-shard extras
+    /// Matmul-shard extra: elastic sharding degree.
     pub degree: Option<u32>,
+    /// Matmul-shard extra: rows covered per shard.
     pub rows: Option<u32>,
-    // matmul golden extras
+    /// Matmul golden extra: M dimension.
     pub m: Option<usize>,
+    /// Matmul golden extra: K dimension.
     pub k: Option<usize>,
+    /// Matmul golden extra: N dimension.
     pub n: Option<usize>,
+    /// Matmul golden extra: input seed.
     pub x_seed: Option<u64>,
+    /// Matmul golden extra: weight seed.
     pub w_seed: Option<u64>,
+    /// Matmul golden extra: first 8 expected outputs.
     pub output_first8: Option<Vec<f32>>,
 }
 
@@ -127,8 +145,11 @@ fn f32_vec(j: Option<&Json>) -> Vec<f32> {
 /// Parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Manifest schema version.
     pub version: u64,
+    /// All artifact entries, in manifest order.
     pub artifacts: Vec<ArtifactEntry>,
+    /// Directory the manifest was loaded from (HLO paths resolve here).
     pub dir: PathBuf,
 }
 
@@ -161,6 +182,7 @@ impl Manifest {
             .unwrap_or_else(|| PathBuf::from("artifacts"))
     }
 
+    /// The entry named `name`, or an error listing the miss.
     pub fn entry(&self, name: &str) -> Result<&ArtifactEntry> {
         self.artifacts
             .iter()
@@ -196,6 +218,7 @@ pub mod npy_rand {
     }
 
     impl Mt19937 {
+        /// Seeded exactly like `numpy.random.RandomState(seed)`.
         pub fn new(seed: u32) -> Self {
             let mut mt = [0u32; 624];
             mt[0] = seed;
@@ -220,6 +243,7 @@ pub mod npy_rand {
             self.idx = 0;
         }
 
+        /// Next tempered 32-bit draw.
         pub fn next_u32(&mut self) -> u32 {
             if self.idx >= 624 {
                 self.generate();

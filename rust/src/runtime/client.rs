@@ -23,8 +23,11 @@ mod pjrt_impl {
 
     /// A compiled artifact ready to execute.
     pub struct ModelRuntime {
+        /// Artifact name.
         pub name: String,
+        /// Declared input shapes, in argument order.
         pub input_shapes: Vec<Vec<usize>>,
+        /// Declared (first) output shape.
         pub output_shape: Vec<usize>,
         exe: xla::PjRtLoadedExecutable,
     }
@@ -66,6 +69,7 @@ mod pjrt_impl {
     /// The PJRT runtime: a CPU client plus compiled executables by name.
     pub struct Runtime {
         client: xla::PjRtClient,
+        /// The artifact registry this runtime serves from.
         pub manifest: Manifest,
         compiled: HashMap<String, ModelRuntime>,
     }
@@ -78,6 +82,7 @@ mod pjrt_impl {
             Ok(Runtime { client, manifest, compiled: HashMap::new() })
         }
 
+        /// PJRT platform name (e.g. "cpu").
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
@@ -135,12 +140,16 @@ mod stub_impl {
     /// Stub with the real [`ModelRuntime`] API; never constructible because
     /// [`Runtime::new`] always errors in this build.
     pub struct ModelRuntime {
+        /// Artifact name.
         pub name: String,
+        /// Declared input shapes, in argument order.
         pub input_shapes: Vec<Vec<usize>>,
+        /// Declared (first) output shape.
         pub output_shape: Vec<usize>,
     }
 
     impl ModelRuntime {
+        /// Always errors: the `pjrt` feature is off in this build.
         pub fn run_f32(&self, _inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
             Err(anyhow!(UNAVAILABLE))
         }
@@ -149,18 +158,22 @@ mod stub_impl {
     /// Stub runtime: same surface as the PJRT-backed one, unavailable at
     /// run time.
     pub struct Runtime {
+        /// The artifact registry (kept for API parity with the real one).
         pub manifest: Manifest,
     }
 
     impl Runtime {
+        /// Always errors: the `pjrt` feature is off in this build.
         pub fn new(_manifest: Manifest) -> Result<Self> {
             Err(anyhow!(UNAVAILABLE))
         }
 
+        /// Reports "unavailable" (no PJRT client in this build).
         pub fn platform(&self) -> String {
             "unavailable".to_string()
         }
 
+        /// Always errors: the `pjrt` feature is off in this build.
         pub fn load(&mut self, _name: &str) -> Result<&ModelRuntime> {
             Err(anyhow!(UNAVAILABLE))
         }

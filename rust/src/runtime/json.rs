@@ -19,15 +19,22 @@ use std::fmt::Write as _;
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object; `BTreeMap` so canonical serialization sorts keys.
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Object member by key (`None` for non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -35,6 +42,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -42,6 +50,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -49,14 +58,17 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to u64, if this is a number.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().map(|f| f as u64)
     }
 
+    /// The numeric value truncated to usize, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|f| f as usize)
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -134,7 +146,9 @@ fn write_escaped(out: &mut String, s: &str) {
 /// Parse error with byte offset.
 #[derive(Debug, Clone, PartialEq)]
 pub struct JsonError {
+    /// Byte offset of the error in the input.
     pub offset: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 

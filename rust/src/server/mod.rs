@@ -11,6 +11,13 @@
 //! the router and the device; here its scheduling behaviour is exercised
 //! by the simulator (`crate::coordinator`), while this server proves the
 //! end-to-end artifact path (examples/serve_e2e.rs).
+//!
+//! [`online`] is where the two faces meet (ISSUE 4): a simulated-time
+//! serving loop that runs open-loop scenario arrivals through an
+//! admission controller into the live coordinator, with per-tenant SLO
+//! accounting (`miriam serve-sim`).
+
+pub mod online;
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -45,8 +52,11 @@ where
 
 /// One inference request.
 pub struct InferRequest {
+    /// Artifact/model name to execute.
     pub model: String,
+    /// Queue class: critical requests jump the queue.
     pub criticality: Criticality,
+    /// Flat f32 input buffer.
     pub input: Vec<f32>,
     /// Reply channel.
     pub reply: std::sync::mpsc::Sender<InferReply>,
@@ -55,10 +65,13 @@ pub struct InferRequest {
 /// The server's answer.
 #[derive(Debug, Clone)]
 pub struct InferReply {
+    /// Flattened output buffer (empty on error).
     pub output: Vec<f32>,
     /// Queueing + execution latency observed by the server (us).
     pub latency_us: f64,
+    /// Whether execution succeeded.
     pub ok: bool,
+    /// The error message when `ok` is false.
     pub error: Option<String>,
 }
 
@@ -72,15 +85,20 @@ struct Queues {
 /// Aggregate serving statistics.
 #[derive(Debug, Default)]
 pub struct ServerStats {
+    /// Critical requests served successfully.
     pub served_critical: AtomicU64,
+    /// Normal requests served successfully.
     pub served_normal: AtomicU64,
+    /// Requests that failed in the executor.
     pub errors: AtomicU64,
     /// Sum of latencies (us) per class, for means.
     pub critical_latency_us_sum: AtomicU64,
+    /// Normal-class latency sum (us).
     pub normal_latency_us_sum: AtomicU64,
 }
 
 impl ServerStats {
+    /// Mean served critical latency (us; 0 when nothing served).
     pub fn mean_critical_latency_us(&self) -> f64 {
         let n = self.served_critical.load(Ordering::Relaxed);
         if n == 0 {
@@ -88,6 +106,7 @@ impl ServerStats {
         }
         self.critical_latency_us_sum.load(Ordering::Relaxed) as f64 / n as f64
     }
+    /// Mean served normal latency (us; 0 when nothing served).
     pub fn mean_normal_latency_us(&self) -> f64 {
         let n = self.served_normal.load(Ordering::Relaxed);
         if n == 0 {
@@ -101,6 +120,7 @@ impl ServerStats {
 #[derive(Clone)]
 pub struct ServerHandle {
     queues: Arc<(Mutex<Queues>, Condvar)>,
+    /// Live serving counters, shared with the worker.
     pub stats: Arc<ServerStats>,
 }
 
@@ -140,6 +160,7 @@ impl ServerHandle {
 /// The serving loop. Owns the PJRT runtime on a dedicated thread (the XLA
 /// client is not `Send`-friendly; all execution funnels through here).
 pub struct Server {
+    /// Handle for submitting requests and reading stats.
     pub handle: ServerHandle,
     worker: Option<std::thread::JoinHandle<()>>,
 }

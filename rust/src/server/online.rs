@@ -1,0 +1,664 @@
+//! The online admission-controlled serving pipeline (ISSUE 4 tentpole).
+//!
+//! Where [`crate::coordinator::driver`] runs a *closed* evaluation batch
+//! (every arrival admitted, stats summed per class), this module runs the
+//! deployment-shaped loop the ROADMAP asks for: a long-lived
+//! simulated-time service that pulls open-loop arrivals from any
+//! [`ScenarioSpec`], passes each one through an
+//! [`AdmissionController`](crate::coordinator::admission), and feeds the
+//! admitted requests into the live coordinator (Miriam by default — whose
+//! submissions flow through `Engine::submit_interned`). Per-tenant SLO
+//! outcomes are accounted the whole way:
+//!
+//! * **offered** — every arrival seen (including closed-loop retries);
+//! * **admitted / shed** — the admission decision split
+//!   (`offered == admitted + shed` always; critical is never shed);
+//! * **served** — admitted requests that completed, with per-tenant
+//!   p50/p99/mean latency and deadline misses.
+//!
+//! [`run_serve`] executes one (scenario, policy) cell; [`run_serve_grid`]
+//! sweeps scenarios × policies and serializes the whole comparison as
+//! canonical JSON (`BENCH_serve.json`, schema in EXPERIMENTS.md §Serve,
+//! mirroring `BENCH_sweep.json`). Reports carry **no host-timing
+//! fields**, so a run is byte-deterministic per seed —
+//! `rust/tests/serve_determinism.rs` pins repeat-run equality and that
+//! the `none` policy reproduces the batch driver's trajectory exactly.
+//!
+//! ```
+//! use miriam::gpu::spec::GpuSpec;
+//! use miriam::server::online::{run_serve, ServeOpts};
+//! use miriam::workloads::scenario;
+//!
+//! let sc = scenario::by_name("duo-burst", 5_000.0).unwrap();
+//! let report =
+//!     run_serve(&GpuSpec::rtx2060(), &sc, &ServeOpts::default()).unwrap();
+//! assert_eq!(report.offered(), report.admitted() + report.shed());
+//! assert_eq!(report.shed_critical(), 0); // critical is never shed
+//! ```
+
+use std::cmp::Reverse;
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+
+use crate::coordinator::admission::{
+    AdmissionConfig, AdmissionController, AdmissionPolicy, Decision,
+};
+use crate::coordinator::driver::{initial_arrivals, TimeKey};
+use crate::coordinator::scheduler::Req;
+use crate::coordinator::scheduler_for;
+use crate::coordinator::stats::{mean, sorted_quantile};
+use crate::gpu::engine::{Completion, Engine};
+use crate::gpu::kernel::Criticality;
+use crate::gpu::spec::GpuSpec;
+use crate::runtime::json::Json;
+use crate::workloads::rng::Rng;
+use crate::workloads::scenario::ScenarioSpec;
+
+/// Configuration of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Coordinator to serve through (any `scheduler_for` name; the
+    /// deployment default is `miriam`).
+    pub scheduler: String,
+    /// Admission policy applied to best-effort arrivals.
+    pub policy: AdmissionPolicy,
+    /// Policy tunables (buckets, burst guard, shed backoff).
+    pub admission: AdmissionConfig,
+    /// Override the scenario's pinned arrival seed (`None` keeps it).
+    pub seed: Option<u64>,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            scheduler: "miriam".into(),
+            policy: AdmissionPolicy::Open,
+            admission: AdmissionConfig::default(),
+            seed: None,
+        }
+    }
+}
+
+/// SLO outcome of one tenant over a serving run.
+#[derive(Debug, Clone)]
+pub struct TenantOutcome {
+    /// Source index in the scenario.
+    pub source: usize,
+    /// Stable label (`ScenarioSpec::tenant_label`).
+    pub label: String,
+    /// Model name served for this tenant.
+    pub model: String,
+    /// Task class.
+    pub criticality: Criticality,
+    /// Arrivals seen (including closed-loop shed retries).
+    pub offered: u64,
+    /// Arrivals admitted into the coordinator.
+    pub admitted: u64,
+    /// Arrivals shed by the admission policy.
+    pub shed: u64,
+    /// Admitted requests that completed within the run.
+    pub served: u64,
+    /// Served requests that exceeded the tenant's deadline.
+    pub deadline_misses: u64,
+    /// End-to-end latency (us) of each served request.
+    pub latencies_us: Vec<f64>,
+}
+
+impl TenantOutcome {
+    /// Median served latency (us; NaN when nothing was served).
+    pub fn p50_us(&self) -> f64 {
+        sorted_quantile(&self.latencies_us, 0.5)
+    }
+
+    /// 99th-percentile served latency (us; NaN when nothing was served).
+    pub fn p99_us(&self) -> f64 {
+        sorted_quantile(&self.latencies_us, 0.99)
+    }
+
+    /// Mean served latency (us; NaN when nothing was served).
+    pub fn mean_us(&self) -> f64 {
+        mean(&self.latencies_us)
+    }
+}
+
+/// Outcome of one (scenario, policy) serving cell.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    /// Scenario name.
+    pub scenario: String,
+    /// GPU preset name.
+    pub platform: String,
+    /// Coordinator the run served through.
+    pub scheduler: String,
+    /// Admission policy applied.
+    pub policy: AdmissionPolicy,
+    /// Arrival seed the run actually used.
+    pub seed: u64,
+    /// Arrival-generation window (us).
+    pub duration_us: f64,
+    /// Per-tenant outcomes, in source order.
+    pub tenants: Vec<TenantOutcome>,
+    /// Simulated span until the system drained (us).
+    pub span_us: f64,
+    /// Simulator events processed.
+    pub events: u64,
+    /// Peak best-effort queue depth inside the coordinator (0 when the
+    /// scheduler does not expose one).
+    pub max_normal_queue: usize,
+    /// Critical arrivals whose deadline was infeasible by the solo
+    /// envelope (admitted regardless; see `AdmissionController`).
+    pub critical_at_risk: u64,
+}
+
+impl ServeReport {
+    /// Total arrivals seen.
+    pub fn offered(&self) -> u64 {
+        self.tenants.iter().map(|t| t.offered).sum()
+    }
+
+    /// Total arrivals admitted.
+    pub fn admitted(&self) -> u64 {
+        self.tenants.iter().map(|t| t.admitted).sum()
+    }
+
+    /// Total arrivals shed.
+    pub fn shed(&self) -> u64 {
+        self.tenants.iter().map(|t| t.shed).sum()
+    }
+
+    /// Total requests served to completion.
+    pub fn served(&self) -> u64 {
+        self.tenants.iter().map(|t| t.served).sum()
+    }
+
+    /// Shed count over critical tenants — zero by the admission
+    /// invariant, recorded so tests and reports can assert it.
+    pub fn shed_critical(&self) -> u64 {
+        self.class_sum(Criticality::Critical, |t| t.shed)
+    }
+
+    /// Deadline misses over critical tenants.
+    pub fn deadline_misses_critical(&self) -> u64 {
+        self.class_sum(Criticality::Critical, |t| t.deadline_misses)
+    }
+
+    /// Deadline misses over best-effort tenants.
+    pub fn deadline_misses_normal(&self) -> u64 {
+        self.class_sum(Criticality::Normal, |t| t.deadline_misses)
+    }
+
+    fn class_sum(&self, c: Criticality, f: impl Fn(&TenantOutcome) -> u64)
+                 -> u64 {
+        self.tenants
+            .iter()
+            .filter(|t| t.criticality == c)
+            .map(f)
+            .sum()
+    }
+
+    fn class_latencies(&self, c: Criticality) -> Vec<f64> {
+        self.tenants
+            .iter()
+            .filter(|t| t.criticality == c)
+            .flat_map(|t| t.latencies_us.iter().copied())
+            .collect()
+    }
+
+    /// Critical-class latency quantile over all critical tenants.
+    pub fn crit_quantile_us(&self, q: f64) -> f64 {
+        sorted_quantile(&self.class_latencies(Criticality::Critical), q)
+    }
+
+    /// Critical-class p99 latency (us).
+    pub fn crit_p99_us(&self) -> f64 {
+        self.crit_quantile_us(0.99)
+    }
+
+    /// Best-effort-class latency quantile.
+    pub fn normal_quantile_us(&self, q: f64) -> f64 {
+        sorted_quantile(&self.class_latencies(Criticality::Normal), q)
+    }
+
+    /// Served best-effort requests per second of simulated span — the
+    /// throughput each policy trades against critical latency.
+    pub fn normal_throughput_rps(&self) -> f64 {
+        if self.span_us <= 0.0 {
+            return 0.0;
+        }
+        self.class_sum(Criticality::Normal, |t| t.served) as f64
+            / (self.span_us / 1e6)
+    }
+
+    /// Served requests (both classes) per second of simulated span.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.span_us <= 0.0 {
+            return 0.0;
+        }
+        self.served() as f64 / (self.span_us / 1e6)
+    }
+
+    /// This cell as a canonical-JSON value (one `cells[]` row of
+    /// `BENCH_serve.json`; non-finite quantiles serialize as `null`).
+    pub fn to_json_value(&self) -> Json {
+        let num = Json::Num;
+        let mut m = BTreeMap::new();
+        m.insert("scenario".into(), Json::Str(self.scenario.clone()));
+        m.insert("policy".into(), Json::Str(self.policy.name().into()));
+        m.insert("scheduler".into(), Json::Str(self.scheduler.clone()));
+        m.insert("seed".into(), num(self.seed as f64));
+        m.insert("duration_us".into(), num(self.duration_us));
+        m.insert("span_us".into(), num(self.span_us));
+        m.insert("events".into(), num(self.events as f64));
+        m.insert("offered".into(), num(self.offered() as f64));
+        m.insert("admitted".into(), num(self.admitted() as f64));
+        m.insert("shed".into(), num(self.shed() as f64));
+        m.insert("served".into(), num(self.served() as f64));
+        m.insert("shed_critical".into(), num(self.shed_critical() as f64));
+        m.insert("crit_p50_us".into(), num(self.crit_quantile_us(0.5)));
+        m.insert("crit_p99_us".into(), num(self.crit_p99_us()));
+        m.insert("normal_p50_us".into(), num(self.normal_quantile_us(0.5)));
+        m.insert("normal_throughput_rps".into(),
+                 num(self.normal_throughput_rps()));
+        m.insert("throughput_rps".into(), num(self.throughput_rps()));
+        m.insert("deadline_misses_critical".into(),
+                 num(self.deadline_misses_critical() as f64));
+        m.insert("deadline_misses_normal".into(),
+                 num(self.deadline_misses_normal() as f64));
+        m.insert("max_normal_queue".into(),
+                 num(self.max_normal_queue as f64));
+        m.insert("critical_at_risk".into(),
+                 num(self.critical_at_risk as f64));
+        m.insert(
+            "tenants".into(),
+            Json::Arr(
+                self.tenants
+                    .iter()
+                    .map(|t| {
+                        let mut tm = BTreeMap::new();
+                        tm.insert("label".into(), Json::Str(t.label.clone()));
+                        tm.insert("model".into(), Json::Str(t.model.clone()));
+                        tm.insert(
+                            "criticality".into(),
+                            Json::Str(
+                                match t.criticality {
+                                    Criticality::Critical => "critical",
+                                    Criticality::Normal => "normal",
+                                }
+                                .into(),
+                            ),
+                        );
+                        tm.insert("offered".into(), num(t.offered as f64));
+                        tm.insert("admitted".into(), num(t.admitted as f64));
+                        tm.insert("shed".into(), num(t.shed as f64));
+                        tm.insert("served".into(), num(t.served as f64));
+                        tm.insert("deadline_misses".into(),
+                                  num(t.deadline_misses as f64));
+                        tm.insert("p50_us".into(), num(t.p50_us()));
+                        tm.insert("p99_us".into(), num(t.p99_us()));
+                        tm.insert("mean_us".into(), num(t.mean_us()));
+                        Json::Obj(tm)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// A scenarios × policies serving comparison (the `BENCH_serve.json`
+/// document).
+#[derive(Debug, Clone)]
+pub struct ServeGridReport {
+    /// GPU preset name.
+    pub platform: String,
+    /// Coordinator served through.
+    pub scheduler: String,
+    /// Arrival-generation window per cell (us).
+    pub duration_us: f64,
+    /// Policy names, in run order.
+    pub policies: Vec<String>,
+    /// Scenario names, in run order.
+    pub scenarios: Vec<String>,
+    /// Cells in deterministic grid order (scenario-major, then policy).
+    pub cells: Vec<ServeReport>,
+}
+
+impl ServeGridReport {
+    /// The cell for (scenario, policy), if it ran.
+    pub fn cell(&self, scenario: &str, policy: AdmissionPolicy)
+                -> Option<&ServeReport> {
+        self.cells
+            .iter()
+            .find(|c| c.scenario == scenario && c.policy == policy)
+    }
+
+    /// The canonical `BENCH_serve.json` document: sorted keys, no
+    /// whitespace, no host-timing fields — byte-deterministic per seed
+    /// (schema in EXPERIMENTS.md §Serve).
+    pub fn to_json(&self) -> String {
+        let mut obj = BTreeMap::new();
+        obj.insert("bench".into(), Json::Str("serve".into()));
+        obj.insert("platform".into(), Json::Str(self.platform.clone()));
+        obj.insert("scheduler".into(), Json::Str(self.scheduler.clone()));
+        obj.insert("duration_us".into(), Json::Num(self.duration_us));
+        obj.insert(
+            "policies".into(),
+            Json::Arr(self.policies.iter().cloned().map(Json::Str).collect()),
+        );
+        obj.insert(
+            "scenarios".into(),
+            Json::Arr(self.scenarios.iter().cloned().map(Json::Str).collect()),
+        );
+        obj.insert(
+            "cells".into(),
+            Json::Arr(self.cells.iter().map(|c| c.to_json_value()).collect()),
+        );
+        obj.insert("version".into(), Json::Num(1.0));
+        Json::Obj(obj).to_canonical_string()
+    }
+}
+
+/// Serve one scenario through one admission policy until the system
+/// drains. Deterministic for a given (scenario, seed, policy, scheduler):
+/// the loop advances in simulated time only, and no host timing enters
+/// the report.
+pub fn run_serve(gpu: &GpuSpec, sc: &ScenarioSpec, opts: &ServeOpts)
+                 -> Result<ServeReport, String> {
+    if !(opts.admission.shed_backoff_us > 0.0)
+        || !opts.admission.shed_backoff_us.is_finite()
+    {
+        return Err("shed_backoff_us must be positive and finite \
+                    (a zero backoff re-offers a shed closed-loop request \
+                    at the same instant, forever)"
+            .into());
+    }
+    let mut wl = sc.build();
+    if let Some(seed) = opts.seed {
+        wl.seed = seed;
+    }
+    let mut sched = scheduler_for(&opts.scheduler, &wl)
+        .ok_or_else(|| format!("unknown scheduler {}", opts.scheduler))?;
+    let mut eng = Engine::new(gpu.clone());
+    sched.init(&mut eng);
+
+    // Same per-source interning the batch driver does (ISSUE 3 fast path).
+    let name_ids: Vec<Arc<Vec<u32>>> = wl
+        .sources
+        .iter()
+        .map(|s| Arc::new(s.model.intern_kernels(|n| eng.intern_name(n))))
+        .collect();
+
+    let mut ctrl = AdmissionController::new(
+        opts.policy,
+        opts.admission.clone(),
+        &wl,
+        &eng.spec,
+        &eng.params,
+    );
+
+    let mut rng = Rng::new(wl.seed);
+    let mut arrivals = initial_arrivals(&wl, &mut rng);
+
+    let mut tenants: Vec<TenantOutcome> = wl
+        .sources
+        .iter()
+        .enumerate()
+        .map(|(i, s)| TenantOutcome {
+            source: i,
+            label: sc.tenant_label(i),
+            model: s.model.name.clone(),
+            criticality: s.criticality,
+            offered: 0,
+            admitted: 0,
+            shed: 0,
+            served: 0,
+            deadline_misses: 0,
+            latencies_us: Vec::new(),
+        })
+        .collect();
+
+    let mut next_id: u64 = 1;
+    // req id -> (arrival time, source).
+    let mut open: HashMap<u64, (f64, usize)> = HashMap::new();
+    let mut completions: Vec<Completion> = Vec::new();
+    let mut finished: Vec<u64> = Vec::new();
+    let mut max_normal_queue = 0usize;
+
+    loop {
+        let t_arr = arrivals.peek().map(|Reverse((TimeKey(t), _))| *t);
+        let t_ev = eng.next_event_time();
+        match (t_arr, t_ev) {
+            (None, None) => break,
+            (Some(ta), te) if te.map_or(true, |te| ta <= te) => {
+                eng.advance_to(ta);
+                while let Some(Reverse((TimeKey(t), src))) =
+                    arrivals.peek().copied()
+                {
+                    if t > ta {
+                        break;
+                    }
+                    arrivals.pop();
+                    tenants[src].offered += 1;
+                    match ctrl.decide(src, t) {
+                        Decision::Admitted => {
+                            let s = &wl.sources[src];
+                            let req = Req {
+                                id: next_id,
+                                source: src,
+                                model: s.model.clone(),
+                                name_ids: name_ids[src].clone(),
+                                criticality: s.criticality,
+                                arrival_us: t,
+                            };
+                            open.insert(next_id, (t, src));
+                            next_id += 1;
+                            tenants[src].admitted += 1;
+                            sched.on_request(req, &mut eng);
+                        }
+                        Decision::Shed(_) => {
+                            tenants[src].shed += 1;
+                            // An open-loop shed request is lost; a shed
+                            // closed-loop client retries after a backoff
+                            // (it has no other way to make progress).
+                            if wl.sources[src].arrival.is_closed_loop() {
+                                let retry =
+                                    t + opts.admission.shed_backoff_us;
+                                if retry < wl.duration_us {
+                                    arrivals.push(Reverse((
+                                        TimeKey(retry),
+                                        src,
+                                    )));
+                                }
+                            }
+                        }
+                    }
+                }
+                if let Some(q) = sched.pending_normal() {
+                    max_normal_queue = max_normal_queue.max(q);
+                }
+            }
+            (_, Some(_)) => {
+                eng.step_into(&mut completions);
+                for c in &completions {
+                    finished.clear();
+                    sched.on_completion(c, &mut eng, &mut finished);
+                    for &fid in &finished {
+                        let (arr, src) = open
+                            .remove(&fid)
+                            .expect("scheduler finished unknown request");
+                        let lat = eng.now_us() - arr;
+                        ctrl.on_served(src);
+                        let out = &mut tenants[src];
+                        out.served += 1;
+                        out.latencies_us.push(lat);
+                        if wl.sources[src]
+                            .deadline_us
+                            .is_some_and(|d| lat > d)
+                        {
+                            out.deadline_misses += 1;
+                        }
+                        // Closed-loop: the client's next request arrives
+                        // the moment this one returns (and goes back
+                        // through admission like any other arrival).
+                        if wl.sources[src].arrival.is_closed_loop()
+                            && eng.now_us() < wl.duration_us
+                        {
+                            arrivals.push(Reverse((
+                                TimeKey(eng.now_us()),
+                                src,
+                            )));
+                        }
+                    }
+                }
+            }
+            // (Some, None) with a failed guard cannot occur: the guard is
+            // vacuously true when the engine has no next event.
+            _ => unreachable!("serve loop: impossible arrival/event state"),
+        }
+    }
+
+    let span_us = eng.now_us();
+    let metrics = eng.into_metrics();
+    Ok(ServeReport {
+        scenario: sc.name.clone(),
+        platform: gpu.name.clone(),
+        scheduler: opts.scheduler.clone(),
+        policy: opts.policy,
+        seed: wl.seed,
+        duration_us: wl.duration_us,
+        tenants,
+        span_us,
+        events: metrics.events,
+        max_normal_queue,
+        critical_at_risk: ctrl.critical_at_risk(),
+    })
+}
+
+/// Run the scenarios × policies grid (scenario-major order) and assemble
+/// the [`ServeGridReport`]. `base` provides the scheduler, seed override
+/// and admission tunables; its `policy` field is ignored in favor of the
+/// `policies` list.
+pub fn run_serve_grid(
+    gpu: &GpuSpec,
+    scenarios: &[ScenarioSpec],
+    policies: &[AdmissionPolicy],
+    base: &ServeOpts,
+) -> Result<ServeGridReport, String> {
+    if scenarios.is_empty() {
+        return Err("serve grid needs at least one scenario".into());
+    }
+    if policies.is_empty() {
+        return Err("serve grid needs at least one policy".into());
+    }
+    let mut cells = Vec::with_capacity(scenarios.len() * policies.len());
+    for sc in scenarios {
+        for &policy in policies {
+            let opts = ServeOpts { policy, ..base.clone() };
+            cells.push(run_serve(gpu, sc, &opts)?);
+        }
+    }
+    Ok(ServeGridReport {
+        platform: gpu.name.clone(),
+        scheduler: base.scheduler.clone(),
+        duration_us: scenarios[0].duration_us,
+        policies: policies.iter().map(|p| p.name().to_string()).collect(),
+        scenarios: scenarios.iter().map(|s| s.name.clone()).collect(),
+        cells,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::admission::POLICIES;
+    use crate::workloads::scenario;
+
+    const DUR_US: f64 = 20_000.0;
+
+    fn duo() -> ScenarioSpec {
+        scenario::by_name("duo-burst", DUR_US).unwrap()
+    }
+
+    #[test]
+    fn accounting_balances_for_every_policy() {
+        for policy in POLICIES {
+            let opts = ServeOpts { policy, ..ServeOpts::default() };
+            let r = run_serve(&GpuSpec::rtx2060(), &duo(), &opts).unwrap();
+            assert_eq!(r.offered(), r.admitted() + r.shed(), "{policy:?}");
+            assert!(r.served() <= r.admitted(), "{policy:?}");
+            assert_eq!(r.shed_critical(), 0, "{policy:?}");
+            assert!(r.served() > 0, "{policy:?}: nothing served");
+            assert!(r.events > 0);
+            assert!(r.span_us > 0.0);
+            for t in &r.tenants {
+                assert_eq!(t.offered, t.admitted + t.shed,
+                           "{policy:?}/{}", t.label);
+            }
+        }
+    }
+
+    #[test]
+    fn open_policy_sheds_nothing() {
+        let r = run_serve(&GpuSpec::rtx2060(), &duo(), &ServeOpts::default())
+            .unwrap();
+        assert_eq!(r.shed(), 0);
+        assert_eq!(r.offered(), r.admitted());
+    }
+
+    #[test]
+    fn grid_report_shape_and_json_parse() {
+        let scenarios = vec![duo()];
+        let grid = run_serve_grid(&GpuSpec::rtx2060(), &scenarios, &POLICIES,
+                                  &ServeOpts::default())
+            .unwrap();
+        assert_eq!(grid.cells.len(), 3);
+        assert!(grid.cell("duo-burst", AdmissionPolicy::TokenBucket)
+                    .is_some());
+        let j = grid.to_json();
+        let doc = crate::runtime::json::parse(&j).expect("valid JSON");
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("serve"));
+        assert_eq!(doc.get("cells").and_then(Json::as_arr).map(|a| a.len()),
+                   Some(3));
+        // Determinism of the document itself.
+        let grid2 = run_serve_grid(&GpuSpec::rtx2060(), &scenarios,
+                                   &POLICIES, &ServeOpts::default())
+            .unwrap();
+        assert_eq!(j, grid2.to_json());
+    }
+
+    #[test]
+    fn rejects_bad_options() {
+        let bad_sched =
+            ServeOpts { scheduler: "fifo".into(), ..ServeOpts::default() };
+        assert!(run_serve(&GpuSpec::rtx2060(), &duo(), &bad_sched).is_err());
+        let bad_backoff = ServeOpts {
+            admission: AdmissionConfig {
+                shed_backoff_us: 0.0,
+                ..AdmissionConfig::default()
+            },
+            ..ServeOpts::default()
+        };
+        assert!(run_serve(&GpuSpec::rtx2060(), &duo(), &bad_backoff)
+            .is_err());
+        assert!(run_serve_grid(&GpuSpec::rtx2060(), &[], &POLICIES,
+                               &ServeOpts::default())
+            .is_err());
+        assert!(run_serve_grid(&GpuSpec::rtx2060(), &[duo()], &[],
+                               &ServeOpts::default())
+            .is_err());
+    }
+
+    #[test]
+    fn seed_override_changes_a_stochastic_run() {
+        let a = run_serve(&GpuSpec::rtx2060(), &duo(),
+                          &ServeOpts { seed: Some(11), ..Default::default() })
+            .unwrap();
+        let b = run_serve(&GpuSpec::rtx2060(), &duo(),
+                          &ServeOpts { seed: Some(12), ..Default::default() })
+            .unwrap();
+        assert_eq!(a.seed, 11);
+        assert_eq!(b.seed, 12);
+        assert_ne!(a.to_json_value().to_canonical_string(),
+                   b.to_json_value().to_canonical_string());
+    }
+}

@@ -20,8 +20,11 @@ use crate::workloads::models::{self, ModelRef};
 /// criticality level.
 #[derive(Debug, Clone)]
 pub struct Source {
+    /// The model this source requests.
     pub model: ModelRef,
+    /// How requests arrive.
     pub arrival: Arrival,
+    /// Task class of every request from this source.
     pub criticality: Criticality,
     /// Optional end-to-end deadline (us). Completions later than this are
     /// counted in `RunStats::deadline_misses_*`; `None` means best-effort
@@ -32,7 +35,9 @@ pub struct Source {
 /// A complete benchmark workload.
 #[derive(Debug, Clone)]
 pub struct Workload {
+    /// Workload name (report key).
     pub name: String,
+    /// The request sources (tenants).
     pub sources: Vec<Source>,
     /// Simulated duration over which arrivals are generated (us).
     pub duration_us: f64,
@@ -43,16 +48,25 @@ pub struct Workload {
 /// Serializable description (for configs / CLI).
 #[derive(Debug, Clone)]
 pub struct WorkloadSpec {
+    /// Workload name (e.g. "MDTB-A").
     pub name: String,
+    /// Critical source's model name.
     pub critical_model: String,
+    /// Critical source's arrival process.
     pub critical_arrival: Arrival,
+    /// Normal source's model name.
     pub normal_model: String,
+    /// Normal source's arrival process.
     pub normal_arrival: Arrival,
+    /// Arrival-generation window (us).
     pub duration_us: f64,
+    /// RNG seed for stochastic arrivals.
     pub seed: u64,
 }
 
 impl WorkloadSpec {
+    /// Resolve model names and materialize the runnable [`Workload`].
+    /// Panics on an unknown model name.
     pub fn build(&self) -> Workload {
         let critical = models::by_name(&self.critical_model)
             .unwrap_or_else(|| panic!("unknown model {}", self.critical_model));
@@ -138,6 +152,7 @@ pub fn all(duration_us: f64) -> Vec<WorkloadSpec> {
          mdtb_d(duration_us)]
 }
 
+/// Look up an MDTB workload by letter or full name ("A" / "MDTB-A").
 pub fn by_name(name: &str, duration_us: f64) -> Option<WorkloadSpec> {
     match name.to_ascii_uppercase().as_str() {
         "A" | "MDTB-A" => Some(mdtb_a(duration_us)),

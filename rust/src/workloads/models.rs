@@ -39,19 +39,25 @@ const MEM_EFF: f64 = 0.55;
 /// A model = named sequence of dependent kernels.
 #[derive(Debug, Clone)]
 pub struct ModelDesc {
+    /// Model name (e.g. "alexnet").
     pub name: String,
+    /// The kernels one inference launches, in dependency order.
     pub kernels: Vec<KernelDesc>,
 }
 
+/// Shared handle to a model descriptor (cloned per request, never deep).
 pub type ModelRef = Arc<ModelDesc>;
 
 impl ModelDesc {
+    /// Total FLOPs of one inference.
     pub fn total_flops(&self) -> f64 {
         self.kernels.iter().map(|k| k.flops).sum()
     }
+    /// Total DRAM bytes of one inference.
     pub fn total_bytes(&self) -> f64 {
         self.kernels.iter().map(|k| k.bytes).sum()
     }
+    /// Total thread blocks of one inference.
     pub fn total_blocks(&self) -> u64 {
         self.kernels.iter().map(|k| k.grid as u64).sum()
     }

@@ -8,10 +8,13 @@ pub struct Rng {
 }
 
 impl Rng {
+    /// Seeded generator (seed 0 is mapped to 1: xorshift state must be
+    /// nonzero).
     pub fn new(seed: u64) -> Self {
         Rng { state: seed.max(1) }
     }
 
+    /// Next raw 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         let mut x = self.state;
         x ^= x >> 12;

@@ -26,7 +26,9 @@ use crate::workloads::rng::Rng;
 pub struct SourceSpec {
     /// Model name, resolved through [`models::by_name`] at build time.
     pub model: String,
+    /// Task class of every request from this source.
     pub criticality: Criticality,
+    /// How requests arrive.
     pub arrival: Arrival,
     /// Optional end-to-end deadline (us); completions later than this are
     /// counted in `RunStats::deadline_misses_*`.
@@ -36,8 +38,11 @@ pub struct SourceSpec {
 /// A complete declarative scenario: N tenants over a simulated window.
 #[derive(Debug, Clone)]
 pub struct ScenarioSpec {
+    /// Scenario name (unique within the family).
     pub name: String,
+    /// The tenants, in source order.
     pub sources: Vec<SourceSpec>,
+    /// Arrival-generation window (us).
     pub duration_us: f64,
     /// RNG seed for stochastic arrivals (the driver derives every random
     /// draw of the run from it, so a scenario is fully reproducible).
@@ -45,10 +50,23 @@ pub struct ScenarioSpec {
 }
 
 impl ScenarioSpec {
+    /// Number of request sources (tenants).
     pub fn tenants(&self) -> usize {
         self.sources.len()
     }
 
+    /// Stable per-tenant label for serving reports:
+    /// `t{i}-{model}-{critical|normal}` (e.g. `t0-gru-critical`).
+    pub fn tenant_label(&self, i: usize) -> String {
+        let s = &self.sources[i];
+        let class = match s.criticality {
+            Criticality::Critical => "critical",
+            Criticality::Normal => "normal",
+        };
+        format!("t{i}-{}-{class}", s.model)
+    }
+
+    /// Number of critical tenants.
     pub fn criticals(&self) -> usize {
         self.sources
             .iter()
@@ -390,6 +408,8 @@ pub struct ScenarioGen {
 const GEN_MODELS: [&str; 4] = ["cifarnet", "squeezenet", "alexnet", "gru"];
 
 impl ScenarioGen {
+    /// A generator whose stream of scenarios is fully determined by
+    /// `seed`; every generated scenario spans `duration_us`.
     pub fn new(seed: u64, duration_us: f64) -> Self {
         ScenarioGen { rng: Rng::new(seed), duration_us, next_idx: 0 }
     }

@@ -4,6 +4,9 @@
 //! in-tree seeded RNG to sweep hundreds of randomized cases per property —
 //! same idea, deterministic by construction (failures print the case).
 
+use miriam::coordinator::admission::{
+    AdmissionConfig, AdmissionController, AdmissionPolicy, Decision, POLICIES,
+};
 use miriam::coordinator::driver::{self, RunOpts};
 use miriam::coordinator::scheduler_for;
 use miriam::coordinator::shaded_tree::{Leftover, ShadedTree};
@@ -328,6 +331,93 @@ fn prop_incremental_engine_matches_reference_trajectory() {
                    "{wl_name}/{sched}: event count diverged");
         let occ = (inc.achieved_occupancy - refr.achieved_occupancy).abs();
         assert!(occ <= 1e-9, "{wl_name}/{sched}: occupancy diverged {occ}");
+    }
+}
+
+/// Property (ISSUE 4 satellite): **critical requests are never shed**,
+/// under any admission policy, scenario, or seed — checked end-to-end
+/// through the online serving loop on generated random scenarios, with
+/// the `offered == admitted + shed` balance held per tenant.
+#[test]
+fn prop_admission_never_sheds_critical_and_balances() {
+    use miriam::server::online::{run_serve, ServeOpts};
+    use miriam::workloads::scenario::ScenarioGen;
+
+    let spec = GpuSpec::rtx2060();
+    // Tight tunables so the policies actually bind on generated load.
+    let admission = AdmissionConfig {
+        bucket_capacity: 2.0,
+        refill_hz: 25.0,
+        max_queue_us: 3_000.0,
+        ..AdmissionConfig::default()
+    };
+    let mut gen = ScenarioGen::new(0xAD31, 8_000.0);
+    for case in 0..6 {
+        let sc = gen.next_scenario();
+        for policy in POLICIES {
+            let opts = ServeOpts {
+                policy,
+                admission: admission.clone(),
+                ..ServeOpts::default()
+            };
+            let r = run_serve(&spec, &sc, &opts)
+                .unwrap_or_else(|e| panic!("case {case} {policy:?}: {e}"));
+            assert_eq!(r.shed_critical(), 0,
+                       "case {case} ({}) {policy:?}: critical shed",
+                       sc.name);
+            assert_eq!(r.offered(), r.admitted() + r.shed(),
+                       "case {case} {policy:?}: unbalanced totals");
+            for t in &r.tenants {
+                assert_eq!(t.offered, t.admitted + t.shed,
+                           "case {case} {policy:?} {}: unbalanced", t.label);
+                assert!(t.served <= t.admitted,
+                        "case {case} {policy:?} {}: served > admitted",
+                        t.label);
+                if t.criticality == Criticality::Critical {
+                    assert_eq!(t.shed, 0);
+                    assert_eq!(t.offered, t.admitted);
+                }
+            }
+        }
+    }
+}
+
+/// Property (ISSUE 4 satellite): token-bucket conservation — over any
+/// arrival sequence in a window of length `T`, a tenant's admitted count
+/// never exceeds `capacity + refill_hz * T` (initial fill plus refills);
+/// and sheds resume being admits after a refill interval.
+#[test]
+fn prop_token_bucket_conservation() {
+    let wl = mdtb::by_name("A", 1.0).unwrap().build(); // source 1 = normal
+    let spec = GpuSpec::rtx2060();
+    let params = ContentionParams::default();
+    let mut rng = Rng::new(0x70CE);
+    for case in 0..100 {
+        let capacity = (rng.next_below(20) + 1) as f64;
+        let refill_hz = 1.0 + rng.next_f64() * 500.0;
+        let window_us = 10_000.0 + rng.next_f64() * 200_000.0;
+        let cfg = AdmissionConfig {
+            bucket_capacity: capacity,
+            refill_hz,
+            ..AdmissionConfig::default()
+        };
+        let mut ctrl = AdmissionController::new(
+            AdmissionPolicy::TokenBucket, cfg, &wl, &spec, &params);
+        // Random ascending arrival times across the window.
+        let n = 1 + rng.next_below(400) as usize;
+        let mut times: Vec<f64> =
+            (0..n).map(|_| rng.next_f64() * window_us).collect();
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut admitted = 0u64;
+        for &t in &times {
+            if ctrl.decide(1, t) == Decision::Admitted {
+                admitted += 1;
+            }
+        }
+        let bound = capacity + refill_hz * window_us / 1e6 + 1.0;
+        assert!(admitted as f64 <= bound,
+                "case {case}: admitted {admitted} > capacity {capacity} + \
+                 refills ({bound})");
     }
 }
 
