@@ -1,0 +1,91 @@
+//! Router comparison across the 8-scenario family on a heterogeneous
+//! fleet (ISSUE 5).
+//!
+//! One leg: every family scenario served across the default
+//! rtx2060 + xavier + tx2 fleet (Miriam on every device) under each
+//! router — `round-robin` baseline, `least-outstanding-work`,
+//! `criticality-affinity`. Per cell the table reports the SLO split,
+//! fleet-level critical p50/p99, critical deadline misses, and fleet
+//! throughput; the summary compares each router against the round-robin
+//! baseline per scenario (critical p99 and misses — the placement win
+//! the ISSUE 5 motivation predicts), and a conservation gate checks
+//! `routed == admitted` on every cell.
+//!
+//! Writes `BENCH_fleet.json` (canonical, byte-deterministic per seed and
+//! across worker threads — schema in EXPERIMENTS.md §Fleet). CI smoke
+//! mode: append `-- --smoke` (or set `BENCH_SMOKE=1`).
+
+use miriam::fleet::{run_fleet_grid, FleetOpts, FleetSpec, ROUTERS};
+use miriam::workloads::scenario;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").is_ok();
+    let duration_us = if smoke { 20_000.0 } else { 300_000.0 };
+    let fleet = FleetSpec::parse(
+        &["rtx2060".into(), "xavier".into(), "tx2".into()],
+        &["miriam".into()],
+    )
+    .expect("default fleet parses");
+    let scenarios = scenario::family(duration_us);
+    let routers: Vec<String> = ROUTERS.iter().map(|r| r.to_string()).collect();
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    println!("# fleet_serving: {} scenarios x {} routers on {} devices, \
+              {}s of arrivals per cell, {threads} thread(s){}",
+             scenarios.len(), routers.len(), fleet.devices.len(),
+             duration_us / 1e6, if smoke { " (smoke)" } else { "" });
+    println!("{:<16} {:<22} {:>8} {:>6} {:>8} {:>10} {:>10} {:>6} {:>9}",
+             "scenario", "router", "offered", "shed", "served", "crit p50",
+             "crit p99", "miss", "fleet r/s");
+    println!("{:<16} {:<22} {:>8} {:>6} {:>8} {:>10} {:>10} {:>6} {:>9}",
+             "", "", "", "", "", "(ms)", "(ms)", "(crit)", "");
+
+    let grid = run_fleet_grid(&fleet, &scenarios, &routers,
+                              &FleetOpts::default(), threads)
+        .expect("fleet grid");
+    let mut conserved = true;
+    for c in &grid.cells {
+        conserved &= c.routed() == c.admitted();
+        println!("{:<16} {:<22} {:>8} {:>6} {:>8} {:>10.2} {:>10.2} {:>6} \
+                  {:>9.1}",
+                 c.scenario, c.router, c.offered(), c.shed(), c.served(),
+                 c.crit_quantile_us(0.5) / 1e3,
+                 c.crit_p99_us() / 1e3,
+                 c.deadline_misses_critical(),
+                 c.throughput_rps());
+    }
+
+    // Router comparison vs the round-robin placement baseline.
+    println!("\n{:<16} {:>12} {:>12} {:>12} {:>8} {:>8} {:>8}",
+             "scenario", "p99 rr(ms)", "p99 low(ms)", "p99 aff(ms)",
+             "miss rr", "miss low", "miss aff");
+    for sc in &grid.scenarios {
+        let cell = |r: &str| grid.cell(sc, r).expect("cell ran");
+        let rr = cell("round-robin");
+        let low = cell("least-outstanding-work");
+        let aff = cell("criticality-affinity");
+        println!("{:<16} {:>12.2} {:>12.2} {:>12.2} {:>8} {:>8} {:>8}",
+                 sc,
+                 rr.crit_p99_us() / 1e3,
+                 low.crit_p99_us() / 1e3,
+                 aff.crit_p99_us() / 1e3,
+                 rr.deadline_misses_critical(),
+                 low.deadline_misses_critical(),
+                 aff.deadline_misses_critical());
+    }
+    println!("\nrouted == admitted on every cell: {}",
+             if conserved { "yes" } else { "NO" });
+
+    std::fs::write("BENCH_fleet.json", grid.to_json())
+        .expect("write BENCH_fleet.json");
+    println!("wrote BENCH_fleet.json");
+
+    // Conservation is a gate, not a remark: a run where a request was
+    // lost or double-placed must fail the CI step.
+    if !conserved {
+        std::process::exit(1);
+    }
+}

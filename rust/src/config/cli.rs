@@ -49,6 +49,13 @@ impl Args {
         self.flags.get(key).map(String::as_str).unwrap_or(default)
     }
 
+    /// String flag without a default: `None` when the flag is absent —
+    /// for flags whose mere presence changes behaviour (`--trace-out`,
+    /// `--record-golden`, `--seed` overrides).
+    pub fn get_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
     /// Float flag with a default; errors on an unparsable value.
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64, String> {
         match self.flags.get(key) {
@@ -108,6 +115,14 @@ mod tests {
         assert_eq!(a.get_f64("duration", 1.0).unwrap(), 2.5);
         assert!(a.has("verbose"));
         assert_eq!(a.get("missing", "d"), "d");
+    }
+
+    #[test]
+    fn optional_flags_distinguish_absent_from_valueless() {
+        let a = parse(&["--trace-out", "t.json", "--verbose"]);
+        assert_eq!(a.get_opt("trace-out"), Some("t.json"));
+        assert_eq!(a.get_opt("verbose"), Some("true"));
+        assert_eq!(a.get_opt("missing"), None);
     }
 
     #[test]

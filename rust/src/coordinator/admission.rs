@@ -238,6 +238,23 @@ impl ModelEnvelope {
     }
 }
 
+/// One [`ModelEnvelope`] per workload source, in source order — the
+/// per-device envelope table the admission controller and the fleet
+/// routers (`crate::fleet`) both index by source, derived from the same
+/// (model, spec) arithmetic so an admission estimate and a routing weight
+/// can never disagree about a model's cost on a device.
+pub fn model_envelopes(
+    workload: &Workload,
+    spec: &GpuSpec,
+    params: &ContentionParams,
+) -> Vec<ModelEnvelope> {
+    workload
+        .sources
+        .iter()
+        .map(|s| ModelEnvelope::of(&s.model, spec, params))
+        .collect()
+}
+
 /// Per-tenant admission state.
 #[derive(Debug, Clone)]
 struct TenantState {
@@ -284,11 +301,7 @@ impl AdmissionController {
                 last_refill_us: 0.0,
             })
             .collect();
-        let envelopes = workload
-            .sources
-            .iter()
-            .map(|s| ModelEnvelope::of(&s.model, spec, params))
-            .collect();
+        let envelopes = model_envelopes(workload, spec, params);
         AdmissionController {
             policy,
             cfg,
@@ -413,6 +426,21 @@ mod tests {
             assert!(e.solo_us > 0.0);
             assert!(e.padded_us >= e.solo_us,
                     "padded {} < solo {}", e.padded_us, e.solo_us);
+        }
+    }
+
+    #[test]
+    fn envelope_table_matches_per_source_envelopes() {
+        let wl = mdtb::mdtb_a(1.0).build();
+        let params = ContentionParams::default();
+        for spec in GpuSpec::presets() {
+            let table = model_envelopes(&wl, &spec, &params);
+            assert_eq!(table.len(), wl.sources.len());
+            for (e, s) in table.iter().zip(&wl.sources) {
+                let direct = ModelEnvelope::of(&s.model, &spec, &params);
+                assert_eq!(e.solo_us.to_bits(), direct.solo_us.to_bits());
+                assert_eq!(e.padded_us.to_bits(), direct.padded_us.to_bits());
+            }
         }
     }
 

@@ -255,6 +255,52 @@ pub fn record_golden_traces(
     Ok(out)
 }
 
+/// Record the pinned *per-device* golden-trace cells (ISSUE 5 satellite):
+/// every [`crate::workloads::scenario::DEVICE_GOLDEN_PLATFORMS`] preset ×
+/// [`crate::workloads::scenario::DEVICE_GOLDEN_SCENARIOS`] scenario ×
+/// scheduler, at the shared golden duration, into `dir` (conventionally
+/// the golden dir's `devices/` subdirectory) as canonical JSON. Returns
+/// (path, event count) per cell. Like [`record_golden_traces`], this is
+/// the single writer shared by `scenarios --record-golden` and the
+/// conformance suite's bootstrap/UPDATE_GOLDEN path.
+pub fn record_device_golden_traces(
+    dir: &std::path::Path,
+) -> std::io::Result<Vec<(std::path::PathBuf, usize)>> {
+    use crate::coordinator::{sweep, SCHEDULERS};
+    use crate::workloads::scenario;
+    std::fs::create_dir_all(dir)?;
+    let mut out = Vec::new();
+    let opts = RunOpts { reference_rates: false, trace: true };
+    for platform in scenario::DEVICE_GOLDEN_PLATFORMS {
+        let spec = GpuSpec::by_name(platform)
+            .expect("device golden platform preset exists");
+        let cells: Vec<(scenario::ScenarioSpec, String)> =
+            scenario::DEVICE_GOLDEN_SCENARIOS
+                .iter()
+                .flat_map(|&sc_name| {
+                    let sc = scenario::by_name(
+                        sc_name, scenario::GOLDEN_DURATION_US)
+                        .expect("device golden scenario exists");
+                    SCHEDULERS
+                        .iter()
+                        .map(move |&sched| (sc.clone(), sched.to_string()))
+                })
+                .collect();
+        // Same parallel-safe executor as the main goldens: per-cell
+        // traces are independent of worker count.
+        let stats = sweep::run_cells(&spec, &cells, opts,
+                                     cells.len().min(4));
+        for ((sc, sched), mut st) in cells.into_iter().zip(stats) {
+            let trace = st.trace.take().expect("trace was requested");
+            let path = dir.join(scenario::device_golden_file_name(
+                platform, &sc.name, &sched));
+            std::fs::write(&path, trace.to_canonical_json())?;
+            out.push((path, trace.len()));
+        }
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -172,6 +172,21 @@ pub(crate) fn sorted_quantile(v: &[f64], q: f64) -> f64 {
     quantile(&v, q)
 }
 
+/// [`quantile`] over the concatenation of several unsorted samples —
+/// the class-level and fleet-level view over per-tenant (and, for the
+/// fleet, per-device) latency vectors, identical in semantics to calling
+/// [`sorted_quantile`] on a pre-merged vector. Shared by
+/// `crate::server::online` and `crate::fleet::report`.
+pub(crate) fn merged_quantile<'a, I>(parts: I, q: f64) -> f64
+where
+    I: IntoIterator<Item = &'a [f64]>,
+{
+    let mut v: Vec<f64> =
+        parts.into_iter().flat_map(|s| s.iter().copied()).collect();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile(&v, q)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -245,6 +260,21 @@ mod tests {
         // pos = 0.99 * 99 = 98.01 -> between v[98]=99 and v[99]=100.
         let want = 99.0 * 0.99 + 100.0 * 0.01;
         assert!((quantile(&v, 0.99) - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merged_quantile_equals_quantile_of_concatenation() {
+        let a = [3.0, 1.0];
+        let b: [f64; 0] = [];
+        let c = [2.0, 5.0, 4.0];
+        let parts: Vec<&[f64]> = vec![&a, &b, &c];
+        for q in [0.0, 0.25, 0.5, 0.99, 1.0] {
+            let merged = merged_quantile(parts.iter().copied(), q);
+            let flat = sorted_quantile(&[3.0, 1.0, 2.0, 5.0, 4.0], q);
+            assert!((merged - flat).abs() < 1e-12, "q={q}");
+        }
+        assert!(merged_quantile(std::iter::empty::<&[f64]>(), 0.5).is_nan());
+        assert!(merged_quantile(vec![&b as &[f64]], 0.5).is_nan());
     }
 
     #[test]

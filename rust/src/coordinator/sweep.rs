@@ -400,6 +400,35 @@ pub fn derive_seed(scenario_seed: u64, replica: u32) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Run `run_one(i)` for every `i in 0..n` across a scoped worker pool of
+/// at most `threads` workers pulling indexes off an atomic counter — the
+/// concurrency skeleton shared by [`run_cells`] and the fleet grid
+/// runner (`crate::fleet::run_fleet_grid`). Callers own per-index result
+/// slots, so results stay position-stable regardless of worker
+/// interleaving (the any-thread-count determinism contract).
+pub(crate) fn run_indexed(n: usize, threads: usize,
+                          run_one: impl Fn(usize) + Sync) {
+    let workers = threads.max(1).min(n.max(1));
+    if workers <= 1 {
+        for i in 0..n {
+            run_one(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                run_one(i);
+            });
+        }
+    });
+}
+
 /// Run explicit (scenario, scheduler) cells across a scoped worker pool,
 /// returning per-cell [`RunStats`] **in cell order** regardless of worker
 /// interleaving. The shared executor behind [`run_sweep`], golden-trace
@@ -408,35 +437,16 @@ pub fn derive_seed(scenario_seed: u64, replica: u32) -> u64 {
 pub fn run_cells(gpu: &GpuSpec, cells: &[(ScenarioSpec, String)],
                  opts: RunOpts, threads: usize) -> Vec<RunStats> {
     let n = cells.len();
-    let workers = threads.max(1).min(n.max(1));
-    let next = AtomicUsize::new(0);
     let results: Vec<Mutex<Option<RunStats>>> =
         (0..n).map(|_| Mutex::new(None)).collect();
-    let run_one = |i: usize| {
+    run_indexed(n, threads, |i| {
         let (sc, sched) = &cells[i];
         let wl = sc.build();
         let mut s = scheduler_for(sched, &wl)
             .unwrap_or_else(|| panic!("unknown scheduler {sched}"));
         let st = driver::run_with(gpu.clone(), &wl, s.as_mut(), opts);
         *results[i].lock().unwrap() = Some(st);
-    };
-    if workers <= 1 {
-        for i in 0..n {
-            run_one(i);
-        }
-    } else {
-        std::thread::scope(|scope| {
-            for _ in 0..workers {
-                scope.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    run_one(i);
-                });
-            }
-        });
-    }
+    });
     results
         .into_iter()
         .map(|m| m.into_inner().unwrap().expect("cell ran"))

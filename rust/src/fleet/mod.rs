@@ -1,0 +1,608 @@
+//! Heterogeneous multi-GPU fleet serving (ISSUE 5 tentpole).
+//!
+//! Miriam is evaluated across two edge-GPU platforms (§8), and the
+//! ROADMAP's heavy-traffic north star needs more than one device per
+//! deployment: this module serves a mixed-criticality scenario across a
+//! **fleet** of simulated edge GPUs — mixed [`GpuSpec`] presets, a
+//! per-device scheduler choice — by multiplexing the online serving
+//! machinery of [`crate::server::online`] over per-device engine +
+//! coordinator instances ([`DeviceCore`]; fleet and single-device runs
+//! share that code path, so a 1-device fleet reproduces `serve-sim`
+//! bitwise — `rust/tests/fleet_determinism.rs`).
+//!
+//! The loop advances in simulated time only: arrivals come from the same
+//! seeded heap the batch driver and `serve-sim` use, every arrival passes
+//! through one fleet-wide [`AdmissionController`] (critical is never
+//! shed), and each *admitted* request is placed on exactly one device by
+//! a pluggable [`RouterPolicy`] ([`router`] — `round-robin`,
+//! `least-outstanding-work`, `criticality-affinity`). Reports
+//! ([`report`]) carry no host timing, so `BENCH_fleet.json` is
+//! byte-deterministic per (seed, devices, router) and across
+//! `--threads` values.
+//!
+//! CLI: `miriam fleet-sim --devices xavier,tx2 --router all
+//! --scenario duo-burst` (README has a quickstart; EXPERIMENTS.md §Fleet
+//! has router semantics and the JSON schema).
+//!
+//! [`DeviceCore`]: crate::server::online
+//!
+//! ```
+//! use miriam::fleet::{run_fleet, FleetOpts, FleetSpec};
+//! use miriam::workloads::scenario;
+//!
+//! let fleet = FleetSpec::parse(
+//!     &["xavier".into(), "tx2".into()], &["miriam".into()]).unwrap();
+//! let sc = scenario::by_name("duo-burst", 5_000.0).unwrap();
+//! let report = run_fleet(&fleet, &sc, &FleetOpts::default()).unwrap();
+//! // Router conservation: every admitted request landed on one device.
+//! assert_eq!(report.routed(), report.admitted());
+//! assert_eq!(report.shed_critical(), 0); // critical is never shed
+//! ```
+
+pub mod report;
+pub mod router;
+
+pub use report::{DeviceDesc, DeviceOutcome, FleetGridReport, FleetReport};
+pub use router::{router_for, FleetView, RouterPolicy, ROUTERS};
+
+use std::cmp::Reverse;
+use std::sync::Mutex;
+
+use crate::coordinator::admission::{
+    model_envelopes, AdmissionConfig, AdmissionController, AdmissionPolicy,
+    Decision,
+};
+use crate::coordinator::driver::{initial_arrivals, TimeKey};
+use crate::gpu::kernel::Criticality;
+use crate::gpu::spec::GpuSpec;
+use crate::server::online::{
+    record_served, shed_arrival, tenant_outcomes, validate_admission,
+    DeviceCore,
+};
+use crate::workloads::rng::Rng;
+use crate::workloads::scenario::ScenarioSpec;
+
+/// One device of a fleet: a GPU preset plus the scheduler it runs.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    /// Stable instance name within the fleet (`d{i}-{preset}` from
+    /// [`FleetSpec::parse`]; presets may repeat, instance names may not).
+    pub name: String,
+    /// The simulated GPU.
+    pub gpu: GpuSpec,
+    /// Scheduler name (any `scheduler_for` name) this device runs.
+    pub scheduler: String,
+}
+
+/// A named fleet of simulated edge GPUs.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    /// The devices, in fleet order (device index = position here).
+    pub devices: Vec<DeviceSpec>,
+}
+
+impl FleetSpec {
+    /// Build a fleet from CLI-shaped lists: `devices` are GPU preset
+    /// names (repeats allowed — `xavier,xavier,tx2` is a valid fleet),
+    /// `schedulers` is either one name (applied to every device) or one
+    /// name per device. Instance names are `d{i}-{preset}`. Errors on an
+    /// unknown preset (listing the available presets), an empty fleet, or
+    /// a scheduler list whose length matches neither 1 nor the device
+    /// count (scheduler *names* are validated later, by `DeviceCore`).
+    pub fn parse(devices: &[String], schedulers: &[String])
+                 -> Result<Self, String> {
+        if devices.is_empty() {
+            return Err("a fleet needs at least one device".into());
+        }
+        if schedulers.is_empty()
+            || (schedulers.len() != 1 && schedulers.len() != devices.len())
+        {
+            return Err(format!(
+                "need one scheduler for the whole fleet or one per device \
+                 (got {} for {} device(s))",
+                schedulers.len(),
+                devices.len()
+            ));
+        }
+        let mut out = Vec::with_capacity(devices.len());
+        for (i, d) in devices.iter().enumerate() {
+            let gpu = GpuSpec::by_name(d).ok_or_else(|| {
+                format!(
+                    "unknown device preset '{d}' (available: {})",
+                    GpuSpec::PRESET_NAMES.join(", ")
+                )
+            })?;
+            let scheduler = if schedulers.len() == 1 {
+                schedulers[0].clone()
+            } else {
+                schedulers[i].clone()
+            };
+            out.push(DeviceSpec {
+                name: format!("d{i}-{}", gpu.name),
+                gpu,
+                scheduler,
+            });
+        }
+        Ok(FleetSpec { devices: out })
+    }
+
+    /// Index of the fleet's fastest device: highest peak FP32 throughput
+    /// ([`GpuSpec::total_flops_us`]), ties broken toward the lowest
+    /// index. The `criticality-affinity` pin target and the spec the
+    /// fleet-wide admission envelopes are derived against.
+    pub fn fastest(&self) -> usize {
+        let mut best = 0usize;
+        let mut best_flops = f64::NEG_INFINITY;
+        for (i, d) in self.devices.iter().enumerate() {
+            let f = d.gpu.total_flops_us();
+            if f > best_flops {
+                best_flops = f;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// The devices as report headers.
+    pub fn descs(&self) -> Vec<DeviceDesc> {
+        self.devices
+            .iter()
+            .map(|d| DeviceDesc {
+                name: d.name.clone(),
+                platform: d.gpu.name.clone(),
+                scheduler: d.scheduler.clone(),
+            })
+            .collect()
+    }
+}
+
+/// Configuration of one fleet serving run.
+#[derive(Debug, Clone)]
+pub struct FleetOpts {
+    /// Router to place admitted requests with (a [`ROUTERS`] name).
+    pub router: String,
+    /// Admission policy applied fleet-wide to best-effort arrivals.
+    pub policy: AdmissionPolicy,
+    /// Policy tunables (buckets, burst guard, shed backoff).
+    pub admission: AdmissionConfig,
+    /// Override the scenario's pinned arrival seed (`None` keeps it).
+    pub seed: Option<u64>,
+}
+
+impl Default for FleetOpts {
+    fn default() -> Self {
+        FleetOpts {
+            router: "round-robin".into(),
+            policy: AdmissionPolicy::Open,
+            admission: AdmissionConfig::default(),
+            seed: None,
+        }
+    }
+}
+
+/// Serve one scenario across the fleet until every device drains.
+/// Deterministic for a given (scenario, seed, devices, router, policy):
+/// the loop advances in simulated time only, ties (arrival vs event,
+/// device vs device) break the same way every run, and no host timing
+/// enters the report.
+pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
+                 -> Result<FleetReport, String> {
+    if fleet.devices.is_empty() {
+        return Err("a fleet needs at least one device".into());
+    }
+    validate_admission(&opts.admission)?;
+    let n = fleet.devices.len();
+    let mut router = router_for(&opts.router, n).ok_or_else(|| {
+        format!(
+            "unknown router {} (available: {})",
+            opts.router,
+            ROUTERS.join(", ")
+        )
+    })?;
+
+    let mut wl = sc.build();
+    if let Some(seed) = opts.seed {
+        wl.seed = seed;
+    }
+    let mut cores = Vec::with_capacity(n);
+    for d in &fleet.devices {
+        cores.push(DeviceCore::new(&d.gpu, &wl, &d.scheduler)?);
+    }
+
+    // One fleet-wide admission controller. Its envelopes are derived
+    // against the *fastest* device (best-placement estimates); in a
+    // 1-device fleet that is the device itself, which keeps the
+    // serve-sim differential contract exact.
+    let fastest = fleet.fastest();
+    let mut ctrl = AdmissionController::new(
+        opts.policy,
+        opts.admission.clone(),
+        &wl,
+        cores[fastest].spec(),
+        cores[fastest].params(),
+    );
+    // Per-device × per-source solo envelopes: the router's cost model.
+    let env_solo: Vec<Vec<f64>> = cores
+        .iter()
+        .map(|c| {
+            model_envelopes(&wl, c.spec(), c.params())
+                .iter()
+                .map(|e| e.solo_us)
+                .collect()
+        })
+        .collect();
+
+    let mut rng = Rng::new(wl.seed);
+    let mut arrivals = initial_arrivals(&wl, &mut rng);
+    let mut tenants = tenant_outcomes(sc, &wl);
+    let mut devices: Vec<DeviceOutcome> = fleet
+        .descs()
+        .into_iter()
+        .map(|desc| DeviceOutcome {
+            desc,
+            routed: 0,
+            routed_critical: 0,
+            routed_normal: 0,
+            deadline_misses: 0,
+            critical_latencies_us: Vec::new(),
+            normal_latencies_us: Vec::new(),
+            span_us: 0.0,
+            events: 0,
+            max_normal_queue: 0,
+        })
+        .collect();
+    // Envelope-weighted outstanding work per device (router signal).
+    let mut outstanding = vec![0.0f64; n];
+    let mut next_id: u64 = 1;
+
+    loop {
+        let t_arr = arrivals.peek().map(|Reverse((TimeKey(t), _))| *t);
+        // Earliest device event; ties break toward the lowest index
+        // (strict `<`), so the step order is deterministic.
+        let mut t_ev: Option<(f64, usize)> = None;
+        for (d, core) in cores.iter_mut().enumerate() {
+            if let Some(t) = core.next_event_time() {
+                if t_ev.map_or(true, |(tb, _)| t < tb) {
+                    t_ev = Some((t, d));
+                }
+            }
+        }
+        match (t_arr, t_ev) {
+            (None, None) => break,
+            (Some(ta), te) if te.map_or(true, |(t, _)| ta <= t) => {
+                // ta precedes every device's next event, so advancing the
+                // whole fleet cannot skip one; devices therefore observe
+                // arrivals on a common clock.
+                for core in &mut cores {
+                    core.advance_to(ta);
+                }
+                while let Some(Reverse((TimeKey(t), src))) =
+                    arrivals.peek().copied()
+                {
+                    if t > ta {
+                        break;
+                    }
+                    arrivals.pop();
+                    tenants[src].offered += 1;
+                    match ctrl.decide(src, t) {
+                        Decision::Admitted => {
+                            let crit = wl.sources[src].criticality;
+                            let d = router.route(
+                                src,
+                                crit,
+                                &FleetView {
+                                    outstanding_us: &outstanding,
+                                    env_solo_us: &env_solo,
+                                    fastest,
+                                },
+                            );
+                            assert!(d < n,
+                                    "router {} returned device {d} of {n}",
+                                    router.name());
+                            cores[d].submit(&wl, src, t, next_id);
+                            next_id += 1;
+                            tenants[src].admitted += 1;
+                            let dev = &mut devices[d];
+                            dev.routed += 1;
+                            match crit {
+                                Criticality::Critical => {
+                                    dev.routed_critical += 1;
+                                }
+                                Criticality::Normal => {
+                                    dev.routed_normal += 1;
+                                }
+                            }
+                            outstanding[d] += env_solo[d][src];
+                        }
+                        Decision::Shed(_) => {
+                            shed_arrival(&wl, src, t, &opts.admission,
+                                         &mut tenants, &mut arrivals);
+                        }
+                    }
+                }
+                for core in &mut cores {
+                    core.sample_queue_depth();
+                }
+            }
+            (_, Some((_, d))) => {
+                let dev = &mut devices[d];
+                let out_d = &mut outstanding[d];
+                let env_d = &env_solo[d];
+                cores[d].step(|src, arr, now| {
+                    ctrl.on_served(src);
+                    record_served(&wl, src, arr, now, &mut tenants,
+                                  &mut arrivals);
+                    let lat = now - arr;
+                    match wl.sources[src].criticality {
+                        Criticality::Critical => {
+                            dev.critical_latencies_us.push(lat);
+                        }
+                        Criticality::Normal => {
+                            dev.normal_latencies_us.push(lat);
+                        }
+                    }
+                    if wl.sources[src].deadline_us.is_some_and(|dl| lat > dl)
+                    {
+                        dev.deadline_misses += 1;
+                    }
+                    *out_d = (*out_d - env_d[src]).max(0.0);
+                });
+            }
+            // (Some, None) with a failed guard cannot occur: the guard is
+            // vacuously true when no device has a next event.
+            _ => unreachable!("fleet loop: impossible arrival/event state"),
+        }
+    }
+
+    let mut span_us = 0.0f64;
+    let mut events = 0u64;
+    for (core, dev) in cores.into_iter().zip(&mut devices) {
+        dev.max_normal_queue = core.max_normal_queue();
+        let (span, metrics) = core.finish();
+        dev.span_us = span;
+        dev.events = metrics.events;
+        span_us = span_us.max(span);
+        events += metrics.events;
+    }
+    Ok(FleetReport {
+        scenario: sc.name.clone(),
+        router: opts.router.clone(),
+        policy: opts.policy,
+        seed: wl.seed,
+        duration_us: wl.duration_us,
+        devices,
+        tenants,
+        span_us,
+        events,
+        critical_at_risk: ctrl.critical_at_risk(),
+    })
+}
+
+/// Run the scenarios × routers grid (scenario-major order) across a
+/// scoped worker pool and assemble the [`FleetGridReport`]. Cells are
+/// independent deterministic simulations landing in per-cell slots, so
+/// the report — and its `BENCH_fleet.json` — is **byte-identical for any
+/// `threads` value**. `base` provides the policy, seed override and
+/// admission tunables; its `router` field is ignored in favor of the
+/// `routers` list.
+pub fn run_fleet_grid(
+    fleet: &FleetSpec,
+    scenarios: &[ScenarioSpec],
+    routers: &[String],
+    base: &FleetOpts,
+    threads: usize,
+) -> Result<FleetGridReport, String> {
+    if scenarios.is_empty() {
+        return Err("fleet grid needs at least one scenario".into());
+    }
+    if routers.is_empty() {
+        return Err("fleet grid needs at least one router".into());
+    }
+    // Validate the whole grid up front so workers cannot hit a config
+    // error mid-pool.
+    validate_admission(&base.admission)?;
+    for r in routers {
+        if router_for(r, fleet.devices.len().max(1)).is_none() {
+            return Err(format!(
+                "unknown router {r} (available: {})",
+                ROUTERS.join(", ")
+            ));
+        }
+    }
+    let cells: Vec<(usize, usize)> = scenarios
+        .iter()
+        .enumerate()
+        .flat_map(|(si, _)| (0..routers.len()).map(move |ri| (si, ri)))
+        .collect();
+    let n = cells.len();
+    let slots: Vec<Mutex<Option<Result<FleetReport, String>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    // Same pool skeleton as `miriam sweep`: per-cell slots keep results
+    // position-stable for any thread count.
+    crate::coordinator::sweep::run_indexed(n, threads, |i| {
+        let (si, ri) = cells[i];
+        let opts = FleetOpts { router: routers[ri].clone(), ..base.clone() };
+        *slots[i].lock().unwrap() =
+            Some(run_fleet(fleet, &scenarios[si], &opts));
+    });
+    let cells = slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("cell ran"))
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(FleetGridReport {
+        devices: fleet.descs(),
+        policy: base.policy.name().to_string(),
+        duration_us: scenarios[0].duration_us,
+        routers: routers.to_vec(),
+        scenarios: scenarios.iter().map(|s| s.name.clone()).collect(),
+        cells,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::scenario;
+
+    const DUR_US: f64 = 20_000.0;
+
+    fn duo() -> ScenarioSpec {
+        scenario::by_name("duo-burst", DUR_US).unwrap()
+    }
+
+    fn hetero() -> FleetSpec {
+        FleetSpec::parse(
+            &["rtx2060".into(), "xavier".into(), "tx2".into()],
+            &["miriam".into()],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_builds_named_devices_and_broadcasts_scheduler() {
+        let f = hetero();
+        assert_eq!(f.devices.len(), 3);
+        assert_eq!(f.devices[0].name, "d0-rtx2060");
+        assert_eq!(f.devices[2].name, "d2-tx2");
+        assert!(f.devices.iter().all(|d| d.scheduler == "miriam"));
+        // Per-device schedulers and repeated presets.
+        let f = FleetSpec::parse(
+            &["xavier".into(), "xavier".into()],
+            &["miriam".into(), "sequential".into()],
+        )
+        .unwrap();
+        assert_eq!(f.devices[0].name, "d0-xavier");
+        assert_eq!(f.devices[1].name, "d1-xavier");
+        assert_eq!(f.devices[1].scheduler, "sequential");
+    }
+
+    #[test]
+    fn parse_rejects_unknown_presets_listing_the_vocabulary() {
+        let err = FleetSpec::parse(&["h100".into()], &["miriam".into()])
+            .unwrap_err();
+        assert!(err.contains("h100"), "{err}");
+        for name in GpuSpec::PRESET_NAMES {
+            assert!(err.contains(name),
+                    "error does not list preset {name}: {err}");
+        }
+        assert!(FleetSpec::parse(&[], &["miriam".into()]).is_err());
+        assert!(FleetSpec::parse(
+            &["tx2".into(), "tx2".into(), "tx2".into()],
+            &["miriam".into(), "ib".into()],
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn fastest_is_highest_total_flops_lowest_index_on_ties() {
+        assert_eq!(hetero().fastest(), 0); // rtx2060 leads
+        let f = FleetSpec::parse(
+            &["tx2".into(), "rtx2060".into()],
+            &["miriam".into()],
+        )
+        .unwrap();
+        assert_eq!(f.fastest(), 1);
+        let twins = FleetSpec::parse(
+            &["xavier".into(), "xavier".into()],
+            &["miriam".into()],
+        )
+        .unwrap();
+        assert_eq!(twins.fastest(), 0);
+    }
+
+    #[test]
+    fn fleet_accounting_balances_for_every_router() {
+        for r in ROUTERS {
+            let opts = FleetOpts { router: r.into(), ..FleetOpts::default() };
+            let rep = run_fleet(&hetero(), &duo(), &opts).unwrap();
+            assert_eq!(rep.offered(), rep.admitted() + rep.shed(), "{r}");
+            assert_eq!(rep.routed(), rep.admitted(), "{r}");
+            assert_eq!(rep.shed_critical(), 0, "{r}");
+            assert!(rep.served() > 0, "{r}: nothing served");
+            assert!(rep.events > 0, "{r}");
+            assert!(rep.span_us > 0.0, "{r}");
+            let dev_served: u64 =
+                rep.devices.iter().map(|d| d.served()).sum();
+            assert_eq!(dev_served, rep.served(), "{r}");
+            for d in &rep.devices {
+                assert_eq!(d.routed, d.routed_critical + d.routed_normal,
+                           "{r}/{}", d.desc.name);
+                assert!(d.served() <= d.routed, "{r}/{}", d.desc.name);
+            }
+        }
+    }
+
+    #[test]
+    fn round_robin_spreads_load_across_devices() {
+        let rep = run_fleet(&hetero(), &duo(), &FleetOpts::default())
+            .unwrap();
+        assert!(rep.devices.iter().all(|d| d.routed > 0),
+                "round-robin left a device idle");
+    }
+
+    #[test]
+    fn rejects_bad_options() {
+        let bad_router =
+            FleetOpts { router: "random".into(), ..FleetOpts::default() };
+        let err = run_fleet(&hetero(), &duo(), &bad_router).unwrap_err();
+        for name in ROUTERS {
+            assert!(err.contains(name), "{err}");
+        }
+        let bad_sched = FleetSpec::parse(
+            &["tx2".into()], &["fifo".into()]).unwrap();
+        assert!(run_fleet(&bad_sched, &duo(), &FleetOpts::default())
+            .is_err());
+        let bad_backoff = FleetOpts {
+            admission: AdmissionConfig {
+                shed_backoff_us: 0.0,
+                ..AdmissionConfig::default()
+            },
+            ..FleetOpts::default()
+        };
+        assert!(run_fleet(&hetero(), &duo(), &bad_backoff).is_err());
+        assert!(run_fleet_grid(&hetero(), &[], &["round-robin".into()],
+                               &FleetOpts::default(), 1)
+            .is_err());
+        assert!(run_fleet_grid(&hetero(), &[duo()], &[],
+                               &FleetOpts::default(), 1)
+            .is_err());
+        assert!(run_fleet_grid(&hetero(), &[duo()], &["random".into()],
+                               &FleetOpts::default(), 1)
+            .is_err());
+    }
+
+    #[test]
+    fn grid_report_shape_and_json_parse() {
+        use crate::runtime::json::{parse, Json};
+        let routers: Vec<String> =
+            ROUTERS.iter().map(|r| r.to_string()).collect();
+        let grid = run_fleet_grid(&hetero(), &[duo()], &routers,
+                                  &FleetOpts::default(), 2)
+            .unwrap();
+        assert_eq!(grid.cells.len(), 3);
+        assert!(grid.cell("duo-burst", "criticality-affinity").is_some());
+        let j = grid.to_json();
+        let doc = parse(&j).expect("valid JSON");
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("fleet"));
+        assert_eq!(doc.get("cells").and_then(Json::as_arr).map(|a| a.len()),
+                   Some(3));
+        assert_eq!(doc.get("devices").and_then(Json::as_arr).map(|a| a.len()),
+                   Some(3));
+    }
+
+    #[test]
+    fn seed_override_changes_a_stochastic_run() {
+        let a = run_fleet(&hetero(), &duo(),
+                          &FleetOpts { seed: Some(11),
+                                       ..FleetOpts::default() })
+            .unwrap();
+        let b = run_fleet(&hetero(), &duo(),
+                          &FleetOpts { seed: Some(12),
+                                       ..FleetOpts::default() })
+            .unwrap();
+        assert_eq!(a.seed, 11);
+        assert_eq!(b.seed, 12);
+        assert_ne!(a.to_json_value().to_canonical_string(),
+                   b.to_json_value().to_canonical_string());
+    }
+}

@@ -1,0 +1,333 @@
+//! Fleet serving reports and the canonical `BENCH_fleet.json` document
+//! (ISSUE 5 tentpole).
+//!
+//! A [`FleetReport`] is the outcome of one (scenario, router) cell of
+//! [`crate::fleet::run_fleet`]: per-device outcomes ([`DeviceOutcome`] —
+//! where requests landed and how each device fared), per-tenant SLO rows
+//! (the same [`TenantOutcome`] schema `BENCH_serve.json` uses), and
+//! fleet-level latency/throughput/miss aggregates. A [`FleetGridReport`]
+//! is a scenarios × routers comparison, serialized by
+//! [`FleetGridReport::to_json`] with **no host-timing fields** — so a
+//! fleet run is byte-deterministic per (seed, devices, router), the
+//! contract `rust/tests/fleet_determinism.rs` pins.
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::admission::AdmissionPolicy;
+use crate::coordinator::stats::{merged_quantile, sorted_quantile};
+use crate::gpu::kernel::Criticality;
+use crate::runtime::json::Json;
+use crate::server::online::{tenant_json, TenantOutcome};
+
+/// Identity of one fleet device (the `devices` header of
+/// `BENCH_fleet.json`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeviceDesc {
+    /// Stable instance name within the fleet (`d{i}-{preset}`).
+    pub name: String,
+    /// GPU preset name.
+    pub platform: String,
+    /// Scheduler this device runs.
+    pub scheduler: String,
+}
+
+/// Outcome of one device over a fleet serving run.
+#[derive(Debug, Clone)]
+pub struct DeviceOutcome {
+    /// The device's identity.
+    pub desc: DeviceDesc,
+    /// Requests the router placed here.
+    pub routed: u64,
+    /// Critical requests placed here (the criticality-affinity pinning
+    /// invariant is checked against this).
+    pub routed_critical: u64,
+    /// Best-effort requests placed here.
+    pub routed_normal: u64,
+    /// Served completions that exceeded their tenant's deadline.
+    pub deadline_misses: u64,
+    /// End-to-end latency (us) of every critical request served here.
+    pub critical_latencies_us: Vec<f64>,
+    /// End-to-end latency (us) of every best-effort request served here.
+    pub normal_latencies_us: Vec<f64>,
+    /// The device's simulated span until it drained (us).
+    pub span_us: f64,
+    /// Simulator events this device processed.
+    pub events: u64,
+    /// Peak best-effort queue depth inside the device's coordinator (0
+    /// when the scheduler does not expose one).
+    pub max_normal_queue: usize,
+}
+
+impl DeviceOutcome {
+    /// Requests this device served to completion.
+    pub fn served(&self) -> u64 {
+        (self.critical_latencies_us.len() + self.normal_latencies_us.len())
+            as u64
+    }
+
+    /// Critical-class latency quantile on this device (NaN when none).
+    pub fn crit_quantile_us(&self, q: f64) -> f64 {
+        sorted_quantile(&self.critical_latencies_us, q)
+    }
+
+    /// Best-effort-class latency quantile on this device (NaN when none).
+    pub fn normal_quantile_us(&self, q: f64) -> f64 {
+        sorted_quantile(&self.normal_latencies_us, q)
+    }
+
+    fn to_json_value(&self) -> Json {
+        let num = Json::Num;
+        let mut m = BTreeMap::new();
+        m.insert("device".into(), Json::Str(self.desc.name.clone()));
+        m.insert("platform".into(), Json::Str(self.desc.platform.clone()));
+        m.insert("scheduler".into(), Json::Str(self.desc.scheduler.clone()));
+        m.insert("routed".into(), num(self.routed as f64));
+        m.insert("routed_critical".into(), num(self.routed_critical as f64));
+        m.insert("routed_normal".into(), num(self.routed_normal as f64));
+        m.insert("served".into(), num(self.served() as f64));
+        m.insert("deadline_misses".into(), num(self.deadline_misses as f64));
+        m.insert("crit_p50_us".into(), num(self.crit_quantile_us(0.5)));
+        m.insert("crit_p99_us".into(), num(self.crit_quantile_us(0.99)));
+        m.insert("normal_p50_us".into(), num(self.normal_quantile_us(0.5)));
+        m.insert("span_us".into(), num(self.span_us));
+        m.insert("events".into(), num(self.events as f64));
+        m.insert("max_normal_queue".into(),
+                 num(self.max_normal_queue as f64));
+        Json::Obj(m)
+    }
+}
+
+/// Outcome of one (scenario, router) fleet serving cell.
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// Scenario name.
+    pub scenario: String,
+    /// Router the run placed requests with.
+    pub router: String,
+    /// Admission policy applied fleet-wide.
+    pub policy: AdmissionPolicy,
+    /// Arrival seed the run actually used.
+    pub seed: u64,
+    /// Arrival-generation window (us).
+    pub duration_us: f64,
+    /// Per-device outcomes, in fleet order.
+    pub devices: Vec<DeviceOutcome>,
+    /// Per-tenant outcomes, in source order (fleet-wide).
+    pub tenants: Vec<TenantOutcome>,
+    /// Fleet simulated span: the slowest device's drain time (us).
+    pub span_us: f64,
+    /// Simulator events summed over devices.
+    pub events: u64,
+    /// Critical arrivals whose deadline was infeasible by the admission
+    /// envelope (admitted regardless; see `AdmissionController`).
+    pub critical_at_risk: u64,
+}
+
+impl FleetReport {
+    /// Total arrivals seen.
+    pub fn offered(&self) -> u64 {
+        self.tenants.iter().map(|t| t.offered).sum()
+    }
+
+    /// Total arrivals admitted.
+    pub fn admitted(&self) -> u64 {
+        self.tenants.iter().map(|t| t.admitted).sum()
+    }
+
+    /// Total arrivals shed.
+    pub fn shed(&self) -> u64 {
+        self.tenants.iter().map(|t| t.shed).sum()
+    }
+
+    /// Total requests served to completion (fleet-wide).
+    pub fn served(&self) -> u64 {
+        self.tenants.iter().map(|t| t.served).sum()
+    }
+
+    /// Requests placed on devices — equals [`FleetReport::admitted`] by
+    /// the router-conservation invariant (every admitted request is
+    /// routed to exactly one device), pinned in
+    /// `rust/tests/prop_invariants.rs`.
+    pub fn routed(&self) -> u64 {
+        self.devices.iter().map(|d| d.routed).sum()
+    }
+
+    /// Shed count over critical tenants — zero by the admission
+    /// invariant, recorded so tests and reports can assert it fleet-wide.
+    pub fn shed_critical(&self) -> u64 {
+        self.class_sum(Criticality::Critical, |t| t.shed)
+    }
+
+    /// Deadline misses over critical tenants.
+    pub fn deadline_misses_critical(&self) -> u64 {
+        self.class_sum(Criticality::Critical, |t| t.deadline_misses)
+    }
+
+    /// Deadline misses over best-effort tenants.
+    pub fn deadline_misses_normal(&self) -> u64 {
+        self.class_sum(Criticality::Normal, |t| t.deadline_misses)
+    }
+
+    fn class_sum(&self, c: Criticality, f: impl Fn(&TenantOutcome) -> u64)
+                 -> u64 {
+        self.tenants
+            .iter()
+            .filter(|t| t.criticality == c)
+            .map(f)
+            .sum()
+    }
+
+    fn class_quantile(&self, c: Criticality, q: f64) -> f64 {
+        merged_quantile(
+            self.tenants
+                .iter()
+                .filter(|t| t.criticality == c)
+                .map(|t| t.latencies_us.as_slice()),
+            q,
+        )
+    }
+
+    /// Fleet-wide critical-class latency quantile (NaN when none served).
+    pub fn crit_quantile_us(&self, q: f64) -> f64 {
+        self.class_quantile(Criticality::Critical, q)
+    }
+
+    /// Fleet-wide critical-class p99 latency (us).
+    pub fn crit_p99_us(&self) -> f64 {
+        self.crit_quantile_us(0.99)
+    }
+
+    /// Fleet-wide best-effort-class latency quantile.
+    pub fn normal_quantile_us(&self, q: f64) -> f64 {
+        self.class_quantile(Criticality::Normal, q)
+    }
+
+    /// Served requests (both classes) per second of fleet simulated span.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.span_us <= 0.0 {
+            return 0.0;
+        }
+        self.served() as f64 / (self.span_us / 1e6)
+    }
+
+    /// Served best-effort requests per second of fleet simulated span.
+    pub fn normal_throughput_rps(&self) -> f64 {
+        if self.span_us <= 0.0 {
+            return 0.0;
+        }
+        self.class_sum(Criticality::Normal, |t| t.served) as f64
+            / (self.span_us / 1e6)
+    }
+
+    /// This cell as a canonical-JSON value (one `cells[]` row of
+    /// `BENCH_fleet.json`; non-finite quantiles serialize as `null`).
+    pub fn to_json_value(&self) -> Json {
+        let num = Json::Num;
+        let mut m = BTreeMap::new();
+        m.insert("scenario".into(), Json::Str(self.scenario.clone()));
+        m.insert("router".into(), Json::Str(self.router.clone()));
+        m.insert("policy".into(), Json::Str(self.policy.name().into()));
+        m.insert("seed".into(), num(self.seed as f64));
+        m.insert("duration_us".into(), num(self.duration_us));
+        m.insert("span_us".into(), num(self.span_us));
+        m.insert("events".into(), num(self.events as f64));
+        m.insert("offered".into(), num(self.offered() as f64));
+        m.insert("admitted".into(), num(self.admitted() as f64));
+        m.insert("shed".into(), num(self.shed() as f64));
+        m.insert("served".into(), num(self.served() as f64));
+        m.insert("routed".into(), num(self.routed() as f64));
+        m.insert("shed_critical".into(), num(self.shed_critical() as f64));
+        m.insert("crit_p50_us".into(), num(self.crit_quantile_us(0.5)));
+        m.insert("crit_p99_us".into(), num(self.crit_p99_us()));
+        m.insert("normal_p50_us".into(), num(self.normal_quantile_us(0.5)));
+        m.insert("throughput_rps".into(), num(self.throughput_rps()));
+        m.insert("normal_throughput_rps".into(),
+                 num(self.normal_throughput_rps()));
+        m.insert("deadline_misses_critical".into(),
+                 num(self.deadline_misses_critical() as f64));
+        m.insert("deadline_misses_normal".into(),
+                 num(self.deadline_misses_normal() as f64));
+        m.insert("critical_at_risk".into(), num(self.critical_at_risk as f64));
+        m.insert(
+            "devices".into(),
+            Json::Arr(
+                self.devices.iter().map(|d| d.to_json_value()).collect(),
+            ),
+        );
+        m.insert(
+            "tenants".into(),
+            Json::Arr(self.tenants.iter().map(tenant_json).collect()),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// A scenarios × routers fleet comparison (the `BENCH_fleet.json`
+/// document).
+#[derive(Debug, Clone)]
+pub struct FleetGridReport {
+    /// Fleet devices, in fleet order.
+    pub devices: Vec<DeviceDesc>,
+    /// Admission policy applied in every cell.
+    pub policy: String,
+    /// Arrival-generation window per cell (us).
+    pub duration_us: f64,
+    /// Router names, in run order.
+    pub routers: Vec<String>,
+    /// Scenario names, in run order.
+    pub scenarios: Vec<String>,
+    /// Cells in deterministic grid order (scenario-major, then router) —
+    /// independent of worker-thread interleaving.
+    pub cells: Vec<FleetReport>,
+}
+
+impl FleetGridReport {
+    /// The cell for (scenario, router), if it ran.
+    pub fn cell(&self, scenario: &str, router: &str) -> Option<&FleetReport> {
+        self.cells
+            .iter()
+            .find(|c| c.scenario == scenario && c.router == router)
+    }
+
+    /// The canonical `BENCH_fleet.json` document: sorted keys, no
+    /// whitespace, no host-timing fields — byte-deterministic per
+    /// (seed, devices, router) and across `--threads` values (schema in
+    /// EXPERIMENTS.md §Fleet).
+    pub fn to_json(&self) -> String {
+        let mut obj = BTreeMap::new();
+        obj.insert("bench".into(), Json::Str("fleet".into()));
+        obj.insert(
+            "devices".into(),
+            Json::Arr(
+                self.devices
+                    .iter()
+                    .map(|d| {
+                        let mut m = BTreeMap::new();
+                        m.insert("name".into(), Json::Str(d.name.clone()));
+                        m.insert("platform".into(),
+                                 Json::Str(d.platform.clone()));
+                        m.insert("scheduler".into(),
+                                 Json::Str(d.scheduler.clone()));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        obj.insert("policy".into(), Json::Str(self.policy.clone()));
+        obj.insert("duration_us".into(), Json::Num(self.duration_us));
+        obj.insert(
+            "routers".into(),
+            Json::Arr(self.routers.iter().cloned().map(Json::Str).collect()),
+        );
+        obj.insert(
+            "scenarios".into(),
+            Json::Arr(self.scenarios.iter().cloned().map(Json::Str).collect()),
+        );
+        obj.insert(
+            "cells".into(),
+            Json::Arr(self.cells.iter().map(|c| c.to_json_value()).collect()),
+        );
+        obj.insert("version".into(), Json::Num(1.0));
+        Json::Obj(obj).to_canonical_string()
+    }
+}

@@ -1,0 +1,232 @@
+//! Pluggable request-to-device routing policies (ISSUE 5 tentpole).
+//!
+//! Per-device scheduling decides *when and how* a request's kernels run;
+//! routing decides *where* — the placement dimension that EdgeServing and
+//! the edge-GPU performance-isolation literature show is as decisive as
+//! scheduling for deadline compliance on heterogeneous fleets. A
+//! [`RouterPolicy`] sees one admitted request at a time plus a
+//! [`FleetView`] of the devices and returns the device index; the fleet
+//! loop (`crate::fleet::run_fleet`) does the rest.
+//!
+//! Three policies ship (names in [`ROUTERS`]):
+//!
+//! * `round-robin` — class-blind rotation over the devices; the placement
+//!   baseline every comparison is made against.
+//! * `least-outstanding-work` — pick the device whose envelope-weighted
+//!   backlog *after* placing this request would be smallest. Backlogs are
+//!   weighted by each device's own [`ModelEnvelope::solo_us`] for the
+//!   request's model (`crate::coordinator::admission::model_envelopes`),
+//!   so a slow device accrues more microseconds per routed request than a
+//!   fast one — device speed is priced in, not just queue length.
+//! * `criticality-affinity` — critical tenants are pinned to the fastest
+//!   device ([`crate::fleet::FleetSpec::fastest`]); best-effort requests
+//!   fill the remaining devices round-robin (everything shares the one
+//!   device in a 1-device fleet). The placement analog of Miriam's
+//!   dedicated critical stream.
+//!
+//! Every policy is pure arithmetic over the view (no RNG, no host state),
+//! so fleet runs stay byte-deterministic per seed; ties break toward the
+//! lowest device index. `rust/tests/prop_invariants.rs` pins routed-
+//! exactly-once conservation and the criticality-affinity pinning
+//! invariant.
+//!
+//! [`ModelEnvelope::solo_us`]: crate::coordinator::admission::ModelEnvelope
+
+use crate::gpu::kernel::Criticality;
+
+/// Router names, in presentation order (baseline first) — the default
+/// `miriam fleet-sim --router all` / `benches/fleet_serving.rs`
+/// comparison set.
+pub const ROUTERS: [&str; 3] =
+    ["round-robin", "least-outstanding-work", "criticality-affinity"];
+
+/// What a router is allowed to see when placing one request: per-device
+/// envelope-weighted backlogs, the per-device × per-source envelope
+/// table, and which device is the fleet's fastest.
+#[derive(Debug)]
+pub struct FleetView<'a> {
+    /// Envelope-weighted outstanding work per device (us of solo service
+    /// time routed there and not yet served).
+    pub outstanding_us: &'a [f64],
+    /// `env_solo_us[device][source]`: the solo latency envelope of
+    /// `source`'s model on `device`.
+    pub env_solo_us: &'a [Vec<f64>],
+    /// Index of the fleet's fastest device (criticality-affinity target).
+    pub fastest: usize,
+}
+
+/// A request-to-device placement policy. Implementations must return an
+/// index `< view.outstanding_us.len()` and be deterministic functions of
+/// their own state plus the view.
+pub trait RouterPolicy {
+    /// Stable router name (CLI / report key).
+    fn name(&self) -> &'static str;
+
+    /// Place one admitted request from `source` (class `criticality`).
+    fn route(&mut self, source: usize, criticality: Criticality,
+             view: &FleetView<'_>) -> usize;
+}
+
+/// Class-blind rotation over the devices.
+struct RoundRobin {
+    devices: usize,
+    next: usize,
+}
+
+impl RouterPolicy for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn route(&mut self, _source: usize, _criticality: Criticality,
+             _view: &FleetView<'_>) -> usize {
+        let d = self.next;
+        self.next = (self.next + 1) % self.devices;
+        d
+    }
+}
+
+/// Argmin over devices of (current backlog + this request's own envelope
+/// there) — smallest *resulting* backlog, so device speed matters.
+struct LeastOutstandingWork;
+
+impl RouterPolicy for LeastOutstandingWork {
+    fn name(&self) -> &'static str {
+        "least-outstanding-work"
+    }
+
+    fn route(&mut self, source: usize, _criticality: Criticality,
+             view: &FleetView<'_>) -> usize {
+        let mut best = 0usize;
+        let mut best_us = f64::INFINITY;
+        for (d, out) in view.outstanding_us.iter().enumerate() {
+            let resulting = out + view.env_solo_us[d][source];
+            // Strict `<`: ties stay on the lowest index (determinism).
+            if resulting < best_us {
+                best_us = resulting;
+                best = d;
+            }
+        }
+        best
+    }
+}
+
+/// Critical requests pinned to the fastest device; best-effort requests
+/// round-robin over the remaining devices.
+struct CriticalityAffinity {
+    devices: usize,
+    next_normal: usize,
+}
+
+impl RouterPolicy for CriticalityAffinity {
+    fn name(&self) -> &'static str {
+        "criticality-affinity"
+    }
+
+    fn route(&mut self, _source: usize, criticality: Criticality,
+             view: &FleetView<'_>) -> usize {
+        if criticality == Criticality::Critical || self.devices == 1 {
+            return view.fastest;
+        }
+        // Rotate over the device indexes with `fastest` skipped.
+        let others = self.devices - 1;
+        let k = self.next_normal % others;
+        self.next_normal = (self.next_normal + 1) % others;
+        if k >= view.fastest {
+            k + 1
+        } else {
+            k
+        }
+    }
+}
+
+/// Build a router by (case-insensitive) name for a fleet of
+/// `devices` devices. `None` for an unknown name — callers report the
+/// [`ROUTERS`] vocabulary in their error.
+pub fn router_for(name: &str, devices: usize)
+                  -> Option<Box<dyn RouterPolicy>> {
+    match name.to_ascii_lowercase().as_str() {
+        "round-robin" | "round_robin" | "rr" => {
+            Some(Box::new(RoundRobin { devices, next: 0 }))
+        }
+        "least-outstanding-work" | "least_outstanding_work" | "low" => {
+            Some(Box::new(LeastOutstandingWork))
+        }
+        "criticality-affinity" | "criticality_affinity" | "affinity" => {
+            Some(Box::new(CriticalityAffinity { devices, next_normal: 0 }))
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view<'a>(outstanding: &'a [f64], env: &'a [Vec<f64>],
+                fastest: usize) -> FleetView<'a> {
+        FleetView { outstanding_us: outstanding, env_solo_us: env, fastest }
+    }
+
+    #[test]
+    fn all_router_names_resolve_and_round_trip() {
+        for name in ROUTERS {
+            let r = router_for(name, 3)
+                .unwrap_or_else(|| panic!("router {name} does not resolve"));
+            assert_eq!(r.name(), name);
+        }
+        assert!(router_for("ROUND-ROBIN", 2).is_some());
+        assert!(router_for("least_outstanding_work", 2).is_some());
+        assert!(router_for("random", 2).is_none());
+    }
+
+    #[test]
+    fn round_robin_cycles_over_all_devices() {
+        let env = vec![vec![1.0]; 3];
+        let out = [0.0; 3];
+        let v = view(&out, &env, 0);
+        let mut r = router_for("round-robin", 3).unwrap();
+        let picks: Vec<usize> = (0..7)
+            .map(|_| r.route(0, Criticality::Normal, &v))
+            .collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn least_outstanding_work_prices_in_device_speed() {
+        // Device 0 is idle but slow (envelope 100us); device 1 carries
+        // 30us of backlog but is fast (envelope 10us): 0+100 > 30+10.
+        let env = vec![vec![100.0], vec![10.0]];
+        let out = [0.0, 30.0];
+        let v = view(&out, &env, 1);
+        let mut r = router_for("least-outstanding-work", 2).unwrap();
+        assert_eq!(r.route(0, Criticality::Normal, &v), 1);
+        // Equal resulting backlogs tie toward the lowest index.
+        let env = vec![vec![10.0], vec![10.0]];
+        let out = [5.0, 5.0];
+        let v = view(&out, &env, 0);
+        assert_eq!(r.route(0, Criticality::Normal, &v), 0);
+    }
+
+    #[test]
+    fn criticality_affinity_pins_critical_and_rotates_normals() {
+        let env = vec![vec![1.0]; 3];
+        let out = [0.0; 3];
+        let v = view(&out, &env, 1); // device 1 is fastest
+        let mut r = router_for("criticality-affinity", 3).unwrap();
+        for _ in 0..5 {
+            assert_eq!(r.route(0, Criticality::Critical, &v), 1);
+        }
+        let normals: Vec<usize> = (0..4)
+            .map(|_| r.route(0, Criticality::Normal, &v))
+            .collect();
+        assert_eq!(normals, vec![0, 2, 0, 2], "normals skip the affine device");
+        // 1-device fleet: everything lands on the only device.
+        let env1 = vec![vec![1.0]];
+        let out1 = [0.0];
+        let v1 = view(&out1, &env1, 0);
+        let mut r1 = router_for("criticality-affinity", 1).unwrap();
+        assert_eq!(r1.route(0, Criticality::Normal, &v1), 0);
+        assert_eq!(r1.route(0, Criticality::Critical, &v1), 0);
+    }
+}

@@ -93,6 +93,20 @@ impl GpuSpec {
         }
     }
 
+    /// Canonical preset names, in presentation order — the vocabulary of
+    /// every platform-naming CLI flag (`--platform`, `--devices`).
+    /// `by_name` resolves each of these (plus a couple of aliases) to the
+    /// preset whose `name` field round-trips to the same string.
+    pub const PRESET_NAMES: [&'static str; 3] = ["rtx2060", "xavier", "tx2"];
+
+    /// Every preset, in [`GpuSpec::PRESET_NAMES`] order.
+    pub fn presets() -> Vec<Self> {
+        Self::PRESET_NAMES
+            .iter()
+            .map(|n| Self::by_name(n).expect("preset name resolves"))
+            .collect()
+    }
+
     /// Look up a named preset.
     pub fn by_name(name: &str) -> Option<Self> {
         match name {
@@ -132,6 +146,52 @@ mod tests {
     fn occupancy_denominator() {
         assert_eq!(GpuSpec::rtx2060().max_warps_per_sm(), 32);
         assert_eq!(GpuSpec::tx2().max_warps_per_sm(), 64);
+    }
+
+    #[test]
+    fn every_preset_round_trips_by_name() {
+        // ISSUE 5 satellite: `by_name` over PRESET_NAMES is a bijection
+        // onto the presets, and each preset's `name` field round-trips —
+        // fleet device labels (`d0-xavier`, ...) depend on this.
+        assert_eq!(GpuSpec::PRESET_NAMES.len(), GpuSpec::presets().len());
+        for name in GpuSpec::PRESET_NAMES {
+            let spec = GpuSpec::by_name(name)
+                .unwrap_or_else(|| panic!("preset {name} does not resolve"));
+            assert_eq!(spec.name, name, "preset name does not round-trip");
+            let again = GpuSpec::by_name(&spec.name).unwrap();
+            assert_eq!(again, spec, "{name}: by_name not idempotent");
+        }
+        // The alias resolves to a canonical preset, never a new name.
+        let alias = GpuSpec::by_name("2060").unwrap();
+        assert!(GpuSpec::PRESET_NAMES.contains(&alias.name.as_str()));
+    }
+
+    #[test]
+    fn preset_invariants_hold_for_every_preset() {
+        for spec in GpuSpec::presets() {
+            // Warp arithmetic: threads per SM divide into whole warps and
+            // the occupancy denominator is consistent with it.
+            assert_eq!(spec.max_threads_per_sm % spec.warp_size, 0,
+                       "{}: ragged warp count", spec.name);
+            assert_eq!(spec.max_warps_per_sm(),
+                       spec.max_threads_per_sm / spec.warp_size,
+                       "{}", spec.name);
+            assert!(spec.max_warps_per_sm() >= 1, "{}", spec.name);
+            // Peak FLOP arithmetic.
+            let total = spec.total_flops_us();
+            assert!((total - spec.flops_per_sm_us * spec.num_sms as f64)
+                        .abs()
+                        <= 1e-9 * total,
+                    "{}", spec.name);
+            // Everything the contention model divides by is positive.
+            assert!(spec.num_sms >= 1, "{}", spec.name);
+            assert!(spec.max_blocks_per_sm >= 1, "{}", spec.name);
+            assert!(spec.flops_per_sm_us > 0.0, "{}", spec.name);
+            assert!(spec.dram_bw_bytes_us > 0.0, "{}", spec.name);
+            assert!(spec.kernel_launch_us > 0.0, "{}", spec.name);
+            assert!(spec.smem_per_sm > 0 && spec.regs_per_sm > 0,
+                    "{}", spec.name);
+        }
     }
 
     #[test]

@@ -21,6 +21,9 @@
 //! * [`server`] — std-thread serving loop binding the coordinator to the
 //!   runtime, plus the online admission-controlled serving pipeline
 //!   ([`server::online`], `miriam serve-sim`).
+//! * [`fleet`] — heterogeneous multi-GPU fleet serving: mixed `GpuSpec`
+//!   presets, pluggable request routers, one admission controller in
+//!   front of per-device coordinators (`miriam fleet-sim`).
 //! * [`config`] — run configuration.
 //!
 //! ARCHITECTURE.md (repo root) walks one request's life through these
@@ -34,6 +37,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod elastic;
+pub mod fleet;
 pub mod gpu;
 pub mod runtime;
 pub mod server;

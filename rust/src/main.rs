@@ -11,6 +11,9 @@
 //!   serve-sim  [--scenario all|names] [--policy none,token-bucket,
 //!              deadline-feasible] [--seed N] — online admission-controlled
 //!              serving loop, writes BENCH_serve.json (ISSUE 4)
+//!   fleet-sim  [--devices rtx2060,xavier,tx2] [--router all|names]
+//!              [--policy none] [--seed N] [--threads N] — heterogeneous
+//!              multi-GPU fleet serving, writes BENCH_fleet.json (ISSUE 5)
 //!   infer      --model cifarnet [--artifacts artifacts]
 //!   artifacts  [--artifacts artifacts]
 
@@ -20,6 +23,7 @@ use miriam::config::cli::Args;
 use miriam::config::RunConfig;
 use miriam::coordinator::admission::{AdmissionConfig, AdmissionPolicy};
 use miriam::coordinator::{self, driver, sweep};
+use miriam::fleet;
 use miriam::gpu::spec::GpuSpec;
 use miriam::runtime::Manifest;
 use miriam::server::online;
@@ -44,6 +48,13 @@ USAGE:
                    [--policy none,token-bucket,deadline-feasible] [--seed N]
                    [--bucket-cap 16] [--refill-hz 40] [--max-queue-ms 100]
                    [--drain-ways 3] [--backoff-ms 2] [--out BENCH_serve.json]
+  miriam fleet-sim [--devices rtx2060,xavier,tx2] [--schedulers miriam|per-dev]
+                   [--router all|round-robin,least-outstanding-work,
+                    criticality-affinity] [--scenario all|n1,n2,...]
+                   [--policy none] [--duration SECONDS] [--seed N]
+                   [--threads N] [--bucket-cap 16] [--refill-hz 40]
+                   [--max-queue-ms 100] [--drain-ways 3] [--backoff-ms 2]
+                   [--out BENCH_fleet.json]
   miriam infer --model NAME [--artifacts DIR]
   miriam artifacts [--artifacts DIR]
 ";
@@ -55,6 +66,59 @@ fn build_workload(name: &str, duration_us: f64) -> Result<mdtb::Workload> {
     mdtb::by_name(name, duration_us)
         .map(|w| w.build())
         .ok_or_else(|| anyhow!("unknown workload {name}"))
+}
+
+/// Resolve `--scenario all|n1,n2,...` for the grid subcommands (`sweep`,
+/// `serve-sim`, `fleet-sim`). Named cells resolve against the family
+/// *and* the MDTB workloads, so any BENCH_*.json cell is reproducible by
+/// name here.
+fn resolve_scenarios(args: &Args, dur_us: f64)
+                     -> Result<Vec<scenario::ScenarioSpec>> {
+    let which = args.get("scenario", "all");
+    if which.eq_ignore_ascii_case("all") {
+        return Ok(scenario::family(dur_us));
+    }
+    let pool: Vec<_> = scenario::family(dur_us)
+        .into_iter()
+        .chain(scenario::mdtb_scenarios(dur_us))
+        .collect();
+    args.get_list("scenario", "")
+        .iter()
+        .map(|n| {
+            pool.iter()
+                .find(|s| s.name.eq_ignore_ascii_case(n))
+                .cloned()
+                .ok_or_else(|| anyhow!("unknown scenario {n}"))
+        })
+        .collect()
+}
+
+/// Parse the admission tunables shared by `serve-sim` and `fleet-sim`
+/// (same flags, same defaults, same ms→us scaling).
+fn admission_from_args(args: &Args) -> Result<AdmissionConfig> {
+    Ok(AdmissionConfig {
+        bucket_capacity: args.get_f64("bucket-cap", 16.0)
+            .map_err(|e| anyhow!(e))?,
+        refill_hz: args.get_f64("refill-hz", 40.0).map_err(|e| anyhow!(e))?,
+        max_queue_us: args.get_f64("max-queue-ms", 100.0)
+            .map_err(|e| anyhow!(e))?
+            * 1e3,
+        drain_ways: args.get_f64("drain-ways", 3.0)
+            .map_err(|e| anyhow!(e))?,
+        shed_backoff_us: args.get_f64("backoff-ms", 2.0)
+            .map_err(|e| anyhow!(e))?
+            * 1e3,
+    })
+}
+
+/// Parse the optional `--seed` override shared by the serving
+/// subcommands (`None` keeps each scenario's pinned seed).
+fn seed_from_args(args: &Args) -> Result<Option<u64>> {
+    if args.has("seed") {
+        Ok(Some(args.get_u64("seed", 0).map_err(|e| anyhow!(e))?))
+    } else {
+        Ok(None)
+    }
 }
 
 fn simulate(args: &Args) -> Result<()> {
@@ -118,16 +182,23 @@ fn scenarios(args: &Args) -> Result<()> {
         return Ok(());
     }
 
-    if let Some(dir) = args.flags.get("record-golden") {
-        // Goldens are pinned to one platform (and duration); recording on
-        // anything else would poison the conformance anchors.
+    if let Some(dir) = args.get_opt("record-golden") {
+        // Goldens are pinned per cell (platform and duration); recording
+        // under any other --platform would poison the conformance anchors.
         if platform != scenario::GOLDEN_PLATFORM {
             return Err(anyhow!(
                 "--record-golden is pinned to --platform {} (got {platform})",
                 scenario::GOLDEN_PLATFORM));
         }
-        for (path, events) in
-            driver::record_golden_traces(std::path::Path::new(dir))?
+        let dir = std::path::Path::new(dir);
+        for (path, events) in driver::record_golden_traces(dir)? {
+            println!("recorded {} ({events} events)", path.display());
+        }
+        // The per-device anchors (xavier/tx2 cells, ISSUE 5) live in a
+        // subdirectory and are recorded by the same invocation so the
+        // two golden sets can never desynchronize.
+        for (path, events) in driver::record_device_golden_traces(
+            &dir.join(scenario::DEVICE_GOLDEN_SUBDIR))?
         {
             println!("recorded {} ({events} events)", path.display());
         }
@@ -151,7 +222,7 @@ fn scenarios(args: &Args) -> Result<()> {
         .split(',')
         .map(|s| s.trim().to_string())
         .collect();
-    let trace_out = args.flags.get("trace-out");
+    let trace_out = args.get_opt("trace-out");
     if trace_out.is_some() && (specs.len() != 1 || schedulers.len() != 1) {
         return Err(anyhow!(
             "--trace-out needs exactly one --scenario and one scheduler"));
@@ -205,27 +276,7 @@ fn sweep_cmd(args: &Args) -> Result<()> {
         return Err(anyhow!("duration must be positive"));
     }
     let dur_us = duration * 1e6;
-    let which = args.get("scenario", "all");
-    let scenarios = if which.eq_ignore_ascii_case("all") {
-        scenario::family(dur_us)
-    } else {
-        // Named cells resolve against the family *and* the MDTB workloads
-        // (the bench's grid), so any BENCH_*.json cell is reproducible by
-        // name here.
-        let pool: Vec<_> = scenario::family(dur_us)
-            .into_iter()
-            .chain(scenario::mdtb_scenarios(dur_us))
-            .collect();
-        args.get_list("scenario", "")
-            .iter()
-            .map(|n| {
-                pool.iter()
-                    .find(|s| s.name.eq_ignore_ascii_case(n))
-                    .cloned()
-                    .ok_or_else(|| anyhow!("unknown scenario {n}"))
-            })
-            .collect::<Result<Vec<_>>>()?
-    };
+    let scenarios = resolve_scenarios(args, dur_us)?;
     let schedulers = args.get_list(
         "schedulers", "sequential,multistream,ib,miriam,miriam-ref");
     let seeds = args.get_usize("seeds", 8).map_err(|e| anyhow!(e))? as u32;
@@ -297,26 +348,7 @@ fn serve_sim(args: &Args) -> Result<()> {
         return Err(anyhow!("duration must be positive"));
     }
     let dur_us = duration * 1e6;
-    let which = args.get("scenario", "all");
-    let scenarios = if which.eq_ignore_ascii_case("all") {
-        scenario::family(dur_us)
-    } else {
-        // Named cells resolve against the family *and* the MDTB workloads,
-        // like `miriam sweep`.
-        let pool: Vec<_> = scenario::family(dur_us)
-            .into_iter()
-            .chain(scenario::mdtb_scenarios(dur_us))
-            .collect();
-        args.get_list("scenario", "")
-            .iter()
-            .map(|n| {
-                pool.iter()
-                    .find(|s| s.name.eq_ignore_ascii_case(n))
-                    .cloned()
-                    .ok_or_else(|| anyhow!("unknown scenario {n}"))
-            })
-            .collect::<Result<Vec<_>>>()?
-    };
+    let scenarios = resolve_scenarios(args, dur_us)?;
     let policies = args
         .get_list("policy", "none,token-bucket,deadline-feasible")
         .iter()
@@ -325,24 +357,8 @@ fn serve_sim(args: &Args) -> Result<()> {
                 .ok_or_else(|| anyhow!("unknown policy {p}"))
         })
         .collect::<Result<Vec<_>>>()?;
-    let admission = AdmissionConfig {
-        bucket_capacity: args.get_f64("bucket-cap", 16.0)
-            .map_err(|e| anyhow!(e))?,
-        refill_hz: args.get_f64("refill-hz", 40.0).map_err(|e| anyhow!(e))?,
-        max_queue_us: args.get_f64("max-queue-ms", 100.0)
-            .map_err(|e| anyhow!(e))?
-            * 1e3,
-        drain_ways: args.get_f64("drain-ways", 3.0)
-            .map_err(|e| anyhow!(e))?,
-        shed_backoff_us: args.get_f64("backoff-ms", 2.0)
-            .map_err(|e| anyhow!(e))?
-            * 1e3,
-    };
-    let seed = if args.has("seed") {
-        Some(args.get_u64("seed", 0).map_err(|e| anyhow!(e))?)
-    } else {
-        None
-    };
+    let admission = admission_from_args(args)?;
+    let seed = seed_from_args(args)?;
     let opts = online::ServeOpts {
         scheduler: args.get("scheduler", "miriam").to_string(),
         policy: AdmissionPolicy::Open, // per-cell policy comes from the grid
@@ -371,6 +387,96 @@ fn serve_sim(args: &Args) -> Result<()> {
                  c.crit_p99_us() / 1e3,
                  c.deadline_misses_critical(),
                  c.normal_throughput_rps());
+    }
+    std::fs::write(out, grid.to_json())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// Heterogeneous multi-GPU fleet serving (ISSUE 5 tentpole): scenario
+/// arrivals pass through one fleet-wide admission policy, each admitted
+/// request is placed on a device by the chosen router, and per-device /
+/// per-tenant / fleet-level outcomes go to stdout and `BENCH_fleet.json`.
+/// Byte-deterministic per (seed, devices, router) and across `--threads`
+/// (`rust/tests/fleet_determinism.rs` pins both).
+fn fleet_sim(args: &Args) -> Result<()> {
+    let devices = args.get_list("devices", "rtx2060,xavier,tx2");
+    let schedulers = args.get_list("schedulers", "miriam");
+    let spec =
+        fleet::FleetSpec::parse(&devices, &schedulers).map_err(|e| anyhow!(e))?;
+    let duration = args.get_f64("duration", 0.2).map_err(|e| anyhow!(e))?;
+    if duration <= 0.0 {
+        return Err(anyhow!("duration must be positive"));
+    }
+    let dur_us = duration * 1e6;
+    let scenarios = resolve_scenarios(args, dur_us)?;
+    let router_arg = args.get("router", "all");
+    let routers: Vec<String> = if router_arg.eq_ignore_ascii_case("all") {
+        fleet::ROUTERS.iter().map(|r| r.to_string()).collect()
+    } else {
+        args.get_list("router", "")
+    };
+    let policy_name = args.get("policy", "none");
+    let policy = AdmissionPolicy::parse(policy_name)
+        .ok_or_else(|| anyhow!("unknown policy {policy_name}"))?;
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let threads = args
+        .get_usize("threads", default_threads)
+        .map_err(|e| anyhow!(e))?;
+    let opts = fleet::FleetOpts {
+        router: String::new(), // per-cell router comes from the grid
+        policy,
+        admission: admission_from_args(args)?,
+        seed: seed_from_args(args)?,
+    };
+    let out = args.get("out", "BENCH_fleet.json");
+
+    println!("# fleet-sim: {} scenario(s) x {} router(s) on {} device(s) \
+              [{}], {duration}s of arrivals each, policy {}, {threads} \
+              thread(s)",
+             scenarios.len(), routers.len(), spec.devices.len(),
+             spec.devices
+                 .iter()
+                 .map(|d| d.gpu.name.as_str())
+                 .collect::<Vec<_>>()
+                 .join(","),
+             policy.name());
+    let grid = fleet::run_fleet_grid(&spec, &scenarios, &routers, &opts,
+                                     threads)
+        .map_err(|e| anyhow!(e))?;
+    println!("{:<16} {:<22} {:>8} {:>8} {:>6} {:>8} {:>10} {:>10} {:>6} {:>9}",
+             "scenario", "router", "offered", "admit", "shed", "served",
+             "crit p50", "crit p99", "miss", "fleet r/s");
+    println!("{:<16} {:<22} {:>8} {:>8} {:>6} {:>8} {:>10} {:>10} {:>6} {:>9}",
+             "", "", "", "", "", "", "(ms)", "(ms)", "(crit)", "");
+    for c in &grid.cells {
+        println!("{:<16} {:<22} {:>8} {:>8} {:>6} {:>8} {:>10.2} {:>10.2} \
+                  {:>6} {:>9.1}",
+                 c.scenario, c.router, c.offered(), c.admitted(), c.shed(),
+                 c.served(),
+                 c.crit_quantile_us(0.5) / 1e3,
+                 c.crit_p99_us() / 1e3,
+                 c.deadline_misses_critical(),
+                 c.throughput_rps());
+    }
+    // Per-device placement summary of the first scenario's cells — the
+    // quickest read on how each router spread the load.
+    if let Some(first) = grid.scenarios.first() {
+        println!("\n# placement on {first} (requests routed per device)");
+        for r in &grid.routers {
+            if let Some(c) = grid.cell(first, r) {
+                let split = c
+                    .devices
+                    .iter()
+                    .map(|d| format!("{}={} ({}c)", d.desc.name, d.routed,
+                                     d.routed_critical))
+                    .collect::<Vec<_>>()
+                    .join("  ");
+                println!("{r:<22} {split}");
+            }
+        }
     }
     std::fs::write(out, grid.to_json())?;
     println!("wrote {out}");
@@ -419,6 +525,7 @@ fn main() -> Result<()> {
         Some("scenarios") => scenarios(&args),
         Some("sweep") => sweep_cmd(&args),
         Some("serve-sim") => serve_sim(&args),
+        Some("fleet-sim") => fleet_sim(&args),
         Some("infer") => infer(&args),
         Some("artifacts") => {
             let m = Manifest::load(args.get("artifacts", "artifacts"))?;

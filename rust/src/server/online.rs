@@ -44,15 +44,159 @@ use crate::coordinator::admission::{
     AdmissionConfig, AdmissionController, AdmissionPolicy, Decision,
 };
 use crate::coordinator::driver::{initial_arrivals, TimeKey};
-use crate::coordinator::scheduler::Req;
+use crate::coordinator::scheduler::{Req, Scheduler};
 use crate::coordinator::scheduler_for;
-use crate::coordinator::stats::{mean, sorted_quantile};
+use crate::coordinator::stats::{mean, merged_quantile, sorted_quantile};
+use crate::gpu::contention::ContentionParams;
 use crate::gpu::engine::{Completion, Engine};
 use crate::gpu::kernel::Criticality;
+use crate::gpu::metrics::SimMetrics;
 use crate::gpu::spec::GpuSpec;
 use crate::runtime::json::Json;
+use crate::workloads::mdtb::Workload;
 use crate::workloads::rng::Rng;
 use crate::workloads::scenario::ScenarioSpec;
+
+/// Reject an [`AdmissionConfig`] whose shed backoff would livelock the
+/// simulated-time loop (a zero backoff re-offers a shed closed-loop
+/// request at the same instant, forever). Shared precondition of the
+/// single-device loop ([`run_serve`]) and the fleet loop
+/// (`crate::fleet::run_fleet`).
+pub(crate) fn validate_admission(cfg: &AdmissionConfig) -> Result<(), String> {
+    if !(cfg.shed_backoff_us > 0.0) || !cfg.shed_backoff_us.is_finite() {
+        return Err("shed_backoff_us must be positive and finite \
+                    (a zero backoff re-offers a shed closed-loop request \
+                    at the same instant, forever)"
+            .into());
+    }
+    Ok(())
+}
+
+/// The per-device serving core: one engine + scheduler + open-request
+/// table, with the request-construction and completion-drain mechanics of
+/// the serving loop factored out so the single-device path ([`run_serve`])
+/// and the fleet loop (`crate::fleet::run_fleet`) walk the *same* code —
+/// the ISSUE 5 differential contract (a 1-device fleet reproduces
+/// `serve-sim` bitwise) holds structurally, not by accident.
+///
+/// The core owns everything local to a device; arrivals, admission,
+/// tenant accounting, and closed-loop regeneration stay with the caller,
+/// which drives the core through `advance_to`/`submit`/`step`.
+pub(crate) struct DeviceCore {
+    eng: Engine,
+    sched: Box<dyn Scheduler>,
+    /// Interned kernel-name ids per source (valid for `eng` only).
+    name_ids: Vec<Arc<Vec<u32>>>,
+    /// req id -> (arrival time, source) for requests in flight here.
+    open: HashMap<u64, (f64, usize)>,
+    completions: Vec<Completion>,
+    finished: Vec<u64>,
+    max_normal_queue: usize,
+}
+
+impl DeviceCore {
+    /// Build a core for `wl` on `gpu` under the named scheduler, with the
+    /// per-source kernel names interned once up front (the ISSUE 3
+    /// zero-clone fast path, same as the batch driver).
+    pub(crate) fn new(gpu: &GpuSpec, wl: &Workload, scheduler: &str)
+                      -> Result<Self, String> {
+        let mut sched = scheduler_for(scheduler, wl)
+            .ok_or_else(|| format!("unknown scheduler {scheduler}"))?;
+        let mut eng = Engine::new(gpu.clone());
+        sched.init(&mut eng);
+        let name_ids: Vec<Arc<Vec<u32>>> = wl
+            .sources
+            .iter()
+            .map(|s| Arc::new(s.model.intern_kernels(|n| eng.intern_name(n))))
+            .collect();
+        Ok(DeviceCore {
+            eng,
+            sched,
+            name_ids,
+            open: HashMap::new(),
+            completions: Vec::new(),
+            finished: Vec::new(),
+            max_normal_queue: 0,
+        })
+    }
+
+    /// The device's GPU spec.
+    pub(crate) fn spec(&self) -> &GpuSpec {
+        &self.eng.spec
+    }
+
+    /// The device's contention parameters.
+    pub(crate) fn params(&self) -> &ContentionParams {
+        &self.eng.params
+    }
+
+    /// Time of the device's next internal event, if any.
+    pub(crate) fn next_event_time(&mut self) -> Option<f64> {
+        self.eng.next_event_time()
+    }
+
+    /// Advance the device's simulated clock (must not skip an event).
+    pub(crate) fn advance_to(&mut self, t: f64) {
+        self.eng.advance_to(t);
+    }
+
+    /// Hand the admitted arrival from `src` at time `t` to the scheduler
+    /// as request `id` (ids are assigned by the caller so they stay
+    /// unique across a whole fleet).
+    pub(crate) fn submit(&mut self, wl: &Workload, src: usize, t: f64,
+                         id: u64) {
+        let s = &wl.sources[src];
+        let req = Req {
+            id,
+            source: src,
+            model: s.model.clone(),
+            name_ids: self.name_ids[src].clone(),
+            criticality: s.criticality,
+            arrival_us: t,
+        };
+        self.open.insert(id, (t, src));
+        self.sched.on_request(req, &mut self.eng);
+    }
+
+    /// Sample the scheduler's best-effort queue depth into the running
+    /// per-device maximum (called after each arrival batch).
+    pub(crate) fn sample_queue_depth(&mut self) {
+        if let Some(q) = self.sched.pending_normal() {
+            self.max_normal_queue = self.max_normal_queue.max(q);
+        }
+    }
+
+    /// Peak best-effort queue depth observed so far.
+    pub(crate) fn max_normal_queue(&self) -> usize {
+        self.max_normal_queue
+    }
+
+    /// Process the device's next event: step the engine once and drain
+    /// the resulting completions through the scheduler. `served` fires
+    /// once per finished request — in completion order, *inside* the
+    /// drain, exactly where the pre-fleet loop did its accounting — as
+    /// `(source, arrival_us, now_us)`.
+    pub(crate) fn step(&mut self, mut served: impl FnMut(usize, f64, f64)) {
+        self.eng.step_into(&mut self.completions);
+        for c in &self.completions {
+            self.finished.clear();
+            self.sched.on_completion(c, &mut self.eng, &mut self.finished);
+            for &fid in &self.finished {
+                let (arr, src) = self
+                    .open
+                    .remove(&fid)
+                    .expect("scheduler finished unknown request");
+                served(src, arr, self.eng.now_us());
+            }
+        }
+    }
+
+    /// Tear the device down: (simulated span, engine metrics).
+    pub(crate) fn finish(self) -> (f64, SimMetrics) {
+        let span = self.eng.now_us();
+        (span, self.eng.into_metrics())
+    }
+}
 
 /// Configuration of one serving run.
 #[derive(Debug, Clone)]
@@ -196,17 +340,19 @@ impl ServeReport {
             .sum()
     }
 
-    fn class_latencies(&self, c: Criticality) -> Vec<f64> {
-        self.tenants
-            .iter()
-            .filter(|t| t.criticality == c)
-            .flat_map(|t| t.latencies_us.iter().copied())
-            .collect()
+    fn class_quantile(&self, c: Criticality, q: f64) -> f64 {
+        merged_quantile(
+            self.tenants
+                .iter()
+                .filter(|t| t.criticality == c)
+                .map(|t| t.latencies_us.as_slice()),
+            q,
+        )
     }
 
     /// Critical-class latency quantile over all critical tenants.
     pub fn crit_quantile_us(&self, q: f64) -> f64 {
-        sorted_quantile(&self.class_latencies(Criticality::Critical), q)
+        self.class_quantile(Criticality::Critical, q)
     }
 
     /// Critical-class p99 latency (us).
@@ -216,7 +362,7 @@ impl ServeReport {
 
     /// Best-effort-class latency quantile.
     pub fn normal_quantile_us(&self, q: f64) -> f64 {
-        sorted_quantile(&self.class_latencies(Criticality::Normal), q)
+        self.class_quantile(Criticality::Normal, q)
     }
 
     /// Served best-effort requests per second of simulated span — the
@@ -270,39 +416,39 @@ impl ServeReport {
                  num(self.critical_at_risk as f64));
         m.insert(
             "tenants".into(),
-            Json::Arr(
-                self.tenants
-                    .iter()
-                    .map(|t| {
-                        let mut tm = BTreeMap::new();
-                        tm.insert("label".into(), Json::Str(t.label.clone()));
-                        tm.insert("model".into(), Json::Str(t.model.clone()));
-                        tm.insert(
-                            "criticality".into(),
-                            Json::Str(
-                                match t.criticality {
-                                    Criticality::Critical => "critical",
-                                    Criticality::Normal => "normal",
-                                }
-                                .into(),
-                            ),
-                        );
-                        tm.insert("offered".into(), num(t.offered as f64));
-                        tm.insert("admitted".into(), num(t.admitted as f64));
-                        tm.insert("shed".into(), num(t.shed as f64));
-                        tm.insert("served".into(), num(t.served as f64));
-                        tm.insert("deadline_misses".into(),
-                                  num(t.deadline_misses as f64));
-                        tm.insert("p50_us".into(), num(t.p50_us()));
-                        tm.insert("p99_us".into(), num(t.p99_us()));
-                        tm.insert("mean_us".into(), num(t.mean_us()));
-                        Json::Obj(tm)
-                    })
-                    .collect(),
-            ),
+            Json::Arr(self.tenants.iter().map(tenant_json).collect()),
         );
         Json::Obj(m)
     }
+}
+
+/// One per-tenant row of a serving report as canonical JSON — shared by
+/// `BENCH_serve.json` and `BENCH_fleet.json` so the two documents can
+/// never drift on what a tenant row contains.
+pub(crate) fn tenant_json(t: &TenantOutcome) -> Json {
+    let num = Json::Num;
+    let mut tm = BTreeMap::new();
+    tm.insert("label".into(), Json::Str(t.label.clone()));
+    tm.insert("model".into(), Json::Str(t.model.clone()));
+    tm.insert(
+        "criticality".into(),
+        Json::Str(
+            match t.criticality {
+                Criticality::Critical => "critical",
+                Criticality::Normal => "normal",
+            }
+            .into(),
+        ),
+    );
+    tm.insert("offered".into(), num(t.offered as f64));
+    tm.insert("admitted".into(), num(t.admitted as f64));
+    tm.insert("shed".into(), num(t.shed as f64));
+    tm.insert("served".into(), num(t.served as f64));
+    tm.insert("deadline_misses".into(), num(t.deadline_misses as f64));
+    tm.insert("p50_us".into(), num(t.p50_us()));
+    tm.insert("p99_us".into(), num(t.p99_us()));
+    tm.insert("mean_us".into(), num(t.mean_us()));
+    Json::Obj(tm)
 }
 
 /// A scenarios × policies serving comparison (the `BENCH_serve.json`
@@ -364,43 +510,91 @@ impl ServeGridReport {
 /// the report.
 pub fn run_serve(gpu: &GpuSpec, sc: &ScenarioSpec, opts: &ServeOpts)
                  -> Result<ServeReport, String> {
-    if !(opts.admission.shed_backoff_us > 0.0)
-        || !opts.admission.shed_backoff_us.is_finite()
-    {
-        return Err("shed_backoff_us must be positive and finite \
-                    (a zero backoff re-offers a shed closed-loop request \
-                    at the same instant, forever)"
-            .into());
-    }
+    validate_admission(&opts.admission)?;
     let mut wl = sc.build();
     if let Some(seed) = opts.seed {
         wl.seed = seed;
     }
-    let mut sched = scheduler_for(&opts.scheduler, &wl)
-        .ok_or_else(|| format!("unknown scheduler {}", opts.scheduler))?;
-    let mut eng = Engine::new(gpu.clone());
-    sched.init(&mut eng);
-
-    // Same per-source interning the batch driver does (ISSUE 3 fast path).
-    let name_ids: Vec<Arc<Vec<u32>>> = wl
-        .sources
-        .iter()
-        .map(|s| Arc::new(s.model.intern_kernels(|n| eng.intern_name(n))))
-        .collect();
+    let mut core = DeviceCore::new(gpu, &wl, &opts.scheduler)?;
 
     let mut ctrl = AdmissionController::new(
         opts.policy,
         opts.admission.clone(),
         &wl,
-        &eng.spec,
-        &eng.params,
+        core.spec(),
+        core.params(),
     );
 
     let mut rng = Rng::new(wl.seed);
     let mut arrivals = initial_arrivals(&wl, &mut rng);
+    let mut tenants = tenant_outcomes(sc, &wl);
+    let mut next_id: u64 = 1;
 
-    let mut tenants: Vec<TenantOutcome> = wl
-        .sources
+    loop {
+        let t_arr = arrivals.peek().map(|Reverse((TimeKey(t), _))| *t);
+        let t_ev = core.next_event_time();
+        match (t_arr, t_ev) {
+            (None, None) => break,
+            (Some(ta), te) if te.map_or(true, |te| ta <= te) => {
+                core.advance_to(ta);
+                while let Some(Reverse((TimeKey(t), src))) =
+                    arrivals.peek().copied()
+                {
+                    if t > ta {
+                        break;
+                    }
+                    arrivals.pop();
+                    tenants[src].offered += 1;
+                    match ctrl.decide(src, t) {
+                        Decision::Admitted => {
+                            core.submit(&wl, src, t, next_id);
+                            next_id += 1;
+                            tenants[src].admitted += 1;
+                        }
+                        Decision::Shed(_) => {
+                            shed_arrival(&wl, src, t, &opts.admission,
+                                         &mut tenants, &mut arrivals);
+                        }
+                    }
+                }
+                core.sample_queue_depth();
+            }
+            (_, Some(_)) => {
+                core.step(|src, arr, now| {
+                    ctrl.on_served(src);
+                    record_served(&wl, src, arr, now, &mut tenants,
+                                  &mut arrivals);
+                });
+            }
+            // (Some, None) with a failed guard cannot occur: the guard is
+            // vacuously true when the engine has no next event.
+            _ => unreachable!("serve loop: impossible arrival/event state"),
+        }
+    }
+
+    let max_normal_queue = core.max_normal_queue();
+    let (span_us, metrics) = core.finish();
+    Ok(ServeReport {
+        scenario: sc.name.clone(),
+        platform: gpu.name.clone(),
+        scheduler: opts.scheduler.clone(),
+        policy: opts.policy,
+        seed: wl.seed,
+        duration_us: wl.duration_us,
+        tenants,
+        span_us,
+        events: metrics.events,
+        max_normal_queue,
+        critical_at_risk: ctrl.critical_at_risk(),
+    })
+}
+
+/// Fresh zeroed per-tenant outcomes for `wl`, labeled through `sc`.
+/// Shared with the fleet loop so per-tenant rows mean the same thing in
+/// `BENCH_serve.json` and `BENCH_fleet.json`.
+pub(crate) fn tenant_outcomes(sc: &ScenarioSpec, wl: &Workload)
+                              -> Vec<TenantOutcome> {
+    wl.sources
         .iter()
         .enumerate()
         .map(|(i, s)| TenantOutcome {
@@ -415,123 +609,53 @@ pub fn run_serve(gpu: &GpuSpec, sc: &ScenarioSpec, opts: &ServeOpts)
             deadline_misses: 0,
             latencies_us: Vec::new(),
         })
-        .collect();
+        .collect()
+}
 
-    let mut next_id: u64 = 1;
-    // req id -> (arrival time, source).
-    let mut open: HashMap<u64, (f64, usize)> = HashMap::new();
-    let mut completions: Vec<Completion> = Vec::new();
-    let mut finished: Vec<u64> = Vec::new();
-    let mut max_normal_queue = 0usize;
-
-    loop {
-        let t_arr = arrivals.peek().map(|Reverse((TimeKey(t), _))| *t);
-        let t_ev = eng.next_event_time();
-        match (t_arr, t_ev) {
-            (None, None) => break,
-            (Some(ta), te) if te.map_or(true, |te| ta <= te) => {
-                eng.advance_to(ta);
-                while let Some(Reverse((TimeKey(t), src))) =
-                    arrivals.peek().copied()
-                {
-                    if t > ta {
-                        break;
-                    }
-                    arrivals.pop();
-                    tenants[src].offered += 1;
-                    match ctrl.decide(src, t) {
-                        Decision::Admitted => {
-                            let s = &wl.sources[src];
-                            let req = Req {
-                                id: next_id,
-                                source: src,
-                                model: s.model.clone(),
-                                name_ids: name_ids[src].clone(),
-                                criticality: s.criticality,
-                                arrival_us: t,
-                            };
-                            open.insert(next_id, (t, src));
-                            next_id += 1;
-                            tenants[src].admitted += 1;
-                            sched.on_request(req, &mut eng);
-                        }
-                        Decision::Shed(_) => {
-                            tenants[src].shed += 1;
-                            // An open-loop shed request is lost; a shed
-                            // closed-loop client retries after a backoff
-                            // (it has no other way to make progress).
-                            if wl.sources[src].arrival.is_closed_loop() {
-                                let retry =
-                                    t + opts.admission.shed_backoff_us;
-                                if retry < wl.duration_us {
-                                    arrivals.push(Reverse((
-                                        TimeKey(retry),
-                                        src,
-                                    )));
-                                }
-                            }
-                        }
-                    }
-                }
-                if let Some(q) = sched.pending_normal() {
-                    max_normal_queue = max_normal_queue.max(q);
-                }
-            }
-            (_, Some(_)) => {
-                eng.step_into(&mut completions);
-                for c in &completions {
-                    finished.clear();
-                    sched.on_completion(c, &mut eng, &mut finished);
-                    for &fid in &finished {
-                        let (arr, src) = open
-                            .remove(&fid)
-                            .expect("scheduler finished unknown request");
-                        let lat = eng.now_us() - arr;
-                        ctrl.on_served(src);
-                        let out = &mut tenants[src];
-                        out.served += 1;
-                        out.latencies_us.push(lat);
-                        if wl.sources[src]
-                            .deadline_us
-                            .is_some_and(|d| lat > d)
-                        {
-                            out.deadline_misses += 1;
-                        }
-                        // Closed-loop: the client's next request arrives
-                        // the moment this one returns (and goes back
-                        // through admission like any other arrival).
-                        if wl.sources[src].arrival.is_closed_loop()
-                            && eng.now_us() < wl.duration_us
-                        {
-                            arrivals.push(Reverse((
-                                TimeKey(eng.now_us()),
-                                src,
-                            )));
-                        }
-                    }
-                }
-            }
-            // (Some, None) with a failed guard cannot occur: the guard is
-            // vacuously true when the engine has no next event.
-            _ => unreachable!("serve loop: impossible arrival/event state"),
+/// Account one shed arrival from `src` at time `t`: an open-loop shed
+/// request is lost; a shed *closed-loop* client retries after the
+/// configured backoff (it has no other way to make progress). Shared
+/// with the fleet loop.
+pub(crate) fn shed_arrival(
+    wl: &Workload,
+    src: usize,
+    t: f64,
+    cfg: &AdmissionConfig,
+    tenants: &mut [TenantOutcome],
+    arrivals: &mut crate::coordinator::driver::ArrivalHeap,
+) {
+    tenants[src].shed += 1;
+    if wl.sources[src].arrival.is_closed_loop() {
+        let retry = t + cfg.shed_backoff_us;
+        if retry < wl.duration_us {
+            arrivals.push(Reverse((TimeKey(retry), src)));
         }
     }
+}
 
-    let span_us = eng.now_us();
-    let metrics = eng.into_metrics();
-    Ok(ServeReport {
-        scenario: sc.name.clone(),
-        platform: gpu.name.clone(),
-        scheduler: opts.scheduler.clone(),
-        policy: opts.policy,
-        seed: wl.seed,
-        duration_us: wl.duration_us,
-        tenants,
-        span_us,
-        events: metrics.events,
-        max_normal_queue,
-        critical_at_risk: ctrl.critical_at_risk(),
-    })
+/// Account one served request from `src` (arrived at `arr`, finished at
+/// `now`): latency, deadline scoring, and the closed-loop regeneration —
+/// the client's next request arrives the moment this one returns (and
+/// goes back through admission like any other arrival). Shared with the
+/// fleet loop.
+pub(crate) fn record_served(
+    wl: &Workload,
+    src: usize,
+    arr: f64,
+    now: f64,
+    tenants: &mut [TenantOutcome],
+    arrivals: &mut crate::coordinator::driver::ArrivalHeap,
+) {
+    let lat = now - arr;
+    let out = &mut tenants[src];
+    out.served += 1;
+    out.latencies_us.push(lat);
+    if wl.sources[src].deadline_us.is_some_and(|d| lat > d) {
+        out.deadline_misses += 1;
+    }
+    if wl.sources[src].arrival.is_closed_loop() && now < wl.duration_us {
+        arrivals.push(Reverse((TimeKey(now), src)));
+    }
 }
 
 /// Run the scenarios × policies grid (scenario-major order) and assemble

@@ -394,6 +394,28 @@ pub fn golden_file_name(scenario: &str, scheduler: &str) -> String {
     format!("{scenario}__{scheduler}.trace.json")
 }
 
+/// GPU presets covered by the *per-device* golden traces (ISSUE 5
+/// satellite): the two edge parts beyond [`GOLDEN_PLATFORM`], so a
+/// contention-model or scheduler change that only misbehaves on a small
+/// device (fewer SMs, tighter bandwidth) fails loudly too.
+pub const DEVICE_GOLDEN_PLATFORMS: [&str; 2] = ["xavier", "tx2"];
+
+/// Family scenarios pinned per device platform — one bursty duo, one
+/// skewed trio, each replayed under every scheduler on every
+/// [`DEVICE_GOLDEN_PLATFORMS`] entry (2 × 2 × 4 = 16 anchor cells).
+pub const DEVICE_GOLDEN_SCENARIOS: [&str; 2] = ["duo-burst", "trio-skew"];
+
+/// Subdirectory of the golden dir holding the per-device anchors
+/// (`rust/tests/golden/devices/`), so the two golden sets keep separate
+/// bootstrap states.
+pub const DEVICE_GOLDEN_SUBDIR: &str = "devices";
+
+/// File name of a per-device golden trace cell (platform-qualified).
+pub fn device_golden_file_name(platform: &str, scenario: &str,
+                               scheduler: &str) -> String {
+    format!("{platform}__{scenario}__{scheduler}.trace.json")
+}
+
 /// Seeded random-scenario generator: extends the named family with an
 /// unbounded stream of valid (2–6 tenant, >= 1 critical, >= 1 normal)
 /// scenarios for sweeps. Deterministic per seed.
@@ -557,6 +579,27 @@ mod tests {
         assert_eq!(
             golden_file_name("duo-burst", "ib"),
             "duo-burst__ib.trace.json"
+        );
+    }
+
+    #[test]
+    fn device_golden_cells_name_real_platforms_and_scenarios() {
+        use crate::gpu::spec::GpuSpec;
+        for p in DEVICE_GOLDEN_PLATFORMS {
+            let spec = GpuSpec::by_name(p)
+                .unwrap_or_else(|| panic!("unknown device platform {p}"));
+            assert_eq!(spec.name, p, "device goldens need canonical names");
+            assert_ne!(p, GOLDEN_PLATFORM,
+                       "device goldens must extend, not duplicate, the \
+                        main set");
+        }
+        for sc in DEVICE_GOLDEN_SCENARIOS {
+            assert!(by_name(sc, GOLDEN_DURATION_US).is_some(),
+                    "device golden references unknown scenario {sc}");
+        }
+        assert_eq!(
+            device_golden_file_name("tx2", "duo-burst", "ib"),
+            "tx2__duo-burst__ib.trace.json"
         );
     }
 

@@ -32,16 +32,22 @@ use miriam::workloads::scenario::{self, ScenarioSpec};
 /// that every arrival process in the family fires and queues build.
 const DUR_US: f64 = 40_000.0;
 
-fn run_traced(sc: &ScenarioSpec, sched: &str, reference: bool)
-              -> (miriam::coordinator::RunStats, Trace) {
+fn run_traced_on(spec: GpuSpec, sc: &ScenarioSpec, sched: &str,
+                 reference: bool)
+                 -> (miriam::coordinator::RunStats, Trace) {
     let wl = sc.build();
     let mut s = scheduler_for(sched, &wl)
         .unwrap_or_else(|| panic!("unknown scheduler {sched}"));
-    let mut st = driver::run_with(GpuSpec::rtx2060(), &wl, s.as_mut(),
+    let mut st = driver::run_with(spec, &wl, s.as_mut(),
                                   RunOpts { reference_rates: reference,
                                             trace: true });
     let trace = st.trace.take().expect("trace was requested");
     (st, trace)
+}
+
+fn run_traced(sc: &ScenarioSpec, sched: &str, reference: bool)
+              -> (miriam::coordinator::RunStats, Trace) {
+    run_traced_on(GpuSpec::rtx2060(), sc, sched, reference)
 }
 
 fn dump_dir() -> PathBuf {
@@ -230,6 +236,76 @@ fn golden_traces_pin_engine_and_scheduler_semantics() {
                     --record-golden rust/tests/golden` only if the change \
                     is intended)",
                    path.display(), divs.len(), divs[0], dump_dir());
+        }
+    }
+}
+
+#[test]
+fn device_golden_traces_pin_per_platform_semantics() {
+    // ISSUE 5 satellite: golden anchors per *device preset* — xavier and
+    // tx2 × every scheduler on two family scenarios — so a contention or
+    // scheduler change that only misbehaves on a small edge part (fewer
+    // SMs, tighter bandwidth) fails loudly. Same bootstrap-on-first-run /
+    // UPDATE_GOLDEN protocol as the main set, with its own bootstrap
+    // state (a repo carrying only the rtx2060 goldens still bootstraps
+    // the device set instead of failing).
+    let dir = golden_dir().join(scenario::DEVICE_GOLDEN_SUBDIR);
+    let update = !matches!(
+        std::env::var("UPDATE_GOLDEN").as_deref(),
+        Err(_) | Ok("") | Ok("0") | Ok("false")
+    );
+    let have_any = fs::read_dir(&dir)
+        .map(|mut d| d.next().is_some())
+        .unwrap_or(false);
+    if update || !have_any {
+        let recorded = driver::record_device_golden_traces(&dir).unwrap();
+        eprintln!("recorded {} device golden trace(s) into {} — commit \
+                   rust/tests/golden/devices/ to pin them",
+                  recorded.len(), dir.display());
+    }
+    for platform in scenario::DEVICE_GOLDEN_PLATFORMS {
+        let spec = GpuSpec::by_name(platform)
+            .unwrap_or_else(|| panic!("unknown platform {platform}"));
+        for sc_name in scenario::DEVICE_GOLDEN_SCENARIOS {
+            let sc =
+                scenario::by_name(sc_name, scenario::GOLDEN_DURATION_US)
+                    .unwrap_or_else(|| {
+                        panic!("unknown device golden scenario {sc_name}")
+                    });
+            for sched in SCHEDULERS {
+                let (_, actual) =
+                    run_traced_on(spec.clone(), &sc, sched, false);
+                assert!(!actual.is_empty(),
+                        "{platform}/{sc_name}/{sched}: empty trace");
+                let path = dir.join(scenario::device_golden_file_name(
+                    platform, sc_name, sched));
+                assert!(path.exists(),
+                        "device golden {} is missing while other device \
+                         goldens exist — deleted or renamed? re-record \
+                         deliberately with UPDATE_GOLDEN=1",
+                        path.display());
+                let text = fs::read_to_string(&path).unwrap();
+                let golden = Trace::from_json_str(&text)
+                    .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+                // Same tolerance rationale as the main goldens: libm may
+                // differ in the last ulp across hosts, so compare
+                // structurally with a tiny time tolerance.
+                let divs = actual.diff_with_tolerance(&golden, 1e-6);
+                if !divs.is_empty() {
+                    dump(&format!(
+                             "device_golden__{platform}__{sc_name}__{sched}\
+                              .actual.json"),
+                         &actual.to_canonical_json());
+                    panic!("{platform}/{sc_name}/{sched}: trace drifted \
+                            from device golden {} at {} point(s); first: {} \
+                            (actual dumped in {:?}; regenerate with \
+                            UPDATE_GOLDEN=1 or `miriam scenarios \
+                            --record-golden rust/tests/golden` only if the \
+                            change is intended)",
+                           path.display(), divs.len(), divs[0],
+                           dump_dir());
+                }
+            }
         }
     }
 }

@@ -1,0 +1,172 @@
+//! Determinism and differential contracts of the fleet serving loop
+//! (ISSUE 5 satellite):
+//!
+//! * a **1-device fleet** under `round-robin` + policy `none` reproduces
+//!   the existing `serve-sim` trajectory **bitwise** — per-tenant
+//!   p50/p99/served identical, span and event counts equal (fleet and
+//!   single-device runs share `DeviceCore`, so this pins the refactor);
+//! * repeated fleet runs are **byte-identical** `BENCH_fleet.json`
+//!   documents at any `--threads` value (reports carry no host timing
+//!   and grid cells land in deterministic slots);
+//! * heterogeneous fleets stay deterministic per (seed, devices, router)
+//!   while different seeds produce different documents.
+
+use miriam::coordinator::admission::AdmissionPolicy;
+use miriam::fleet::{run_fleet, run_fleet_grid, FleetOpts, FleetSpec, ROUTERS};
+use miriam::gpu::spec::GpuSpec;
+use miriam::server::online::{run_serve, ServeOpts};
+use miriam::workloads::scenario;
+
+const DUR_US: f64 = 40_000.0;
+
+fn one_device(preset: &str, scheduler: &str) -> FleetSpec {
+    FleetSpec::parse(&[preset.into()], &[scheduler.into()]).unwrap()
+}
+
+fn hetero() -> FleetSpec {
+    FleetSpec::parse(
+        &["rtx2060".into(), "xavier".into(), "tx2".into()],
+        &["miriam".into()],
+    )
+    .unwrap()
+}
+
+fn routers() -> Vec<String> {
+    ROUTERS.iter().map(|r| r.to_string()).collect()
+}
+
+#[test]
+fn one_device_fleet_reproduces_serve_sim_bitwise() {
+    // Same scenario, same seed, same scheduler: the fleet loop with a
+    // single device and the class-blind router must walk the exact
+    // trajectory of run_serve — per-tenant quantiles compared to the bit.
+    for (sc_name, sched) in
+        [("duo-burst", "miriam"), ("five-storm", "miriam"),
+         ("trio-skew", "multistream")]
+    {
+        let sc = scenario::by_name(sc_name, DUR_US).unwrap();
+        let fleet_rep = run_fleet(
+            &one_device("rtx2060", sched),
+            &sc,
+            &FleetOpts { router: "round-robin".into(),
+                         ..FleetOpts::default() },
+        )
+        .expect("fleet run");
+        let serve_rep = run_serve(
+            &GpuSpec::rtx2060(),
+            &sc,
+            &ServeOpts { scheduler: sched.into(),
+                         policy: AdmissionPolicy::Open,
+                         ..ServeOpts::default() },
+        )
+        .expect("serve run");
+
+        assert_eq!(fleet_rep.offered(), serve_rep.offered(),
+                   "{sc_name}/{sched}: offered diverged");
+        assert_eq!(fleet_rep.admitted(), serve_rep.admitted());
+        assert_eq!(fleet_rep.shed(), 0);
+        assert_eq!(fleet_rep.served(), serve_rep.served(),
+                   "{sc_name}/{sched}: served diverged");
+        assert_eq!(fleet_rep.events, serve_rep.events,
+                   "{sc_name}/{sched}: event counts diverged");
+        assert_eq!(fleet_rep.span_us.to_bits(), serve_rep.span_us.to_bits(),
+                   "{sc_name}/{sched}: span diverged");
+        assert_eq!(fleet_rep.crit_p99_us().to_bits(),
+                   serve_rep.crit_p99_us().to_bits(),
+                   "{sc_name}/{sched}: fleet-level critical p99 diverged");
+        assert_eq!(fleet_rep.tenants.len(), serve_rep.tenants.len());
+        for (f, s) in fleet_rep.tenants.iter().zip(&serve_rep.tenants) {
+            assert_eq!(f.label, s.label);
+            assert_eq!(f.offered, s.offered, "{sc_name}/{}", f.label);
+            assert_eq!(f.admitted, s.admitted, "{sc_name}/{}", f.label);
+            assert_eq!(f.served, s.served, "{sc_name}/{}", f.label);
+            assert_eq!(f.deadline_misses, s.deadline_misses,
+                       "{sc_name}/{}", f.label);
+            assert_eq!(f.p50_us().to_bits(), s.p50_us().to_bits(),
+                       "{sc_name}/{}: p50 not bitwise", f.label);
+            assert_eq!(f.p99_us().to_bits(), s.p99_us().to_bits(),
+                       "{sc_name}/{}: p99 not bitwise", f.label);
+            // The whole latency vector, to the bit, in completion order.
+            assert_eq!(f.latencies_us.len(), s.latencies_us.len());
+            for (a, b) in f.latencies_us.iter().zip(&s.latencies_us) {
+                assert_eq!(a.to_bits(), b.to_bits(),
+                           "{sc_name}/{}: latency stream diverged", f.label);
+            }
+        }
+        // The single device absorbed everything.
+        assert_eq!(fleet_rep.devices.len(), 1);
+        assert_eq!(fleet_rep.devices[0].routed, fleet_rep.admitted());
+        assert_eq!(fleet_rep.devices[0].max_normal_queue,
+                   serve_rep.max_normal_queue);
+    }
+}
+
+#[test]
+fn fleet_grid_is_byte_identical_across_threads_and_repeats() {
+    let scenarios: Vec<_> = scenario::family(DUR_US)
+        .into_iter()
+        .filter(|s| s.name == "duo-burst" || s.name == "trio-skew")
+        .collect();
+    assert_eq!(scenarios.len(), 2);
+    let fleet = hetero();
+    let base = FleetOpts::default();
+    let j1 = run_fleet_grid(&fleet, &scenarios, &routers(), &base, 1)
+        .expect("threads=1")
+        .to_json();
+    let j4 = run_fleet_grid(&fleet, &scenarios, &routers(), &base, 4)
+        .expect("threads=4")
+        .to_json();
+    assert_eq!(j1, j4, "BENCH_fleet.json differs across --threads");
+    let j1b = run_fleet_grid(&fleet, &scenarios, &routers(), &base, 1)
+        .expect("repeat")
+        .to_json();
+    assert_eq!(j1, j1b, "BENCH_fleet.json differs across repeat runs");
+}
+
+#[test]
+fn heterogeneous_repeat_runs_match_and_seeds_differ() {
+    let sc = scenario::by_name("five-storm", DUR_US).unwrap();
+    let fleet = hetero();
+    for r in ROUTERS {
+        let opts = FleetOpts { router: r.into(), ..FleetOpts::default() };
+        let a = run_fleet(&fleet, &sc, &opts).expect("run a");
+        let b = run_fleet(&fleet, &sc, &opts).expect("run b");
+        assert_eq!(a.to_json_value().to_canonical_string(),
+                   b.to_json_value().to_canonical_string(),
+                   "{r}: repeat runs diverged");
+        let c = run_fleet(&fleet, &sc,
+                          &FleetOpts { seed: Some(99), ..opts.clone() })
+            .expect("run c");
+        assert_ne!(a.to_json_value().to_canonical_string(),
+                   c.to_json_value().to_canonical_string(),
+                   "{r}: a different seed produced an identical document");
+    }
+}
+
+#[test]
+fn routers_disagree_on_placement_but_share_the_arrival_stream() {
+    // On a heterogeneous fleet the three routers must actually place
+    // differently (otherwise the comparison is vacuous) while initial
+    // open-loop arrivals — which do not depend on service — agree.
+    let sc = scenario::by_name("quad-bursty", DUR_US).unwrap();
+    let fleet = hetero();
+    let reps: Vec<_> = ROUTERS
+        .iter()
+        .map(|r| {
+            run_fleet(&fleet, &sc,
+                      &FleetOpts { router: (*r).into(),
+                                   ..FleetOpts::default() })
+                .expect("run")
+        })
+        .collect();
+    let placements: Vec<Vec<u64>> = reps
+        .iter()
+        .map(|r| r.devices.iter().map(|d| d.routed).collect())
+        .collect();
+    assert!(placements.iter().any(|p| p != &placements[0]),
+            "all routers produced identical placements {placements:?}");
+    for (r, rep) in ROUTERS.iter().zip(&reps) {
+        assert_eq!(rep.routed(), rep.admitted(), "{r}");
+        assert_eq!(rep.offered(), rep.admitted() + rep.shed(), "{r}");
+    }
+}

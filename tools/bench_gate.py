@@ -1,15 +1,27 @@
 #!/usr/bin/env python3
-"""Bench regression gate (ISSUE 3 satellite).
+"""Bench regression gate (ISSUE 3 satellite; fleet mode: ISSUE 5).
 
-Compares a freshly produced BENCH_engine.json against a committed baseline
-and fails on a >20% events/sec regression of the incremental engine path.
+Compares a freshly produced bench JSON against a committed baseline.
+The mode is dispatched on the measured document's ``"bench"`` key:
+
+* engine (default / ``BENCH_engine.json``): fails on a >20% events/sec
+  regression of the incremental engine path — a host-timing metric, so
+  the tolerance absorbs CI-runner noise.
+* ``"bench": "fleet"`` (``BENCH_fleet.json``): fails when any baseline
+  cell is missing from the measured report (coverage regression), when
+  served counts drift by more than 2%, or when a cell's critical p99
+  drifts by more than 5% against the baseline. ``--tolerance`` overrides
+  both fleet thresholds. Fleet reports carry **no host timing**
+  (byte-deterministic per seed), so the small tolerances only absorb
+  libm last-ulp differences across hosts; real drift is a semantic
+  change and should be an intentional baseline refresh.
 
 Usage:
     bench_gate.py MEASURED_JSON BASELINE_JSON [--tolerance 0.20]
 
-Bootstrap behaviour: if the baseline is missing, or carries
-``"bootstrap": true``, or has no numeric ``events_per_sec_incremental``,
-the gate prints the measured numbers and exits 0.
+Bootstrap behaviour (both modes): if the baseline is missing, or carries
+``"bootstrap": true``, or has no comparable numbers, the gate prints the
+measured numbers and exits 0.
 
 Arming the gate — compare like-for-like: the baseline MUST be recorded
 under the same conditions the gate measures, i.e. promote the
@@ -28,6 +40,65 @@ import json
 import sys
 
 
+def fleet_gate(measured, baseline_path, tolerance=None):
+    """Deterministic-report gate for BENCH_fleet.json documents.
+
+    ``tolerance``, when given (the CLI's ``--tolerance``), overrides both
+    the served-count (default 2%) and critical-p99 (default 5%) drift
+    thresholds.
+    """
+    served_tol = tolerance if tolerance is not None else 0.02
+    p99_tol = tolerance if tolerance is not None else 0.05
+    cells = measured.get("cells", [])
+    served = sum(c.get("served", 0) for c in cells)
+    print(f"measured: {len(cells)} fleet cell(s), {served} served total")
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        print(f"gate: no baseline at {baseline_path} — bootstrap pass. "
+              f"Promote a CI-run BENCH_fleet.json artifact there to arm "
+              f"the gate (same --smoke conditions).")
+        return 0
+    if baseline.get("bootstrap") or not baseline.get("cells"):
+        print("gate: fleet baseline is a bootstrap placeholder — pass. "
+              "Promote a CI-run BENCH_fleet.json artifact to arm the gate.")
+        return 0
+    base_cells = {(c.get("scenario"), c.get("router")): c
+                  for c in baseline.get("cells", [])}
+    measured_keys = {(c.get("scenario"), c.get("router")) for c in cells}
+    failures = []
+    # A baseline cell with no measured counterpart is a coverage
+    # regression (a router or scenario silently dropped from the bench),
+    # not a pass.
+    for key in sorted(k for k in base_cells if k not in measured_keys):
+        failures.append(f"{key}: in baseline but missing from measured "
+                        f"report (coverage regression)")
+    for c in cells:
+        key = (c.get("scenario"), c.get("router"))
+        b = base_cells.get(key)
+        if b is None:
+            continue  # new cell: no baseline yet, nothing to regress
+        bs, ms = b.get("served", 0), c.get("served", 0)
+        if bs and abs(ms - bs) > served_tol * bs:
+            failures.append(f"{key}: served {ms} vs baseline {bs}")
+        bp, mp = b.get("crit_p99_us"), c.get("crit_p99_us")
+        if (isinstance(bp, (int, float)) and isinstance(mp, (int, float))
+                and bp > 0 and abs(mp - bp) > p99_tol * bp):
+            failures.append(f"{key}: crit_p99_us {mp:.1f} vs "
+                            f"baseline {bp:.1f}")
+    if failures:
+        print("gate: FAIL — fleet report drifted from baseline "
+              "(intentional change? refresh benchmarks/"
+              "BENCH_fleet.baseline.json from a healthy CI artifact):")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print(f"gate: OK — {len(cells)} fleet cell(s) within tolerance of "
+          f"baseline")
+    return 0
+
+
 def main(argv):
     if len(argv) < 3:
         print(__doc__)
@@ -39,6 +110,9 @@ def main(argv):
 
     with open(measured_path) as f:
         measured = json.load(f)
+    if measured.get("bench") == "fleet":
+        return fleet_gate(measured, baseline_path,
+                          tolerance if "--tolerance" in argv else None)
     m_inc = measured.get("events_per_sec_incremental")
     m_ref = measured.get("events_per_sec_reference")
     m_speedup = measured.get("speedup")
