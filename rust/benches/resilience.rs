@@ -1,0 +1,132 @@
+//! Fleet resilience under deterministic chaos (ISSUE 6).
+//!
+//! One leg: the flash-crowd stress scenario plus the heaviest family
+//! member (five-storm) served across the default rtx2060 + xavier + tx2
+//! fleet under every storm preset (`none` baseline, `straggler-storm`,
+//! `rolling-outage`, `flash-crowd-outage`) and every router, with a tx2
+//! standby pool armed behind the reactive autoscaler. Per cell the table
+//! reports the served/requeued/lost split, critical p99, and recovery
+//! time; the summary compares each storm column against the same
+//! (scenario, router) cell under `none` — the critical-p99 degradation
+//! the chaos layer is built to bound.
+//!
+//! Hard gates (exit 1), not remarks:
+//!   * conservation on every cell — `offered == admitted + shed` and
+//!     `admitted == served + lost`;
+//!   * every storm preset heals, so `lost == 0` and `routed == admitted`
+//!     everywhere;
+//!   * critical tenants are never shed;
+//!   * requeue ledgers agree — device `requeued_in` sums to tenant
+//!     `requeues`.
+//!
+//! Writes `BENCH_resilience.json` (canonical, byte-deterministic per
+//! seed and across worker threads — schema in EXPERIMENTS.md
+//! §Resilience). CI smoke mode: append `-- --smoke` (or set
+//! `BENCH_SMOKE=1`).
+
+use miriam::fleet::{
+    run_resilience_grid, AutoscaleConfig, FleetOpts, FleetSpec, ROUTERS,
+    STORMS,
+};
+use miriam::workloads::scenario;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").is_ok();
+    let duration_us = if smoke { 20_000.0 } else { 200_000.0 };
+    let fleet = FleetSpec::parse(
+        &["rtx2060".into(), "xavier".into(), "tx2".into()],
+        &["miriam".into()],
+    )
+    .expect("default fleet parses");
+    let scenarios = vec![
+        scenario::flash_crowd(duration_us),
+        scenario::by_name("five-storm", duration_us)
+            .expect("five-storm is a family scenario"),
+    ];
+    let storms: Vec<String> = STORMS.iter().map(|s| s.to_string()).collect();
+    let routers: Vec<String> = ROUTERS.iter().map(|r| r.to_string()).collect();
+    let opts = FleetOpts {
+        autoscale: Some(AutoscaleConfig {
+            pool: vec!["tx2".into()],
+            ..AutoscaleConfig::default()
+        }),
+        ..FleetOpts::default()
+    };
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    println!("# resilience: {} scenarios x {} storms x {} routers on {} \
+              devices (+1 standby), {}s of arrivals per cell, {threads} \
+              thread(s){}",
+             scenarios.len(), storms.len(), routers.len(),
+             fleet.devices.len(), duration_us / 1e6,
+             if smoke { " (smoke)" } else { "" });
+    println!("{:<12} {:<20} {:<22} {:>8} {:>8} {:>6} {:>10} {:>10}",
+             "scenario", "storm", "router", "served", "requeues", "lost",
+             "crit p99", "recovery");
+    println!("{:<12} {:<20} {:<22} {:>8} {:>8} {:>6} {:>10} {:>10}",
+             "", "", "", "", "", "", "(ms)", "(ms)");
+
+    let grid = run_resilience_grid(&fleet, &scenarios, &storms, &routers,
+                                   &opts, threads)
+        .expect("resilience grid");
+    let mut conserved = true;
+    let mut healed = true;
+    let mut crit_kept = true;
+    let mut ledgers = true;
+    for c in &grid.cells {
+        conserved &= c.offered() == c.admitted() + c.shed()
+            && c.admitted() == c.served() + c.lost();
+        healed &= c.lost() == 0 && c.routed() == c.admitted();
+        crit_kept &= c.shed_critical() == 0;
+        ledgers &= c.devices.iter().map(|d| d.requeued_in).sum::<u64>()
+            == c.requeues();
+        let recovery = if c.recovery_us.is_nan() {
+            "-".to_string()
+        } else {
+            format!("{:.2}", c.recovery_us / 1e3)
+        };
+        println!("{:<12} {:<20} {:<22} {:>8} {:>8} {:>6} {:>10.2} {:>10}",
+                 c.scenario, c.chaos, c.router, c.served(), c.requeues(),
+                 c.lost(), c.crit_p99_us() / 1e3, recovery);
+    }
+
+    // Storm impact vs the calm baseline, per (scenario, router).
+    println!("\n{:<12} {:<22} {:>10} {:>12} {:>12} {:>12}",
+             "scenario", "router", "calm p99", "straggler", "rolling",
+             "flash+out");
+    println!("{:<12} {:<22} {:>10} {:>12} {:>12} {:>12}",
+             "", "", "(ms)", "(x calm)", "(x calm)", "(x calm)");
+    for sc in &grid.scenarios {
+        for r in &grid.routers {
+            let cell = |storm: &str| {
+                grid.cell(sc, storm, r).expect("cell ran")
+            };
+            let calm = cell("none").crit_p99_us();
+            let degr = |storm: &str| cell(storm).crit_p99_us() / calm;
+            println!("{:<12} {:<22} {:>10.2} {:>12.2} {:>12.2} {:>12.2}",
+                     sc, r, calm / 1e3,
+                     degr("straggler-storm"),
+                     degr("rolling-outage"),
+                     degr("flash-crowd-outage"));
+        }
+    }
+    println!("\nconservation on every cell: {}",
+             if conserved { "yes" } else { "NO" });
+    println!("all storms heal (lost == 0, routed == admitted): {}",
+             if healed { "yes" } else { "NO" });
+    println!("critical tenants never shed: {}",
+             if crit_kept { "yes" } else { "NO" });
+    println!("requeue ledgers agree: {}",
+             if ledgers { "yes" } else { "NO" });
+
+    std::fs::write("BENCH_resilience.json", grid.to_json())
+        .expect("write BENCH_resilience.json");
+    println!("wrote BENCH_resilience.json");
+
+    if !(conserved && healed && crit_kept && ledgers) {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,231 @@
+//! Reactive autoscaler for the fleet loop (ISSUE 6).
+//!
+//! The scaler watches an **envelope-weighted backlog** signal — the sum
+//! of outstanding solo-envelope microseconds across live devices,
+//! divided by the live-device count — and attaches/detaches standby
+//! devices from a configured pool against watermark targets. All
+//! decisions happen at scheduled evaluation ticks in *simulated* time
+//! with a cooldown hysteresis, so a fleet run with an autoscaler is as
+//! byte-deterministic as one without.
+//!
+//! The scaler itself is policy only: it answers "attach, detach, or
+//! hold?" and the fleet loop in [`crate::fleet`] performs the actual
+//! core rebuild / drain. Detach is graceful — the loop drains the
+//! device's open requests before parking it back in the pool.
+
+/// Configuration for the reactive autoscaler.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AutoscaleConfig {
+    /// Standby device pool as `GpuSpec` preset names, attach order.
+    pub pool: Vec<String>,
+    /// Scheduler used for attached standby devices.
+    pub scheduler: String,
+    /// Attach a standby when per-live-device backlog is at or above
+    /// this many envelope-microseconds.
+    pub high_watermark_us: f64,
+    /// Detach the newest pool device when backlog is at or below this.
+    pub low_watermark_us: f64,
+    /// Interval between scaling evaluations, simulated microseconds.
+    pub eval_period_us: f64,
+    /// Minimum simulated time between two scaling *actions*
+    /// (hysteresis; evaluations during cooldown always hold).
+    pub cooldown_us: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            pool: Vec::new(),
+            scheduler: "miriam".into(),
+            high_watermark_us: 20_000.0,
+            low_watermark_us: 4_000.0,
+            eval_period_us: 5_000.0,
+            cooldown_us: 20_000.0,
+        }
+    }
+}
+
+impl AutoscaleConfig {
+    /// Validate watermarks and periods: `high > low >= 0`, a strictly
+    /// positive finite evaluation period, a finite non-negative
+    /// cooldown.
+    pub fn validate(&self) -> Result<(), String> {
+        if !self.high_watermark_us.is_finite()
+            || !self.low_watermark_us.is_finite()
+            || self.low_watermark_us < 0.0
+            || self.high_watermark_us <= self.low_watermark_us
+        {
+            return Err(format!(
+                "autoscale watermarks need high > low >= 0, got \
+                 high={} low={}",
+                self.high_watermark_us, self.low_watermark_us
+            ));
+        }
+        if !self.eval_period_us.is_finite() || self.eval_period_us <= 0.0
+        {
+            return Err(format!(
+                "autoscale eval period must be positive, got {}",
+                self.eval_period_us
+            ));
+        }
+        if !self.cooldown_us.is_finite() || self.cooldown_us < 0.0 {
+            return Err(format!(
+                "autoscale cooldown must be >= 0, got {}",
+                self.cooldown_us
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The decision taken at one evaluation tick.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleAction {
+    /// No change — backlog is between the watermarks, the cooldown is
+    /// active, or there is nothing to attach/detach.
+    Hold,
+    /// Attach the next standby device from the pool.
+    Attach,
+    /// Drain and detach the newest attached pool device.
+    Detach,
+}
+
+/// Deterministic watermark autoscaler; see the module docs.
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    cfg: AutoscaleConfig,
+    next_eval_us: Option<f64>,
+    last_action_us: f64,
+}
+
+impl Autoscaler {
+    /// Build a scaler; the first evaluation fires one period in.
+    pub fn new(cfg: AutoscaleConfig) -> Self {
+        let first = cfg.eval_period_us;
+        Autoscaler {
+            cfg,
+            next_eval_us: Some(first),
+            last_action_us: f64::NEG_INFINITY,
+        }
+    }
+
+    /// The configuration the scaler was built with.
+    pub fn config(&self) -> &AutoscaleConfig {
+        &self.cfg
+    }
+
+    /// Simulated time of the next evaluation tick, `None` when the
+    /// scaler has disarmed (no work left to react to).
+    pub fn next_eval_us(&self) -> Option<f64> {
+        self.next_eval_us
+    }
+
+    /// Evaluate at simulated time `now_us` against the backlog signal.
+    /// `backlog_per_live_us` is envelope-microseconds of outstanding
+    /// work per live device; `can_attach` / `can_detach` report whether
+    /// the fleet loop has a standby to add or a pool device to drain.
+    pub fn evaluate(
+        &mut self,
+        now_us: f64,
+        backlog_per_live_us: f64,
+        can_attach: bool,
+        can_detach: bool,
+    ) -> ScaleAction {
+        if now_us - self.last_action_us < self.cfg.cooldown_us {
+            return ScaleAction::Hold;
+        }
+        let action = if backlog_per_live_us >= self.cfg.high_watermark_us
+            && can_attach
+        {
+            ScaleAction::Attach
+        } else if backlog_per_live_us <= self.cfg.low_watermark_us
+            && can_detach
+        {
+            ScaleAction::Detach
+        } else {
+            ScaleAction::Hold
+        };
+        if action != ScaleAction::Hold {
+            self.last_action_us = now_us;
+        }
+        action
+    }
+
+    /// Arm the next tick one period after `now_us`, or disarm when
+    /// `work_remains` is false (guarantees loop termination: ticks
+    /// never keep an otherwise-drained simulation alive).
+    pub fn schedule_next(&mut self, now_us: f64, work_remains: bool) {
+        self.next_eval_us = if work_remains {
+            Some(now_us + self.cfg.eval_period_us)
+        } else {
+            None
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AutoscaleConfig {
+        AutoscaleConfig {
+            pool: vec!["rtx2060".into()],
+            high_watermark_us: 10_000.0,
+            low_watermark_us: 2_000.0,
+            eval_period_us: 1_000.0,
+            cooldown_us: 5_000.0,
+            ..AutoscaleConfig::default()
+        }
+    }
+
+    #[test]
+    fn validates_watermarks_and_periods() {
+        assert!(cfg().validate().is_ok());
+        let mut bad = cfg();
+        bad.low_watermark_us = bad.high_watermark_us;
+        assert!(bad.validate().is_err());
+        let mut bad = cfg();
+        bad.eval_period_us = 0.0;
+        assert!(bad.validate().is_err());
+        let mut bad = cfg();
+        bad.cooldown_us = f64::NAN;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn attaches_above_high_and_detaches_below_low() {
+        let mut s = Autoscaler::new(cfg());
+        assert_eq!(s.evaluate(1_000.0, 15_000.0, true, false),
+                   ScaleAction::Attach);
+        // Cooldown: the very next tick holds even though backlog is
+        // still high.
+        assert_eq!(s.evaluate(2_000.0, 15_000.0, true, false),
+                   ScaleAction::Hold);
+        // After the cooldown expires, a drained backlog detaches.
+        assert_eq!(s.evaluate(6_000.0, 500.0, false, true),
+                   ScaleAction::Detach);
+    }
+
+    #[test]
+    fn holds_between_watermarks_and_without_capacity() {
+        let mut s = Autoscaler::new(cfg());
+        assert_eq!(s.evaluate(1_000.0, 5_000.0, true, true),
+                   ScaleAction::Hold);
+        // High backlog but no standby left: hold, and the cooldown is
+        // NOT consumed by a non-action.
+        assert_eq!(s.evaluate(2_000.0, 15_000.0, false, true),
+                   ScaleAction::Hold);
+        assert_eq!(s.evaluate(3_000.0, 15_000.0, true, false),
+                   ScaleAction::Attach);
+    }
+
+    #[test]
+    fn schedule_next_disarms_when_work_is_done() {
+        let mut s = Autoscaler::new(cfg());
+        assert_eq!(s.next_eval_us(), Some(1_000.0));
+        s.schedule_next(1_000.0, true);
+        assert_eq!(s.next_eval_us(), Some(2_000.0));
+        s.schedule_next(2_000.0, false);
+        assert_eq!(s.next_eval_us(), None);
+    }
+}

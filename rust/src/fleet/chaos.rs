@@ -1,0 +1,468 @@
+//! Deterministic chaos layer for the fleet subsystem (ISSUE 6).
+//!
+//! A [`ChaosSpec`] is a *script* of failure events pinned to simulated
+//! time: device outages ([`ChaosEvent::DeviceDown`], optionally healing
+//! after a fixed delay) and thermal throttles
+//! ([`ChaosEvent::ThermalThrottle`], scaling the device's effective
+//! `GpuSpec` rates for a window). Events come from two front doors:
+//!
+//! * the CLI DSL parsed by [`ChaosSpec::parse`], e.g.
+//!   `down:d1@800ms+2s,throttle:d0@1s*0.6+500ms`;
+//! * named **storm presets** built by [`storm`] (see [`STORMS`]) whose
+//!   event times are derived from a fixed seed via the repo's own
+//!   [`Rng`](crate::workloads::rng::Rng) — no host entropy, so the same
+//!   (storm, devices, duration) always yields the same script.
+//!
+//! Every preset outage carries a heal, which is what makes the
+//! `lost == 0` conservation invariant testable under every storm: with
+//! at least one device live at all times, an admitted request is either
+//! served or requeued, never dropped.
+
+use crate::workloads::rng::Rng;
+
+/// Storm preset names accepted by [`storm`] and the `fleet-sim --storm`
+/// axis. `"none"` is the explicit no-chaos baseline cell.
+pub const STORMS: [&str; 4] = [
+    "none",
+    "straggler-storm",
+    "rolling-outage",
+    "flash-crowd-outage",
+];
+
+/// One scripted chaos event, pinned to simulated microseconds.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ChaosEvent {
+    /// Kill a device at `at_us`. Open requests on the device are drained
+    /// and re-routed; with `heal_after_us: Some(d)` the device comes
+    /// back at `at_us + d`, with `None` it stays down forever (a
+    /// *terminal* outage — admitted-but-unplaced requests become
+    /// `lost` if the whole fleet is dark).
+    DeviceDown {
+        /// Simulated time of the kill, in microseconds.
+        at_us: f64,
+        /// Index of the device to kill (fleet order, pool included).
+        device: usize,
+        /// Delay until the device heals; `None` means never.
+        heal_after_us: Option<f64>,
+    },
+    /// Scale a device's effective compute and memory rates by `factor`
+    /// (in `(0, 1]`) for `duration_us` starting at `at_us`.
+    ThermalThrottle {
+        /// Simulated time the throttle engages, in microseconds.
+        at_us: f64,
+        /// Index of the throttled device.
+        device: usize,
+        /// Multiplier applied to `flops_per_sm_us` and
+        /// `dram_bw_bytes_us`; 0.6 means the device runs at 60%.
+        factor: f64,
+        /// How long the throttle lasts, in microseconds (> 0).
+        duration_us: f64,
+    },
+}
+
+impl ChaosEvent {
+    /// The device index this event targets.
+    pub fn device(&self) -> usize {
+        match *self {
+            ChaosEvent::DeviceDown { device, .. } => device,
+            ChaosEvent::ThermalThrottle { device, .. } => device,
+        }
+    }
+}
+
+/// A named, ordered script of chaos events.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosSpec {
+    /// Label carried into reports (`"none"`, `"cli"`, or a storm name).
+    pub name: String,
+    /// The scripted events; firing order is resolved by the fleet loop.
+    pub events: Vec<ChaosEvent>,
+}
+
+impl Default for ChaosSpec {
+    fn default() -> Self {
+        ChaosSpec::none()
+    }
+}
+
+impl ChaosSpec {
+    /// The empty script: zero events, name `"none"`. A fleet run under
+    /// this spec is bitwise identical to a run with no chaos layer at
+    /// all (pinned by `fleet_determinism.rs`).
+    pub fn none() -> Self {
+        ChaosSpec { name: "none".into(), events: Vec::new() }
+    }
+
+    /// True when the script has no events.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Parse the CLI DSL: comma-separated items, each either
+    ///
+    /// * `down:<dev>@<time>[+<heal>]` — kill `<dev>` at `<time>`,
+    ///   healing after `<heal>` if given;
+    /// * `throttle:<dev>@<time>*<factor>+<duration>` — run `<dev>` at
+    ///   `<factor>` of its rates for `<duration>`.
+    ///
+    /// `<dev>` is `d0`, `d1`, … or a bare index; times accept `us`,
+    /// `ms` and `s` suffixes (bare numbers are microseconds). Example:
+    /// `down:d1@800ms+2s,throttle:d0@1s*0.6+500ms`.
+    pub fn parse(input: &str) -> Result<ChaosSpec, String> {
+        let mut events = Vec::new();
+        for raw in input.split(',') {
+            let item = raw.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (kind, rest) = item.split_once(':').ok_or_else(|| {
+                format!(
+                    "chaos item '{item}' needs a kind prefix \
+                     (down: or throttle:)"
+                )
+            })?;
+            let (dev_s, spec) = rest.split_once('@').ok_or_else(|| {
+                format!("chaos item '{item}' needs '@<time>'")
+            })?;
+            let device = parse_device(dev_s)?;
+            match kind.trim() {
+                "down" => {
+                    let (at_s, heal) = match spec.split_once('+') {
+                        Some((a, h)) => (a, Some(parse_time(h)?)),
+                        None => (spec, None),
+                    };
+                    events.push(ChaosEvent::DeviceDown {
+                        at_us: parse_time(at_s)?,
+                        device,
+                        heal_after_us: heal,
+                    });
+                }
+                "throttle" => {
+                    let (at_s, tail) =
+                        spec.split_once('*').ok_or_else(|| {
+                            format!(
+                                "throttle item '{item}' needs \
+                                 '*<factor>+<duration>'"
+                            )
+                        })?;
+                    let (factor_s, dur_s) =
+                        tail.split_once('+').ok_or_else(|| {
+                            format!(
+                                "throttle item '{item}' needs \
+                                 '+<duration>' after the factor"
+                            )
+                        })?;
+                    let factor =
+                        factor_s.trim().parse::<f64>().map_err(|_| {
+                            format!(
+                                "bad throttle factor '{factor_s}' in \
+                                 '{item}'"
+                            )
+                        })?;
+                    events.push(ChaosEvent::ThermalThrottle {
+                        at_us: parse_time(at_s)?,
+                        device,
+                        factor,
+                        duration_us: parse_time(dur_s)?,
+                    });
+                }
+                other => {
+                    return Err(format!(
+                        "unknown chaos kind '{other}' in '{item}' \
+                         (expected down or throttle)"
+                    ));
+                }
+            }
+        }
+        Ok(ChaosSpec { name: "cli".into(), events })
+    }
+
+    /// Validate the script against a fleet of `devices` devices:
+    /// in-range device indices, finite non-negative times, strictly
+    /// positive durations, throttle factors in `(0, 1]`.
+    pub fn validate(&self, devices: usize) -> Result<(), String> {
+        for ev in &self.events {
+            let d = ev.device();
+            if d >= devices {
+                return Err(format!(
+                    "chaos event targets device {d} but the fleet has \
+                     {devices} device(s)"
+                ));
+            }
+            match *ev {
+                ChaosEvent::DeviceDown { at_us, heal_after_us, .. } => {
+                    if !at_us.is_finite() || at_us < 0.0 {
+                        return Err(format!(
+                            "down event has bad time {at_us}"
+                        ));
+                    }
+                    if let Some(h) = heal_after_us {
+                        if !h.is_finite() || h <= 0.0 {
+                            return Err(format!(
+                                "down event has bad heal delay {h}"
+                            ));
+                        }
+                    }
+                }
+                ChaosEvent::ThermalThrottle {
+                    at_us,
+                    factor,
+                    duration_us,
+                    ..
+                } => {
+                    if !at_us.is_finite() || at_us < 0.0 {
+                        return Err(format!(
+                            "throttle event has bad time {at_us}"
+                        ));
+                    }
+                    if !(factor > 0.0 && factor <= 1.0) {
+                        return Err(format!(
+                            "throttle factor {factor} outside (0, 1]"
+                        ));
+                    }
+                    if !duration_us.is_finite() || duration_us <= 0.0 {
+                        return Err(format!(
+                            "throttle event has bad duration \
+                             {duration_us}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_device(s: &str) -> Result<usize, String> {
+    let t = s.trim();
+    let digits = t.strip_prefix('d').unwrap_or(t);
+    digits
+        .parse::<usize>()
+        .map_err(|_| format!("bad chaos device '{s}' (expected d0, d1, …)"))
+}
+
+fn parse_time(s: &str) -> Result<f64, String> {
+    let t = s.trim();
+    let (num, scale) = if let Some(n) = t.strip_suffix("us") {
+        (n, 1.0)
+    } else if let Some(n) = t.strip_suffix("ms") {
+        (n, 1_000.0)
+    } else if let Some(n) = t.strip_suffix('s') {
+        (n, 1_000_000.0)
+    } else {
+        (t, 1.0)
+    };
+    let v = num
+        .trim()
+        .parse::<f64>()
+        .map_err(|_| format!("bad chaos time '{s}'"))?;
+    Ok(v * scale)
+}
+
+/// Build a named storm preset for a fleet of `devices` devices over a
+/// `duration_us` window. Returns `None` for unknown names; callers
+/// should list [`STORMS`] in their error. Event times are derived from
+/// fixed per-preset seeds through [`Rng`], so the script is a pure
+/// function of its arguments.
+///
+/// * `none` — the empty script (explicit baseline cell).
+/// * `straggler-storm` — rotating thermal throttles (factors in
+///   `[0.4, 0.7]`); never kills a device.
+/// * `rolling-outage` — staggered kill/heal pairs, one device at a
+///   time, so fleets of ≥ 2 devices always keep a live majority.
+/// * `flash-crowd-outage` — device 0 dies near 30% of the window and
+///   heals after ~25% of it, while device 1 (when present) is
+///   throttled mid-window: an outage landing on top of peak load.
+///
+/// Every preset outage heals, which keeps `lost == 0` provable for
+/// every storm on any fleet with ≥ 1 device.
+pub fn storm(
+    name: &str,
+    devices: usize,
+    duration_us: f64,
+) -> Option<ChaosSpec> {
+    if devices == 0 || !(duration_us > 0.0) {
+        return None;
+    }
+    let events = match name {
+        "none" => Vec::new(),
+        "straggler-storm" => {
+            let mut rng = Rng::new(0xC4A0_5001);
+            let mut evs = Vec::new();
+            let n = 6usize;
+            let slot = duration_us / (n as f64 + 1.0);
+            for w in 0..n {
+                let at = slot * (w as f64 + 0.5)
+                    + rng.next_f64() * slot * 0.25;
+                let factor = 0.4 + 0.3 * rng.next_f64();
+                let dur = slot * (0.6 + 0.3 * rng.next_f64());
+                evs.push(ChaosEvent::ThermalThrottle {
+                    at_us: at,
+                    device: w % devices,
+                    factor,
+                    duration_us: dur,
+                });
+            }
+            evs
+        }
+        "rolling-outage" => {
+            let mut rng = Rng::new(0xC4A0_5002);
+            let mut evs = Vec::new();
+            // One kill/heal pair per device, strictly staggered: the
+            // heal of slot k lands before the kill of slot k+1, so at
+            // most one device is ever down.
+            let slot = duration_us / (devices as f64 + 1.0);
+            for d in 0..devices {
+                let at = slot * (d as f64 + 0.5)
+                    + rng.next_f64() * slot * 0.1;
+                let heal = slot * (0.3 + 0.1 * rng.next_f64());
+                evs.push(ChaosEvent::DeviceDown {
+                    at_us: at,
+                    device: d,
+                    heal_after_us: Some(heal),
+                });
+            }
+            evs
+        }
+        "flash-crowd-outage" => {
+            let mut evs = vec![ChaosEvent::DeviceDown {
+                at_us: duration_us * 0.3,
+                device: 0,
+                heal_after_us: Some(duration_us * 0.25),
+            }];
+            if devices > 1 {
+                evs.push(ChaosEvent::ThermalThrottle {
+                    at_us: duration_us * 0.45,
+                    device: 1,
+                    factor: 0.6,
+                    duration_us: duration_us * 0.2,
+                });
+            }
+            evs
+        }
+        _ => return None,
+    };
+    Some(ChaosSpec { name: name.into(), events })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_example() {
+        let spec = ChaosSpec::parse(
+            "down:d1@800ms+2s,throttle:d0@1s*0.6+500ms",
+        )
+        .unwrap();
+        assert_eq!(spec.name, "cli");
+        assert_eq!(
+            spec.events,
+            vec![
+                ChaosEvent::DeviceDown {
+                    at_us: 800_000.0,
+                    device: 1,
+                    heal_after_us: Some(2_000_000.0),
+                },
+                ChaosEvent::ThermalThrottle {
+                    at_us: 1_000_000.0,
+                    device: 0,
+                    factor: 0.6,
+                    duration_us: 500_000.0,
+                },
+            ]
+        );
+        assert!(spec.validate(2).is_ok());
+    }
+
+    #[test]
+    fn parses_time_suffixes_and_bare_indices() {
+        let spec =
+            ChaosSpec::parse("down:1@250us, down:d0@3ms").unwrap();
+        match spec.events[0] {
+            ChaosEvent::DeviceDown { at_us, device, heal_after_us } => {
+                assert_eq!(at_us, 250.0);
+                assert_eq!(device, 1);
+                assert_eq!(heal_after_us, None);
+            }
+            _ => panic!("expected down"),
+        }
+        match spec.events[1] {
+            ChaosEvent::DeviceDown { at_us, device, .. } => {
+                assert_eq!(at_us, 3_000.0);
+                assert_eq!(device, 0);
+            }
+            _ => panic!("expected down"),
+        }
+        // Bare numbers are microseconds.
+        let bare = ChaosSpec::parse("down:d0@1500").unwrap();
+        match bare.events[0] {
+            ChaosEvent::DeviceDown { at_us, .. } => {
+                assert_eq!(at_us, 1_500.0)
+            }
+            _ => panic!("expected down"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_items() {
+        for bad in [
+            "explode:d0@1ms",
+            "down:d0",
+            "down:dx@1ms",
+            "throttle:d0@1ms",
+            "throttle:d0@1ms*0.5",
+            "down:d0@soon",
+        ] {
+            assert!(ChaosSpec::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn validate_catches_bad_targets_and_factors() {
+        let spec = ChaosSpec::parse("down:d2@1ms+1ms").unwrap();
+        let err = spec.validate(2).unwrap_err();
+        assert!(err.contains("device 2"), "{err}");
+        let spec = ChaosSpec::parse("throttle:d0@1ms*1.5+1ms").unwrap();
+        assert!(spec.validate(1).is_err());
+        let spec = ChaosSpec::parse("throttle:d0@1ms*0+1ms").unwrap();
+        assert!(spec.validate(1).is_err());
+    }
+
+    #[test]
+    fn storms_are_valid_and_deterministic() {
+        for name in STORMS {
+            for devices in 1..=4 {
+                let a = storm(name, devices, 200_000.0).unwrap();
+                let b = storm(name, devices, 200_000.0).unwrap();
+                assert_eq!(a, b, "{name}: preset not deterministic");
+                assert_eq!(a.name, name);
+                a.validate(devices)
+                    .unwrap_or_else(|e| panic!("{name}: {e}"));
+                if name != "none" {
+                    assert!(!a.is_empty(), "{name}: empty script");
+                }
+                // Every preset outage heals — the lost == 0 invariant
+                // depends on it.
+                for ev in &a.events {
+                    if let ChaosEvent::DeviceDown {
+                        heal_after_us, ..
+                    } = ev
+                    {
+                        assert!(heal_after_us.is_some(),
+                                "{name}: terminal outage in a preset");
+                    }
+                }
+            }
+        }
+        assert!(storm("category-5", 2, 200_000.0).is_none());
+        assert!(storm("none", 0, 200_000.0).is_none());
+    }
+
+    #[test]
+    fn none_spec_is_default_and_empty() {
+        assert_eq!(ChaosSpec::default(), ChaosSpec::none());
+        assert!(ChaosSpec::none().is_empty());
+        assert!(storm("none", 3, 1_000.0).unwrap().is_empty());
+    }
+}

@@ -1,4 +1,5 @@
-//! Heterogeneous multi-GPU fleet serving (ISSUE 5 tentpole).
+//! Heterogeneous multi-GPU fleet serving (ISSUE 5 tentpole; chaos,
+//! in-flight rebalancing and autoscaling: ISSUE 6).
 //!
 //! Miriam is evaluated across two edge-GPU platforms (§8), and the
 //! ROADMAP's heavy-traffic north star needs more than one device per
@@ -13,16 +14,43 @@
 //! The loop advances in simulated time only: arrivals come from the same
 //! seeded heap the batch driver and `serve-sim` use, every arrival passes
 //! through one fleet-wide [`AdmissionController`] (critical is never
-//! shed), and each *admitted* request is placed on exactly one device by
-//! a pluggable [`RouterPolicy`] ([`router`] — `round-robin`,
+//! shed), and each *admitted* request is placed on exactly one **live**
+//! device by a pluggable [`RouterPolicy`] ([`router`] — `round-robin`,
 //! `least-outstanding-work`, `criticality-affinity`). Reports
-//! ([`report`]) carry no host timing, so `BENCH_fleet.json` is
-//! byte-deterministic per (seed, devices, router) and across
-//! `--threads` values.
+//! ([`report`]) carry no host timing, so `BENCH_fleet.json` and
+//! `BENCH_resilience.json` are byte-deterministic per (seed, devices,
+//! router, chaos) and across `--threads` values.
+//!
+//! # Failure / recovery lifecycle (ISSUE 6)
+//!
+//! A scripted [`ChaosSpec`] (CLI DSL or a [`chaos`] storm preset) kills,
+//! heals and throttles devices at fixed simulated times. Each device
+//! walks `Live → Down → Live` (kill/heal), `Live → Draining → Standby`
+//! (autoscaler detach) or `Standby → Live` (attach); on a kill the
+//! device's open requests are drained **sorted by id** and re-routed
+//! through [`RouterPolicy::rebalance`] over the surviving devices (each
+//! re-placement counts one `requeues` on its tenant). When the whole
+//! fleet is dark, drained and newly admitted requests wait in a pending
+//! list that flushes on the next heal/attach — a request is `lost` only
+//! to a *terminal* outage, so `lost == 0` whenever ≥ 1 device stays
+//! live, and `admitted == served + lost` always
+//! (`rust/tests/prop_invariants.rs`). A reactive [`Autoscaler`]
+//! ([`autoscale`]) attaches/detaches standby devices against an
+//! envelope-weighted backlog signal at deterministic simulated-time
+//! ticks. With a zero-event spec and no autoscaler the loop's
+//! arithmetic is untouched and `run_fleet` output is **bitwise
+//! identical** to its pre-chaos (PR 5) form — pinned by
+//! `rust/tests/fleet_determinism.rs`.
+//!
+//! Admission envelopes stay derived against the *nominal* fastest
+//! device: admission models the operator's capacity plan, not the
+//! transient chaos state, so a storm degrades latency rather than
+//! silently re-shaping the admitted load.
 //!
 //! CLI: `miriam fleet-sim --devices xavier,tx2 --router all
-//! --scenario duo-burst` (README has a quickstart; EXPERIMENTS.md §Fleet
-//! has router semantics and the JSON schema).
+//! --scenario duo-burst [--chaos "down:d1@8ms+10ms" | --storm all]`
+//! (README has a quickstart; EXPERIMENTS.md §Fleet and §Resilience have
+//! router/chaos semantics and the JSON schemas).
 //!
 //! [`DeviceCore`]: crate::server::online
 //!
@@ -39,13 +67,21 @@
 //! assert_eq!(report.shed_critical(), 0); // critical is never shed
 //! ```
 
+pub mod autoscale;
+pub mod chaos;
 pub mod report;
 pub mod router;
 
-pub use report::{DeviceDesc, DeviceOutcome, FleetGridReport, FleetReport};
+pub use autoscale::{AutoscaleConfig, Autoscaler, ScaleAction};
+pub use chaos::{ChaosEvent, ChaosSpec, STORMS};
+pub use report::{
+    DeviceDesc, DeviceOutcome, FleetGridReport, FleetReport,
+    ResilienceGridReport,
+};
 pub use router::{router_for, FleetView, RouterPolicy, ROUTERS};
 
 use std::cmp::Reverse;
+use std::collections::HashSet;
 use std::sync::Mutex;
 
 use crate::coordinator::admission::{
@@ -59,6 +95,7 @@ use crate::server::online::{
     record_served, shed_arrival, tenant_outcomes, validate_admission,
     DeviceCore,
 };
+use crate::workloads::mdtb::Workload;
 use crate::workloads::rng::Rng;
 use crate::workloads::scenario::ScenarioSpec;
 
@@ -128,8 +165,12 @@ impl FleetSpec {
 
     /// Index of the fleet's fastest device: highest peak FP32 throughput
     /// ([`GpuSpec::total_flops_us`]), ties broken toward the lowest
-    /// index. The `criticality-affinity` pin target and the spec the
-    /// fleet-wide admission envelopes are derived against.
+    /// index. The spec the fleet-wide admission envelopes are derived
+    /// against — note this is the *static* notion; the
+    /// `criticality-affinity` pin follows the fastest **live** device
+    /// ([`FleetView::fastest_live`]), which the fleet loop recomputes on
+    /// every kill/heal/throttle/attach so affinity never targets a dead
+    /// or detached device (ISSUE 6 satellite).
     pub fn fastest(&self) -> usize {
         let mut best = 0usize;
         let mut best_flops = f64::NEG_INFINITY;
@@ -167,6 +208,12 @@ pub struct FleetOpts {
     pub admission: AdmissionConfig,
     /// Override the scenario's pinned arrival seed (`None` keeps it).
     pub seed: Option<u64>,
+    /// Scripted chaos events. The default empty script leaves the loop's
+    /// arithmetic untouched — output is bitwise identical to a run
+    /// without the chaos layer.
+    pub chaos: ChaosSpec,
+    /// Reactive autoscaler with its standby pool (`None` disables).
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl Default for FleetOpts {
@@ -176,41 +223,392 @@ impl Default for FleetOpts {
             policy: AdmissionPolicy::Open,
             admission: AdmissionConfig::default(),
             seed: None,
+            chaos: ChaosSpec::none(),
+            autoscale: None,
         }
     }
 }
 
+/// Lifecycle state of one fleet device (primaries start `Live`,
+/// standby-pool devices start `Standby`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum DevState {
+    Live,
+    Draining,
+    Down,
+    Standby,
+}
+
+/// What one resolved control-timeline entry does. Ranks order same-time
+/// entries: heals before throttle-ends before kills before
+/// throttle-starts, so a same-instant bounce resolves to "device up".
+#[derive(Debug, Clone, Copy)]
+enum CtlKind {
+    Heal,
+    ThrottleEnd,
+    Down,
+    ThrottleStart { factor: f64 },
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Ctl {
+    at_us: f64,
+    rank: u8,
+    device: usize,
+    kind: CtlKind,
+}
+
+/// Expand a [`ChaosSpec`] into the flat, time-sorted control timeline
+/// the fleet loop consumes (each down/throttle contributes its heal/end
+/// as its own entry). Sort is total over (time, rank, device), so the
+/// firing order is deterministic for any script.
+fn control_timeline(spec: &ChaosSpec) -> Vec<Ctl> {
+    let mut ctl = Vec::new();
+    for ev in &spec.events {
+        match *ev {
+            ChaosEvent::DeviceDown { at_us, device, heal_after_us } => {
+                ctl.push(Ctl {
+                    at_us,
+                    rank: 2,
+                    device,
+                    kind: CtlKind::Down,
+                });
+                if let Some(h) = heal_after_us {
+                    ctl.push(Ctl {
+                        at_us: at_us + h,
+                        rank: 0,
+                        device,
+                        kind: CtlKind::Heal,
+                    });
+                }
+            }
+            ChaosEvent::ThermalThrottle {
+                at_us,
+                device,
+                factor,
+                duration_us,
+            } => {
+                ctl.push(Ctl {
+                    at_us,
+                    rank: 3,
+                    device,
+                    kind: CtlKind::ThrottleStart { factor },
+                });
+                ctl.push(Ctl {
+                    at_us: at_us + duration_us,
+                    rank: 1,
+                    device,
+                    kind: CtlKind::ThrottleEnd,
+                });
+            }
+        }
+    }
+    ctl.sort_by(|a, b| {
+        a.at_us
+            .total_cmp(&b.at_us)
+            .then(a.rank.cmp(&b.rank))
+            .then(a.device.cmp(&b.device))
+    });
+    ctl
+}
+
+/// An admitted request with nowhere to go: the whole fleet was dark when
+/// it needed a device. Flushed on the next heal/attach; anything still
+/// here when the run ends is `lost` (terminal outage).
+struct PendingReq {
+    id: u64,
+    arr_us: f64,
+    src: usize,
+    /// Whether the request had already been placed once (drained off a
+    /// dead device — its flush counts as a requeue) or never placed (a
+    /// flush is its first routing).
+    placed: bool,
+}
+
+/// One device kill and the recovery of the requests it was carrying:
+/// `recovered_at` is set the moment the last drained request is served
+/// somewhere else (tracked by id — ids are fleet-unique, so a request
+/// can never be counted served twice).
+struct Outage {
+    at_us: f64,
+    open: HashSet<u64>,
+    recovered_at: Option<f64>,
+}
+
+/// The fleet's mutable device-topology state, grouped so the chaos /
+/// autoscale handlers and the router share one consistent picture.
+struct DevCtx {
+    specs: Vec<DeviceSpec>,
+    cores: Vec<Option<DeviceCore>>,
+    state: Vec<DevState>,
+    /// Active thermal-throttle factor per device (`None` = full speed).
+    throttle: Vec<Option<f64>>,
+    /// `env_solo[device][source]` against the device's *effective* spec.
+    env_solo: Vec<Vec<f64>>,
+    /// Envelope-weighted outstanding work per device (router signal).
+    outstanding: Vec<f64>,
+    down_since: Vec<f64>,
+    live: Vec<bool>,
+    fastest_live: usize,
+}
+
+impl DevCtx {
+    /// The device's GPU spec with any active throttle factor applied to
+    /// its compute and memory rates.
+    fn effective_gpu(&self, d: usize) -> GpuSpec {
+        let mut g = self.specs[d].gpu.clone();
+        if let Some(f) = self.throttle[d] {
+            g.flops_per_sm_us *= f;
+            g.dram_bw_bytes_us *= f;
+        }
+        g
+    }
+
+    fn effective_flops(&self, d: usize) -> f64 {
+        let f = self.specs[d].gpu.total_flops_us();
+        match self.throttle[d] {
+            Some(x) => f * x,
+            None => f,
+        }
+    }
+
+    /// Refresh `live` and `fastest_live` from the state vector: fastest
+    /// by *effective* throughput over live devices, strict `>` so ties
+    /// stay on the lowest index (with no chaos this reproduces
+    /// [`FleetSpec::fastest`] exactly).
+    fn recompute_live(&mut self) {
+        let mut fastest = 0usize;
+        let mut best = f64::NEG_INFINITY;
+        for d in 0..self.state.len() {
+            self.live[d] = self.state[d] == DevState::Live;
+            if self.live[d] {
+                let f = self.effective_flops(d);
+                if f > best {
+                    best = f;
+                    fastest = d;
+                }
+            }
+        }
+        self.fastest_live = fastest;
+    }
+
+    fn any_live(&self) -> bool {
+        self.live.iter().any(|&l| l)
+    }
+
+    fn live_count(&self) -> usize {
+        self.live.iter().filter(|&&l| l).count()
+    }
+
+    /// Stand a fresh core up on device `d` at simulated time `t`
+    /// (heal, attach, or throttle re-clock), refreshing the device's
+    /// envelope table against its effective spec and zeroing its
+    /// backlog signal (the caller resubmits whatever it drained).
+    fn rebuild_core(&mut self, d: usize, t: f64, wl: &Workload)
+                    -> Result<(), String> {
+        let gpu = self.effective_gpu(d);
+        let mut core = DeviceCore::new(&gpu, wl, &self.specs[d].scheduler)?;
+        core.advance_to(t);
+        self.env_solo[d] = model_envelopes(wl, core.spec(), core.params())
+            .iter()
+            .map(|e| e.solo_us)
+            .collect();
+        self.outstanding[d] = 0.0;
+        self.cores[d] = Some(core);
+        Ok(())
+    }
+}
+
+/// Fold a finished core's span/events/queue-depth into its device row.
+/// Accumulating (max/sum) rather than assigning keeps multi-segment
+/// devices (killed and healed) honest while reproducing the single-
+/// segment (no-chaos) values bit-for-bit.
+fn retire_core(core: DeviceCore, dev: &mut DeviceOutcome) {
+    dev.max_normal_queue = dev.max_normal_queue.max(core.max_normal_queue());
+    let (span, metrics) = core.finish();
+    dev.span_us = dev.span_us.max(span);
+    dev.events += metrics.events;
+}
+
+/// Place one request on a live device: route (fresh arrivals) or
+/// rebalance (requeues) through the router, submit, and account. The
+/// fleet loop only calls this while at least one device is live.
+#[allow(clippy::too_many_arguments)]
+fn place_request(
+    ctx: &mut DevCtx,
+    router: &mut dyn RouterPolicy,
+    wl: &Workload,
+    tenants: &mut [crate::server::online::TenantOutcome],
+    devices: &mut [DeviceOutcome],
+    src: usize,
+    arr_us: f64,
+    id: u64,
+    requeue: bool,
+) {
+    let crit = wl.sources[src].criticality;
+    let d = {
+        let view = FleetView {
+            outstanding_us: &ctx.outstanding,
+            env_solo_us: &ctx.env_solo,
+            live: &ctx.live,
+            fastest_live: ctx.fastest_live,
+        };
+        if requeue {
+            router.rebalance(src, crit, &view)
+        } else {
+            router.route(src, crit, &view)
+        }
+    };
+    assert!(d < ctx.cores.len() && ctx.live[d],
+            "router {} returned dead device {d}", router.name());
+    ctx.cores[d]
+        .as_mut()
+        .expect("live device has a core")
+        .submit(wl, src, arr_us, id);
+    let dev = &mut devices[d];
+    if requeue {
+        dev.requeued_in += 1;
+        tenants[src].requeues += 1;
+    } else {
+        dev.routed += 1;
+        match crit {
+            Criticality::Critical => dev.routed_critical += 1,
+            Criticality::Normal => dev.routed_normal += 1,
+        }
+    }
+    ctx.outstanding[d] += ctx.env_solo[d][src];
+}
+
+/// Flush the dark-fleet pending list onto whatever is live now (no-op
+/// until a device is). Previously-placed requests count as requeues;
+/// never-placed ones count as their first routing.
+fn flush_pending(
+    ctx: &mut DevCtx,
+    router: &mut dyn RouterPolicy,
+    wl: &Workload,
+    tenants: &mut [crate::server::online::TenantOutcome],
+    devices: &mut [DeviceOutcome],
+    pending: &mut Vec<PendingReq>,
+) {
+    if pending.is_empty() || !ctx.any_live() {
+        return;
+    }
+    for p in std::mem::take(pending) {
+        place_request(ctx, router, wl, tenants, devices, p.src, p.arr_us,
+                      p.id, p.placed);
+    }
+}
+
+/// Re-clock device `d` at time `t` after its effective spec changed
+/// (throttle start/end): drain its open requests, retire the old core,
+/// stand a new one up at the new rates, and resubmit the drained
+/// requests *to the same device* with their original arrival times —
+/// a throttle is a slowdown, not an outage, so nothing is requeued.
+fn reclock_device(
+    ctx: &mut DevCtx,
+    d: usize,
+    t: f64,
+    wl: &Workload,
+    devices: &mut [DeviceOutcome],
+) -> Result<(), String> {
+    if ctx.cores[d].is_none() {
+        return Ok(());
+    }
+    let mut core = ctx.cores[d].take().expect("checked above");
+    let opens = core.drain_open();
+    retire_core(core, &mut devices[d]);
+    ctx.rebuild_core(d, t, wl)?;
+    let core = ctx.cores[d].as_mut().expect("just rebuilt");
+    let mut backlog = 0.0f64;
+    for &(id, arr, src) in &opens {
+        core.submit(wl, src, arr, id);
+        backlog += ctx.env_solo[d][src];
+    }
+    ctx.outstanding[d] = backlog;
+    Ok(())
+}
+
+/// Build the standby-pool device specs (`s{i}-{preset}`) from an
+/// autoscale config, mirroring [`FleetSpec::parse`]'s unknown-preset
+/// error.
+fn pool_specs(cfg: &AutoscaleConfig) -> Result<Vec<DeviceSpec>, String> {
+    let mut out = Vec::with_capacity(cfg.pool.len());
+    for (i, p) in cfg.pool.iter().enumerate() {
+        let gpu = GpuSpec::by_name(p).ok_or_else(|| {
+            format!(
+                "unknown standby preset '{p}' (available: {})",
+                GpuSpec::PRESET_NAMES.join(", ")
+            )
+        })?;
+        out.push(DeviceSpec {
+            name: format!("s{i}-{}", gpu.name),
+            gpu,
+            scheduler: cfg.scheduler.clone(),
+        });
+    }
+    Ok(out)
+}
+
 /// Serve one scenario across the fleet until every device drains.
-/// Deterministic for a given (scenario, seed, devices, router, policy):
-/// the loop advances in simulated time only, ties (arrival vs event,
-/// device vs device) break the same way every run, and no host timing
-/// enters the report.
+/// Deterministic for a given (scenario, seed, devices, router, policy,
+/// chaos, autoscale): the loop advances in simulated time only, ties
+/// (arrival vs event vs control, device vs device) break the same way
+/// every run, and no host timing enters the report.
 pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
                  -> Result<FleetReport, String> {
     if fleet.devices.is_empty() {
         return Err("a fleet needs at least one device".into());
     }
     validate_admission(&opts.admission)?;
-    let n = fleet.devices.len();
-    let mut router = router_for(&opts.router, n).ok_or_else(|| {
+    let pool: Vec<DeviceSpec> = match &opts.autoscale {
+        Some(a) => {
+            a.validate()?;
+            pool_specs(a)?
+        }
+        None => Vec::new(),
+    };
+    let pool_start = fleet.devices.len();
+    let total = pool_start + pool.len();
+    opts.chaos.validate(total)?;
+    let mut router = router_for(&opts.router, total).ok_or_else(|| {
         format!(
             "unknown router {} (available: {})",
             opts.router,
             ROUTERS.join(", ")
         )
     })?;
+    let resilience = !opts.chaos.is_empty() || opts.autoscale.is_some();
 
     let mut wl = sc.build();
     if let Some(seed) = opts.seed {
         wl.seed = seed;
     }
-    let mut cores = Vec::with_capacity(n);
+    let mut specs = fleet.devices.clone();
+    specs.extend(pool.iter().cloned());
+    let mut cores: Vec<Option<DeviceCore>> = Vec::with_capacity(total);
+    let mut env_solo: Vec<Vec<f64>> = Vec::with_capacity(total);
     for d in &fleet.devices {
-        cores.push(DeviceCore::new(&d.gpu, &wl, &d.scheduler)?);
+        let core = DeviceCore::new(&d.gpu, &wl, &d.scheduler)?;
+        env_solo.push(
+            model_envelopes(&wl, core.spec(), core.params())
+                .iter()
+                .map(|e| e.solo_us)
+                .collect(),
+        );
+        cores.push(Some(core));
+    }
+    for d in &pool {
+        // Validate the standby scheduler now so an attach cannot fail
+        // mid-run; the throwaway core never joins the fleet and the
+        // real envelope table is computed at attach time.
+        DeviceCore::new(&d.gpu, &wl, &d.scheduler)?;
+        env_solo.push(vec![0.0; wl.sources.len()]);
+        cores.push(None);
     }
 
     // One fleet-wide admission controller. Its envelopes are derived
-    // against the *fastest* device (best-placement estimates); in a
+    // against the *nominal fastest* device (best-placement estimates,
+    // unaffected by transient chaos — see the module docs); in a
     // 1-device fleet that is the device itself, which keeps the
     // serve-sim differential contract exact.
     let fastest = fleet.fastest();
@@ -218,28 +616,45 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
         opts.policy,
         opts.admission.clone(),
         &wl,
-        cores[fastest].spec(),
-        cores[fastest].params(),
+        cores[fastest].as_ref().expect("primaries start live").spec(),
+        cores[fastest].as_ref().expect("primaries start live").params(),
     );
-    // Per-device × per-source solo envelopes: the router's cost model.
-    let env_solo: Vec<Vec<f64>> = cores
-        .iter()
-        .map(|c| {
-            model_envelopes(&wl, c.spec(), c.params())
-                .iter()
-                .map(|e| e.solo_us)
-                .collect()
-        })
-        .collect();
+
+    let mut state = vec![DevState::Live; pool_start];
+    state.extend(vec![DevState::Standby; pool.len()]);
+    let mut ctx = DevCtx {
+        specs,
+        cores,
+        state,
+        throttle: vec![None; total],
+        env_solo,
+        outstanding: vec![0.0f64; total],
+        down_since: vec![0.0f64; total],
+        live: vec![false; total],
+        fastest_live: 0,
+    };
+    ctx.recompute_live();
+
+    let ctl = control_timeline(&opts.chaos);
+    let mut ctl_i = 0usize;
+    let mut scaler = opts.autoscale.clone().map(Autoscaler::new);
+    let mut pending: Vec<PendingReq> = Vec::new();
+    let mut outages: Vec<Outage> = Vec::new();
+    let mut attaches = 0u64;
+    let mut detaches = 0u64;
 
     let mut rng = Rng::new(wl.seed);
     let mut arrivals = initial_arrivals(&wl, &mut rng);
     let mut tenants = tenant_outcomes(sc, &wl);
-    let mut devices: Vec<DeviceOutcome> = fleet
-        .descs()
-        .into_iter()
-        .map(|desc| DeviceOutcome {
-            desc,
+    let mut devices: Vec<DeviceOutcome> = ctx
+        .specs
+        .iter()
+        .map(|d| DeviceOutcome {
+            desc: DeviceDesc {
+                name: d.name.clone(),
+                platform: d.gpu.name.clone(),
+                scheduler: d.scheduler.clone(),
+            },
             routed: 0,
             routed_critical: 0,
             routed_normal: 0,
@@ -249,10 +664,10 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
             span_us: 0.0,
             events: 0,
             max_normal_queue: 0,
+            requeued_in: 0,
+            downtime_us: 0.0,
         })
         .collect();
-    // Envelope-weighted outstanding work per device (router signal).
-    let mut outstanding = vec![0.0f64; n];
     let mut next_id: u64 = 1;
 
     loop {
@@ -260,12 +675,179 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
         // Earliest device event; ties break toward the lowest index
         // (strict `<`), so the step order is deterministic.
         let mut t_ev: Option<(f64, usize)> = None;
-        for (d, core) in cores.iter_mut().enumerate() {
-            if let Some(t) = core.next_event_time() {
-                if t_ev.map_or(true, |(tb, _)| t < tb) {
-                    t_ev = Some((t, d));
+        for (d, core) in ctx.cores.iter_mut().enumerate() {
+            if let Some(core) = core {
+                if let Some(t) = core.next_event_time() {
+                    if t_ev.map_or(true, |(tb, _)| t < tb) {
+                        t_ev = Some((t, d));
+                    }
                 }
             }
+        }
+        let t_chaos = ctl.get(ctl_i).map(|c| c.at_us);
+        let t_tick = scaler.as_ref().and_then(|s| s.next_eval_us());
+        let t_ctl = match (t_chaos, t_tick) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        // Control (chaos / autoscale tick) preempts arrivals and events
+        // at the same instant: a device killed at t never sees t's
+        // arrivals, and control still fires after the queues drain (a
+        // terminal heal must flush the pending list).
+        let ctl_due = match t_ctl {
+            Some(tc) => {
+                t_arr.map_or(true, |ta| tc <= ta)
+                    && t_ev.map_or(true, |(te, _)| tc <= te)
+            }
+            None => false,
+        };
+        if ctl_due {
+            let t = t_ctl.expect("ctl_due implies a control time");
+            for core in ctx.cores.iter_mut().flatten() {
+                core.advance_to(t);
+            }
+            let fire_chaos = match (t_chaos, t_tick) {
+                (Some(a), Some(b)) => a <= b,
+                (Some(_), None) => true,
+                (None, _) => false,
+            };
+            if fire_chaos {
+                let c = ctl[ctl_i];
+                ctl_i += 1;
+                match c.kind {
+                    CtlKind::Down => {
+                        let d = c.device;
+                        if matches!(ctx.state[d],
+                                    DevState::Live | DevState::Draining)
+                        {
+                            let mut core = ctx.cores[d]
+                                .take()
+                                .expect("live device has a core");
+                            let opens = core.drain_open();
+                            retire_core(core, &mut devices[d]);
+                            ctx.state[d] = DevState::Down;
+                            ctx.down_since[d] = t;
+                            ctx.outstanding[d] = 0.0;
+                            ctx.recompute_live();
+                            let mut o = Outage {
+                                at_us: t,
+                                open: opens
+                                    .iter()
+                                    .map(|&(id, _, _)| id)
+                                    .collect(),
+                                recovered_at: None,
+                            };
+                            if o.open.is_empty() {
+                                o.recovered_at = Some(t);
+                            }
+                            outages.push(o);
+                            if ctx.any_live() {
+                                for (id, arr, src) in opens {
+                                    place_request(
+                                        &mut ctx, router.as_mut(), &wl,
+                                        &mut tenants, &mut devices, src,
+                                        arr, id, true,
+                                    );
+                                }
+                            } else {
+                                for (id, arr, src) in opens {
+                                    pending.push(PendingReq {
+                                        id,
+                                        arr_us: arr,
+                                        src,
+                                        placed: true,
+                                    });
+                                }
+                            }
+                        }
+                    }
+                    CtlKind::Heal => {
+                        let d = c.device;
+                        if ctx.state[d] == DevState::Down {
+                            devices[d].downtime_us += t - ctx.down_since[d];
+                            ctx.rebuild_core(d, t, &wl)?;
+                            ctx.state[d] = DevState::Live;
+                            ctx.recompute_live();
+                            flush_pending(&mut ctx, router.as_mut(), &wl,
+                                          &mut tenants, &mut devices,
+                                          &mut pending);
+                        }
+                    }
+                    CtlKind::ThrottleStart { factor } => {
+                        let d = c.device;
+                        ctx.throttle[d] = Some(factor);
+                        reclock_device(&mut ctx, d, t, &wl, &mut devices)?;
+                        ctx.recompute_live();
+                    }
+                    CtlKind::ThrottleEnd => {
+                        let d = c.device;
+                        ctx.throttle[d] = None;
+                        reclock_device(&mut ctx, d, t, &wl, &mut devices)?;
+                        ctx.recompute_live();
+                    }
+                }
+            } else {
+                // Autoscale evaluation tick.
+                let live_count = ctx.live_count();
+                let backlog: f64 = ctx
+                    .outstanding
+                    .iter()
+                    .zip(&ctx.live)
+                    .filter(|&(_, &l)| l)
+                    .map(|(o, _)| o)
+                    .sum();
+                let per_live = if live_count > 0 {
+                    backlog / live_count as f64
+                } else {
+                    f64::INFINITY
+                };
+                let attach_target = (pool_start..total)
+                    .find(|&d| ctx.state[d] == DevState::Standby);
+                let detach_target = (pool_start..total)
+                    .rev()
+                    .find(|&d| ctx.state[d] == DevState::Live);
+                let can_detach = detach_target.is_some() && live_count > 1;
+                let s = scaler.as_mut().expect("tick implies a scaler");
+                match s.evaluate(t, per_live, attach_target.is_some(),
+                                 can_detach)
+                {
+                    ScaleAction::Attach => {
+                        let d = attach_target.expect("evaluate checked");
+                        ctx.rebuild_core(d, t, &wl)?;
+                        ctx.state[d] = DevState::Live;
+                        attaches += 1;
+                        ctx.recompute_live();
+                        flush_pending(&mut ctx, router.as_mut(), &wl,
+                                      &mut tenants, &mut devices,
+                                      &mut pending);
+                    }
+                    ScaleAction::Detach => {
+                        let d = detach_target.expect("evaluate checked");
+                        let open = ctx.cores[d]
+                            .as_ref()
+                            .map_or(0, |c| c.open_count());
+                        if open == 0 {
+                            if let Some(core) = ctx.cores[d].take() {
+                                retire_core(core, &mut devices[d]);
+                            }
+                            ctx.state[d] = DevState::Standby;
+                            ctx.outstanding[d] = 0.0;
+                        } else {
+                            // Graceful: stop routing here, park it once
+                            // its open requests drain (see step branch).
+                            ctx.state[d] = DevState::Draining;
+                        }
+                        detaches += 1;
+                        ctx.recompute_live();
+                    }
+                    ScaleAction::Hold => {}
+                }
+                let work_remains = !arrivals.is_empty()
+                    || !pending.is_empty()
+                    || ctx.cores.iter().flatten().any(|c| c.open_count() > 0);
+                s.schedule_next(t, work_remains);
+            }
+            continue;
         }
         match (t_arr, t_ev) {
             (None, None) => break,
@@ -273,7 +855,7 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
                 // ta precedes every device's next event, so advancing the
                 // whole fleet cannot skip one; devices therefore observe
                 // arrivals on a common clock.
-                for core in &mut cores {
+                for core in ctx.cores.iter_mut().flatten() {
                     core.advance_to(ta);
                 }
                 while let Some(Reverse((TimeKey(t), src))) =
@@ -286,33 +868,23 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
                     tenants[src].offered += 1;
                     match ctrl.decide(src, t) {
                         Decision::Admitted => {
-                            let crit = wl.sources[src].criticality;
-                            let d = router.route(
-                                src,
-                                crit,
-                                &FleetView {
-                                    outstanding_us: &outstanding,
-                                    env_solo_us: &env_solo,
-                                    fastest,
-                                },
-                            );
-                            assert!(d < n,
-                                    "router {} returned device {d} of {n}",
-                                    router.name());
-                            cores[d].submit(&wl, src, t, next_id);
-                            next_id += 1;
                             tenants[src].admitted += 1;
-                            let dev = &mut devices[d];
-                            dev.routed += 1;
-                            match crit {
-                                Criticality::Critical => {
-                                    dev.routed_critical += 1;
-                                }
-                                Criticality::Normal => {
-                                    dev.routed_normal += 1;
-                                }
+                            let id = next_id;
+                            next_id += 1;
+                            if ctx.any_live() {
+                                place_request(
+                                    &mut ctx, router.as_mut(), &wl,
+                                    &mut tenants, &mut devices, src, t,
+                                    id, false,
+                                );
+                            } else {
+                                pending.push(PendingReq {
+                                    id,
+                                    arr_us: t,
+                                    src,
+                                    placed: false,
+                                });
                             }
-                            outstanding[d] += env_solo[d][src];
                         }
                         Decision::Shed(_) => {
                             shed_arrival(&wl, src, t, &opts.admission,
@@ -320,33 +892,60 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
                         }
                     }
                 }
-                for core in &mut cores {
+                for core in ctx.cores.iter_mut().flatten() {
                     core.sample_queue_depth();
                 }
             }
             (_, Some((_, d))) => {
-                let dev = &mut devices[d];
-                let out_d = &mut outstanding[d];
-                let env_d = &env_solo[d];
-                cores[d].step(|src, arr, now| {
-                    ctrl.on_served(src);
-                    record_served(&wl, src, arr, now, &mut tenants,
-                                  &mut arrivals);
-                    let lat = now - arr;
-                    match wl.sources[src].criticality {
-                        Criticality::Critical => {
-                            dev.critical_latencies_us.push(lat);
+                let mut core =
+                    ctx.cores[d].take().expect("stepping a missing core");
+                {
+                    let dev = &mut devices[d];
+                    let out_d = &mut ctx.outstanding[d];
+                    let env_d = &ctx.env_solo[d];
+                    core.step(|id, src, arr, now| {
+                        ctrl.on_served(src);
+                        record_served(&wl, src, arr, now, &mut tenants,
+                                      &mut arrivals);
+                        let lat = now - arr;
+                        match wl.sources[src].criticality {
+                            Criticality::Critical => {
+                                dev.critical_latencies_us.push(lat);
+                            }
+                            Criticality::Normal => {
+                                dev.normal_latencies_us.push(lat);
+                            }
                         }
-                        Criticality::Normal => {
-                            dev.normal_latencies_us.push(lat);
+                        if wl.sources[src]
+                            .deadline_us
+                            .is_some_and(|dl| lat > dl)
+                        {
+                            dev.deadline_misses += 1;
                         }
-                    }
-                    if wl.sources[src].deadline_us.is_some_and(|dl| lat > dl)
-                    {
-                        dev.deadline_misses += 1;
-                    }
-                    *out_d = (*out_d - env_d[src]).max(0.0);
-                });
+                        *out_d = (*out_d - env_d[src]).max(0.0);
+                        // Outage recovery bookkeeping: remove/is_empty
+                        // only — no set iteration, so no HashSet order
+                        // dependence.
+                        for o in outages.iter_mut() {
+                            if o.recovered_at.is_none()
+                                && o.open.remove(&id)
+                                && o.open.is_empty()
+                            {
+                                o.recovered_at = Some(now);
+                            }
+                        }
+                    });
+                }
+                if ctx.state[d] == DevState::Draining
+                    && core.open_count() == 0
+                {
+                    retire_core(core, &mut devices[d]);
+                    ctx.state[d] = DevState::Standby;
+                    ctx.outstanding[d] = 0.0;
+                    ctx.recompute_live();
+                } else {
+                    ctx.cores[d] = Some(core);
+                }
             }
             // (Some, None) with a failed guard cannot occur: the guard is
             // vacuously true when no device has a next event.
@@ -354,16 +953,31 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
         }
     }
 
+    // Whatever is still pending was admitted into a fleet that never
+    // came back: lost to a terminal outage.
+    for p in &pending {
+        tenants[p.src].lost += 1;
+    }
+    for (core, dev) in ctx.cores.iter_mut().zip(&mut devices) {
+        if let Some(core) = core.take() {
+            retire_core(core, dev);
+        }
+    }
     let mut span_us = 0.0f64;
     let mut events = 0u64;
-    for (core, dev) in cores.into_iter().zip(&mut devices) {
-        dev.max_normal_queue = core.max_normal_queue();
-        let (span, metrics) = core.finish();
-        dev.span_us = span;
-        dev.events = metrics.events;
-        span_us = span_us.max(span);
-        events += metrics.events;
+    for dev in &devices {
+        span_us = span_us.max(dev.span_us);
+        events += dev.events;
     }
+    for (d, dev) in devices.iter_mut().enumerate() {
+        if ctx.state[d] == DevState::Down {
+            dev.downtime_us += (span_us - ctx.down_since[d]).max(0.0);
+        }
+    }
+    let recovery_us = outages
+        .iter()
+        .filter_map(|o| o.recovered_at.map(|r| r - o.at_us))
+        .fold(f64::NAN, f64::max);
     Ok(FleetReport {
         scenario: sc.name.clone(),
         router: opts.router.clone(),
@@ -375,6 +989,12 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
         span_us,
         events,
         critical_at_risk: ctrl.critical_at_risk(),
+        chaos: opts.chaos.name.clone(),
+        chaos_events: opts.chaos.events.len() as u64,
+        recovery_us,
+        attaches,
+        detaches,
+        resilience,
     })
 }
 
@@ -435,6 +1055,96 @@ pub fn run_fleet_grid(
         duration_us: scenarios[0].duration_us,
         routers: routers.to_vec(),
         scenarios: scenarios.iter().map(|s| s.name.clone()).collect(),
+        cells,
+    })
+}
+
+/// Run the scenarios × storms × routers resilience grid (scenario-major,
+/// then storm, then router) across a scoped worker pool and assemble the
+/// [`ResilienceGridReport`] (`BENCH_resilience.json`). Storm scripts are
+/// generated per scenario window, so every cell of one storm column runs
+/// the same named weather scaled to its scenario. Byte-identical for any
+/// `threads` value, like [`run_fleet_grid`].
+pub fn run_resilience_grid(
+    fleet: &FleetSpec,
+    scenarios: &[ScenarioSpec],
+    storms: &[String],
+    routers: &[String],
+    base: &FleetOpts,
+    threads: usize,
+) -> Result<ResilienceGridReport, String> {
+    if scenarios.is_empty() {
+        return Err("resilience grid needs at least one scenario".into());
+    }
+    if storms.is_empty() {
+        return Err("resilience grid needs at least one storm".into());
+    }
+    if routers.is_empty() {
+        return Err("resilience grid needs at least one router".into());
+    }
+    validate_admission(&base.admission)?;
+    for r in routers {
+        if router_for(r, fleet.devices.len().max(1)).is_none() {
+            return Err(format!(
+                "unknown router {r} (available: {})",
+                ROUTERS.join(", ")
+            ));
+        }
+    }
+    for s in storms {
+        if chaos::storm(s, fleet.devices.len(), scenarios[0].duration_us)
+            .is_none()
+        {
+            return Err(format!(
+                "unknown storm '{s}' (available: {})",
+                STORMS.join(", ")
+            ));
+        }
+    }
+    let mut devices = fleet.descs();
+    if let Some(a) = &base.autoscale {
+        a.validate()?;
+        devices.extend(pool_specs(a)?.iter().map(|d| DeviceDesc {
+            name: d.name.clone(),
+            platform: d.gpu.name.clone(),
+            scheduler: d.scheduler.clone(),
+        }));
+    }
+    let cells: Vec<(usize, usize, usize)> = scenarios
+        .iter()
+        .enumerate()
+        .flat_map(|(si, _)| {
+            (0..storms.len()).flat_map(move |ti| {
+                (0..routers.len()).map(move |ri| (si, ti, ri))
+            })
+        })
+        .collect();
+    let n = cells.len();
+    let slots: Vec<Mutex<Option<Result<FleetReport, String>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    crate::coordinator::sweep::run_indexed(n, threads, |i| {
+        let (si, ti, ri) = cells[i];
+        let sc = &scenarios[si];
+        let opts = FleetOpts {
+            router: routers[ri].clone(),
+            chaos: chaos::storm(&storms[ti], fleet.devices.len(),
+                                sc.duration_us)
+                .expect("storms validated above"),
+            ..base.clone()
+        };
+        *slots[i].lock().unwrap() = Some(run_fleet(fleet, sc, &opts));
+    });
+    let cells = slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("cell ran"))
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(ResilienceGridReport {
+        devices,
+        policy: base.policy.name().to_string(),
+        duration_us: scenarios[0].duration_us,
+        scenarios: scenarios.iter().map(|s| s.name.clone()).collect(),
+        storms: storms.to_vec(),
+        routers: routers.to_vec(),
         cells,
     })
 }
@@ -518,6 +1228,9 @@ mod tests {
             assert_eq!(rep.offered(), rep.admitted() + rep.shed(), "{r}");
             assert_eq!(rep.routed(), rep.admitted(), "{r}");
             assert_eq!(rep.shed_critical(), 0, "{r}");
+            assert_eq!(rep.requeues(), 0, "{r}: requeues without chaos");
+            assert_eq!(rep.lost(), 0, "{r}: lost without chaos");
+            assert!(!rep.resilience, "{r}: resilience without chaos");
             assert!(rep.served() > 0, "{r}: nothing served");
             assert!(rep.events > 0, "{r}");
             assert!(rep.span_us > 0.0, "{r}");
@@ -569,6 +1282,34 @@ mod tests {
         assert!(run_fleet_grid(&hetero(), &[duo()], &["random".into()],
                                &FleetOpts::default(), 1)
             .is_err());
+        // Chaos targeting a device the fleet does not have.
+        let bad_chaos = FleetOpts {
+            chaos: ChaosSpec::parse("down:d7@1ms+1ms").unwrap(),
+            ..FleetOpts::default()
+        };
+        assert!(run_fleet(&hetero(), &duo(), &bad_chaos).is_err());
+        // Bad autoscale watermarks and an unknown standby preset.
+        let bad_scale = FleetOpts {
+            autoscale: Some(AutoscaleConfig {
+                pool: vec!["rtx2060".into()],
+                high_watermark_us: 1.0,
+                low_watermark_us: 2.0,
+                ..AutoscaleConfig::default()
+            }),
+            ..FleetOpts::default()
+        };
+        assert!(run_fleet(&hetero(), &duo(), &bad_scale).is_err());
+        let bad_pool = FleetOpts {
+            autoscale: Some(AutoscaleConfig {
+                pool: vec!["h100".into()],
+                ..AutoscaleConfig::default()
+            }),
+            ..FleetOpts::default()
+        };
+        let err = run_fleet(&hetero(), &duo(), &bad_pool).unwrap_err();
+        for name in GpuSpec::PRESET_NAMES {
+            assert!(err.contains(name), "{err}");
+        }
     }
 
     #[test]
@@ -604,5 +1345,118 @@ mod tests {
         assert_eq!(b.seed, 12);
         assert_ne!(a.to_json_value().to_canonical_string(),
                    b.to_json_value().to_canonical_string());
+    }
+
+    #[test]
+    fn kill_and_heal_conserves_requests_and_requeues() {
+        // Kill the fastest device mid-run and heal it: nothing may be
+        // lost (a survivor stays live throughout) and the drained
+        // requests must show up as requeues.
+        let chaos = ChaosSpec::parse("down:d0@5ms+8ms").unwrap();
+        for r in ROUTERS {
+            let opts = FleetOpts {
+                router: r.into(),
+                chaos: chaos.clone(),
+                ..FleetOpts::default()
+            };
+            let rep = run_fleet(&hetero(), &duo(), &opts).unwrap();
+            assert!(rep.resilience, "{r}");
+            assert_eq!(rep.chaos, "cli", "{r}");
+            assert_eq!(rep.offered(), rep.admitted() + rep.shed(), "{r}");
+            assert_eq!(rep.admitted(), rep.served() + rep.lost(), "{r}");
+            assert_eq!(rep.lost(), 0, "{r}: lost with a live survivor");
+            assert_eq!(rep.shed_critical(), 0, "{r}");
+            assert_eq!(rep.routed(), rep.admitted(), "{r}");
+            let requeued_in: u64 =
+                rep.devices.iter().map(|d| d.requeued_in).sum();
+            assert_eq!(requeued_in, rep.requeues(),
+                       "{r}: device/tenant requeue ledgers disagree");
+            assert!(rep.devices[0].downtime_us > 0.0,
+                    "{r}: killed device shows no downtime");
+            assert!(rep.recovery_us.is_finite(),
+                    "{r}: no recovery recorded");
+        }
+    }
+
+    #[test]
+    fn terminal_outage_loses_what_it_must_and_no_more() {
+        // Kill every device forever at 5ms: requests admitted before
+        // the blackout are either served or lost, and the ledgers
+        // balance exactly.
+        let chaos =
+            ChaosSpec::parse("down:d0@5ms,down:d1@5ms,down:d2@5ms")
+                .unwrap();
+        let opts =
+            FleetOpts { chaos, ..FleetOpts::default() };
+        let rep = run_fleet(&hetero(), &duo(), &opts).unwrap();
+        assert_eq!(rep.offered(), rep.admitted() + rep.shed());
+        assert_eq!(rep.admitted(), rep.served() + rep.lost());
+        assert!(rep.lost() > 0, "a permanent blackout lost nothing?");
+        assert!(rep.devices.iter().all(|d| d.downtime_us > 0.0));
+    }
+
+    #[test]
+    fn autoscaler_attaches_under_pressure_and_stays_deterministic() {
+        // A slow single primary under five-storm load with a tight
+        // high watermark: the scaler must pull in the standby.
+        let fleet =
+            FleetSpec::parse(&["tx2".into()], &["miriam".into()]).unwrap();
+        let sc = scenario::by_name("five-storm", DUR_US).unwrap();
+        let opts = FleetOpts {
+            autoscale: Some(AutoscaleConfig {
+                pool: vec!["rtx2060".into()],
+                high_watermark_us: 500.0,
+                low_watermark_us: 1.0,
+                eval_period_us: 1_000.0,
+                cooldown_us: 2_000.0,
+                ..AutoscaleConfig::default()
+            }),
+            ..FleetOpts::default()
+        };
+        let a = run_fleet(&fleet, &sc, &opts).unwrap();
+        assert!(a.resilience);
+        assert!(a.attaches >= 1, "scaler never attached the standby");
+        assert_eq!(a.devices.len(), 2, "pool device missing from report");
+        assert_eq!(a.devices[1].desc.name, "s0-rtx2060");
+        assert!(a.devices[1].routed > 0,
+                "attached standby never received work");
+        assert_eq!(a.admitted(), a.served() + a.lost());
+        assert_eq!(a.lost(), 0);
+        let b = run_fleet(&fleet, &sc, &opts).unwrap();
+        assert_eq!(a.to_json_value().to_canonical_string(),
+                   b.to_json_value().to_canonical_string(),
+                   "autoscaled runs diverged across repeats");
+    }
+
+    #[test]
+    fn resilience_grid_shape_errors_and_json() {
+        use crate::runtime::json::{parse, Json};
+        let routers: Vec<String> =
+            ROUTERS.iter().map(|r| r.to_string()).collect();
+        let storms: Vec<String> =
+            STORMS.iter().map(|s| s.to_string()).collect();
+        let grid = run_resilience_grid(&hetero(), &[duo()], &storms,
+                                       &routers, &FleetOpts::default(), 2)
+            .unwrap();
+        assert_eq!(grid.cells.len(), STORMS.len() * ROUTERS.len());
+        assert!(grid
+            .cell("duo-burst", "rolling-outage", "round-robin")
+            .is_some());
+        let j = grid.to_json();
+        let doc = parse(&j).expect("valid JSON");
+        assert_eq!(doc.get("bench").and_then(Json::as_str),
+                   Some("resilience"));
+        assert_eq!(
+            doc.get("comparisons").and_then(Json::as_arr).map(|a| a.len()),
+            Some(grid.cells.len())
+        );
+        // Unknown storm: error lists the vocabulary.
+        let err = run_resilience_grid(&hetero(), &[duo()],
+                                      &["category-5".into()], &routers,
+                                      &FleetOpts::default(), 1)
+            .unwrap_err();
+        for name in STORMS {
+            assert!(err.contains(name), "{err}");
+        }
     }
 }

@@ -17,7 +17,9 @@ use crate::coordinator::admission::AdmissionPolicy;
 use crate::coordinator::stats::{merged_quantile, sorted_quantile};
 use crate::gpu::kernel::Criticality;
 use crate::runtime::json::Json;
-use crate::server::online::{tenant_json, TenantOutcome};
+use crate::server::online::{
+    tenant_json, tenant_json_resilience, TenantOutcome,
+};
 
 /// Identity of one fleet device (the `devices` header of
 /// `BENCH_fleet.json`).
@@ -56,6 +58,13 @@ pub struct DeviceOutcome {
     /// Peak best-effort queue depth inside the device's coordinator (0
     /// when the scheduler does not expose one).
     pub max_normal_queue: usize,
+    /// Requests this device received as chaos-layer requeues (drained
+    /// off a dead or draining device and re-routed here; 0 without
+    /// chaos).
+    pub requeued_in: u64,
+    /// Total simulated time this device spent down (us; 0 without
+    /// chaos).
+    pub downtime_us: f64,
 }
 
 impl DeviceOutcome {
@@ -75,7 +84,10 @@ impl DeviceOutcome {
         sorted_quantile(&self.normal_latencies_us, q)
     }
 
-    fn to_json_value(&self) -> Json {
+    /// One device row of a fleet cell. The chaos-only keys appear only
+    /// when `resilience` is set, so zero-chaos documents stay
+    /// byte-identical to their pre-chaos (PR 5) form.
+    fn to_json_value(&self, resilience: bool) -> Json {
         let num = Json::Num;
         let mut m = BTreeMap::new();
         m.insert("device".into(), Json::Str(self.desc.name.clone()));
@@ -93,6 +105,10 @@ impl DeviceOutcome {
         m.insert("events".into(), num(self.events as f64));
         m.insert("max_normal_queue".into(),
                  num(self.max_normal_queue as f64));
+        if resilience {
+            m.insert("requeued_in".into(), num(self.requeued_in as f64));
+            m.insert("downtime_us".into(), num(self.downtime_us));
+        }
         Json::Obj(m)
     }
 }
@@ -121,6 +137,23 @@ pub struct FleetReport {
     /// Critical arrivals whose deadline was infeasible by the admission
     /// envelope (admitted regardless; see `AdmissionController`).
     pub critical_at_risk: u64,
+    /// Chaos script name this cell ran under (`"none"`, `"cli"`, or a
+    /// storm preset).
+    pub chaos: String,
+    /// Scripted chaos events in the cell's schedule.
+    pub chaos_events: u64,
+    /// Slowest outage recovery observed: the longest simulated time
+    /// from a device kill until every request it was carrying had been
+    /// served elsewhere (NaN when no outage occurred).
+    pub recovery_us: f64,
+    /// Standby devices the autoscaler attached during the run.
+    pub attaches: u64,
+    /// Pool devices the autoscaler drained and detached.
+    pub detaches: u64,
+    /// Whether the cell ran with a chaos script or an autoscaler. Gates
+    /// the chaos-only JSON keys so zero-chaos documents stay
+    /// byte-identical to their pre-chaos (PR 5) form.
+    pub resilience: bool,
 }
 
 impl FleetReport {
@@ -150,6 +183,19 @@ impl FleetReport {
     /// `rust/tests/prop_invariants.rs`.
     pub fn routed(&self) -> u64 {
         self.devices.iter().map(|d| d.routed).sum()
+    }
+
+    /// Total chaos-layer requeues over all tenants (0 without chaos).
+    pub fn requeues(&self) -> u64 {
+        self.tenants.iter().map(|t| t.requeues).sum()
+    }
+
+    /// Admitted requests lost to a terminal outage, fleet-wide — zero
+    /// whenever at least one device stays live (pinned in
+    /// `rust/tests/prop_invariants.rs`), and always
+    /// `admitted == served + lost`.
+    pub fn lost(&self) -> u64 {
+        self.tenants.iter().map(|t| t.lost).sum()
     }
 
     /// Shed count over critical tenants — zero by the admission
@@ -248,15 +294,32 @@ impl FleetReport {
         m.insert("deadline_misses_normal".into(),
                  num(self.deadline_misses_normal() as f64));
         m.insert("critical_at_risk".into(), num(self.critical_at_risk as f64));
+        if self.resilience {
+            m.insert("chaos".into(), Json::Str(self.chaos.clone()));
+            m.insert("chaos_events".into(), num(self.chaos_events as f64));
+            m.insert("requeues".into(), num(self.requeues() as f64));
+            m.insert("lost".into(), num(self.lost() as f64));
+            m.insert("recovery_us".into(), num(self.recovery_us));
+            m.insert("attaches".into(), num(self.attaches as f64));
+            m.insert("detaches".into(), num(self.detaches as f64));
+        }
         m.insert(
             "devices".into(),
             Json::Arr(
-                self.devices.iter().map(|d| d.to_json_value()).collect(),
+                self.devices
+                    .iter()
+                    .map(|d| d.to_json_value(self.resilience))
+                    .collect(),
             ),
         );
+        let trow = if self.resilience {
+            tenant_json_resilience
+        } else {
+            tenant_json
+        };
         m.insert(
             "tenants".into(),
-            Json::Arr(self.tenants.iter().map(tenant_json).collect()),
+            Json::Arr(self.tenants.iter().map(trow).collect()),
         );
         Json::Obj(m)
     }
@@ -323,6 +386,121 @@ impl FleetGridReport {
             "scenarios".into(),
             Json::Arr(self.scenarios.iter().cloned().map(Json::Str).collect()),
         );
+        obj.insert(
+            "cells".into(),
+            Json::Arr(self.cells.iter().map(|c| c.to_json_value()).collect()),
+        );
+        obj.insert("version".into(), Json::Num(1.0));
+        Json::Obj(obj).to_canonical_string()
+    }
+}
+
+/// A scenarios × storms × routers resilience comparison (the
+/// `BENCH_resilience.json` document, ISSUE 6).
+#[derive(Debug, Clone)]
+pub struct ResilienceGridReport {
+    /// Fleet devices (primaries first, then the standby pool).
+    pub devices: Vec<DeviceDesc>,
+    /// Admission policy applied in every cell.
+    pub policy: String,
+    /// Arrival-generation window per cell (us).
+    pub duration_us: f64,
+    /// Scenario names, in run order.
+    pub scenarios: Vec<String>,
+    /// Storm preset names, in run order (`"none"` is the baseline).
+    pub storms: Vec<String>,
+    /// Router names, in run order.
+    pub routers: Vec<String>,
+    /// Cells in deterministic grid order (scenario-major, then storm,
+    /// then router) — independent of worker-thread interleaving.
+    pub cells: Vec<FleetReport>,
+}
+
+impl ResilienceGridReport {
+    /// The cell for (scenario, storm, router), if it ran.
+    pub fn cell(&self, scenario: &str, storm: &str, router: &str)
+                -> Option<&FleetReport> {
+        self.cells.iter().find(|c| {
+            c.scenario == scenario && c.chaos == storm && c.router == router
+        })
+    }
+
+    /// Per-cell headline numbers with each storm cell's critical p99
+    /// put next to the `none` baseline of the same (scenario, router)
+    /// as a degradation ratio — what `tools/bench_gate.py
+    /// --resilience` and EXPERIMENTS.md read.
+    fn comparisons(&self) -> Json {
+        let num = Json::Num;
+        let rows = self
+            .cells
+            .iter()
+            .map(|c| {
+                let base_p99 = self
+                    .cell(&c.scenario, "none", &c.router)
+                    .map(|b| b.crit_p99_us())
+                    .unwrap_or(f64::NAN);
+                let p99 = c.crit_p99_us();
+                let degradation = if base_p99.is_finite() && base_p99 > 0.0
+                {
+                    p99 / base_p99
+                } else {
+                    f64::NAN
+                };
+                let mut m = BTreeMap::new();
+                m.insert("scenario".into(), Json::Str(c.scenario.clone()));
+                m.insert("storm".into(), Json::Str(c.chaos.clone()));
+                m.insert("router".into(), Json::Str(c.router.clone()));
+                m.insert("served".into(), num(c.served() as f64));
+                m.insert("requeues".into(), num(c.requeues() as f64));
+                m.insert("lost".into(), num(c.lost() as f64));
+                m.insert("recovery_us".into(), num(c.recovery_us));
+                m.insert("crit_p99_us".into(), num(p99));
+                m.insert("crit_p99_degradation".into(), num(degradation));
+                Json::Obj(m)
+            })
+            .collect();
+        Json::Arr(rows)
+    }
+
+    /// The canonical `BENCH_resilience.json` document: sorted keys, no
+    /// whitespace, no host-timing fields — byte-deterministic per seed
+    /// and across `--threads` values (schema in EXPERIMENTS.md
+    /// §Resilience).
+    pub fn to_json(&self) -> String {
+        let mut obj = BTreeMap::new();
+        obj.insert("bench".into(), Json::Str("resilience".into()));
+        obj.insert(
+            "devices".into(),
+            Json::Arr(
+                self.devices
+                    .iter()
+                    .map(|d| {
+                        let mut m = BTreeMap::new();
+                        m.insert("name".into(), Json::Str(d.name.clone()));
+                        m.insert("platform".into(),
+                                 Json::Str(d.platform.clone()));
+                        m.insert("scheduler".into(),
+                                 Json::Str(d.scheduler.clone()));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        obj.insert("policy".into(), Json::Str(self.policy.clone()));
+        obj.insert("duration_us".into(), Json::Num(self.duration_us));
+        obj.insert(
+            "scenarios".into(),
+            Json::Arr(self.scenarios.iter().cloned().map(Json::Str).collect()),
+        );
+        obj.insert(
+            "storms".into(),
+            Json::Arr(self.storms.iter().cloned().map(Json::Str).collect()),
+        );
+        obj.insert(
+            "routers".into(),
+            Json::Arr(self.routers.iter().cloned().map(Json::Str).collect()),
+        );
+        obj.insert("comparisons".into(), self.comparisons());
         obj.insert(
             "cells".into(),
             Json::Arr(self.cells.iter().map(|c| c.to_json_value()).collect()),

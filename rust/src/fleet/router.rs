@@ -1,4 +1,5 @@
-//! Pluggable request-to-device routing policies (ISSUE 5 tentpole).
+//! Pluggable request-to-device routing policies (ISSUE 5 tentpole;
+//! chaos-aware since ISSUE 6).
 //!
 //! Per-device scheduling decides *when and how* a request's kernels run;
 //! routing decides *where* — the placement dimension that EdgeServing and
@@ -10,25 +11,31 @@
 //!
 //! Three policies ship (names in [`ROUTERS`]):
 //!
-//! * `round-robin` — class-blind rotation over the devices; the placement
-//!   baseline every comparison is made against.
-//! * `least-outstanding-work` — pick the device whose envelope-weighted
-//!   backlog *after* placing this request would be smallest. Backlogs are
-//!   weighted by each device's own [`ModelEnvelope::solo_us`] for the
-//!   request's model (`crate::coordinator::admission::model_envelopes`),
-//!   so a slow device accrues more microseconds per routed request than a
-//!   fast one — device speed is priced in, not just queue length.
+//! * `round-robin` — class-blind rotation over the **live** devices; the
+//!   placement baseline every comparison is made against.
+//! * `least-outstanding-work` — pick the live device whose
+//!   envelope-weighted backlog *after* placing this request would be
+//!   smallest. Backlogs are weighted by each device's own
+//!   [`ModelEnvelope::solo_us`] for the request's model
+//!   (`crate::coordinator::admission::model_envelopes`), so a slow
+//!   device accrues more microseconds per routed request than a fast
+//!   one — device speed is priced in, not just queue length.
 //! * `criticality-affinity` — critical tenants are pinned to the fastest
-//!   device ([`crate::fleet::FleetSpec::fastest`]); best-effort requests
-//!   fill the remaining devices round-robin (everything shares the one
-//!   device in a 1-device fleet). The placement analog of Miriam's
-//!   dedicated critical stream.
+//!   **live** device ([`FleetView::fastest_live`], recomputed by the
+//!   fleet loop on every kill/heal/throttle); best-effort requests fill
+//!   the remaining live devices round-robin (everything shares the one
+//!   device when only one is live). The placement analog of Miriam's
+//!   dedicated critical stream — and when the fastest device dies, the
+//!   pin follows the fastest *survivor* and snaps back on heal.
 //!
-//! Every policy is pure arithmetic over the view (no RNG, no host state),
-//! so fleet runs stay byte-deterministic per seed; ties break toward the
-//! lowest device index. `rust/tests/prop_invariants.rs` pins routed-
-//! exactly-once conservation and the criticality-affinity pinning
-//! invariant.
+//! With every device live the policies are arithmetically identical to
+//! their pre-chaos (PR 5) forms — fleet runs under a zero-event
+//! [`ChaosSpec`](crate::fleet::chaos::ChaosSpec) are pinned bitwise by
+//! `rust/tests/fleet_determinism.rs`. Every policy is pure arithmetic
+//! over the view (no RNG, no host state), so fleet runs stay
+//! byte-deterministic per seed; ties break toward the lowest device
+//! index. `rust/tests/prop_invariants.rs` pins routed-exactly-once
+//! conservation and the criticality-affinity pinning invariant.
 //!
 //! [`ModelEnvelope::solo_us`]: crate::coordinator::admission::ModelEnvelope
 
@@ -42,7 +49,8 @@ pub const ROUTERS: [&str; 3] =
 
 /// What a router is allowed to see when placing one request: per-device
 /// envelope-weighted backlogs, the per-device × per-source envelope
-/// table, and which device is the fleet's fastest.
+/// table, which devices are currently live, and which live device is
+/// fastest right now.
 #[derive(Debug)]
 pub struct FleetView<'a> {
     /// Envelope-weighted outstanding work per device (us of solo service
@@ -51,13 +59,18 @@ pub struct FleetView<'a> {
     /// `env_solo_us[device][source]`: the solo latency envelope of
     /// `source`'s model on `device`.
     pub env_solo_us: &'a [Vec<f64>],
-    /// Index of the fleet's fastest device (criticality-affinity target).
-    pub fastest: usize,
+    /// `live[device]`: whether the device can accept requests right now
+    /// (not down, not draining, not parked in the standby pool).
+    pub live: &'a [bool],
+    /// Index of the fastest **live** device (criticality-affinity
+    /// target), recomputed by the fleet loop on every topology change.
+    pub fastest_live: usize,
 }
 
-/// A request-to-device placement policy. Implementations must return an
-/// index `< view.outstanding_us.len()` and be deterministic functions of
-/// their own state plus the view.
+/// A request-to-device placement policy. Implementations must return a
+/// **live** index `< view.live.len()` and be deterministic functions of
+/// their own state plus the view. The fleet loop only calls a router
+/// while at least one device is live.
 pub trait RouterPolicy {
     /// Stable router name (CLI / report key).
     fn name(&self) -> &'static str;
@@ -65,9 +78,20 @@ pub trait RouterPolicy {
     /// Place one admitted request from `source` (class `criticality`).
     fn route(&mut self, source: usize, criticality: Criticality,
              view: &FleetView<'_>) -> usize;
+
+    /// Re-place a request drained from a dead device (ISSUE 6). The
+    /// default routes through the normal live-device path, which is the
+    /// right answer for every shipped policy — criticality-affinity
+    /// re-pins critical work to the fastest survivor for free because
+    /// `route` reads [`FleetView::fastest_live`]. Override to treat
+    /// requeues differently from fresh arrivals.
+    fn rebalance(&mut self, source: usize, criticality: Criticality,
+                 view: &FleetView<'_>) -> usize {
+        self.route(source, criticality, view)
+    }
 }
 
-/// Class-blind rotation over the devices.
+/// Class-blind rotation over the live devices.
 struct RoundRobin {
     devices: usize,
     next: usize,
@@ -79,15 +103,24 @@ impl RouterPolicy for RoundRobin {
     }
 
     fn route(&mut self, _source: usize, _criticality: Criticality,
-             _view: &FleetView<'_>) -> usize {
-        let d = self.next;
-        self.next = (self.next + 1) % self.devices;
-        d
+             view: &FleetView<'_>) -> usize {
+        // Advance the rotor until it lands on a live device. With every
+        // device live this is the pre-chaos single step, so zero-event
+        // runs stay bitwise identical to PR 5.
+        for _ in 0..self.devices {
+            let d = self.next;
+            self.next = (self.next + 1) % self.devices;
+            if view.live[d] {
+                return d;
+            }
+        }
+        view.fastest_live
     }
 }
 
-/// Argmin over devices of (current backlog + this request's own envelope
-/// there) — smallest *resulting* backlog, so device speed matters.
+/// Argmin over live devices of (current backlog + this request's own
+/// envelope there) — smallest *resulting* backlog, so device speed
+/// matters.
 struct LeastOutstandingWork;
 
 impl RouterPolicy for LeastOutstandingWork {
@@ -97,9 +130,12 @@ impl RouterPolicy for LeastOutstandingWork {
 
     fn route(&mut self, source: usize, _criticality: Criticality,
              view: &FleetView<'_>) -> usize {
-        let mut best = 0usize;
+        let mut best = view.fastest_live;
         let mut best_us = f64::INFINITY;
         for (d, out) in view.outstanding_us.iter().enumerate() {
+            if !view.live[d] {
+                continue;
+            }
             let resulting = out + view.env_solo_us[d][source];
             // Strict `<`: ties stay on the lowest index (determinism).
             if resulting < best_us {
@@ -111,10 +147,9 @@ impl RouterPolicy for LeastOutstandingWork {
     }
 }
 
-/// Critical requests pinned to the fastest device; best-effort requests
-/// round-robin over the remaining devices.
+/// Critical requests pinned to the fastest live device; best-effort
+/// requests round-robin over the remaining live devices.
 struct CriticalityAffinity {
-    devices: usize,
     next_normal: usize,
 }
 
@@ -125,18 +160,31 @@ impl RouterPolicy for CriticalityAffinity {
 
     fn route(&mut self, _source: usize, criticality: Criticality,
              view: &FleetView<'_>) -> usize {
-        if criticality == Criticality::Critical || self.devices == 1 {
-            return view.fastest;
+        if criticality == Criticality::Critical {
+            return view.fastest_live;
         }
-        // Rotate over the device indexes with `fastest` skipped.
-        let others = self.devices - 1;
+        // Rotate over the live devices with `fastest_live` skipped.
+        // The rotor counts placements (not indices), so with all
+        // devices live `k` walks the same 0..others cycle as the
+        // pre-chaos router and zero-event runs stay bitwise identical.
+        let others = view
+            .live
+            .iter()
+            .enumerate()
+            .filter(|&(d, &l)| l && d != view.fastest_live)
+            .count();
+        if others == 0 {
+            return view.fastest_live;
+        }
         let k = self.next_normal % others;
-        self.next_normal = (self.next_normal + 1) % others;
-        if k >= view.fastest {
-            k + 1
-        } else {
-            k
-        }
+        self.next_normal = self.next_normal.wrapping_add(1);
+        view.live
+            .iter()
+            .enumerate()
+            .filter(|&(d, &l)| l && d != view.fastest_live)
+            .nth(k)
+            .map(|(d, _)| d)
+            .unwrap_or(view.fastest_live)
     }
 }
 
@@ -153,7 +201,7 @@ pub fn router_for(name: &str, devices: usize)
             Some(Box::new(LeastOutstandingWork))
         }
         "criticality-affinity" | "criticality_affinity" | "affinity" => {
-            Some(Box::new(CriticalityAffinity { devices, next_normal: 0 }))
+            Some(Box::new(CriticalityAffinity { next_normal: 0 }))
         }
         _ => None,
     }
@@ -164,8 +212,9 @@ mod tests {
     use super::*;
 
     fn view<'a>(outstanding: &'a [f64], env: &'a [Vec<f64>],
-                fastest: usize) -> FleetView<'a> {
-        FleetView { outstanding_us: outstanding, env_solo_us: env, fastest }
+                live: &'a [bool], fastest_live: usize) -> FleetView<'a> {
+        FleetView { outstanding_us: outstanding, env_solo_us: env,
+                    live, fastest_live }
     }
 
     #[test]
@@ -184,7 +233,8 @@ mod tests {
     fn round_robin_cycles_over_all_devices() {
         let env = vec![vec![1.0]; 3];
         let out = [0.0; 3];
-        let v = view(&out, &env, 0);
+        let live = [true; 3];
+        let v = view(&out, &env, &live, 0);
         let mut r = router_for("round-robin", 3).unwrap();
         let picks: Vec<usize> = (0..7)
             .map(|_| r.route(0, Criticality::Normal, &v))
@@ -193,26 +243,47 @@ mod tests {
     }
 
     #[test]
+    fn round_robin_skips_dead_devices() {
+        let env = vec![vec![1.0]; 3];
+        let out = [0.0; 3];
+        let live = [true, false, true];
+        let v = view(&out, &env, &live, 0);
+        let mut r = router_for("round-robin", 3).unwrap();
+        let picks: Vec<usize> = (0..4)
+            .map(|_| r.route(0, Criticality::Normal, &v))
+            .collect();
+        assert_eq!(picks, vec![0, 2, 0, 2], "dead device 1 was routed to");
+    }
+
+    #[test]
     fn least_outstanding_work_prices_in_device_speed() {
         // Device 0 is idle but slow (envelope 100us); device 1 carries
         // 30us of backlog but is fast (envelope 10us): 0+100 > 30+10.
         let env = vec![vec![100.0], vec![10.0]];
         let out = [0.0, 30.0];
-        let v = view(&out, &env, 1);
+        let live = [true, true];
+        let v = view(&out, &env, &live, 1);
         let mut r = router_for("least-outstanding-work", 2).unwrap();
         assert_eq!(r.route(0, Criticality::Normal, &v), 1);
         // Equal resulting backlogs tie toward the lowest index.
         let env = vec![vec![10.0], vec![10.0]];
         let out = [5.0, 5.0];
-        let v = view(&out, &env, 0);
+        let v = view(&out, &env, &live, 0);
         assert_eq!(r.route(0, Criticality::Normal, &v), 0);
+        // A dead device never wins, however empty its backlog looks.
+        let env = vec![vec![10.0], vec![10.0]];
+        let out = [0.0, 500.0];
+        let dead0 = [false, true];
+        let v = view(&out, &env, &dead0, 1);
+        assert_eq!(r.route(0, Criticality::Normal, &v), 1);
     }
 
     #[test]
     fn criticality_affinity_pins_critical_and_rotates_normals() {
         let env = vec![vec![1.0]; 3];
         let out = [0.0; 3];
-        let v = view(&out, &env, 1); // device 1 is fastest
+        let live = [true; 3];
+        let v = view(&out, &env, &live, 1); // device 1 is fastest
         let mut r = router_for("criticality-affinity", 3).unwrap();
         for _ in 0..5 {
             assert_eq!(r.route(0, Criticality::Critical, &v), 1);
@@ -224,9 +295,48 @@ mod tests {
         // 1-device fleet: everything lands on the only device.
         let env1 = vec![vec![1.0]];
         let out1 = [0.0];
-        let v1 = view(&out1, &env1, 0);
+        let live1 = [true];
+        let v1 = view(&out1, &env1, &live1, 0);
         let mut r1 = router_for("criticality-affinity", 1).unwrap();
         assert_eq!(r1.route(0, Criticality::Normal, &v1), 0);
         assert_eq!(r1.route(0, Criticality::Critical, &v1), 0);
+    }
+
+    #[test]
+    fn criticality_affinity_follows_the_fastest_survivor() {
+        // The fastest device (1) dies: the fleet loop recomputes
+        // fastest_live to the fastest survivor (2) and critical work
+        // must follow the new pin; normals rotate over what's left.
+        let env = vec![vec![1.0]; 3];
+        let out = [0.0; 3];
+        let live = [true, false, true];
+        let v = view(&out, &env, &live, 2);
+        let mut r = router_for("criticality-affinity", 3).unwrap();
+        assert_eq!(r.route(0, Criticality::Critical, &v), 2);
+        assert_eq!(r.route(0, Criticality::Normal, &v), 0);
+        assert_eq!(r.route(0, Criticality::Normal, &v), 0);
+        // Heal: the pin snaps back to device 1.
+        let live = [true, true, true];
+        let v = view(&out, &env, &live, 1);
+        assert_eq!(r.route(0, Criticality::Critical, &v), 1);
+        // Only the pinned device left: normals fall through to it.
+        let live = [false, true, false];
+        let v = view(&out, &env, &live, 1);
+        assert_eq!(r.route(0, Criticality::Normal, &v), 1);
+    }
+
+    #[test]
+    fn rebalance_defaults_to_the_live_routing_path() {
+        let env = vec![vec![1.0]; 2];
+        let out = [0.0; 2];
+        let live = [false, true];
+        let v = view(&out, &env, &live, 1);
+        for name in ROUTERS {
+            let mut r = router_for(name, 2).unwrap();
+            assert_eq!(r.rebalance(0, Criticality::Normal, &v), 1,
+                       "{name}: rebalance targeted a dead device");
+            assert_eq!(r.rebalance(0, Criticality::Critical, &v), 1,
+                       "{name}: critical rebalance missed the survivor");
+        }
     }
 }

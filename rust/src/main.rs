@@ -13,7 +13,11 @@
 //!              serving loop, writes BENCH_serve.json (ISSUE 4)
 //!   fleet-sim  [--devices rtx2060,xavier,tx2] [--router all|names]
 //!              [--policy none] [--seed N] [--threads N] — heterogeneous
-//!              multi-GPU fleet serving, writes BENCH_fleet.json (ISSUE 5)
+//!              multi-GPU fleet serving, writes BENCH_fleet.json (ISSUE 5);
+//!              [--chaos DSL|--storm all|names] [--standby presets] add
+//!              deterministic failure injection and the reactive
+//!              autoscaler; --storm runs the resilience grid and writes
+//!              BENCH_resilience.json (ISSUE 6)
 //!   infer      --model cifarnet [--artifacts artifacts]
 //!   artifacts  [--artifacts artifacts]
 
@@ -54,7 +58,13 @@ USAGE:
                    [--policy none] [--duration SECONDS] [--seed N]
                    [--threads N] [--bucket-cap 16] [--refill-hz 40]
                    [--max-queue-ms 100] [--drain-ways 3] [--backoff-ms 2]
-                   [--out BENCH_fleet.json]
+                   [--chaos \"down:d1@800ms+2s,throttle:d0@1s*0.6+500ms\"
+                    | --storm all|none,straggler-storm,rolling-outage,
+                      flash-crowd-outage]
+                   [--standby preset1,preset2] [--standby-scheduler miriam]
+                   [--scale-high-ms 20] [--scale-low-ms 4] [--scale-eval-ms 5]
+                   [--scale-cooldown-ms 20]
+                   [--out BENCH_fleet.json|BENCH_resilience.json]
   miriam infer --model NAME [--artifacts DIR]
   miriam artifacts [--artifacts DIR]
 ";
@@ -69,9 +79,10 @@ fn build_workload(name: &str, duration_us: f64) -> Result<mdtb::Workload> {
 }
 
 /// Resolve `--scenario all|n1,n2,...` for the grid subcommands (`sweep`,
-/// `serve-sim`, `fleet-sim`). Named cells resolve against the family
-/// *and* the MDTB workloads, so any BENCH_*.json cell is reproducible by
-/// name here.
+/// `serve-sim`, `fleet-sim`). Named cells resolve against the family,
+/// the standalone flash-crowd stress scenario, *and* the MDTB workloads,
+/// so any BENCH_*.json cell is reproducible by name here (`all` stays
+/// the family alone so committed baselines are unaffected).
 fn resolve_scenarios(args: &Args, dur_us: f64)
                      -> Result<Vec<scenario::ScenarioSpec>> {
     let which = args.get("scenario", "all");
@@ -80,6 +91,7 @@ fn resolve_scenarios(args: &Args, dur_us: f64)
     }
     let pool: Vec<_> = scenario::family(dur_us)
         .into_iter()
+        .chain(std::iter::once(scenario::flash_crowd(dur_us)))
         .chain(scenario::mdtb_scenarios(dur_us))
         .collect();
     args.get_list("scenario", "")
@@ -393,6 +405,78 @@ fn serve_sim(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse the optional reactive-autoscaler tunables: `--standby` arms the
+/// scaler with a pool of `GpuSpec` preset names; the watermark/cadence
+/// flags mirror the [`fleet::AutoscaleConfig`] defaults (ms on the CLI,
+/// simulated µs inside — same scaling as the admission flags).
+fn autoscale_from_args(args: &Args) -> Result<Option<fleet::AutoscaleConfig>> {
+    if !args.has("standby") {
+        return Ok(None);
+    }
+    Ok(Some(fleet::AutoscaleConfig {
+        pool: args.get_list("standby", ""),
+        scheduler: args.get("standby-scheduler", "miriam").to_string(),
+        high_watermark_us: args.get_f64("scale-high-ms", 20.0)
+            .map_err(|e| anyhow!(e))?
+            * 1e3,
+        low_watermark_us: args.get_f64("scale-low-ms", 4.0)
+            .map_err(|e| anyhow!(e))?
+            * 1e3,
+        eval_period_us: args.get_f64("scale-eval-ms", 5.0)
+            .map_err(|e| anyhow!(e))?
+            * 1e3,
+        cooldown_us: args.get_f64("scale-cooldown-ms", 20.0)
+            .map_err(|e| anyhow!(e))?
+            * 1e3,
+    }))
+}
+
+/// The `fleet-sim --storm` path (ISSUE 6): the scenarios × storms ×
+/// routers resilience grid, stdout table plus `BENCH_resilience.json`.
+/// Every storm column is the same named weather rescaled to its
+/// scenario's window; `recovery` is the slowest outage-to-heal gap in a
+/// cell (`-` when the storm killed no device).
+#[allow(clippy::too_many_arguments)]
+fn resilience_sim(
+    args: &Args,
+    spec: &fleet::FleetSpec,
+    scenarios: &[scenario::ScenarioSpec],
+    storms: &[String],
+    routers: &[String],
+    opts: &fleet::FleetOpts,
+    threads: usize,
+    duration: f64,
+) -> Result<()> {
+    let out = args.get("out", "BENCH_resilience.json");
+    let standby = opts.autoscale.as_ref().map_or(0, |a| a.pool.len());
+    println!("# fleet-sim resilience: {} scenario(s) x {} storm(s) x {} \
+              router(s) on {} device(s) (+{standby} standby), {duration}s \
+              of arrivals each, policy {}, {threads} thread(s)",
+             scenarios.len(), storms.len(), routers.len(),
+             spec.devices.len(), opts.policy.name());
+    let grid = fleet::run_resilience_grid(spec, scenarios, storms, routers,
+                                          opts, threads)
+        .map_err(|e| anyhow!(e))?;
+    println!("{:<16} {:<20} {:<22} {:>8} {:>8} {:>6} {:>10} {:>10}",
+             "scenario", "storm", "router", "served", "requeues", "lost",
+             "crit p99", "recovery");
+    println!("{:<16} {:<20} {:<22} {:>8} {:>8} {:>6} {:>10} {:>10}",
+             "", "", "", "", "", "", "(ms)", "(ms)");
+    for c in &grid.cells {
+        let recovery = if c.recovery_us.is_nan() {
+            "-".to_string()
+        } else {
+            format!("{:.2}", c.recovery_us / 1e3)
+        };
+        println!("{:<16} {:<20} {:<22} {:>8} {:>8} {:>6} {:>10.2} {:>10}",
+                 c.scenario, c.chaos, c.router, c.served(), c.requeues(),
+                 c.lost(), c.crit_p99_us() / 1e3, recovery);
+    }
+    std::fs::write(out, grid.to_json())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
 /// Heterogeneous multi-GPU fleet serving (ISSUE 5 tentpole): scenario
 /// arrivals pass through one fleet-wide admission policy, each admitted
 /// request is placed on a device by the chosen router, and per-device /
@@ -416,6 +500,14 @@ fn fleet_sim(args: &Args) -> Result<()> {
     } else {
         args.get_list("router", "")
     };
+    // Fail fast on router typos so a long grid never dies mid-run with a
+    // per-cell error (the grid runners re-check; this is the CLI gate).
+    for r in &routers {
+        if fleet::router_for(r, spec.devices.len()).is_none() {
+            return Err(anyhow!("unknown router {r} (available: {})",
+                               fleet::ROUTERS.join(", ")));
+        }
+    }
     let policy_name = args.get("policy", "none");
     let policy = AdmissionPolicy::parse(policy_name)
         .ok_or_else(|| anyhow!("unknown policy {policy_name}"))?;
@@ -425,12 +517,39 @@ fn fleet_sim(args: &Args) -> Result<()> {
     let threads = args
         .get_usize("threads", default_threads)
         .map_err(|e| anyhow!(e))?;
+    let autoscale = autoscale_from_args(args)?;
+    if args.has("chaos") && args.has("storm") {
+        return Err(anyhow!(
+            "--chaos and --storm are mutually exclusive: --chaos scripts \
+             one event list, --storm sweeps the named presets"));
+    }
+    let chaos = match args.get_opt("chaos") {
+        Some(dsl) => {
+            let c = fleet::ChaosSpec::parse(dsl).map_err(|e| anyhow!(e))?;
+            let total = spec.devices.len()
+                + autoscale.as_ref().map_or(0, |a| a.pool.len());
+            c.validate(total).map_err(|e| anyhow!(e))?;
+            c
+        }
+        None => fleet::ChaosSpec::none(),
+    };
     let opts = fleet::FleetOpts {
         router: String::new(), // per-cell router comes from the grid
         policy,
         admission: admission_from_args(args)?,
         seed: seed_from_args(args)?,
+        chaos,
+        autoscale,
     };
+    if let Some(which) = args.get_opt("storm") {
+        let storms: Vec<String> = if which.eq_ignore_ascii_case("all") {
+            fleet::STORMS.iter().map(|s| s.to_string()).collect()
+        } else {
+            args.get_list("storm", "")
+        };
+        return resilience_sim(args, &spec, &scenarios, &storms, &routers,
+                              &opts, threads, duration);
+    }
     let out = args.get("out", "BENCH_fleet.json");
 
     println!("# fleet-sim: {} scenario(s) x {} router(s) on {} device(s) \
@@ -443,6 +562,10 @@ fn fleet_sim(args: &Args) -> Result<()> {
                  .collect::<Vec<_>>()
                  .join(","),
              policy.name());
+    if !opts.chaos.is_empty() {
+        println!("# chaos: {} ({} event(s))", opts.chaos.name,
+                 opts.chaos.events.len());
+    }
     let grid = fleet::run_fleet_grid(&spec, &scenarios, &routers, &opts,
                                      threads)
         .map_err(|e| anyhow!(e))?;

@@ -171,12 +171,34 @@ impl DeviceCore {
         self.max_normal_queue
     }
 
+    /// Requests currently in flight on this device.
+    pub(crate) fn open_count(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Take every in-flight request off the device as
+    /// `(id, arrival_us, source)` rows, **sorted by id** so the caller's
+    /// re-routing order never depends on `HashMap` iteration order —
+    /// the chaos layer's determinism hinges on this (ISSUE 6). The
+    /// caller retires or rebuilds the core afterwards; any kernels the
+    /// dead device had queued die with its engine.
+    pub(crate) fn drain_open(&mut self) -> Vec<(u64, f64, usize)> {
+        let mut rows: Vec<(u64, f64, usize)> = self
+            .open
+            .drain()
+            .map(|(id, (arr, src))| (id, arr, src))
+            .collect();
+        rows.sort_unstable_by_key(|&(id, _, _)| id);
+        rows
+    }
+
     /// Process the device's next event: step the engine once and drain
     /// the resulting completions through the scheduler. `served` fires
     /// once per finished request — in completion order, *inside* the
     /// drain, exactly where the pre-fleet loop did its accounting — as
-    /// `(source, arrival_us, now_us)`.
-    pub(crate) fn step(&mut self, mut served: impl FnMut(usize, f64, f64)) {
+    /// `(id, source, arrival_us, now_us)`.
+    pub(crate) fn step(&mut self,
+                       mut served: impl FnMut(u64, usize, f64, f64)) {
         self.eng.step_into(&mut self.completions);
         for c in &self.completions {
             self.finished.clear();
@@ -186,7 +208,7 @@ impl DeviceCore {
                     .open
                     .remove(&fid)
                     .expect("scheduler finished unknown request");
-                served(src, arr, self.eng.now_us());
+                served(fid, src, arr, self.eng.now_us());
             }
         }
     }
@@ -244,6 +266,13 @@ pub struct TenantOutcome {
     pub served: u64,
     /// Served requests that exceeded the tenant's deadline.
     pub deadline_misses: u64,
+    /// Times one of this tenant's admitted requests was re-routed off a
+    /// dead or draining device (chaos layer; 0 without chaos).
+    pub requeues: u64,
+    /// Admitted requests lost to a terminal outage — the whole fleet
+    /// was dark when the request needed a device and never recovered
+    /// (0 whenever ≥ 1 device stays live).
+    pub lost: u64,
     /// End-to-end latency (us) of each served request.
     pub latencies_us: Vec<f64>,
 }
@@ -451,6 +480,21 @@ pub(crate) fn tenant_json(t: &TenantOutcome) -> Json {
     Json::Obj(tm)
 }
 
+/// The resilience variant of [`tenant_json`]: the same row plus the
+/// chaos-only counters. Kept separate so `BENCH_serve.json` and
+/// zero-chaos `BENCH_fleet.json` documents stay byte-identical to their
+/// pre-chaos forms (ISSUE 6 determinism contract).
+pub(crate) fn tenant_json_resilience(t: &TenantOutcome) -> Json {
+    match tenant_json(t) {
+        Json::Obj(mut tm) => {
+            tm.insert("requeues".into(), Json::Num(t.requeues as f64));
+            tm.insert("lost".into(), Json::Num(t.lost as f64));
+            Json::Obj(tm)
+        }
+        other => other,
+    }
+}
+
 /// A scenarios × policies serving comparison (the `BENCH_serve.json`
 /// document).
 #[derive(Debug, Clone)]
@@ -560,7 +604,7 @@ pub fn run_serve(gpu: &GpuSpec, sc: &ScenarioSpec, opts: &ServeOpts)
                 core.sample_queue_depth();
             }
             (_, Some(_)) => {
-                core.step(|src, arr, now| {
+                core.step(|_id, src, arr, now| {
                     ctrl.on_served(src);
                     record_served(&wl, src, arr, now, &mut tenants,
                                   &mut arrivals);
@@ -607,6 +651,8 @@ pub(crate) fn tenant_outcomes(sc: &ScenarioSpec, wl: &Workload)
             shed: 0,
             served: 0,
             deadline_misses: 0,
+            requeues: 0,
+            lost: 0,
             latencies_us: Vec::new(),
         })
         .collect()

@@ -341,10 +341,45 @@ pub fn family(duration_us: f64) -> Vec<ScenarioSpec> {
     ]
 }
 
-/// Look up a family scenario by name (case-insensitive).
+/// The resilience stress scenario (ISSUE 6): a flash crowd — a hard
+/// Mmpp best-effort burst plus closed-loop filler — under a steady
+/// deadline-bearing critical tenant. Built to be run with the
+/// `flash-crowd-outage` storm preset, which drops a device on top of
+/// the crowd's peak. Kept **out of [`family`]** so the default sweep /
+/// serve / fleet grids (and their committed baselines) are untouched;
+/// reachable by name (`--scenario flash-crowd`) and used by
+/// `benches/resilience.rs`.
+pub fn flash_crowd(duration_us: f64) -> ScenarioSpec {
+    ScenarioSpec {
+        name: "flash-crowd".into(),
+        sources: vec![
+            crit(
+                "gru",
+                Arrival::Uniform { rate_hz: 50.0 },
+                Some(25_000.0),
+            ),
+            norm(
+                "cifarnet",
+                Arrival::Mmpp {
+                    on_hz: 400.0,
+                    off_hz: 5.0,
+                    mean_on_us: 4_000.0,
+                    mean_off_us: 12_000.0,
+                },
+            ),
+            norm("squeezenet", Arrival::ClosedLoop { clients: 2 }),
+        ],
+        duration_us,
+        seed: 0x2B9,
+    }
+}
+
+/// Look up a named scenario by name (case-insensitive): the [`family`]
+/// members plus the standalone [`flash_crowd`] stress scenario.
 pub fn by_name(name: &str, duration_us: f64) -> Option<ScenarioSpec> {
     family(duration_us)
         .into_iter()
+        .chain(std::iter::once(flash_crowd(duration_us)))
         .find(|s| s.name.eq_ignore_ascii_case(name))
 }
 

@@ -9,7 +9,13 @@
 //!   documents at any `--threads` value (reports carry no host timing
 //!   and grid cells land in deterministic slots);
 //! * heterogeneous fleets stay deterministic per (seed, devices, router)
-//!   while different seeds produce different documents.
+//!   while different seeds produce different documents;
+//! * (ISSUE 6) a **zero-event `ChaosSpec`** reproduces the chaos-free
+//!   fleet document **bitwise** — arming the chaos layer without events
+//!   must be invisible, pinning backward compatibility of the refactor;
+//! * (ISSUE 6) the resilience grid (`BENCH_resilience.json`) is
+//!   byte-identical across `--threads` values and repeat runs, with the
+//!   autoscaler armed.
 
 use miriam::coordinator::admission::AdmissionPolicy;
 use miriam::fleet::{run_fleet, run_fleet_grid, FleetOpts, FleetSpec, ROUTERS};
@@ -141,6 +147,70 @@ fn heterogeneous_repeat_runs_match_and_seeds_differ() {
                    c.to_json_value().to_canonical_string(),
                    "{r}: a different seed produced an identical document");
     }
+}
+
+#[test]
+fn zero_event_chaos_reproduces_the_chaos_free_fleet_bitwise() {
+    use miriam::fleet::ChaosSpec;
+
+    let sc = scenario::by_name("five-storm", DUR_US).unwrap();
+    let fleet = hetero();
+    for r in ROUTERS {
+        let plain = run_fleet(
+            &fleet, &sc,
+            &FleetOpts { router: (*r).into(), ..FleetOpts::default() },
+        )
+        .expect("plain run");
+        // A scripted-but-empty spec (as `--chaos ""` would never parse,
+        // this is the library-level identity) must not perturb routing,
+        // timing, or the document — not even by one byte.
+        let zero = run_fleet(
+            &fleet, &sc,
+            &FleetOpts {
+                router: (*r).into(),
+                chaos: ChaosSpec { name: "scripted-empty".into(),
+                                   events: Vec::new() },
+                ..FleetOpts::default()
+            },
+        )
+        .expect("zero-event run");
+        assert_eq!(plain.to_json_value().to_canonical_string(),
+                   zero.to_json_value().to_canonical_string(),
+                   "{r}: an empty chaos script changed the fleet document");
+    }
+}
+
+#[test]
+fn resilience_grid_is_byte_identical_across_threads_and_repeats() {
+    use miriam::fleet::{run_resilience_grid, AutoscaleConfig, STORMS};
+
+    let scenarios = vec![
+        scenario::flash_crowd(DUR_US),
+        scenario::by_name("duo-burst", DUR_US).unwrap(),
+    ];
+    let fleet = hetero();
+    let storms: Vec<String> = STORMS.iter().map(|s| s.to_string()).collect();
+    let base = FleetOpts {
+        autoscale: Some(AutoscaleConfig {
+            pool: vec!["tx2".into()],
+            ..AutoscaleConfig::default()
+        }),
+        ..FleetOpts::default()
+    };
+    let j1 = run_resilience_grid(&fleet, &scenarios, &storms, &routers(),
+                                 &base, 1)
+        .expect("threads=1")
+        .to_json();
+    let j4 = run_resilience_grid(&fleet, &scenarios, &storms, &routers(),
+                                 &base, 4)
+        .expect("threads=4")
+        .to_json();
+    assert_eq!(j1, j4, "BENCH_resilience.json differs across --threads");
+    let j1b = run_resilience_grid(&fleet, &scenarios, &storms, &routers(),
+                                  &base, 1)
+        .expect("repeat")
+        .to_json();
+    assert_eq!(j1, j1b, "BENCH_resilience.json differs across repeat runs");
 }
 
 #[test]

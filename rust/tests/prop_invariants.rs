@@ -606,6 +606,132 @@ fn prop_fleet_critical_never_shed_across_policies_and_routers() {
     }
 }
 
+/// Property (ISSUE 6): **conservation survives chaos** — under every
+/// admission policy × router × storm preset on generated scenarios,
+/// `offered == admitted + shed` and `admitted == served + lost`. Every
+/// storm preset heals all of its outages, so nothing may be lost, every
+/// admitted request is placed exactly once (`routed == admitted`),
+/// per-device served counts sum to the fleet total (a request requeued
+/// off a dead device is never served twice), critical is never shed,
+/// and the requeue ledgers agree (device `requeued_in` sums to tenant
+/// `requeues`).
+#[test]
+fn prop_chaos_conservation_and_critical_protection() {
+    use miriam::fleet::chaos::storm;
+    use miriam::fleet::{run_fleet, FleetOpts, FleetSpec, ROUTERS, STORMS};
+    use miriam::workloads::scenario::ScenarioGen;
+
+    let fleet = FleetSpec::parse(
+        &["rtx2060".into(), "xavier".into(), "tx2".into()],
+        &["miriam".into()],
+    )
+    .unwrap();
+    let admission = AdmissionConfig {
+        bucket_capacity: 2.0,
+        refill_hz: 25.0,
+        max_queue_us: 3_000.0,
+        ..AdmissionConfig::default()
+    };
+    let mut gen = ScenarioGen::new(0xC405, 8_000.0);
+    let mut any_requeued = false;
+    for case in 0..2 {
+        let sc = gen.next_scenario();
+        for policy in POLICIES {
+            for router in ROUTERS {
+                for storm_name in STORMS {
+                    let opts = FleetOpts {
+                        router: router.into(),
+                        policy,
+                        admission: admission.clone(),
+                        chaos: storm(storm_name, fleet.devices.len(),
+                                     sc.duration_us)
+                            .expect("preset exists"),
+                        ..FleetOpts::default()
+                    };
+                    let r =
+                        run_fleet(&fleet, &sc, &opts).unwrap_or_else(|e| {
+                            panic!("case {case} {policy:?}/{router}/\
+                                    {storm_name}: {e}")
+                        });
+                    let ctx = format!(
+                        "case {case} ({}) {policy:?}/{router}/{storm_name}",
+                        sc.name);
+                    assert_eq!(r.offered(), r.admitted() + r.shed(),
+                               "{ctx}");
+                    assert_eq!(r.admitted(), r.served() + r.lost(), "{ctx}");
+                    assert_eq!(r.lost(), 0,
+                               "{ctx}: every preset heals — nothing may \
+                                be lost");
+                    assert_eq!(r.routed(), r.admitted(),
+                               "{ctx}: admitted requests not placed \
+                                exactly once");
+                    assert_eq!(r.shed_critical(), 0,
+                               "{ctx}: critical shed under chaos");
+                    let dev_requeued: u64 =
+                        r.devices.iter().map(|d| d.requeued_in).sum();
+                    assert_eq!(dev_requeued, r.requeues(),
+                               "{ctx}: requeue ledgers disagree");
+                    let dev_served: u64 =
+                        r.devices.iter().map(|d| d.served()).sum();
+                    assert_eq!(dev_served, r.served(),
+                               "{ctx}: a request was served twice or \
+                                dropped");
+                    for t in &r.tenants {
+                        assert!(t.served + t.lost <= t.admitted,
+                                "{ctx} {}: tenant over-served", t.label);
+                    }
+                    any_requeued |= r.requeues() > 0;
+                }
+            }
+        }
+    }
+    // The suite must not pass vacuously: the outage presets have to have
+    // caught some request in flight (closed-loop tenants keep every
+    // generated scenario busy, and rolling-outage kills each device in
+    // turn, so this holds deterministically).
+    assert!(any_requeued,
+            "no storm ever forced a requeue — the chaos axis is vacuous");
+}
+
+/// Property (ISSUE 6 satellite): killing the **fastest** device (the
+/// criticality-affinity pin target, index 1 here — fleets where the
+/// fastest is not device 0 are the audit case) with a scripted heal
+/// loses nothing: the router re-pins critical work to the fastest
+/// survivor and restores the pin on heal. The script is written in the
+/// CLI `--chaos` grammar so the parser sits in the loop too.
+#[test]
+fn prop_affinity_survives_the_fastest_device_dying() {
+    use miriam::fleet::{run_fleet, ChaosSpec, FleetOpts, FleetSpec};
+    use miriam::workloads::scenario;
+
+    let fleet = FleetSpec::parse(
+        &["tx2".into(), "rtx2060".into()],
+        &["miriam".into()],
+    )
+    .unwrap();
+    assert_eq!(fleet.fastest(), 1, "rtx2060 must out-rate tx2");
+    let sc = scenario::by_name("duo-burst", 8_000.0).unwrap();
+    let chaos = ChaosSpec::parse("down:d1@2ms+3ms").expect("grammar");
+    assert_eq!(chaos.events.len(), 1);
+    let opts = FleetOpts {
+        router: "criticality-affinity".into(),
+        chaos,
+        ..FleetOpts::default()
+    };
+    let r = run_fleet(&fleet, &sc, &opts).expect("run");
+    // The placement assertion inside the fleet loop already guarantees
+    // no request was ever placed on the dead device; here we pin the
+    // outcome ledger.
+    assert!(r.resilience, "chaos run must carry the resilience columns");
+    assert_eq!(r.chaos_events, 1);
+    assert!(r.devices[1].downtime_us > 0.0, "the kill never landed");
+    assert_eq!(r.lost(), 0, "the pin target healed — nothing may be lost");
+    assert_eq!(r.served(), r.admitted());
+    assert_eq!(r.offered(), r.admitted() + r.shed());
+    assert!(r.recovery_us > 0.0 || r.requeues() == 0,
+            "an outage with open requests must record a recovery time");
+}
+
 /// Property: the engine conserves work — total simulated busy time on a
 /// single-kernel workload equals work / allocated rate within tolerance,
 /// and every submitted launch completes exactly once.

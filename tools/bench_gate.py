@@ -1,5 +1,6 @@
 #!/usr/bin/env python3
-"""Bench regression gate (ISSUE 3 satellite; fleet mode: ISSUE 5).
+"""Bench regression gate (ISSUE 3 satellite; fleet: ISSUE 5; resilience:
+ISSUE 6).
 
 Compares a freshly produced bench JSON against a committed baseline.
 The mode is dispatched on the measured document's ``"bench"`` key:
@@ -15,6 +16,13 @@ The mode is dispatched on the measured document's ``"bench"`` key:
   (byte-deterministic per seed), so the small tolerances only absorb
   libm last-ulp differences across hosts; real drift is a semantic
   change and should be an intentional baseline refresh.
+* ``"bench": "resilience"`` (``BENCH_resilience.json``): same contract
+  as fleet mode over the ``comparisons`` rows, keyed
+  ``(scenario, storm, router)`` — coverage regression, 2% served and
+  requeue drift, 5% critical-p99 drift — plus one unconditional
+  invariant: **no cell may report a lost request** (every storm preset
+  heals, so a nonzero ``lost`` is a chaos-layer bug regardless of what
+  the baseline says).
 
 Usage:
     bench_gate.py MEASURED_JSON BASELINE_JSON [--tolerance 0.20]
@@ -99,6 +107,79 @@ def fleet_gate(measured, baseline_path, tolerance=None):
     return 0
 
 
+def resilience_gate(measured, baseline_path, tolerance=None):
+    """Deterministic-report gate for BENCH_resilience.json documents.
+
+    Works over the ``comparisons`` rows (one per grid cell) keyed by
+    ``(scenario, storm, router)``. Like the fleet gate, but requeue
+    counts are held to the served tolerance too, and a nonzero ``lost``
+    fails unconditionally.
+    """
+    served_tol = tolerance if tolerance is not None else 0.02
+    p99_tol = tolerance if tolerance is not None else 0.05
+    rows = measured.get("comparisons", [])
+    lost = sum(r.get("lost", 0) for r in rows)
+    print(f"measured: {len(rows)} resilience cell(s), "
+          f"{sum(r.get('served', 0) for r in rows)} served total, "
+          f"{sum(r.get('requeues', 0) for r in rows)} requeues, "
+          f"{lost} lost")
+    failures = []
+    if lost:
+        failures.append(f"{lost} request(s) lost — every storm preset "
+                        f"heals, so lost must be 0 in every cell")
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        baseline = None
+        if not failures:
+            print(f"gate: no baseline at {baseline_path} — bootstrap "
+                  f"pass. Promote a CI-run BENCH_resilience.json artifact "
+                  f"there to arm the gate (same --smoke conditions).")
+            return 0
+    if baseline is not None and (baseline.get("bootstrap")
+                                 or not baseline.get("comparisons")):
+        baseline = None
+        if not failures:
+            print("gate: resilience baseline is a bootstrap placeholder "
+                  "— pass. Promote a CI-run BENCH_resilience.json "
+                  "artifact to arm the gate.")
+            return 0
+    if baseline is not None:
+        key = lambda r: (r.get("scenario"), r.get("storm"), r.get("router"))
+        base_rows = {key(r): r for r in baseline.get("comparisons", [])}
+        measured_keys = {key(r) for r in rows}
+        for k in sorted(k for k in base_rows if k not in measured_keys):
+            failures.append(f"{k}: in baseline but missing from measured "
+                            f"report (coverage regression)")
+        for r in rows:
+            b = base_rows.get(key(r))
+            if b is None:
+                continue  # new cell: no baseline yet, nothing to regress
+            for field, tol in (("served", served_tol),
+                               ("requeues", served_tol)):
+                bv, mv = b.get(field, 0), r.get(field, 0)
+                if bv and abs(mv - bv) > tol * bv:
+                    failures.append(f"{key(r)}: {field} {mv} vs "
+                                    f"baseline {bv}")
+            bp, mp = b.get("crit_p99_us"), r.get("crit_p99_us")
+            if (isinstance(bp, (int, float)) and isinstance(mp, (int, float))
+                    and bp > 0 and abs(mp - bp) > p99_tol * bp):
+                failures.append(f"{key(r)}: crit_p99_us {mp:.1f} vs "
+                                f"baseline {bp:.1f}")
+    if failures:
+        print("gate: FAIL — resilience report violated an invariant or "
+              "drifted from baseline (intentional change? refresh "
+              "benchmarks/BENCH_resilience.baseline.json from a healthy "
+              "CI artifact):")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print(f"gate: OK — {len(rows)} resilience cell(s) within tolerance "
+          f"of baseline, 0 lost")
+    return 0
+
+
 def main(argv):
     if len(argv) < 3:
         print(__doc__)
@@ -113,6 +194,9 @@ def main(argv):
     if measured.get("bench") == "fleet":
         return fleet_gate(measured, baseline_path,
                           tolerance if "--tolerance" in argv else None)
+    if measured.get("bench") == "resilience":
+        return resilience_gate(measured, baseline_path,
+                               tolerance if "--tolerance" in argv else None)
     m_inc = measured.get("events_per_sec_incremental")
     m_ref = measured.get("events_per_sec_reference")
     m_speedup = measured.get("speedup")
