@@ -1,0 +1,80 @@
+//! Scale-sim bench (ISSUE 7): the event core at 1k → 100k tenants.
+//!
+//! Each cell runs a tiered-tenant `ScaleSpec` population through the
+//! live coordinator on lazy arrival streams, a hierarchical timing
+//! wheel, and P² streaming quantile sketches. The table reports SLO
+//! outcomes plus the two numbers the tentpole exists for: host-side
+//! engine events/sec (O(1)-amortized dispatch, stdout only) and
+//! latency-accounting bytes per tenant (constant under the sketch).
+//!
+//! Writes `BENCH_scale.json` (canonical, byte-deterministic per
+//! tenant-count list — no host timing in the document; schema in
+//! EXPERIMENTS.md §Scale). CI smoke mode: append `-- --smoke` (or set
+//! `BENCH_SMOKE=1`).
+
+use std::time::Instant;
+
+use miriam::gpu::spec::GpuSpec;
+use miriam::server::scale::run_scale_grid;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").is_ok();
+    let duration_us = if smoke { 25_000.0 } else { 500_000.0 };
+    let counts: &[usize] =
+        if smoke { &[1000, 5000] } else { &[1000, 10_000, 100_000] };
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let gpu = GpuSpec::rtx2060();
+
+    println!("# scale: {} tenant counts, {}s of arrivals per cell, \
+              {threads} threads{}",
+             counts.len(), duration_us / 1e6,
+             if smoke { " (smoke)" } else { "" });
+
+    let t0 = Instant::now();
+    let grid = run_scale_grid(&gpu, counts, duration_us, "miriam", threads)
+        .expect("scale grid");
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("{:>8} {:>9} {:>9} {:>7} {:>8} {:>9} {:>11}",
+             "tenants", "offered", "served", "miss", "sketch", "B/tenant",
+             "worst p99");
+    println!("{:>8} {:>9} {:>9} {:>7} {:>8} {:>9} {:>11}",
+             "", "", "", "", "", "", "(ms)");
+    let mut events: u64 = 0;
+    let mut ok = true;
+    for c in &grid.cells {
+        events += c.events;
+        let p99 = if c.worst_tenant_p99_us.is_finite() {
+            format!("{:.2}", c.worst_tenant_p99_us / 1e3)
+        } else {
+            "-".to_string()
+        };
+        println!("{:>8} {:>9} {:>9} {:>7} {:>8} {:>9.0} {:>11}",
+                 c.tenants, c.offered, c.served, c.deadline_misses,
+                 c.sketch_tenants, c.bytes_per_tenant, p99);
+        // The constant-memory contract: per-tenant accounting never
+        // grows past a few hundred bytes, however many requests ran.
+        ok &= c.sketch_tenants == c.tenants;
+        ok &= c.bytes_per_tenant <= 512.0;
+        ok &= c.served > 0;
+    }
+    // Host-side throughput stays on stdout so the JSON document remains
+    // byte-deterministic.
+    println!("\n# {events} engine events in {wall:.2}s wall \
+              ({:.0} events/sec)",
+             events as f64 / wall.max(1e-9));
+
+    std::fs::write("BENCH_scale.json", grid.to_json())
+        .expect("write BENCH_scale.json");
+    println!("wrote BENCH_scale.json");
+
+    println!("every cell sketched and served under the constant-memory \
+              contract: {}",
+             if ok { "yes" } else { "NO" });
+    if !ok {
+        std::process::exit(1);
+    }
+}

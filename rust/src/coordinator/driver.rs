@@ -2,8 +2,6 @@
 //! feeds a [`Scheduler`], regenerates closed-loop arrivals, and assembles
 //! [`RunStats`].
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -12,43 +10,38 @@ use crate::coordinator::stats::RunStats;
 use crate::gpu::engine::{Completion, Engine};
 use crate::gpu::kernel::Criticality;
 use crate::gpu::spec::GpuSpec;
+use crate::runtime::timewheel::TimingWheel;
 use crate::workloads::mdtb::Workload;
 use crate::workloads::rng::Rng;
 
-/// Total-ordered f64 key for the arrival heap — shared with the online
-/// serving loop (`crate::server::online`), which runs the same
-/// merge-arrivals-with-engine-events discipline.
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub(crate) struct TimeKey(pub(crate) f64);
-impl Eq for TimeKey {}
-impl PartialOrd for TimeKey {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-impl Ord for TimeKey {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.0.partial_cmp(&other.0).unwrap_or(std::cmp::Ordering::Equal)
-    }
-}
-
-/// The pending-arrival heap: a (time, source index) min-heap.
-pub(crate) type ArrivalHeap = BinaryHeap<Reverse<(TimeKey, usize)>>;
+/// The pending-arrival queue: ascending `(time, source index)` order.
+///
+/// Since ISSUE 7 this is the hierarchical timing wheel
+/// ([`crate::runtime::timewheel`]) rather than a
+/// `BinaryHeap<Reverse<(TimeKey, usize)>>`: O(1)-amortized per event
+/// instead of O(log n), with the exact same pop order (the total-ordered
+/// `TimeKey` comparison — the old NaN-maps-to-`Equal` comparator lived
+/// here, at driver.rs:31 — moved to
+/// [`crate::runtime::timewheel::TimeKey`] and is differential-tested
+/// against a heap in `rust/tests/wheel_vs_heap.rs`).
+pub(crate) type ArrivalQueue = TimingWheel;
 
 /// Pre-generate every source's open-loop arrivals (closed-loop sources
-/// contribute their t=0 seeds) into a fresh [`ArrivalHeap`]. Shared by
+/// contribute their t=0 seeds) into a fresh [`ArrivalQueue`]. Shared by
 /// [`run_with`] and the online serving loop so the two paths draw the
 /// exact same arrival stream from a given `(workload, rng)` state.
 pub(crate) fn initial_arrivals(workload: &Workload, rng: &mut Rng)
-                               -> ArrivalHeap {
-    let mut arrivals = ArrivalHeap::new();
+                               -> ArrivalQueue {
+    let mut arrivals = ArrivalQueue::new();
     for (i, src) in workload.sources.iter().enumerate() {
         for t in src.arrival.schedule(workload.duration_us, rng) {
-            // A NaN arrival would corrupt the heap ordering silently —
-            // same contract as the engine's timer heap (ISSUE 3 satellite).
-            debug_assert!(t.is_finite(),
-                          "source {i} produced non-finite arrival {t}");
-            arrivals.push(Reverse((TimeKey(t), i)));
+            // A NaN arrival would corrupt the queue ordering silently in
+            // release builds, where debug_assert! compiles out — so this
+            // is a release-mode error (ISSUE 7 bugfix; the wheel's push
+            // re-checks, this one names the offending source).
+            assert!(t.is_finite(),
+                    "source {i} produced non-finite arrival {t}");
+            arrivals.push(t, i);
         }
     }
     arrivals
@@ -119,16 +112,14 @@ pub fn run_with(spec: GpuSpec, workload: &Workload,
     let wall = Instant::now();
 
     loop {
-        let t_arr = arrivals.peek().map(|Reverse((TimeKey(t), _))| *t);
+        let t_arr = arrivals.peek().map(|(t, _)| t);
         let t_ev = eng.next_event_time();
         match (t_arr, t_ev) {
             (None, None) => break,
             (Some(ta), te) if te.map_or(true, |te| ta <= te) => {
                 // Deliver every arrival at time ta.
                 eng.advance_to(ta);
-                while let Some(Reverse((TimeKey(t), src))) =
-                    arrivals.peek().copied()
-                {
+                while let Some((t, src)) = arrivals.peek() {
                     if t > ta {
                         break;
                     }
@@ -184,8 +175,7 @@ pub fn run_with(spec: GpuSpec, workload: &Workload,
                         if s.arrival.is_closed_loop()
                             && eng.now_us() < workload.duration_us
                         {
-                            arrivals
-                                .push(Reverse((TimeKey(eng.now_us()), src)));
+                            arrivals.push(eng.now_us(), src);
                         }
                     }
                 }

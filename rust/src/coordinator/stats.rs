@@ -166,25 +166,357 @@ pub(crate) fn mean(v: &[f64]) -> f64 {
 /// online serving loop's per-tenant outcome accounting
 /// (`crate::server::online`), so "p99" means the same thing in
 /// `BENCH_serve.json` as it does in `BENCH_sweep.json`.
+///
+/// NaN-safe (ISSUE 7 bugfix): sorts with [`f64::total_cmp`] instead of
+/// the old `partial_cmp(..).unwrap()`, which panicked on any NaN sample.
+/// NaN placement: `total_cmp` orders NaN after +∞, so a NaN sample lands
+/// at the top of the sort and only perturbs the quantiles that would
+/// read it (high `q`) — a NaN-poisoned report stays a report, it is
+/// never a panic.
 pub(crate) fn sorted_quantile(v: &[f64], q: f64) -> f64 {
     let mut v = v.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     quantile(&v, q)
 }
 
 /// [`quantile`] over the concatenation of several unsorted samples —
 /// the class-level and fleet-level view over per-tenant (and, for the
 /// fleet, per-device) latency vectors, identical in semantics to calling
-/// [`sorted_quantile`] on a pre-merged vector. Shared by
-/// `crate::server::online` and `crate::fleet::report`.
+/// [`sorted_quantile`] on a pre-merged vector (including its
+/// NaN-sorts-last placement). Shared by `crate::server::online` and
+/// `crate::fleet::report`.
 pub(crate) fn merged_quantile<'a, I>(parts: I, q: f64) -> f64
 where
     I: IntoIterator<Item = &'a [f64]>,
 {
     let mut v: Vec<f64> =
         parts.into_iter().flat_map(|s| s.iter().copied()).collect();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     quantile(&v, q)
+}
+
+/// Deterministic constant-memory streaming quantile estimator: the
+/// classic P² (piecewise-parabolic) five-marker algorithm of Jain &
+/// Chlamtac (ISSUE 7). No RNG, no buffers — five marker heights and
+/// positions, updated in O(1) per sample, so per-tenant accounting stays
+/// constant-memory at 100k-tenant scale.
+///
+/// Contract (pinned by unit tests here and the property test in
+/// `rust/tests/prop_invariants.rs`):
+///
+/// * **exact for n ≤ 5** — [`value`](Self::value) computes the
+///   Hyndman–Fan type 7 quantile of the raw samples, bitwise equal to
+///   [`sorted_quantile`];
+/// * deterministic: same sample stream ⇒ same estimate, independent of
+///   host or thread count (plain f64 arithmetic, no RNG, no time);
+/// * estimates stay within the observed sample range, and NaN samples
+///   are rejected loudly in every build profile (feeding the sketch NaN
+///   is a caller bug; the exact path *reports* NaN instead — see
+///   [`sorted_quantile`]);
+/// * empty stream ⇒ NaN, matching the exact path.
+#[derive(Debug, Clone)]
+pub struct P2Quantile {
+    /// Target quantile in [0, 1].
+    q: f64,
+    /// Samples seen.
+    n: u64,
+    /// Marker heights; the first `n` raw samples until n = 5, then the
+    /// five P² markers (min, q/2, q, (1+q)/2, max estimates).
+    heights: [f64; 5],
+    /// Actual marker positions (1-based sample ranks).
+    positions: [f64; 5],
+    /// Desired-position increments per sample: [0, q/2, q, (1+q)/2, 1].
+    dn: [f64; 5],
+}
+
+impl P2Quantile {
+    /// A sketch targeting quantile `q` (clamped into [0, 1], like
+    /// [`sorted_quantile`]).
+    pub fn new(q: f64) -> Self {
+        let q = q.clamp(0.0, 1.0);
+        P2Quantile {
+            q,
+            n: 0,
+            heights: [0.0; 5],
+            positions: [1.0, 2.0, 3.0, 4.0, 5.0],
+            dn: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+        }
+    }
+
+    /// Feed one sample. O(1), allocation-free.
+    ///
+    /// # Panics
+    ///
+    /// On NaN, in every build profile (same contract as the timing
+    /// wheel's push: a NaN latency is a simulator bug, not a sample).
+    pub fn record(&mut self, x: f64) {
+        assert!(!x.is_nan(), "NaN sample fed to P2Quantile");
+        if self.n < 5 {
+            self.heights[self.n as usize] = x;
+            self.n += 1;
+            if self.n == 5 {
+                self.heights.sort_unstable_by(f64::total_cmp);
+            }
+            return;
+        }
+        // Locate the marker cell containing x, extending the extremes.
+        let k = if x < self.heights[0] {
+            self.heights[0] = x;
+            0
+        } else if x >= self.heights[4] {
+            self.heights[4] = x;
+            3
+        } else {
+            let mut k = 0;
+            for i in 1..4 {
+                if x >= self.heights[i] {
+                    k = i;
+                }
+            }
+            k
+        };
+        self.n += 1;
+        for p in self.positions[k + 1..].iter_mut() {
+            *p += 1.0;
+        }
+        // Nudge the three interior markers toward their desired
+        // positions, adjusting heights parabolically (linearly when the
+        // parabola would leave the bracket).
+        for i in 1..4 {
+            let desired = 1.0 + self.dn[i] * (self.n - 1) as f64;
+            let d = desired - self.positions[i];
+            if (d >= 1.0 && self.positions[i + 1] - self.positions[i] > 1.0)
+                || (d <= -1.0
+                    && self.positions[i - 1] - self.positions[i] < -1.0)
+            {
+                let d = if d >= 0.0 { 1.0 } else { -1.0 };
+                let hp = self.parabolic(i, d);
+                self.heights[i] = if self.heights[i - 1] < hp
+                    && hp < self.heights[i + 1]
+                {
+                    hp
+                } else {
+                    self.linear(i, d)
+                };
+                self.positions[i] += d;
+            }
+        }
+    }
+
+    /// Piecewise-parabolic height prediction for marker `i` moved by `d`.
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (h, p) = (&self.heights, &self.positions);
+        h[i]
+            + d / (p[i + 1] - p[i - 1])
+                * ((p[i] - p[i - 1] + d) * (h[i + 1] - h[i])
+                    / (p[i + 1] - p[i])
+                    + (p[i + 1] - p[i] - d) * (h[i] - h[i - 1])
+                        / (p[i] - p[i - 1]))
+    }
+
+    /// Linear fallback when the parabolic prediction leaves the bracket.
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.heights[i]
+            + d * (self.heights[j] - self.heights[i])
+                / (self.positions[j] - self.positions[i])
+    }
+
+    /// Current estimate: NaN for an empty stream, the exact HF-7
+    /// quantile for n ≤ 5, the middle P² marker after that.
+    pub fn value(&self) -> f64 {
+        if self.n == 0 {
+            return f64::NAN;
+        }
+        if self.n <= 5 {
+            let mut v = self.heights;
+            let s = &mut v[..self.n as usize];
+            s.sort_unstable_by(f64::total_cmp);
+            return quantile(s, self.q);
+        }
+        self.heights[2]
+    }
+
+    /// Samples seen.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+}
+
+/// Constant-memory per-tenant latency summary (ISSUE 7): count, sum,
+/// min, max, plus P² sketches for p50 and p99. ~200 bytes per tenant
+/// regardless of how many requests it served — the representation behind
+/// [`LatencyAccum::Sketch`] on the 100k-tenant scale path.
+#[derive(Debug, Clone)]
+pub struct StreamingSummary {
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+    p50: P2Quantile,
+    p99: P2Quantile,
+}
+
+impl Default for StreamingSummary {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl StreamingSummary {
+    /// An empty summary.
+    pub fn new() -> Self {
+        StreamingSummary {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+            p50: P2Quantile::new(0.5),
+            p99: P2Quantile::new(0.99),
+        }
+    }
+
+    /// Feed one sample (panics on NaN, like [`P2Quantile::record`]).
+    pub fn record(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.p50.record(x);
+        self.p99.record(x);
+    }
+
+    /// Samples seen.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Arithmetic mean (NaN when empty, matching [`mean`]).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Smallest sample (NaN when empty).
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.min
+        }
+    }
+
+    /// Largest sample (NaN when empty).
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            f64::NAN
+        } else {
+            self.max
+        }
+    }
+
+    /// Streaming p50 estimate (exact for ≤ 5 samples; NaN when empty).
+    pub fn p50(&self) -> f64 {
+        self.p50.value()
+    }
+
+    /// Streaming p99 estimate (exact for ≤ 5 samples; NaN when empty).
+    pub fn p99(&self) -> f64 {
+        self.p99.value()
+    }
+}
+
+/// Tenant-count threshold above which the scale path
+/// ([`LatencyAccum::for_tenants`]) switches per-tenant accounting from
+/// exact latency vectors to [`StreamingSummary`] sketches. Sized an
+/// order of magnitude above the committed scenario family (≤ 6 tenants),
+/// so every existing baseline stays on the exact path, bitwise
+/// unchanged.
+pub const SKETCH_TENANT_THRESHOLD: usize = 64;
+
+/// Per-tenant latency accounting with a representation chosen by tenant
+/// count (ISSUE 7): exact vectors below [`SKETCH_TENANT_THRESHOLD`]
+/// (quantiles via [`sorted_quantile`], as everywhere else), constant-
+/// memory [`StreamingSummary`] sketches above it.
+#[derive(Debug, Clone)]
+pub enum LatencyAccum {
+    /// Every sample retained; quantiles are exact HF-7.
+    Exact(Vec<f64>),
+    /// Constant-memory streaming sketch (P²) for huge tenant counts.
+    Sketch(StreamingSummary),
+}
+
+impl LatencyAccum {
+    /// The representation for a scenario with `tenants` tenants.
+    pub fn for_tenants(tenants: usize) -> Self {
+        if tenants > SKETCH_TENANT_THRESHOLD {
+            LatencyAccum::Sketch(StreamingSummary::new())
+        } else {
+            LatencyAccum::Exact(Vec::new())
+        }
+    }
+
+    /// True on the sketch representation.
+    pub fn is_sketch(&self) -> bool {
+        matches!(self, LatencyAccum::Sketch(_))
+    }
+
+    /// Feed one sample.
+    pub fn record(&mut self, x: f64) {
+        match self {
+            LatencyAccum::Exact(v) => v.push(x),
+            LatencyAccum::Sketch(s) => s.record(x),
+        }
+    }
+
+    /// Samples seen.
+    pub fn count(&self) -> u64 {
+        match self {
+            LatencyAccum::Exact(v) => v.len() as u64,
+            LatencyAccum::Sketch(s) => s.count(),
+        }
+    }
+
+    /// Mean (NaN when empty).
+    pub fn mean(&self) -> f64 {
+        match self {
+            LatencyAccum::Exact(v) => mean(v),
+            LatencyAccum::Sketch(s) => s.mean(),
+        }
+    }
+
+    /// p50 (exact or sketched; NaN when empty).
+    pub fn p50(&self) -> f64 {
+        match self {
+            LatencyAccum::Exact(v) => sorted_quantile(v, 0.5),
+            LatencyAccum::Sketch(s) => s.p50(),
+        }
+    }
+
+    /// p99 (exact or sketched; NaN when empty).
+    pub fn p99(&self) -> f64 {
+        match self {
+            LatencyAccum::Exact(v) => sorted_quantile(v, 0.99),
+            LatencyAccum::Sketch(s) => s.p99(),
+        }
+    }
+
+    /// Deterministic memory footprint in bytes (struct + retained
+    /// samples). The `bytes_per_tenant` metric of `BENCH_scale.json`:
+    /// constant for the sketch, linear in served samples for the exact
+    /// path — capacity-independent so the number is reproducible.
+    pub fn bytes(&self) -> usize {
+        let own = std::mem::size_of::<Self>();
+        match self {
+            LatencyAccum::Exact(v) => {
+                own + v.len() * std::mem::size_of::<f64>()
+            }
+            LatencyAccum::Sketch(_) => own,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -300,6 +632,141 @@ mod tests {
         let z = RunStats::default();
         assert_eq!(z.events_per_sec(), 0.0);
         assert_eq!(z.sim_speedup(), 0.0);
+    }
+
+    #[test]
+    fn nan_sample_reports_instead_of_panicking() {
+        // ISSUE 7 bugfix: the old partial_cmp(..).unwrap() sort panicked
+        // on any NaN latency. total_cmp sorts NaN after +inf, so low
+        // quantiles still read the finite samples and high quantiles
+        // report NaN — a report, never a panic.
+        let v = [3.0, f64::NAN, 1.0, 2.0];
+        assert!((sorted_quantile(&v, 0.0) - 1.0).abs() < 1e-12);
+        assert!(sorted_quantile(&v, 1.0).is_nan());
+        let a = [f64::NAN, 5.0];
+        let b = [4.0];
+        let merged =
+            merged_quantile(vec![&a as &[f64], &b as &[f64]], 0.0);
+        assert!((merged - 4.0).abs() < 1e-12);
+        assert!(merged_quantile(vec![&a as &[f64]], 1.0).is_nan());
+    }
+
+    #[test]
+    fn zero_wall_ratios_are_finite_and_json_clean() {
+        use crate::runtime::json::Json;
+        // ISSUE 7 satellite: an instantaneous run (wall_ns == 0) must
+        // not leak inf/nan into canonical JSON. The accessors guard the
+        // division, and the JSON layer maps any residual non-finite
+        // number to null — pinned end to end here.
+        let z = RunStats {
+            events: 10,
+            span_us: 100.0,
+            ..Default::default()
+        };
+        assert_eq!(z.wall_ns, 0);
+        assert_eq!(z.events_per_sec(), 0.0);
+        assert_eq!(z.sim_speedup(), 0.0);
+        let doc = Json::Obj(vec![
+            ("events_per_sec".into(), Json::Num(z.events_per_sec())),
+            ("sim_speedup".into(), Json::Num(z.sim_speedup())),
+            ("p99_us".into(), Json::Num(z.critical_latency_p99_us())),
+            ("raw_ratio".into(),
+             Json::Num(z.events as f64 / z.wall_ns as f64)),
+        ]);
+        let s = doc.to_canonical_string();
+        assert!(!s.contains("inf") && !s.contains("nan"),
+                "canonical JSON leaked a non-finite number: {s}");
+    }
+
+    #[test]
+    fn sketch_is_exact_up_to_five_samples() {
+        let samples = [9.0, 2.0, 7.0, 4.0, 1.0];
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let mut sk = P2Quantile::new(q);
+            assert!(sk.value().is_nan());
+            for (i, &x) in samples.iter().enumerate() {
+                sk.record(x);
+                let exact = sorted_quantile(&samples[..=i], q);
+                assert_eq!(sk.value().to_bits(), exact.to_bits(),
+                           "q={q} n={}", i + 1);
+            }
+        }
+    }
+
+    #[test]
+    fn sketch_tracks_quantiles_of_a_uniform_ramp() {
+        // 10k distinct samples 1..=10000 fed in a scrambled but
+        // deterministic order; exact p50 = 5000.5, p99 = 9900.01.
+        let mut p50 = P2Quantile::new(0.5);
+        let mut p99 = P2Quantile::new(0.99);
+        for i in 0u64..10_000 {
+            // Stride permutation: 7919 is coprime with 10000, so this
+            // visits every value in 1..=10000 exactly once.
+            let x = (i * 7919) % 10_000 + 1;
+            p50.record(x as f64);
+            p99.record(x as f64);
+        }
+        assert_eq!(p50.count(), 10_000);
+        let v50 = p50.value();
+        let v99 = p99.value();
+        assert!((v50 - 5_000.0).abs() / 5_000.0 < 0.05,
+                "p50 estimate {v50} too far from ~5000");
+        assert!((v99 - 9_900.0).abs() / 9_900.0 < 0.05,
+                "p99 estimate {v99} too far from ~9900");
+        assert!(v50 <= v99);
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN sample")]
+    fn sketch_rejects_nan_loudly() {
+        P2Quantile::new(0.5).record(f64::NAN);
+    }
+
+    #[test]
+    fn streaming_summary_basics() {
+        let mut s = StreamingSummary::new();
+        assert!(s.mean().is_nan() && s.min().is_nan() && s.max().is_nan());
+        assert!(s.p50().is_nan() && s.p99().is_nan());
+        for x in [4.0, 1.0, 3.0] {
+            s.record(x);
+        }
+        assert_eq!(s.count(), 3);
+        assert!((s.mean() - 8.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        // n <= 5: exact HF-7, bitwise.
+        assert_eq!(s.p50().to_bits(),
+                   sorted_quantile(&[4.0, 1.0, 3.0], 0.5).to_bits());
+    }
+
+    #[test]
+    fn latency_accum_switches_representation_at_threshold() {
+        assert!(!LatencyAccum::for_tenants(SKETCH_TENANT_THRESHOLD)
+            .is_sketch());
+        assert!(LatencyAccum::for_tenants(SKETCH_TENANT_THRESHOLD + 1)
+            .is_sketch());
+        // The committed scenario family (<= 6 tenants) stays exact.
+        assert!(!LatencyAccum::for_tenants(6).is_sketch());
+
+        let mut exact = LatencyAccum::for_tenants(2);
+        let mut sketch = LatencyAccum::for_tenants(100_000);
+        for x in [5.0, 2.0, 9.0] {
+            exact.record(x);
+            sketch.record(x);
+        }
+        assert_eq!(exact.count(), 3);
+        assert_eq!(sketch.count(), 3);
+        // Both exact at tiny n.
+        assert_eq!(exact.p99().to_bits(), sketch.p99().to_bits());
+        assert!((exact.mean() - sketch.mean()).abs() < 1e-12);
+        // Sketch footprint is constant; exact grows with samples.
+        let sk_bytes = sketch.bytes();
+        for x in 0..1000 {
+            sketch.record(x as f64);
+            exact.record(x as f64);
+        }
+        assert_eq!(sketch.bytes(), sk_bytes);
+        assert!(exact.bytes() > sk_bytes);
     }
 
     #[test]

@@ -80,7 +80,6 @@ pub use report::{
 };
 pub use router::{router_for, FleetView, RouterPolicy, ROUTERS};
 
-use std::cmp::Reverse;
 use std::collections::HashSet;
 use std::sync::Mutex;
 
@@ -88,7 +87,7 @@ use crate::coordinator::admission::{
     model_envelopes, AdmissionConfig, AdmissionController, AdmissionPolicy,
     Decision,
 };
-use crate::coordinator::driver::{initial_arrivals, TimeKey};
+use crate::coordinator::driver::initial_arrivals;
 use crate::gpu::kernel::Criticality;
 use crate::gpu::spec::GpuSpec;
 use crate::server::online::{
@@ -671,7 +670,7 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
     let mut next_id: u64 = 1;
 
     loop {
-        let t_arr = arrivals.peek().map(|Reverse((TimeKey(t), _))| *t);
+        let t_arr = arrivals.peek().map(|(t, _)| t);
         // Earliest device event; ties break toward the lowest index
         // (strict `<`), so the step order is deterministic.
         let mut t_ev: Option<(f64, usize)> = None;
@@ -858,9 +857,7 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
                 for core in ctx.cores.iter_mut().flatten() {
                     core.advance_to(ta);
                 }
-                while let Some(Reverse((TimeKey(t), src))) =
-                    arrivals.peek().copied()
-                {
+                while let Some((t, src)) = arrivals.peek() {
                     if t > ta {
                         break;
                     }

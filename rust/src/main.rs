@@ -18,6 +18,10 @@
 //!              deterministic failure injection and the reactive
 //!              autoscaler; --storm runs the resilience grid and writes
 //!              BENCH_resilience.json (ISSUE 6)
+//!   scale-sim  [--tenants 1000,10000,100000] [--duration SECONDS]
+//!              [--threads N] — tiered-tenant scale grid over lazy arrival
+//!              streams + streaming quantiles, writes BENCH_scale.json
+//!              (ISSUE 7)
 //!   infer      --model cifarnet [--artifacts artifacts]
 //!   artifacts  [--artifacts artifacts]
 
@@ -30,7 +34,7 @@ use miriam::coordinator::{self, driver, sweep};
 use miriam::fleet;
 use miriam::gpu::spec::GpuSpec;
 use miriam::runtime::Manifest;
-use miriam::server::online;
+use miriam::server::{online, scale};
 use miriam::workloads::{lgsvl, mdtb, scenario};
 
 const USAGE: &str = "\
@@ -65,6 +69,9 @@ USAGE:
                    [--scale-high-ms 20] [--scale-low-ms 4] [--scale-eval-ms 5]
                    [--scale-cooldown-ms 20]
                    [--out BENCH_fleet.json|BENCH_resilience.json]
+  miriam scale-sim [--platform P] [--tenants 1000,10000,100000]
+                   [--duration SECONDS] [--scheduler miriam] [--threads N]
+                   [--out BENCH_scale.json]
   miriam infer --model NAME [--artifacts DIR]
   miriam artifacts [--artifacts DIR]
 ";
@@ -606,6 +613,75 @@ fn fleet_sim(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `scale-sim` (ISSUE 7): the tiered-tenant scale grid — lazy arrival
+/// streams through the timing wheel, P² latency sketches above the
+/// tenant threshold — stdout table plus `BENCH_scale.json`. The JSON is
+/// byte-deterministic across `--threads` and repeats; the events/sec
+/// column is host-timed and goes to stdout only.
+fn scale_sim(args: &Args) -> Result<()> {
+    let platform = args.get("platform", "rtx2060");
+    let gpu = GpuSpec::by_name(platform)
+        .ok_or_else(|| anyhow!("unknown platform {platform}"))?;
+    let duration = args.get_f64("duration", 0.2).map_err(|e| anyhow!(e))?;
+    if duration <= 0.0 {
+        return Err(anyhow!("duration must be positive"));
+    }
+    let tenants: Vec<usize> = args
+        .get_list("tenants", "1000,10000")
+        .iter()
+        .map(|t| {
+            t.parse::<usize>()
+                .map_err(|_| anyhow!("bad tenant count {t}"))
+        })
+        .collect::<Result<_>>()?;
+    if tenants.is_empty() {
+        return Err(anyhow!("--tenants needs at least one count"));
+    }
+    let scheduler = args.get("scheduler", "miriam").to_string();
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let threads = args
+        .get_usize("threads", default_threads)
+        .map_err(|e| anyhow!(e))?;
+    let out = args.get("out", "BENCH_scale.json");
+
+    println!("# scale-sim: tenants {:?} on {} ({} SMs), {duration}s of \
+              arrivals each, scheduler {scheduler}, {threads} thread(s)",
+             tenants, gpu.name, gpu.num_sms);
+    let t0 = std::time::Instant::now();
+    let grid =
+        scale::run_scale_grid(&gpu, &tenants, duration * 1e6, &scheduler,
+                              threads)
+            .map_err(|e| anyhow!(e))?;
+    let wall = t0.elapsed().as_secs_f64();
+    println!("{:>8} {:>10} {:>10} {:>8} {:>8} {:>12} {:>12}",
+             "tenants", "offered", "served", "miss", "sketch",
+             "bytes/tenant", "worst p99");
+    println!("{:>8} {:>10} {:>10} {:>8} {:>8} {:>12} {:>12}",
+             "", "", "", "", "", "", "(ms)");
+    let mut events: u64 = 0;
+    for c in &grid.cells {
+        events += c.events;
+        let p99 = if c.worst_tenant_p99_us.is_nan() {
+            "-".to_string()
+        } else {
+            format!("{:.2}", c.worst_tenant_p99_us / 1e3)
+        };
+        println!("{:>8} {:>10} {:>10} {:>8} {:>8} {:>12.1} {:>12}",
+                 c.tenants, c.offered, c.served, c.deadline_misses,
+                 c.sketch_tenants, c.bytes_per_tenant, p99);
+    }
+    // Host-timed throughput: stdout only, never in the JSON.
+    if wall > 0.0 {
+        println!("# {events} engine events in {wall:.2}s wall \
+                  ({:.0} events/sec)", events as f64 / wall);
+    }
+    std::fs::write(out, grid.to_json())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
 fn infer(args: &Args) -> Result<()> {
     use miriam::runtime::artifacts::npy_rand;
     let model = args
@@ -649,6 +725,7 @@ fn main() -> Result<()> {
         Some("sweep") => sweep_cmd(&args),
         Some("serve-sim") => serve_sim(&args),
         Some("fleet-sim") => fleet_sim(&args),
+        Some("scale-sim") => scale_sim(&args),
         Some("infer") => infer(&args),
         Some("artifacts") => {
             let m = Manifest::load(args.get("artifacts", "artifacts"))?;

@@ -4,10 +4,13 @@
 //!
 //! * [`artifacts`] — manifest parsing + artifact registry.
 //! * [`client`] — PJRT client wrapper (compile once, execute many).
+//! * [`timewheel`] — the hierarchical timing wheel behind every arrival
+//!   queue (ISSUE 7): O(1)-amortized event dispatch at 100k-tenant scale.
 
 pub mod artifacts;
 pub mod json;
 pub mod client;
+pub mod timewheel;
 
 pub use artifacts::{ArtifactEntry, Manifest};
 pub use client::{ModelRuntime, Runtime};

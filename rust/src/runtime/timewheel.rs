@@ -1,0 +1,426 @@
+//! Hierarchical timing wheel: the arrival queue behind the batch driver,
+//! the online serving loop, and the fleet loop (ISSUE 7).
+//!
+//! Replaces the old `BinaryHeap<Reverse<(TimeKey, usize)>>` arrival
+//! machinery. A binary heap pays O(log n) per push/pop, which at
+//! 100k-tenant scale puts the comparator on the hottest path in the
+//! simulator. The wheel pays O(1) amortized per event: each entry is
+//! bucketed by its arrival tick into one of [`LEVELS`] × [`SLOTS`]
+//! slots, a per-level 64-bit occupancy bitmap finds the next non-empty
+//! slot with a single `trailing_zeros`, and higher-level slots cascade
+//! lazily (each entry cascades at most `LEVELS - 1` times over its whole
+//! lifetime).
+//!
+//! # Ordering contract (load-bearing)
+//!
+//! [`TimingWheel::pop`] yields entries in exactly the order the old heap
+//! did: ascending `(time, source index)` with [`f64::total_cmp`] on the
+//! time — ties on time break by source index, so every golden trace and
+//! committed `BENCH_*.json` byte is unchanged by the swap. The
+//! wheel-vs-heap differential test (`rust/tests/wheel_vs_heap.rs`) pins
+//! this over a million mixed arrivals, ties included.
+//!
+//! Entries pushed *behind* the wheel's read cursor (a closed-loop client
+//! regenerating "now", a shed retry landing inside the batch currently
+//! being drained) are merge-inserted into the sorted ready buffer, which
+//! preserves the heap's semantics exactly: ordering is only ever defined
+//! over the entries still queued.
+//!
+//! # Resolution
+//!
+//! Ticks are whole microseconds (`t as u64`); entries sharing a tick are
+//! ordered by their exact `f64` time when their slot drains. Ten levels
+//! of 64 slots cover 2^60 µs (~36k years of simulated time) with no
+//! overflow list.
+//!
+//! # Allocation
+//!
+//! The warm wheel allocates nothing: slot buffers are recycled through
+//! the ready buffer by pointer swap, and the cascade scratch buffer is
+//! reused. `rust/tests/alloc_steady_state.rs` pins the steady-state
+//! push/pop cycle at zero allocations.
+
+/// Total-ordered `f64` time key, shared by the wheel's ready-buffer sort
+/// and the wheel-vs-heap differential oracle (it lived in
+/// `coordinator::driver` before ISSUE 7).
+///
+/// Ordering is [`f64::total_cmp`] — NaN sorts after +∞ instead of
+/// comparing `Equal` to everything (the ISSUE 7 bugfix: the old
+/// `partial_cmp(..).unwrap_or(Equal)` silently corrupted heap order in
+/// release builds, where the `debug_assert!(t.is_finite())` guards
+/// compile out). On the arrival path NaN is additionally rejected
+/// loudly: [`TimingWheel::push`] asserts finiteness in release builds
+/// too. `total_cmp` orders `-0.0 < +0.0`, which `partial_cmp` does not —
+/// irrelevant here because arrival times are non-negative and never
+/// produced as `-0.0`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TimeKey(
+    /// The time in microseconds.
+    pub f64,
+);
+impl Eq for TimeKey {}
+impl PartialOrd for TimeKey {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for TimeKey {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+/// log2 of the slot count per level.
+const SLOT_BITS: u32 = 6;
+/// Slots per wheel level (64: one occupancy bit per `u64` bitmap bit).
+pub const SLOTS: usize = 1 << SLOT_BITS;
+/// Wheel levels. Level `i` spans 64^(i+1) ticks; ten levels cover
+/// 2^60 µs of simulated time with no overflow list.
+pub const LEVELS: usize = 10;
+/// Largest representable tick (exclusive): one tick per microsecond.
+const MAX_TICK: u64 = 1 << (SLOT_BITS * LEVELS as u32);
+
+/// One wheel level: 64 entry buckets plus an occupancy bitmap (bit `s`
+/// set ⇔ `slots[s]` is non-empty).
+#[derive(Debug, Default)]
+struct Level {
+    occupied: u64,
+    slots: Vec<Vec<(f64, usize)>>,
+}
+
+/// The hierarchical timing wheel. See the [module docs](self) for the
+/// ordering and allocation contracts.
+#[derive(Debug)]
+pub struct TimingWheel {
+    levels: Vec<Level>,
+    /// Drained entries awaiting pop, sorted **descending** by
+    /// `(TimeKey, src)` so [`pop`](Self::pop) is a `Vec::pop` from the
+    /// back.
+    ready: Vec<(f64, usize)>,
+    /// All ticks `< cursor` have been drained into `ready` (or popped).
+    cursor: u64,
+    /// Cascade redistribution scratch (reused; see module docs).
+    scratch: Vec<(f64, usize)>,
+    len: usize,
+}
+
+impl Default for TimingWheel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TimingWheel {
+    /// An empty wheel with its cursor at tick 0.
+    pub fn new() -> Self {
+        TimingWheel {
+            levels: (0..LEVELS)
+                .map(|_| Level {
+                    occupied: 0,
+                    slots: (0..SLOTS).map(|_| Vec::new()).collect(),
+                })
+                .collect(),
+            ready: Vec::new(),
+            cursor: 0,
+            scratch: Vec::new(),
+            len: 0,
+        }
+    }
+
+    /// Number of queued entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when no entries are queued.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Queue `(t, src)`. `t` is in microseconds.
+    ///
+    /// # Panics
+    ///
+    /// In **all** build profiles when `t` is non-finite or negative — a
+    /// NaN here used to corrupt the heap ordering silently in release
+    /// builds (ISSUE 7 bugfix; regression-tested below), so the finite
+    /// check is a release-mode error, not a `debug_assert!`.
+    pub fn push(&mut self, t: f64, src: usize) {
+        assert!(t.is_finite() && t >= 0.0,
+                "arrival time must be finite and non-negative, got {t}");
+        let tick = t as u64;
+        assert!(tick < MAX_TICK, "arrival time {t} overflows the wheel");
+        if tick < self.cursor {
+            // Behind the read cursor: merge into the sorted (descending)
+            // ready buffer. Equal keys insert *before* their twins, i.e.
+            // pop *after* them — twins are bit-identical `(t, src)`
+            // pairs, so the order among them is unobservable.
+            let key = (TimeKey(t), src);
+            let at = self
+                .ready
+                .partition_point(|&(rt, rs)| (TimeKey(rt), rs) > key);
+            self.ready.insert(at, (t, src));
+        } else {
+            self.insert_wheel(tick, t, src);
+        }
+        self.len += 1;
+    }
+
+    /// The next entry in ascending `(time, src)` order, without removing
+    /// it. `&mut` because the wheel advances its cursor lazily here.
+    pub fn peek(&mut self) -> Option<(f64, usize)> {
+        if self.ready.is_empty() {
+            self.refill();
+        }
+        self.ready.last().copied()
+    }
+
+    /// Remove and return the next entry in ascending `(time, src)` order.
+    pub fn pop(&mut self) -> Option<(f64, usize)> {
+        self.peek()?;
+        let e = self.ready.pop();
+        debug_assert!(e.is_some());
+        self.len -= 1;
+        e
+    }
+
+    /// Bucket `(t, src)` at the lowest level whose current block
+    /// contains `tick` (callers guarantee `tick >= self.cursor`).
+    fn insert_wheel(&mut self, tick: u64, t: f64, src: usize) {
+        debug_assert!(tick >= self.cursor);
+        let mut level = 0usize;
+        while level + 1 < LEVELS
+            && (tick >> (SLOT_BITS * (level as u32 + 1)))
+                != (self.cursor >> (SLOT_BITS * (level as u32 + 1)))
+        {
+            level += 1;
+        }
+        let slot = ((tick >> (SLOT_BITS * level as u32)) & 63) as usize;
+        self.levels[level].slots[slot].push((t, src));
+        self.levels[level].occupied |= 1 << slot;
+    }
+
+    /// Drain the next non-empty level-0 slot into `ready` (sorted
+    /// descending), cascading higher levels down as needed. No-op when
+    /// the wheel holds no bucketed entries.
+    fn refill(&mut self) {
+        debug_assert!(self.ready.is_empty());
+        if self.len == 0 {
+            return;
+        }
+        loop {
+            // Entries bucketed at a higher level before the cursor
+            // entered their block sit in the slot *covering* the cursor;
+            // cascade those down first or a fresher level-0 entry could
+            // be drained ahead of them.
+            self.normalize();
+            // Next occupied level-0 slot at or after the cursor within
+            // the cursor's current 64-tick block.
+            let idx = (self.cursor & 63) as u32;
+            let bits = self.levels[0].occupied & (!0u64 << idx);
+            if bits != 0 {
+                let slot = bits.trailing_zeros() as usize;
+                self.levels[0].occupied &= !(1u64 << slot);
+                let base = self.cursor >> SLOT_BITS;
+                self.cursor = ((base << SLOT_BITS) | slot as u64) + 1;
+                // Pointer-swap the slot's buffer out (the slot inherits
+                // the empty ready buffer's capacity — buffers recycle,
+                // the warm path allocates nothing).
+                std::mem::swap(&mut self.ready,
+                               &mut self.levels[0].slots[slot]);
+                self.ready.sort_unstable_by(|a, b| {
+                    (TimeKey(b.0), b.1).cmp(&(TimeKey(a.0), a.1))
+                });
+                return;
+            }
+            self.cascade();
+        }
+    }
+
+    /// Cascade down every occupied slot that covers the cursor's current
+    /// position (the slot at the cursor's own index, per level, top
+    /// down). Freshly bucketed entries never land in a covering slot
+    /// (bucketing picks the lowest level whose block differs, so the
+    /// slot index is always strictly above the cursor's), so coverings
+    /// only appear when the cursor crosses a block boundary — and are
+    /// cleared here before any scan at the new position.
+    fn normalize(&mut self) {
+        for level in (1..LEVELS).rev() {
+            let shift = SLOT_BITS * level as u32;
+            let idx = ((self.cursor >> shift) & 63) as usize;
+            if self.levels[level].occupied & (1u64 << idx) != 0 {
+                self.redistribute(level, idx);
+            }
+        }
+    }
+
+    /// Redistribute the next occupied strictly-future higher-level slot
+    /// down the wheel and jump the cursor to the start of its tick
+    /// range. Covering slots are empty when this runs
+    /// ([`normalize`](Self::normalize)), so the strictly-above scan
+    /// cannot skip anything; every redistributed entry lands at a
+    /// strictly lower level, so cascading terminates.
+    fn cascade(&mut self) {
+        for level in 1..LEVELS {
+            let shift = SLOT_BITS * level as u32;
+            let idx = ((self.cursor >> shift) & 63) as u32;
+            let mask = if idx >= 63 { 0 } else { !0u64 << (idx + 1) };
+            let bits = self.levels[level].occupied & mask;
+            if bits == 0 {
+                continue;
+            }
+            let slot = bits.trailing_zeros() as usize;
+            let block = self.cursor >> (shift + SLOT_BITS);
+            self.cursor = ((block << SLOT_BITS) | slot as u64) << shift;
+            self.redistribute(level, slot);
+            return;
+        }
+        unreachable!("timewheel: len > 0 but no occupied slot");
+    }
+
+    /// Re-bucket every entry of `levels[level].slots[slot]` relative to
+    /// the current cursor, through the reused scratch buffer.
+    fn redistribute(&mut self, level: usize, slot: usize) {
+        self.levels[level].occupied &= !(1u64 << slot);
+        let mut tmp = std::mem::take(&mut self.scratch);
+        std::mem::swap(&mut tmp, &mut self.levels[level].slots[slot]);
+        for &(t, src) in tmp.iter() {
+            self.insert_wheel(t as u64, t, src);
+        }
+        tmp.clear();
+        self.scratch = tmp;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(w: &mut TimingWheel) -> Vec<(f64, usize)> {
+        let mut out = Vec::new();
+        while let Some(e) = w.pop() {
+            out.push(e);
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_time_then_source_order() {
+        let mut w = TimingWheel::new();
+        for &(t, s) in
+            &[(5.0, 2), (5.0, 1), (0.25, 9), (4_100.0, 0), (5.5, 1),
+              (300_000.7, 3), (0.25, 4)]
+        {
+            w.push(t, s);
+        }
+        assert_eq!(w.len(), 7);
+        assert_eq!(drain(&mut w),
+                   vec![(0.25, 4), (0.25, 9), (5.0, 1), (5.0, 2), (5.5, 1),
+                        (4_100.0, 0), (300_000.7, 3)]);
+        assert!(w.is_empty());
+    }
+
+    #[test]
+    fn same_tick_different_fraction_orders_by_exact_time() {
+        let mut w = TimingWheel::new();
+        w.push(7.9, 0);
+        w.push(7.1, 1);
+        w.push(7.5, 2);
+        assert_eq!(drain(&mut w), vec![(7.1, 1), (7.5, 2), (7.9, 0)]);
+    }
+
+    #[test]
+    fn push_behind_cursor_merges_into_ready_order() {
+        let mut w = TimingWheel::new();
+        w.push(10.0, 0);
+        w.push(10.0, 2);
+        w.push(50.0, 1);
+        assert_eq!(w.peek(), Some((10.0, 0)));
+        // Cursor is now past tick 10; these land behind it.
+        w.push(10.0, 1);
+        w.push(3.0, 7);
+        assert_eq!(w.pop(), Some((3.0, 7)));
+        assert_eq!(w.pop(), Some((10.0, 0)));
+        assert_eq!(w.pop(), Some((10.0, 1)));
+        assert_eq!(w.pop(), Some((10.0, 2)));
+        assert_eq!(w.pop(), Some((50.0, 1)));
+        assert_eq!(w.pop(), None);
+    }
+
+    #[test]
+    fn cascades_across_level_boundaries() {
+        let mut w = TimingWheel::new();
+        // One entry per level reach: 64^1, 64^2, ... plus near neighbors.
+        let times = [1.0, 63.0, 64.0, 4095.0, 4096.0, 262_144.0,
+                     16_777_216.0, 1.5e9, 9.0e12];
+        for (s, &t) in times.iter().enumerate() {
+            w.push(t, s);
+        }
+        let got = drain(&mut w);
+        let want: Vec<(f64, usize)> =
+            times.iter().enumerate().map(|(s, &t)| (t, s)).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn covering_slot_drains_before_fresher_level0_entries() {
+        let mut w = TimingWheel::new();
+        w.push(63.0, 0);
+        w.push(70.0, 1); // buckets at level 1 (cursor still in block 0)
+        assert_eq!(w.pop(), Some((63.0, 0))); // cursor crosses to tick 64
+        w.push(100.0, 2); // lands at level 0 of the cursor's new block
+        // 70.0 sits in the level-1 slot covering the cursor; it must
+        // still drain before the fresher level-0 entry.
+        assert_eq!(w.pop(), Some((70.0, 1)));
+        assert_eq!(w.pop(), Some((100.0, 2)));
+        assert_eq!(w.pop(), None);
+    }
+
+    #[test]
+    fn interleaved_pop_push_closed_loop_style() {
+        let mut w = TimingWheel::new();
+        for s in 0..8 {
+            w.push(s as f64, s);
+        }
+        let mut last = -1.0f64;
+        for step in 0..10_000 {
+            let (t, src) = w.pop().expect("population is constant");
+            assert!(t >= last, "time went backwards at step {step}");
+            last = t;
+            w.push(t + 1.0 + (src as f64) * 0.13, src);
+        }
+    }
+
+    #[test]
+    fn timekey_totally_orders_nan() {
+        use std::cmp::Ordering;
+        // The ISSUE 7 regression: NaN used to compare Equal to
+        // everything, silently corrupting heap order.
+        assert_eq!(TimeKey(f64::NAN).cmp(&TimeKey(1.0)), Ordering::Greater);
+        assert_eq!(TimeKey(1.0).cmp(&TimeKey(f64::NAN)), Ordering::Less);
+        assert_eq!(TimeKey(f64::NAN).cmp(&TimeKey(f64::INFINITY)),
+                   Ordering::Greater);
+        assert_eq!(TimeKey(2.0).cmp(&TimeKey(2.0)), Ordering::Equal);
+        assert_eq!(TimeKey(1.0).cmp(&TimeKey(2.0)), Ordering::Less);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn nan_arrival_is_rejected_loudly() {
+        // Release-mode error, not a debug_assert: feeding a NaN arrival
+        // must panic in every build profile.
+        TimingWheel::new().push(f64::NAN, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite")]
+    fn infinite_arrival_is_rejected_loudly() {
+        TimingWheel::new().push(f64::INFINITY, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-negative")]
+    fn negative_arrival_is_rejected_loudly() {
+        TimingWheel::new().push(-1.0, 0);
+    }
+}

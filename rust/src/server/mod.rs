@@ -15,9 +15,12 @@
 //! [`online`] is where the two faces meet (ISSUE 4): a simulated-time
 //! serving loop that runs open-loop scenario arrivals through an
 //! admission controller into the live coordinator, with per-tenant SLO
-//! accounting (`miriam serve-sim`).
+//! accounting (`miriam serve-sim`). [`scale`] (ISSUE 7) stretches that
+//! loop to 100k-tenant populations with lazy arrival streams and
+//! streaming quantile sketches (`miriam scale-sim`).
 
 pub mod online;
+pub mod scale;
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -36,14 +36,13 @@
 //! assert_eq!(report.shed_critical(), 0); // critical is never shed
 //! ```
 
-use std::cmp::Reverse;
 use std::collections::{BTreeMap, HashMap};
 use std::sync::Arc;
 
 use crate::coordinator::admission::{
     AdmissionConfig, AdmissionController, AdmissionPolicy, Decision,
 };
-use crate::coordinator::driver::{initial_arrivals, TimeKey};
+use crate::coordinator::driver::initial_arrivals;
 use crate::coordinator::scheduler::{Req, Scheduler};
 use crate::coordinator::scheduler_for;
 use crate::coordinator::stats::{mean, merged_quantile, sorted_quantile};
@@ -104,10 +103,27 @@ impl DeviceCore {
             .ok_or_else(|| format!("unknown scheduler {scheduler}"))?;
         let mut eng = Engine::new(gpu.clone());
         sched.init(&mut eng);
+        // Intern each distinct model once, keyed by the `Arc` pointer: a
+        // 100k-tenant scale workload shares a handful of model Arcs
+        // across all sources, so this stays O(models), not O(tenants).
+        // Distinct Arcs to equal models just miss the cache — correct,
+        // only slower — and the pre-scale paths (one Arc per source)
+        // behave exactly as before.
+        let mut interned: HashMap<usize, Arc<Vec<u32>>> = HashMap::new();
         let name_ids: Vec<Arc<Vec<u32>>> = wl
             .sources
             .iter()
-            .map(|s| Arc::new(s.model.intern_kernels(|n| eng.intern_name(n))))
+            .map(|s| {
+                interned
+                    .entry(Arc::as_ptr(&s.model) as usize)
+                    .or_insert_with(|| {
+                        Arc::new(
+                            s.model
+                                .intern_kernels(|n| eng.intern_name(n)),
+                        )
+                    })
+                    .clone()
+            })
             .collect();
         Ok(DeviceCore {
             eng,
@@ -575,15 +591,13 @@ pub fn run_serve(gpu: &GpuSpec, sc: &ScenarioSpec, opts: &ServeOpts)
     let mut next_id: u64 = 1;
 
     loop {
-        let t_arr = arrivals.peek().map(|Reverse((TimeKey(t), _))| *t);
+        let t_arr = arrivals.peek().map(|(t, _)| t);
         let t_ev = core.next_event_time();
         match (t_arr, t_ev) {
             (None, None) => break,
             (Some(ta), te) if te.map_or(true, |te| ta <= te) => {
                 core.advance_to(ta);
-                while let Some(Reverse((TimeKey(t), src))) =
-                    arrivals.peek().copied()
-                {
+                while let Some((t, src)) = arrivals.peek() {
                     if t > ta {
                         break;
                     }
@@ -668,13 +682,13 @@ pub(crate) fn shed_arrival(
     t: f64,
     cfg: &AdmissionConfig,
     tenants: &mut [TenantOutcome],
-    arrivals: &mut crate::coordinator::driver::ArrivalHeap,
+    arrivals: &mut crate::coordinator::driver::ArrivalQueue,
 ) {
     tenants[src].shed += 1;
     if wl.sources[src].arrival.is_closed_loop() {
         let retry = t + cfg.shed_backoff_us;
         if retry < wl.duration_us {
-            arrivals.push(Reverse((TimeKey(retry), src)));
+            arrivals.push(retry, src);
         }
     }
 }
@@ -690,7 +704,7 @@ pub(crate) fn record_served(
     arr: f64,
     now: f64,
     tenants: &mut [TenantOutcome],
-    arrivals: &mut crate::coordinator::driver::ArrivalHeap,
+    arrivals: &mut crate::coordinator::driver::ArrivalQueue,
 ) {
     let lat = now - arr;
     let out = &mut tenants[src];
@@ -700,7 +714,7 @@ pub(crate) fn record_served(
         out.deadline_misses += 1;
     }
     if wl.sources[src].arrival.is_closed_loop() && now < wl.duration_us {
-        arrivals.push(Reverse((TimeKey(now), src)));
+        arrivals.push(now, src);
     }
 }
 

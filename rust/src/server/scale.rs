@@ -1,0 +1,469 @@
+//! 100k-tenant scale serving (ISSUE 7 tentpole, layer 3): drives a
+//! [`ScaleSpec`] population through one device with **constant memory
+//! per tenant** — no per-tenant arrival vectors (one lazy
+//! [`ArrivalStream`] each, the timing wheel holds exactly one pending
+//! arrival per tenant) and no per-tenant latency vectors above
+//! [`SKETCH_TENANT_THRESHOLD`](crate::coordinator::stats::SKETCH_TENANT_THRESHOLD)
+//! (the P² [`LatencyAccum`] sketch,
+//! ~200 bytes flat, replaces the exact list).
+//!
+//! Determinism contract: a [`ScaleGridReport`] is byte-identical across
+//! `--threads` values and repeated runs — no host timing enters the
+//! JSON, every tenant draws from its own derived-seed RNG, and grid
+//! cells land in position-stable slots. CI pins the 10k-tenant document
+//! with a 4-thread-vs-1-thread `cmp`.
+
+use std::collections::BTreeMap;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::stats::{LatencyAccum, StreamingSummary};
+use crate::coordinator::sweep::{derive_seed, run_indexed};
+use crate::gpu::spec::GpuSpec;
+use crate::runtime::json::Json;
+use crate::runtime::timewheel::TimingWheel;
+use crate::server::online::DeviceCore;
+use crate::workloads::arrival::ArrivalStream;
+use crate::workloads::mdtb::{Source, Workload};
+use crate::workloads::models;
+use crate::workloads::rng::Rng;
+use crate::workloads::scenario::{scale_spec, ScaleSpec};
+
+/// Per-tier aggregate outcome of a scale run (constant memory: counts
+/// plus one [`StreamingSummary`]).
+#[derive(Debug, Clone)]
+pub struct TierOutcome {
+    /// Tier name (from the [`ScaleSpec`] tier table).
+    pub name: String,
+    /// Tenants in the tier.
+    pub tenants: usize,
+    /// Arrivals delivered for the tier.
+    pub offered: u64,
+    /// Requests completed for the tier.
+    pub served: u64,
+    /// Completions past the tier deadline.
+    pub deadline_misses: u64,
+    /// Streaming latency summary (mean exact; p50/p99 are P² estimates
+    /// once the tier exceeds five samples).
+    pub latency: StreamingSummary,
+}
+
+/// One scale-run cell (one tenant count on one device).
+#[derive(Debug, Clone)]
+pub struct ScaleReport {
+    /// Scenario name (`scale-{tenants}t`).
+    pub name: String,
+    /// GPU preset name.
+    pub platform: String,
+    /// Coordinator served through.
+    pub scheduler: String,
+    /// Tenant count.
+    pub tenants: usize,
+    /// Arrival window (us).
+    pub duration_us: f64,
+    /// Master seed.
+    pub seed: u64,
+    /// Aggregate offered load (Hz) of the spec.
+    pub aggregate_hz: f64,
+    /// Simulated span until drain (us).
+    pub span_us: f64,
+    /// Simulator events processed by the engine.
+    pub events: u64,
+    /// Total arrivals delivered.
+    pub offered: u64,
+    /// Total requests completed.
+    pub served: u64,
+    /// Total completions past their tier deadline.
+    pub deadline_misses: u64,
+    /// Tenants whose latency accounting uses the P² sketch (all of
+    /// them above
+    /// [`SKETCH_TENANT_THRESHOLD`](crate::coordinator::stats::SKETCH_TENANT_THRESHOLD),
+    /// none below).
+    pub sketch_tenants: usize,
+    /// Latency-accounting bytes per tenant — the quantity the sketch
+    /// holds constant while the exact representation grows with
+    /// served requests.
+    pub bytes_per_tenant: f64,
+    /// Highest per-tenant p99 latency (us) among tenants that served
+    /// at least one request (NaN, serialized `null`, if none did).
+    pub worst_tenant_p99_us: f64,
+    /// Per-tier aggregates, in tier-table order.
+    pub tiers: Vec<TierOutcome>,
+}
+
+impl ScaleReport {
+    /// This cell as a canonical-JSON value (one `cells[]` row of
+    /// `BENCH_scale.json`). Deterministic: no host-timing field.
+    pub fn to_json_value(&self) -> Json {
+        let num = Json::Num;
+        let mut m = BTreeMap::new();
+        m.insert("name".into(), Json::Str(self.name.clone()));
+        m.insert("platform".into(), Json::Str(self.platform.clone()));
+        m.insert("scheduler".into(), Json::Str(self.scheduler.clone()));
+        m.insert("tenants".into(), num(self.tenants as f64));
+        m.insert("duration_us".into(), num(self.duration_us));
+        m.insert("seed".into(), num(self.seed as f64));
+        m.insert("aggregate_hz".into(), num(self.aggregate_hz));
+        m.insert("span_us".into(), num(self.span_us));
+        m.insert("events".into(), num(self.events as f64));
+        m.insert("offered".into(), num(self.offered as f64));
+        m.insert("served".into(), num(self.served as f64));
+        m.insert("deadline_misses".into(),
+                 num(self.deadline_misses as f64));
+        m.insert("sketch_tenants".into(), num(self.sketch_tenants as f64));
+        m.insert("bytes_per_tenant".into(), num(self.bytes_per_tenant));
+        m.insert("worst_tenant_p99_us".into(),
+                 num(self.worst_tenant_p99_us));
+        m.insert(
+            "tiers".into(),
+            Json::Arr(
+                self.tiers
+                    .iter()
+                    .map(|t| {
+                        let mut tm = BTreeMap::new();
+                        tm.insert("name".into(), Json::Str(t.name.clone()));
+                        tm.insert("tenants".into(),
+                                  num(t.tenants as f64));
+                        tm.insert("offered".into(), num(t.offered as f64));
+                        tm.insert("served".into(), num(t.served as f64));
+                        tm.insert("deadline_misses".into(),
+                                  num(t.deadline_misses as f64));
+                        tm.insert("mean_us".into(), num(t.latency.mean()));
+                        tm.insert("p50_us".into(), num(t.latency.p50()));
+                        tm.insert("p99_us".into(), num(t.latency.p99()));
+                        Json::Obj(tm)
+                    })
+                    .collect(),
+            ),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// The tenant-count grid (the `BENCH_scale.json` document).
+#[derive(Debug, Clone)]
+pub struct ScaleGridReport {
+    /// GPU preset name.
+    pub platform: String,
+    /// Coordinator served through.
+    pub scheduler: String,
+    /// Arrival window per cell (us).
+    pub duration_us: f64,
+    /// Tenant counts, in run order.
+    pub tenant_counts: Vec<usize>,
+    /// Cells in tenant-count order regardless of thread interleaving.
+    pub cells: Vec<ScaleReport>,
+}
+
+impl ScaleGridReport {
+    /// The cell for a tenant count, if it ran.
+    pub fn cell(&self, tenants: usize) -> Option<&ScaleReport> {
+        self.cells.iter().find(|c| c.tenants == tenants)
+    }
+
+    /// The canonical `BENCH_scale.json` document: sorted keys, no
+    /// whitespace, no host timing — byte-deterministic across thread
+    /// counts and repeats (schema in EXPERIMENTS.md §Scale).
+    pub fn to_json(&self) -> String {
+        let mut obj = BTreeMap::new();
+        obj.insert("bench".into(), Json::Str("scale".into()));
+        obj.insert("platform".into(), Json::Str(self.platform.clone()));
+        obj.insert("scheduler".into(), Json::Str(self.scheduler.clone()));
+        obj.insert("duration_us".into(), Json::Num(self.duration_us));
+        obj.insert(
+            "tenant_counts".into(),
+            Json::Arr(
+                self.tenant_counts
+                    .iter()
+                    .map(|t| Json::Num(*t as f64))
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "cells".into(),
+            Json::Arr(self.cells.iter().map(|c| c.to_json_value()).collect()),
+        );
+        obj.insert("version".into(), Json::Num(1.0));
+        Json::Obj(obj).to_canonical_string()
+    }
+}
+
+/// Materialize the runnable [`Workload`] of a compiled scale spec with
+/// **shared model descriptors**: each distinct model name resolves to
+/// one `Arc`, cloned across its tenants, so 100k tenants cost O(models)
+/// model memory and [`DeviceCore::new`] interns each model once (its
+/// pointer-keyed cache hits on the shared `Arc`).
+fn build_scale_workload(spec: &ScaleSpec) -> Workload {
+    let sc = spec.compile();
+    let mut cache: HashMap<&str, Arc<models::ModelDesc>> = HashMap::new();
+    let sources = sc
+        .sources
+        .iter()
+        .map(|s| Source {
+            model: cache
+                .entry(s.model.as_str())
+                .or_insert_with(|| {
+                    Arc::new(models::by_name(&s.model).unwrap_or_else(
+                        || {
+                            panic!(
+                                "unknown model {} in scale spec {}",
+                                s.model, spec.name
+                            )
+                        },
+                    ))
+                })
+                .clone(),
+            arrival: s.arrival.clone(),
+            criticality: s.criticality,
+            deadline_us: s.deadline_us,
+        })
+        .collect();
+    Workload {
+        name: sc.name.clone(),
+        sources,
+        duration_us: sc.duration_us,
+        seed: sc.seed,
+    }
+}
+
+/// Per-tenant arrival RNG seed: derived twice from the master seed so
+/// it never collides with the tenant's rate-weight draw
+/// (`derive_seed(seed, i + 1)`, see `ScaleSpec::tenant_weight`) —
+/// a tenant's first inter-arrival gap must not be a function of its
+/// rate weight.
+fn arrival_seed(master: u64, tenant: usize) -> u64 {
+    derive_seed(derive_seed(master, tenant as u32 + 1), 1)
+}
+
+/// Run one scale cell: `spec`'s population on one `gpu` device under
+/// `scheduler`, pulling arrivals lazily until the window closes and the
+/// device drains. Deterministic for (spec, gpu, scheduler).
+pub fn run_scale(gpu: &GpuSpec, spec: &ScaleSpec, scheduler: &str)
+                 -> Result<ScaleReport, String> {
+    spec.assert_valid();
+    let wl = build_scale_workload(spec);
+    let n = wl.sources.len();
+    let mut core = DeviceCore::new(gpu, &wl, scheduler)?;
+
+    // One lazy stream + one RNG per tenant; the wheel holds at most one
+    // pending arrival per tenant, so queue memory is O(tenants) flat
+    // and never O(total arrivals).
+    let mut streams: Vec<ArrivalStream> = wl
+        .sources
+        .iter()
+        .map(|s| s.arrival.stream(wl.duration_us))
+        .collect();
+    let mut rngs: Vec<Rng> = (0..n)
+        .map(|i| Rng::new(arrival_seed(wl.seed, i)))
+        .collect();
+    let mut wheel = TimingWheel::new();
+    for i in 0..n {
+        if let Some(t) = streams[i].next(&mut rngs[i]) {
+            wheel.push(t, i);
+        }
+    }
+
+    // Per-tenant accounting: counters plus a LatencyAccum that switches
+    // to the constant-size sketch above the committed threshold.
+    let mut accums: Vec<LatencyAccum> =
+        (0..n).map(|_| LatencyAccum::for_tenants(n)).collect();
+    let mut offered = vec![0u64; n];
+    let mut served = vec![0u64; n];
+    let mut misses = vec![0u64; n];
+    let counts = spec.tier_counts();
+    let tier_of: Vec<usize> = counts
+        .iter()
+        .enumerate()
+        .flat_map(|(t, c)| std::iter::repeat(t).take(*c))
+        .collect();
+    let mut tier_lat: Vec<StreamingSummary> =
+        (0..counts.len()).map(|_| StreamingSummary::new()).collect();
+
+    let mut next_id: u64 = 1;
+    loop {
+        let t_arr = wheel.peek().map(|(t, _)| t);
+        let t_ev = core.next_event_time();
+        match (t_arr, t_ev) {
+            (None, None) => break,
+            (Some(ta), te) if te.map_or(true, |te| ta <= te) => {
+                core.advance_to(ta);
+                while let Some((t, src)) = wheel.peek() {
+                    if t > ta {
+                        break;
+                    }
+                    wheel.pop();
+                    offered[src] += 1;
+                    core.submit(&wl, src, t, next_id);
+                    next_id += 1;
+                    // Streams are strictly in-order per tenant, so the
+                    // replacement arrival can never precede `t`.
+                    if let Some(nt) = streams[src].next(&mut rngs[src]) {
+                        wheel.push(nt, src);
+                    }
+                }
+                core.sample_queue_depth();
+            }
+            (_, Some(_)) => {
+                core.step(|_id, src, arr, now| {
+                    let lat = now - arr;
+                    served[src] += 1;
+                    accums[src].record(lat);
+                    tier_lat[tier_of[src]].record(lat);
+                    if wl.sources[src].deadline_us.is_some_and(|d| lat > d)
+                    {
+                        misses[src] += 1;
+                    }
+                });
+            }
+            _ => unreachable!("scale loop: impossible arrival/event state"),
+        }
+    }
+
+    let (span_us, metrics) = core.finish();
+
+    let sketch_tenants =
+        accums.iter().filter(|a| a.is_sketch()).count();
+    let bytes: usize = accums.iter().map(|a| a.bytes()).sum();
+    let worst_tenant_p99_us = accums
+        .iter()
+        .filter(|a| a.count() > 0)
+        .map(|a| a.p99())
+        .fold(f64::NAN, |acc, p| {
+            if acc.is_nan() || p > acc { p } else { acc }
+        });
+
+    let mut tiers = Vec::with_capacity(counts.len());
+    let mut idx = 0usize;
+    for (t, c) in counts.iter().enumerate() {
+        let range = idx..idx + c;
+        tiers.push(TierOutcome {
+            name: spec.tiers[t].name.clone(),
+            tenants: *c,
+            offered: offered[range.clone()].iter().sum(),
+            served: served[range.clone()].iter().sum(),
+            deadline_misses: misses[range].iter().sum(),
+            latency: tier_lat[t].clone(),
+        });
+        idx += c;
+    }
+
+    Ok(ScaleReport {
+        name: spec.name.clone(),
+        platform: gpu.name.clone(),
+        scheduler: scheduler.to_string(),
+        tenants: n,
+        duration_us: wl.duration_us,
+        seed: wl.seed,
+        aggregate_hz: spec.aggregate_hz,
+        span_us,
+        events: metrics.events,
+        offered: offered.iter().sum(),
+        served: served.iter().sum(),
+        deadline_misses: misses.iter().sum(),
+        sketch_tenants,
+        bytes_per_tenant: bytes as f64 / n as f64,
+        worst_tenant_p99_us,
+        tiers,
+    })
+}
+
+/// Run the tenant-count grid (the standard [`scale_spec`] preset per
+/// count) across a worker pool. Cells land in position-stable slots, so
+/// the report — and its `BENCH_scale.json` bytes — are identical for
+/// any `threads` value.
+pub fn run_scale_grid(gpu: &GpuSpec, tenant_counts: &[usize],
+                      duration_us: f64, scheduler: &str, threads: usize)
+                      -> Result<ScaleGridReport, String> {
+    let n = tenant_counts.len();
+    let slots: Vec<Mutex<Option<Result<ScaleReport, String>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    run_indexed(n, threads, |i| {
+        let spec = scale_spec(tenant_counts[i], duration_us);
+        let r = run_scale(gpu, &spec, scheduler);
+        *slots[i].lock().unwrap() = Some(r);
+    });
+    let mut cells = Vec::with_capacity(n);
+    for s in slots {
+        cells.push(s.into_inner().unwrap().expect("cell ran")?);
+    }
+    Ok(ScaleGridReport {
+        platform: gpu.name.clone(),
+        scheduler: scheduler.to_string(),
+        duration_us,
+        tenant_counts: tenant_counts.to_vec(),
+        cells,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::stats::SKETCH_TENANT_THRESHOLD;
+
+    fn gpu() -> GpuSpec {
+        GpuSpec::by_name("rtx2060").unwrap()
+    }
+
+    #[test]
+    fn small_scale_run_serves_everything_exactly() {
+        // 10 tenants sit below the sketch threshold: every tenant keeps
+        // exact latencies and the run drains fully.
+        let spec = scale_spec(10, 50_000.0);
+        assert!(spec.tenants < SKETCH_TENANT_THRESHOLD);
+        let r = run_scale(&gpu(), &spec, "miriam").unwrap();
+        assert_eq!(r.tenants, 10);
+        assert_eq!(r.sketch_tenants, 0);
+        assert!(r.offered > 0, "no arrivals in {}us", r.duration_us);
+        assert_eq!(r.served, r.offered);
+        assert_eq!(r.tiers.len(), 3);
+        let tier_offered: u64 = r.tiers.iter().map(|t| t.offered).sum();
+        assert_eq!(tier_offered, r.offered);
+        assert!(r.span_us >= 0.0);
+    }
+
+    #[test]
+    fn large_scale_run_uses_sketches_and_constant_tenant_bytes() {
+        let spec = scale_spec(500, 50_000.0);
+        assert!(spec.tenants >= SKETCH_TENANT_THRESHOLD);
+        let r = run_scale(&gpu(), &spec, "miriam").unwrap();
+        assert_eq!(r.sketch_tenants, 500);
+        // Sketch accounting is a flat struct: per-tenant bytes must not
+        // exceed one LatencyAccum regardless of how many were served.
+        assert!(
+            r.bytes_per_tenant
+                <= std::mem::size_of::<LatencyAccum>() as f64,
+            "bytes/tenant {}",
+            r.bytes_per_tenant
+        );
+        assert_eq!(r.served, r.offered);
+    }
+
+    #[test]
+    fn scale_run_is_deterministic() {
+        let spec = scale_spec(200, 30_000.0);
+        let a = run_scale(&gpu(), &spec, "miriam").unwrap();
+        let b = run_scale(&gpu(), &spec, "miriam").unwrap();
+        assert_eq!(a.to_json_value().to_canonical_string(),
+                   b.to_json_value().to_canonical_string());
+    }
+
+    #[test]
+    fn grid_is_thread_invariant() {
+        let counts = [50usize, 200];
+        let a = run_scale_grid(&gpu(), &counts, 20_000.0, "miriam", 1)
+            .unwrap();
+        let b = run_scale_grid(&gpu(), &counts, 20_000.0, "miriam", 4)
+            .unwrap();
+        assert_eq!(a.to_json(), b.to_json());
+        assert!(a.cell(50).is_some() && a.cell(200).is_some());
+        let doc = a.to_json();
+        assert!(doc.contains("\"bench\":\"scale\""));
+        assert!(!doc.contains("inf") && !doc.contains("NaN"));
+    }
+
+    #[test]
+    fn unknown_scheduler_is_an_error() {
+        let spec = scale_spec(10, 10_000.0);
+        assert!(run_scale(&gpu(), &spec, "nope").is_err());
+    }
+}

@@ -1,11 +1,119 @@
 //! Request arrival processes (paper §8.1.2 plus the scenario-harness
 //! extensions): uniform (fixed frequency), Poisson (event-driven),
 //! closed-loop (always one outstanding request), on/off MMPP bursts,
-//! linear rate ramps, and trace replay of a recorded arrival list.
+//! linear rate ramps, trace replay of a recorded arrival list, and
+//! rate-modulated Poisson (diurnal curve + flash crowd, ISSUE 7).
+//!
+//! Every process has two equivalent forms: [`Arrival::schedule`]
+//! materializes the arrival `Vec` up front (the small-tenant paths), and
+//! [`Arrival::stream`] yields the *same* arrivals lazily, one at a time,
+//! drawing from the RNG in the exact same order — the 100k-tenant scale
+//! path keeps one pending arrival per tenant instead of a pre-drawn
+//! vector per tenant. The draw-for-draw equivalence is pinned by the
+//! `stream_matches_schedule_*` tests below.
 
 use std::sync::Arc;
 
 use crate::workloads::rng::Rng;
+
+/// Deterministic rate-modulation curve for [`Arrival::Modulated`]
+/// (ISSUE 7): a sinusoidal "diurnal" factor plus one optional
+/// multiplicative flash-crowd window.
+///
+/// The instantaneous rate at time `t` is
+/// `rate_hz * (1 + depth * sin(2π t / period_us)) * boost(t)` where
+/// `boost(t)` is `flash_boost` inside
+/// `[flash_at_us, flash_at_us + flash_dur_us)` and 1 elsewhere.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RateCurve {
+    /// Diurnal period (us); must be positive.
+    pub period_us: f64,
+    /// Diurnal modulation depth in [0, 1]: 0 = flat, 1 = rate swings
+    /// between 0 and 2× the base.
+    pub depth: f64,
+    /// Flash-crowd start (us, ≥ 0).
+    pub flash_at_us: f64,
+    /// Flash-crowd duration (us, ≥ 0; 0 disables the flash).
+    pub flash_dur_us: f64,
+    /// Multiplicative rate boost inside the flash window (≥ 1).
+    pub flash_boost: f64,
+}
+
+impl RateCurve {
+    /// A flat curve (factor 1 everywhere) — Modulated degenerates to
+    /// plain Poisson statistics.
+    pub fn flat() -> RateCurve {
+        RateCurve {
+            period_us: 1.0,
+            depth: 0.0,
+            flash_at_us: 0.0,
+            flash_dur_us: 0.0,
+            flash_boost: 1.0,
+        }
+    }
+
+    /// Panics unless every field is finite and within its documented
+    /// range (thinning correctness depends on these bounds).
+    pub fn assert_valid(&self) {
+        assert!(self.period_us.is_finite() && self.period_us > 0.0,
+                "RateCurve.period_us must be positive");
+        assert!((0.0..=1.0).contains(&self.depth),
+                "RateCurve.depth must be in [0, 1]");
+        assert!(self.flash_at_us.is_finite() && self.flash_at_us >= 0.0,
+                "RateCurve.flash_at_us must be non-negative");
+        assert!(self.flash_dur_us.is_finite() && self.flash_dur_us >= 0.0,
+                "RateCurve.flash_dur_us must be non-negative");
+        assert!(self.flash_boost.is_finite() && self.flash_boost >= 1.0,
+                "RateCurve.flash_boost must be >= 1");
+    }
+
+    /// True when `t` falls inside the flash-crowd window.
+    fn in_flash(&self, t: f64) -> bool {
+        t >= self.flash_at_us && t < self.flash_at_us + self.flash_dur_us
+    }
+
+    /// Instantaneous modulation factor at `t` (≥ 0).
+    pub fn factor(&self, t: f64) -> f64 {
+        let diurnal = 1.0
+            + self.depth
+                * (2.0 * std::f64::consts::PI * t / self.period_us).sin();
+        let boost = if self.in_flash(t) { self.flash_boost } else { 1.0 };
+        diurnal * boost
+    }
+
+    /// Piecewise-constant upper bound on [`factor`](Self::factor) over
+    /// the envelope segment containing `t` — the thinning envelope.
+    fn envelope_factor(&self, t: f64) -> f64 {
+        let boost = if self.in_flash(t) { self.flash_boost } else { 1.0 };
+        (1.0 + self.depth) * boost
+    }
+
+    /// The next time after `t` where the envelope changes (flash start
+    /// or end), or +∞ when none remains.
+    fn next_envelope_boundary(&self, t: f64) -> f64 {
+        if t < self.flash_at_us {
+            self.flash_at_us
+        } else if self.in_flash(t) {
+            self.flash_at_us + self.flash_dur_us
+        } else {
+            f64::INFINITY
+        }
+    }
+
+    /// Window-averaged modulation factor over `[0, duration_us)` — the
+    /// diurnal term averages to ~1 over whole periods, the flash window
+    /// contributes its overlap. Used by
+    /// [`Arrival::nominal_rate_hz`].
+    pub fn mean_factor(&self, duration_us: f64) -> f64 {
+        if duration_us <= 0.0 {
+            return 1.0;
+        }
+        let flash_end =
+            (self.flash_at_us + self.flash_dur_us).min(duration_us);
+        let overlap = (flash_end - self.flash_at_us).max(0.0);
+        1.0 + (self.flash_boost - 1.0) * overlap / duration_us
+    }
+}
 
 /// How a client issues inference requests.
 #[derive(Debug, Clone, PartialEq)]
@@ -38,12 +146,29 @@ pub enum Arrival {
     /// Replay of a recorded arrival-time list (us, ascending). Arrivals
     /// at or beyond the schedule window are dropped.
     Replay { times: Arc<Vec<f64>> },
+    /// Inhomogeneous Poisson with a deterministic [`RateCurve`]
+    /// (diurnal modulation + flash crowd), sampled by thinning against a
+    /// piecewise-constant envelope (ISSUE 7 scale tenants). `rate_hz` is
+    /// the un-modulated base rate; the curve is shared (`Arc`) across a
+    /// whole tenant tier.
+    Modulated {
+        /// Base rate (Hz) before modulation.
+        rate_hz: f64,
+        /// The shared modulation curve.
+        curve: Arc<RateCurve>,
+    },
 }
 
 impl Arrival {
     /// Wrap a recorded arrival list (sorted here) for replay.
+    ///
+    /// NaN-safe (ISSUE 7 bugfix): sorts with [`f64::total_cmp`] — the
+    /// old `partial_cmp(..).unwrap()` panicked on NaN input. A NaN time
+    /// sorts after +∞ and is then dropped by [`schedule`](Self::schedule)
+    /// (`NaN < duration` is false), so it can never reach the arrival
+    /// queue.
     pub fn replay(mut times: Vec<f64>) -> Arrival {
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times.sort_by(f64::total_cmp);
         Arrival::Replay { times: Arc::new(times) }
     }
 
@@ -144,6 +269,104 @@ impl Arrival {
             Arrival::Replay { times } => {
                 times.iter().copied().filter(|t| *t < duration_us).collect()
             }
+            Arrival::Modulated { .. } => {
+                // Single implementation: the materialized schedule IS the
+                // collected stream, so the two forms cannot diverge.
+                let mut s = self.stream(duration_us);
+                let mut out = Vec::new();
+                while let Some(t) = s.next(rng) {
+                    out.push(t);
+                }
+                out
+            }
+        }
+    }
+
+    /// Lazy form of [`schedule`](Self::schedule): an iterator-style
+    /// stream yielding the same arrivals in the same order, drawing from
+    /// the RNG in the exact same sequence (pinned by the
+    /// `stream_matches_schedule_*` tests). The scale path holds one
+    /// stream per tenant — O(1) memory — instead of a pre-drawn `Vec`.
+    ///
+    /// Performs the same argument validation as `schedule` (panics on
+    /// the same inputs). After the first `None`, further calls keep
+    /// returning `None` without consuming RNG draws beyond what
+    /// `schedule` would have drawn.
+    pub fn stream(&self, duration_us: f64) -> ArrivalStream {
+        match self {
+            Arrival::Uniform { rate_hz } => {
+                assert!(*rate_hz > 0.0);
+                ArrivalStream::Periodic {
+                    period: 1e6 / rate_hz,
+                    next: 0.0,
+                    end: duration_us,
+                }
+            }
+            Arrival::Poisson { rate_hz } => {
+                assert!(*rate_hz > 0.0);
+                ArrivalStream::Poisson {
+                    lambda: rate_hz / 1e6,
+                    t: 0.0,
+                    started: false,
+                    end: duration_us,
+                }
+            }
+            Arrival::ClosedLoop { clients } => {
+                ArrivalStream::Seeds { remaining: *clients }
+            }
+            Arrival::Mmpp { on_hz, off_hz, mean_on_us, mean_off_us } => {
+                assert!(*on_hz >= 0.0 && *off_hz >= 0.0);
+                assert!(on_hz + off_hz > 0.0);
+                assert!(*mean_on_us > 0.0 && *mean_off_us > 0.0);
+                ArrivalStream::Mmpp {
+                    on_hz: *on_hz,
+                    off_hz: *off_hz,
+                    mean_on_us: *mean_on_us,
+                    mean_off_us: *mean_off_us,
+                    t: 0.0,
+                    on: true,
+                    t_switch: 0.0,
+                    started: false,
+                    end: duration_us,
+                }
+            }
+            Arrival::Ramp { start_hz, end_hz } => {
+                assert!(*start_hz >= 0.0 && *end_hz >= 0.0);
+                assert!(start_hz + end_hz > 0.0);
+                assert!(duration_us > 0.0);
+                let r0 = start_hz / 1e6;
+                let r1 = end_hz / 1e6;
+                let slope = (r1 - r0) / duration_us;
+                if slope.abs() < 1e-18 {
+                    ArrivalStream::Periodic {
+                        period: 1.0 / r0,
+                        next: 0.0,
+                        end: duration_us,
+                    }
+                } else {
+                    ArrivalStream::Ramp {
+                        r0,
+                        slope,
+                        k: 0,
+                        end: duration_us,
+                    }
+                }
+            }
+            Arrival::Replay { times } => ArrivalStream::Replay {
+                times: times.clone(),
+                idx: 0,
+                end: duration_us,
+            },
+            Arrival::Modulated { rate_hz, curve } => {
+                assert!(*rate_hz > 0.0);
+                curve.assert_valid();
+                ArrivalStream::Modulated {
+                    rate: rate_hz / 1e6,
+                    curve: curve.clone(),
+                    t: 0.0,
+                    end: duration_us,
+                }
+            }
         }
     }
 
@@ -154,14 +377,17 @@ impl Arrival {
     }
 
     /// Nominal mean arrival rate (Hz) where one is defined: the long-run
-    /// average for stochastic processes, the window average for ramps.
-    /// `None` for closed-loop (rate is completion-driven) and replay
-    /// (rate is whatever the recording contains).
+    /// average for stochastic processes, the window average for ramps,
+    /// the un-modulated base rate for [`Arrival::Modulated`] (the
+    /// diurnal term averages to the base over whole periods; flash
+    /// windows are transient by construction). `None` for closed-loop
+    /// (rate is completion-driven) and replay (rate is whatever the
+    /// recording contains).
     pub fn nominal_rate_hz(&self) -> Option<f64> {
         match self {
-            Arrival::Uniform { rate_hz } | Arrival::Poisson { rate_hz } => {
-                Some(*rate_hz)
-            }
+            Arrival::Uniform { rate_hz }
+            | Arrival::Poisson { rate_hz }
+            | Arrival::Modulated { rate_hz, .. } => Some(*rate_hz),
             Arrival::Mmpp { on_hz, off_hz, mean_on_us, mean_off_us } => Some(
                 (on_hz * mean_on_us + off_hz * mean_off_us)
                     / (mean_on_us + mean_off_us),
@@ -170,6 +396,182 @@ impl Arrival {
                 Some(0.5 * (start_hz + end_hz))
             }
             Arrival::ClosedLoop { .. } | Arrival::Replay { .. } => None,
+        }
+    }
+}
+
+/// Lazy arrival generator produced by [`Arrival::stream`]. Each call to
+/// [`next`](Self::next) yields one arrival time (us) or `None` when the
+/// window `[0, end)` is exhausted, drawing from the caller's RNG in the
+/// exact sequence [`Arrival::schedule`] would — so a stream and a
+/// pre-drawn schedule over the same seed are interchangeable draw for
+/// draw (pinned by the `stream_matches_schedule_*` tests). A stream is
+/// a few machine words (plus a shared `Arc` for replay/modulated);
+/// `next` never allocates.
+#[derive(Debug, Clone)]
+pub enum ArrivalStream {
+    /// Fixed-period arrivals starting at t=0 ([`Arrival::Uniform`] and
+    /// flat [`Arrival::Ramp`]).
+    Periodic { period: f64, next: f64, end: f64 },
+    /// Homogeneous Poisson ([`Arrival::Poisson`]); `lambda` is events
+    /// per us. `started` distinguishes the first absolute draw from the
+    /// subsequent incremental ones.
+    Poisson { lambda: f64, t: f64, started: bool, end: f64 },
+    /// Closed-loop seed arrivals: one t=0 arrival per client, ignoring
+    /// the window (exactly `schedule`'s `vec![0.0; clients]`).
+    Seeds { remaining: u32 },
+    /// Two-state MMPP ([`Arrival::Mmpp`]); the first call draws the
+    /// initial on-sojourn length, matching `schedule`'s draw order.
+    Mmpp {
+        on_hz: f64,
+        off_hz: f64,
+        mean_on_us: f64,
+        mean_off_us: f64,
+        t: f64,
+        on: bool,
+        t_switch: f64,
+        started: bool,
+        end: f64,
+    },
+    /// Non-flat linear ramp: arrival `k` inverts the cumulative
+    /// intensity `L(t) = r0*t + slope*t^2/2` at `L(t) = k`.
+    Ramp { r0: f64, slope: f64, k: u64, end: f64 },
+    /// Recorded-trace replay; entries at or beyond `end` are skipped
+    /// (filter semantics, not truncation — the recording need not be
+    /// fully in-window even though [`Arrival::replay`] sorts it).
+    Replay { times: Arc<Vec<f64>>, idx: usize, end: f64 },
+    /// Inhomogeneous Poisson by thinning ([`Arrival::Modulated`]);
+    /// `rate` is the base rate in events per us. Candidates are drawn
+    /// against the piecewise-constant envelope and accepted with
+    /// probability `factor(t) / envelope_factor(t)`; crossing an
+    /// envelope boundary restarts the exponential draw there
+    /// (memorylessness makes this statistically exact).
+    Modulated { rate: f64, curve: Arc<RateCurve>, t: f64, end: f64 },
+}
+
+impl ArrivalStream {
+    /// Yield the next arrival time (us), or `None` when the window is
+    /// exhausted. After the first `None`, further calls return `None`
+    /// without drawing from the RNG.
+    pub fn next(&mut self, rng: &mut Rng) -> Option<f64> {
+        match self {
+            ArrivalStream::Periodic { period, next, end } => {
+                if *next < *end {
+                    let t = *next;
+                    *next += *period;
+                    Some(t)
+                } else {
+                    None
+                }
+            }
+            ArrivalStream::Poisson { lambda, t, started, end } => {
+                let nt = if !*started {
+                    *started = true;
+                    rng.next_exp(*lambda)
+                } else {
+                    if *t >= *end {
+                        return None; // exhausted on a previous call
+                    }
+                    *t + rng.next_exp(*lambda)
+                };
+                *t = nt;
+                if nt < *end { Some(nt) } else { None }
+            }
+            ArrivalStream::Seeds { remaining } => {
+                if *remaining > 0 {
+                    *remaining -= 1;
+                    Some(0.0)
+                } else {
+                    None
+                }
+            }
+            ArrivalStream::Mmpp {
+                on_hz,
+                off_hz,
+                mean_on_us,
+                mean_off_us,
+                t,
+                on,
+                t_switch,
+                started,
+                end,
+            } => {
+                if !*started {
+                    *started = true;
+                    *t_switch = rng.next_exp(1.0 / *mean_on_us);
+                }
+                loop {
+                    if *t >= *end {
+                        return None;
+                    }
+                    let hz = if *on { *on_hz } else { *off_hz };
+                    let rate = hz / 1e6;
+                    let dt = if rate > 0.0 {
+                        rng.next_exp(rate)
+                    } else {
+                        f64::INFINITY
+                    };
+                    // Memorylessness makes re-drawing the arrival gap
+                    // after a state switch statistically exact.
+                    if *t + dt < *t_switch {
+                        *t += dt;
+                        if *t < *end {
+                            return Some(*t);
+                        }
+                    } else {
+                        *t = *t_switch;
+                        *on = !*on;
+                        let mean =
+                            if *on { *mean_on_us } else { *mean_off_us };
+                        *t_switch = *t + rng.next_exp(1.0 / mean);
+                    }
+                }
+            }
+            ArrivalStream::Ramp { r0, slope, k, end } => {
+                let disc = *r0 * *r0 + 2.0 * *slope * *k as f64;
+                if disc < 0.0 {
+                    return None; // decreasing ramp ran out of intensity
+                }
+                let t = (disc.sqrt() - *r0) / *slope;
+                if t >= *end {
+                    return None;
+                }
+                *k += 1;
+                Some(t)
+            }
+            ArrivalStream::Replay { times, idx, end } => {
+                while *idx < times.len() {
+                    let t = times[*idx];
+                    *idx += 1;
+                    if t < *end {
+                        return Some(t);
+                    }
+                }
+                None
+            }
+            ArrivalStream::Modulated { rate, curve, t, end } => {
+                loop {
+                    if *t >= *end {
+                        return None;
+                    }
+                    let env = curve.envelope_factor(*t);
+                    let boundary = curve.next_envelope_boundary(*t);
+                    let nt = *t + rng.next_exp(*rate * env);
+                    if boundary.is_finite() && nt >= boundary {
+                        // Envelope changes before the candidate lands:
+                        // restart the draw at the boundary.
+                        *t = boundary;
+                        continue;
+                    }
+                    *t = nt;
+                    if nt >= *end {
+                        return None;
+                    }
+                    if rng.next_f64() * env < curve.factor(nt) {
+                        return Some(nt);
+                    }
+                }
+            }
         }
     }
 }
@@ -360,5 +762,189 @@ mod tests {
         );
         assert_eq!(Arrival::ClosedLoop { clients: 2 }.nominal_rate_hz(), None);
         assert_eq!(Arrival::replay(vec![]).nominal_rate_hz(), None);
+        assert_eq!(
+            Arrival::Modulated {
+                rate_hz: 7.0,
+                curve: Arc::new(RateCurve::flat()),
+            }
+            .nominal_rate_hz(),
+            Some(7.0)
+        );
+    }
+
+    // --- ISSUE 7: the lazy stream form must match the materialized
+    // schedule draw for draw (same arrivals AND same RNG end state).
+
+    /// Collect a stream to exhaustion and check it equals `schedule`
+    /// over an identically-seeded RNG, then prove both RNGs are in the
+    /// same state by comparing one more draw.
+    fn assert_stream_matches_schedule(a: &Arrival, duration_us: f64, seed: u64) {
+        let mut rng_sched = Rng::new(seed);
+        let expect = a.schedule(duration_us, &mut rng_sched);
+        let mut rng_stream = Rng::new(seed);
+        let mut s = a.stream(duration_us);
+        let mut got = Vec::new();
+        while let Some(t) = s.next(&mut rng_stream) {
+            got.push(t);
+        }
+        assert_eq!(got, expect, "{a:?} seed {seed}");
+        assert_eq!(
+            rng_stream.next_u64(),
+            rng_sched.next_u64(),
+            "RNG state diverged: {a:?} seed {seed}"
+        );
+        // Exhausted streams stay exhausted without consuming draws.
+        let probe = rng_stream.next_u64();
+        assert_eq!(s.next(&mut rng_stream), None);
+        let mut replayed = Rng::new(seed);
+        a.schedule(duration_us, &mut replayed);
+        replayed.next_u64();
+        assert_eq!(replayed.next_u64(), probe);
+    }
+
+    #[test]
+    fn stream_matches_schedule_uniform() {
+        let a = Arrival::Uniform { rate_hz: 250.0 };
+        for seed in [1, 0x5CA1E] {
+            assert_stream_matches_schedule(&a, 1e6, seed);
+        }
+    }
+
+    #[test]
+    fn stream_matches_schedule_poisson() {
+        let a = Arrival::Poisson { rate_hz: 800.0 };
+        for seed in [2, 42, 0xBEEF] {
+            assert_stream_matches_schedule(&a, 2e6, seed);
+        }
+        // Zero-length window: schedule still burns the first draw.
+        assert_stream_matches_schedule(&a, 0.0, 7);
+    }
+
+    #[test]
+    fn stream_matches_schedule_closed_loop() {
+        assert_stream_matches_schedule(
+            &Arrival::ClosedLoop { clients: 4 },
+            1e6,
+            3,
+        );
+    }
+
+    #[test]
+    fn stream_matches_schedule_mmpp() {
+        let a = Arrival::Mmpp {
+            on_hz: 2000.0,
+            off_hz: 0.0,
+            mean_on_us: 5_000.0,
+            mean_off_us: 5_000.0,
+        };
+        for seed in [0xA0, 0xA1, 9] {
+            assert_stream_matches_schedule(&a, 5e6, seed);
+        }
+        let b = Arrival::Mmpp {
+            on_hz: 500.0,
+            off_hz: 20.0,
+            mean_on_us: 10_000.0,
+            mean_off_us: 30_000.0,
+        };
+        assert_stream_matches_schedule(&b, 5e6, 0xC0FFEE);
+    }
+
+    #[test]
+    fn stream_matches_schedule_ramp() {
+        for a in [
+            Arrival::Ramp { start_hz: 500.0, end_hz: 1500.0 },
+            Arrival::Ramp { start_hz: 20.0, end_hz: 0.0 },
+            Arrival::Ramp { start_hz: 10.0, end_hz: 10.0 },
+        ] {
+            for seed in [0xC0, 5] {
+                assert_stream_matches_schedule(&a, 1e6, seed);
+            }
+        }
+    }
+
+    #[test]
+    fn stream_matches_schedule_replay() {
+        let a = Arrival::replay(vec![300.0, 100.0, 200.0, 900.0]);
+        assert_stream_matches_schedule(&a, 500.0, 1);
+        assert_stream_matches_schedule(&a, 1e6, 1);
+    }
+
+    #[test]
+    fn stream_matches_schedule_modulated() {
+        let curve = Arc::new(RateCurve {
+            period_us: 200_000.0,
+            depth: 0.6,
+            flash_at_us: 300_000.0,
+            flash_dur_us: 50_000.0,
+            flash_boost: 4.0,
+        });
+        let a = Arrival::Modulated { rate_hz: 500.0, curve };
+        for seed in [0x5CA1E, 42, 1234] {
+            assert_stream_matches_schedule(&a, 1e6, seed);
+        }
+    }
+
+    // --- ISSUE 7: modulated-process behavior.
+
+    #[test]
+    fn modulated_deterministic_sorted_and_in_window() {
+        let curve = Arc::new(RateCurve {
+            period_us: 100_000.0,
+            depth: 0.5,
+            flash_at_us: 400_000.0,
+            flash_dur_us: 100_000.0,
+            flash_boost: 3.0,
+        });
+        let a = Arrival::Modulated { rate_hz: 1000.0, curve };
+        let s = a.schedule(1e6, &mut Rng::new(11));
+        assert_eq!(s, a.schedule(1e6, &mut Rng::new(11)));
+        assert_sorted(&s);
+        assert!(!s.is_empty());
+        assert!(*s.last().unwrap() < 1e6);
+        assert!(*s.first().unwrap() >= 0.0);
+    }
+
+    #[test]
+    fn modulated_mean_rate_within_5pct() {
+        // Whole diurnal periods, no flash: the mean factor is 1, so the
+        // empirical count should sit near base_rate * duration. Pool
+        // seeds to push the bound many standard deviations out.
+        let curve = Arc::new(RateCurve {
+            period_us: 1_000_000.0,
+            depth: 0.8,
+            flash_at_us: 0.0,
+            flash_dur_us: 0.0,
+            flash_boost: 1.0,
+        });
+        let a = Arrival::Modulated { rate_hz: 1000.0, curve };
+        let mut total = 0usize;
+        for seed in [0xD0, 0xD1, 0xD2, 0xD3] {
+            total += a.schedule(10e6, &mut Rng::new(seed)).len();
+        }
+        let expect = 4.0 * 10_000.0;
+        let err = (total as f64 - expect).abs() / expect;
+        assert!(err < 0.05, "total {total} vs {expect}");
+    }
+
+    #[test]
+    fn modulated_flash_crowd_concentrates_arrivals() {
+        // A 5x flash over 10% of the window should hold far more than
+        // 10% of the arrivals — the flash-crowd signature the scale
+        // scenarios rely on.
+        let curve = Arc::new(RateCurve {
+            period_us: 1_000_000.0,
+            depth: 0.0,
+            flash_at_us: 450_000.0,
+            flash_dur_us: 100_000.0,
+            flash_boost: 5.0,
+        });
+        let a = Arrival::Modulated { rate_hz: 500.0, curve: curve.clone() };
+        let s = a.schedule(1e6, &mut Rng::new(0xF1A5));
+        let in_flash =
+            s.iter().filter(|t| curve.in_flash(**t)).count() as f64;
+        let frac = in_flash / s.len() as f64;
+        assert!(frac > 0.25, "flash fraction {frac}");
+        // Envelope accounting: mean_factor reflects the same overlap.
+        assert!((curve.mean_factor(1e6) - 1.4).abs() < 1e-9);
     }
 }

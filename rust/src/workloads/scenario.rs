@@ -11,12 +11,15 @@
 //! tenants) that the conformance-trace suite
 //! (`rust/tests/conformance_traces.rs`) drives through every scheduler.
 //! [`ScenarioGen`] extends the family with seeded random scenarios for
-//! open-ended sweeps (`miriam scenarios --gen N`).
+//! open-ended sweeps (`miriam scenarios --gen N`). [`ScaleSpec`]
+//! (ISSUE 7) compiles tiered 1k–100k-tenant populations with
+//! heavy-tailed rates and diurnal/flash-crowd modulation into lazy
+//! [`Arrival::Modulated`] sources for `miriam scale-sim`.
 
 use std::sync::Arc;
 
 use crate::gpu::kernel::Criticality;
-use crate::workloads::arrival::Arrival;
+use crate::workloads::arrival::{Arrival, RateCurve};
 use crate::workloads::mdtb::{Source, Workload};
 use crate::workloads::models;
 use crate::workloads::rng::Rng;
@@ -451,6 +454,273 @@ pub fn device_golden_file_name(platform: &str, scenario: &str,
     format!("{platform}__{scenario}__{scheduler}.trace.json")
 }
 
+/// One tenant tier of a [`ScaleSpec`] (ISSUE 7): a population slice
+/// sharing a model, an SLO class, and a slice of the aggregate rate.
+///
+/// To add a tier, push a `TierSpec` onto [`ScaleSpec::tiers`] (see
+/// ARCHITECTURE.md §Event core for the walkthrough): `share` controls
+/// how many tenants land in it, `rate_weight` how much of the
+/// aggregate offered load it carries. Both columns must each sum to 1
+/// across the tier list ([`ScaleSpec::assert_valid`]).
+#[derive(Debug, Clone)]
+pub struct TierSpec {
+    /// Tier name (stable, used in per-tier report keys).
+    pub name: String,
+    /// Fraction of the tenant population in this tier, in (0, 1].
+    pub share: f64,
+    /// Model every tenant of the tier runs.
+    pub model: String,
+    /// Task class of the tier.
+    pub criticality: Criticality,
+    /// Optional end-to-end deadline (us) for every tenant of the tier.
+    pub deadline_us: Option<f64>,
+    /// Fraction of [`ScaleSpec::aggregate_hz`] carried by this tier,
+    /// in (0, 1].
+    pub rate_weight: f64,
+}
+
+/// Seeded tiered-tenant scale scenario (ISSUE 7 tentpole): compiles
+/// 1k–100k tenants into a [`ScenarioSpec`] of lazy
+/// [`Arrival::Modulated`] sources — heavy-tailed per-tenant rates
+/// (Pareto weights, tier-normalized so the aggregate offered load is
+/// `aggregate_hz` regardless of tenant count), one shared diurnal +
+/// flash-crowd [`RateCurve`] — **without materializing any per-tenant
+/// arrival vector** (the scale runner pulls arrivals one at a time
+/// through [`Arrival::stream`]).
+#[derive(Debug, Clone)]
+pub struct ScaleSpec {
+    /// Scenario name (becomes the compiled [`ScenarioSpec::name`]).
+    pub name: String,
+    /// Tenant count; must be >= the number of tiers.
+    pub tenants: usize,
+    /// The tier table, gold-first; shares and rate weights each sum
+    /// to 1.
+    pub tiers: Vec<TierSpec>,
+    /// Total offered load (Hz) across all tenants, held fixed as
+    /// `tenants` scales.
+    pub aggregate_hz: f64,
+    /// Pareto tail index for per-tenant rate weights (`u^(-1/alpha)`);
+    /// smaller = heavier tail. Must be positive.
+    pub alpha: f64,
+    /// Shared modulation curve (diurnal + flash crowd) applied to
+    /// every tenant.
+    pub curve: RateCurve,
+    /// Arrival window (us).
+    pub duration_us: f64,
+    /// Master seed: tenant `i` draws its rate weight from
+    /// `derive_seed(seed, i + 1)`, so weights are stable under
+    /// tenant-count changes (tenant 7 of 1k == tenant 7 of 100k).
+    pub seed: u64,
+}
+
+impl ScaleSpec {
+    /// Panics unless the spec is internally consistent (tier table
+    /// non-empty, shares/weights sum to 1, enough tenants, positive
+    /// rates, valid curve).
+    pub fn assert_valid(&self) {
+        assert!(!self.tiers.is_empty(), "{}: no tiers", self.name);
+        assert!(
+            self.tenants >= self.tiers.len(),
+            "{}: {} tenants < {} tiers",
+            self.name,
+            self.tenants,
+            self.tiers.len()
+        );
+        let share_sum: f64 = self.tiers.iter().map(|t| t.share).sum();
+        let weight_sum: f64 =
+            self.tiers.iter().map(|t| t.rate_weight).sum();
+        assert!(
+            (share_sum - 1.0).abs() < 1e-9,
+            "{}: tier shares sum to {share_sum}",
+            self.name
+        );
+        assert!(
+            (weight_sum - 1.0).abs() < 1e-9,
+            "{}: tier rate weights sum to {weight_sum}",
+            self.name
+        );
+        for t in &self.tiers {
+            assert!(t.share > 0.0, "{}: tier {} empty share", self.name, t.name);
+            assert!(
+                t.rate_weight > 0.0,
+                "{}: tier {} zero rate weight",
+                self.name,
+                t.name
+            );
+        }
+        assert!(self.aggregate_hz > 0.0, "{}: aggregate_hz", self.name);
+        assert!(
+            self.alpha.is_finite() && self.alpha > 0.0,
+            "{}: alpha must be positive",
+            self.name
+        );
+        assert!(self.duration_us > 0.0, "{}: duration", self.name);
+        self.curve.assert_valid();
+    }
+
+    /// Tenants per tier: `round(share * tenants)` clamped to >= 1, the
+    /// last tier absorbing the remainder. Deterministic in `tenants`
+    /// alone.
+    pub fn tier_counts(&self) -> Vec<usize> {
+        self.assert_valid();
+        let n = self.tiers.len();
+        let mut counts = Vec::with_capacity(n);
+        let mut assigned = 0usize;
+        for (i, t) in self.tiers.iter().enumerate() {
+            let remaining_tiers = n - i - 1;
+            let c = if i + 1 == n {
+                self.tenants - assigned
+            } else {
+                let want =
+                    ((t.share * self.tenants as f64).round() as usize).max(1);
+                // Leave at least one tenant for every later tier.
+                want.min(self.tenants - assigned - remaining_tiers)
+            };
+            assert!(c >= 1, "{}: tier {} got no tenants", self.name, t.name);
+            counts.push(c);
+            assigned += c;
+        }
+        counts
+    }
+
+    /// Tier index of tenant `i` (tiers fill in order: gold tenants are
+    /// the lowest indices).
+    pub fn tier_of(&self, i: usize) -> usize {
+        assert!(i < self.tenants, "tenant {i} out of range");
+        let counts = self.tier_counts();
+        let mut cum = 0usize;
+        for (t, c) in counts.iter().enumerate() {
+            cum += c;
+            if i < cum {
+                return t;
+            }
+        }
+        unreachable!("tier counts do not cover tenant {i}")
+    }
+
+    /// Heavy-tailed per-tenant rate weight: `u^(-1/alpha)` with
+    /// `u = 1 - next_f64()` in (0, 1] from the tenant's derived seed
+    /// (one draw, >= 1, finite).
+    fn tenant_weight(&self, i: usize) -> f64 {
+        let mut rng =
+            Rng::new(crate::coordinator::sweep::derive_seed(self.seed, i as u32 + 1));
+        let u = 1.0 - rng.next_f64();
+        u.powf(-1.0 / self.alpha)
+    }
+
+    /// Per-tenant base rate (Hz): the tier's rate budget
+    /// (`aggregate_hz * rate_weight`) split across its tenants in
+    /// proportion to their Pareto weights. Summing over all tenants
+    /// recovers `aggregate_hz` exactly (up to rounding), whatever
+    /// `tenants` is.
+    pub fn tenant_rates_hz(&self) -> Vec<f64> {
+        let counts = self.tier_counts();
+        let weights: Vec<f64> =
+            (0..self.tenants).map(|i| self.tenant_weight(i)).collect();
+        let mut tier_sums = vec![0.0f64; counts.len()];
+        let mut idx = 0usize;
+        for (t, c) in counts.iter().enumerate() {
+            for _ in 0..*c {
+                tier_sums[t] += weights[idx];
+                idx += 1;
+            }
+        }
+        let mut rates = Vec::with_capacity(self.tenants);
+        let mut idx = 0usize;
+        for (t, c) in counts.iter().enumerate() {
+            let budget = self.aggregate_hz * self.tiers[t].rate_weight;
+            for _ in 0..*c {
+                rates.push(budget * weights[idx] / tier_sums[t]);
+                idx += 1;
+            }
+        }
+        rates
+    }
+
+    /// Compile to a runnable [`ScenarioSpec`]: one
+    /// [`Arrival::Modulated`] source per tenant, the curve shared
+    /// through a single `Arc`. O(tenants) small structs; no arrival
+    /// times are drawn here.
+    pub fn compile(&self) -> ScenarioSpec {
+        let counts = self.tier_counts();
+        let rates = self.tenant_rates_hz();
+        let curve = Arc::new(self.curve.clone());
+        let mut sources = Vec::with_capacity(self.tenants);
+        let mut tier = 0usize;
+        let mut left = counts[0];
+        for rate_hz in rates {
+            while left == 0 {
+                tier += 1;
+                left = counts[tier];
+            }
+            left -= 1;
+            let t = &self.tiers[tier];
+            sources.push(SourceSpec {
+                model: t.model.clone(),
+                criticality: t.criticality,
+                arrival: Arrival::Modulated { rate_hz, curve: curve.clone() },
+                deadline_us: t.deadline_us,
+            });
+        }
+        ScenarioSpec {
+            name: self.name.clone(),
+            sources,
+            duration_us: self.duration_us,
+            seed: self.seed,
+        }
+    }
+}
+
+/// The standard three-tier scale preset (ISSUE 7): ~1% gold (critical
+/// GRU with a deadline), ~9% silver (deadline-tagged SqueezeNet),
+/// ~90% bronze (best-effort CIFARNet), 400 Hz aggregate offered load
+/// under a diurnal curve with a mid-window 3x flash crowd. The
+/// aggregate is independent of `tenants`, so 1k and 100k runs offer
+/// the device the same load — only the bookkeeping scales.
+pub fn scale_spec(tenants: usize, duration_us: f64) -> ScaleSpec {
+    ScaleSpec {
+        name: format!("scale-{tenants}t"),
+        tenants,
+        tiers: vec![
+            TierSpec {
+                name: "gold".into(),
+                share: 0.01,
+                model: "gru".into(),
+                criticality: Criticality::Critical,
+                deadline_us: Some(30_000.0),
+                rate_weight: 0.20,
+            },
+            TierSpec {
+                name: "silver".into(),
+                share: 0.09,
+                model: "squeezenet".into(),
+                criticality: Criticality::Normal,
+                deadline_us: Some(60_000.0),
+                rate_weight: 0.30,
+            },
+            TierSpec {
+                name: "bronze".into(),
+                share: 0.90,
+                model: "cifarnet".into(),
+                criticality: Criticality::Normal,
+                deadline_us: None,
+                rate_weight: 0.50,
+            },
+        ],
+        aggregate_hz: 400.0,
+        alpha: 1.5,
+        curve: RateCurve {
+            period_us: 250_000.0,
+            depth: 0.4,
+            flash_at_us: 100_000.0,
+            flash_dur_us: 50_000.0,
+            flash_boost: 3.0,
+        },
+        duration_us,
+        seed: 0x5CA1E,
+    }
+}
+
 /// Seeded random-scenario generator: extends the named family with an
 /// unbounded stream of valid (2–6 tenant, >= 1 critical, >= 1 normal)
 /// scenarios for sweeps. Deterministic per seed.
@@ -688,6 +958,87 @@ mod tests {
             assert_eq!(a.seed, b.seed);
             assert_eq!(a.duration_us, b.duration_us);
         }
+    }
+
+    #[test]
+    fn scale_spec_tiers_cover_population_and_fix_aggregate() {
+        for tenants in [10, 1_000, 10_000] {
+            let spec = scale_spec(tenants, 100_000.0);
+            let counts = spec.tier_counts();
+            assert_eq!(counts.len(), 3);
+            assert_eq!(counts.iter().sum::<usize>(), tenants);
+            assert!(counts.iter().all(|c| *c >= 1), "{counts:?}");
+            let rates = spec.tenant_rates_hz();
+            assert_eq!(rates.len(), tenants);
+            assert!(rates.iter().all(|r| *r > 0.0 && r.is_finite()));
+            let total: f64 = rates.iter().sum();
+            assert!(
+                (total - spec.aggregate_hz).abs() < 1e-6,
+                "{tenants} tenants: aggregate {total}"
+            );
+        }
+    }
+
+    #[test]
+    fn scale_spec_weights_are_stable_under_tenant_count() {
+        // Tenant i's Pareto weight comes from derive_seed(seed, i+1),
+        // so growing the population must not change existing tenants'
+        // weights (only the tier normalization redistributes rates).
+        let small = scale_spec(100, 100_000.0);
+        let large = scale_spec(200, 100_000.0);
+        for i in [0usize, 1, 7, 42, 99] {
+            let a = small.tenant_weight(i);
+            let b = large.tenant_weight(i);
+            assert_eq!(a.to_bits(), b.to_bits(), "tenant {i}: {a} vs {b}");
+            assert!(a >= 1.0 && a.is_finite(), "tenant {i}: weight {a}");
+        }
+    }
+
+    #[test]
+    fn scale_spec_rates_are_heavy_tailed() {
+        let spec = scale_spec(10_000, 100_000.0);
+        let mut rates = spec.tenant_rates_hz();
+        rates.sort_by(f64::total_cmp);
+        let total: f64 = rates.iter().sum();
+        let top1: f64 = rates[rates.len() - 100..].iter().sum();
+        // With alpha = 1.5, the top 1% of tenants should carry far
+        // more than 1% of the load.
+        assert!(top1 / total > 0.05, "top-1% share {}", top1 / total);
+    }
+
+    #[test]
+    fn scale_spec_compiles_to_lazy_modulated_sources() {
+        let spec = scale_spec(1_000, 100_000.0);
+        let sc = spec.compile();
+        assert_eq!(sc.tenants(), 1_000);
+        assert_eq!(sc.seed, spec.seed);
+        let mut crits = 0usize;
+        for (i, s) in sc.sources.iter().enumerate() {
+            match &s.arrival {
+                Arrival::Modulated { rate_hz, curve } => {
+                    assert!(*rate_hz > 0.0);
+                    curve.assert_valid();
+                }
+                other => panic!("tenant {i}: non-modulated {other:?}"),
+            }
+            if s.criticality == Criticality::Critical {
+                crits += 1;
+                assert!(s.deadline_us.is_some());
+            }
+        }
+        assert_eq!(crits, spec.tier_counts()[0]);
+        // The shared curve really is shared: one Arc, not N copies.
+        let first = match &sc.sources[0].arrival {
+            Arrival::Modulated { curve, .. } => Arc::as_ptr(curve),
+            _ => unreachable!(),
+        };
+        for s in &sc.sources {
+            if let Arrival::Modulated { curve, .. } = &s.arrival {
+                assert_eq!(Arc::as_ptr(curve), first);
+            }
+        }
+        // Tenant labels stay well-formed at scale.
+        assert!(sc.tenant_label(0).starts_with("t0-gru-critical"));
     }
 
     #[test]

@@ -1,0 +1,55 @@
+//! Determinism contract of the 100k-tenant scale path (ISSUE 7
+//! tentpole): `BENCH_scale.json` is a pure function of
+//! (platform, scheduler, tenant counts, duration) — byte-identical
+//! across repeat runs and across `--threads`, because every per-tenant
+//! seed is derived from the scenario seed and the grid writes results
+//! into position-indexed slots instead of completion order.
+
+use miriam::gpu::spec::GpuSpec;
+use miriam::server::scale::run_scale_grid;
+
+const COUNTS: &[usize] = &[1000, 2000];
+const DUR_US: f64 = 20_000.0;
+
+#[test]
+fn scale_grid_is_byte_identical_across_threads_and_repeats() {
+    let gpu = GpuSpec::rtx2060();
+    let base = run_scale_grid(&gpu, COUNTS, DUR_US, "miriam", 1)
+        .expect("threads=1");
+    let doc = base.to_json();
+    for threads in [2usize, 4] {
+        let other = run_scale_grid(&gpu, COUNTS, DUR_US, "miriam", threads)
+            .expect("threaded grid");
+        assert_eq!(doc, other.to_json(),
+                   "BENCH_scale.json differs at threads={threads}");
+    }
+    let repeat = run_scale_grid(&gpu, COUNTS, DUR_US, "miriam", 1)
+        .expect("repeat");
+    assert_eq!(doc, repeat.to_json(),
+               "BENCH_scale.json differs across repeat runs");
+}
+
+#[test]
+fn scale_grid_document_is_canonical_and_complete() {
+    let gpu = GpuSpec::rtx2060();
+    let grid = run_scale_grid(&gpu, COUNTS, DUR_US, "miriam", 2)
+        .expect("grid");
+    let doc = grid.to_json();
+    assert!(doc.contains("\"bench\":\"scale\""));
+    // (`"nan"` would false-positive on the "tenants" key.)
+    assert!(!doc.contains("inf") && !doc.contains("NaN"),
+            "canonical JSON must not carry non-finite numbers");
+    for &c in COUNTS {
+        let cell = grid.cell(c).expect("cell present");
+        assert_eq!(cell.tenants, c);
+        assert!(cell.offered > 0 && cell.served > 0,
+                "{c}-tenant cell served nothing");
+        assert!(cell.served <= cell.offered);
+        // Above the sketch threshold every tenant accounts in constant
+        // memory; the per-tenant residency number the bench gate tracks
+        // must stay small and positive.
+        assert!(cell.sketch_tenants == c,
+                "{c}-tenant cell left tenants on the exact path");
+        assert!(cell.bytes_per_tenant > 0.0);
+    }
+}

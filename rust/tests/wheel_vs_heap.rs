@@ -1,0 +1,129 @@
+//! Differential test: the hierarchical timing wheel against a
+//! `BinaryHeap<Reverse<(TimeKey, usize)>>` oracle — the exact structure
+//! the wheel replaced in ISSUE 7. Over a million mixed arrivals
+//! (tie-heavy bulk loads plus a closed-loop pop/push phase) the two
+//! must agree on every single pop, including the (time, source-index)
+//! tie-break order the golden traces depend on.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use miriam::runtime::timewheel::{TimeKey, TimingWheel};
+use miriam::workloads::rng::Rng;
+
+/// Oracle + wheel driven in lockstep; asserts every pop matches.
+struct Pair {
+    wheel: TimingWheel,
+    heap: BinaryHeap<Reverse<(TimeKey, usize)>>,
+    pops: u64,
+}
+
+impl Pair {
+    fn new() -> Self {
+        Pair { wheel: TimingWheel::new(), heap: BinaryHeap::new(), pops: 0 }
+    }
+
+    fn push(&mut self, t: f64, src: usize) {
+        self.wheel.push(t, src);
+        self.heap.push(Reverse((TimeKey(t), src)));
+    }
+
+    fn pop(&mut self) -> Option<(f64, usize)> {
+        let got = self.wheel.pop();
+        let want = self.heap.pop().map(|Reverse((TimeKey(t), s))| (t, s));
+        match (got, want) {
+            (Some((gt, gs)), Some((wt, ws))) => {
+                assert!(
+                    gt.to_bits() == wt.to_bits() && gs == ws,
+                    "pop #{}: wheel ({gt}, {gs}) != heap ({wt}, {ws})",
+                    self.pops
+                );
+            }
+            (None, None) => {}
+            (g, w) => panic!("pop #{}: wheel {g:?} != heap {w:?}", self.pops),
+        }
+        self.pops += 1;
+        assert_eq!(self.wheel.len(), self.heap.len());
+        got
+    }
+}
+
+/// Tie-heavy time: a coarse grid (forcing exact-time and same-tick
+/// collisions across many sources) with occasional sub-microsecond
+/// fractional offsets drawn from a small quantized set (so fractions
+/// collide too).
+fn tie_heavy_time(rng: &mut Rng) -> f64 {
+    let base = rng.next_below(200_000) as f64 * 7.5;
+    match rng.next_below(4) {
+        0 => base,
+        1 => base + 0.25,
+        2 => base + 0.5,
+        _ => base + rng.next_f64() * 0.999,
+    }
+}
+
+#[test]
+fn wheel_matches_heap_over_a_million_mixed_arrivals() {
+    let mut pair = Pair::new();
+    let mut rng = Rng::new(0x5CA1E_D1FF);
+
+    // Phase 1: bulk load ~700k tie-heavy arrivals across 1000 sources,
+    // with interspersed partial drains so refill runs against slots
+    // that are still being appended to.
+    for i in 0..700_000u64 {
+        let t = tie_heavy_time(&mut rng);
+        let src = rng.next_below(1000) as usize;
+        pair.push(t, src);
+        if i % 97 == 0 {
+            pair.pop();
+        }
+    }
+
+    // Phase 2: ~300k closed-loop steps — pop the next event and push a
+    // successor a short gap later (the serve/fleet loop shape). Gaps
+    // are quantized so successors keep colliding with bulk entries.
+    for _ in 0..300_000u64 {
+        if let Some((t, _)) = pair.pop() {
+            let gap = (1 + rng.next_below(64)) as f64 * 0.5;
+            let src = rng.next_below(1000) as usize;
+            pair.push(t + gap, src);
+        }
+    }
+
+    // Drain to empty: every remaining pop must match, then both agree
+    // the queue is exhausted.
+    while pair.pop().is_some() {}
+    assert!(pair.wheel.is_empty());
+    assert!(pair.heap.is_empty());
+    assert!(pair.pops >= 1_000_000, "exercised {} pops", pair.pops);
+}
+
+#[test]
+fn wheel_matches_heap_on_adversarial_block_boundaries() {
+    // Times chosen to straddle level boundaries: 64^k - epsilon vs
+    // 64^k, plus duplicates of both, pushed in descending order so
+    // the wheel's behind-cursor binary-insert path is exercised.
+    let mut pair = Pair::new();
+    let mut boundary_times = Vec::new();
+    for k in 1..6u32 {
+        let b = 64f64.powi(k as i32);
+        for d in [-1.5, -1.0, -0.5, 0.0, 0.5, 1.0] {
+            boundary_times.push(b + d);
+        }
+    }
+    for &t in boundary_times.iter().rev() {
+        for src in [3usize, 1, 2, 1] {
+            pair.push(t, src);
+        }
+    }
+    // Interleave pops with late pushes that land behind the cursor.
+    for i in 0..boundary_times.len() * 2 {
+        let (t, _) = pair.pop().expect("queue non-empty");
+        if i % 3 == 0 {
+            pair.push(t, 0); // exact tie with the event just popped
+            pair.push(t + 0.1, 7);
+        }
+    }
+    while pair.pop().is_some() {}
+    assert!(pair.wheel.is_empty() && pair.heap.is_empty());
+}

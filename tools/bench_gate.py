@@ -23,6 +23,13 @@ The mode is dispatched on the measured document's ``"bench"`` key:
   invariant: **no cell may report a lost request** (every storm preset
   heals, so a nonzero ``lost`` is a chaos-layer bug regardless of what
   the baseline says).
+* ``"bench": "scale"`` (``BENCH_scale.json``): fleet-style contract
+  over the ``cells`` rows keyed by tenant count — coverage regression,
+  2% served drift, 5% worst-tenant-p99 drift — plus one unconditional
+  invariant: **per-tenant latency-accounting bytes stay constant**
+  (``bytes_per_tenant`` ≤ 512 in every cell; the streaming sketch is
+  the whole point of the scale path, so a cell that grew past that is
+  a memory regression regardless of what the baseline says).
 
 Usage:
     bench_gate.py MEASURED_JSON BASELINE_JSON [--tolerance 0.20]
@@ -180,6 +187,79 @@ def resilience_gate(measured, baseline_path, tolerance=None):
     return 0
 
 
+def scale_gate(measured, baseline_path, tolerance=None):
+    """Deterministic-report gate for BENCH_scale.json documents.
+
+    Cells are keyed by tenant count. Like the fleet gate (2% served
+    drift, 5% worst-tenant-p99 drift, coverage regression), plus one
+    unconditional invariant: per-tenant accounting bytes must stay
+    constant (≤ 512) in every cell, baseline or not.
+    """
+    served_tol = tolerance if tolerance is not None else 0.02
+    p99_tol = tolerance if tolerance is not None else 0.05
+    cells = measured.get("cells", [])
+    served = sum(c.get("served", 0) for c in cells)
+    print(f"measured: {len(cells)} scale cell(s), {served} served total, "
+          f"tenant counts {[c.get('tenants') for c in cells]}")
+    failures = []
+    for c in cells:
+        bpt = c.get("bytes_per_tenant")
+        if not isinstance(bpt, (int, float)) or not 0 < bpt <= 512:
+            failures.append(
+                f"{c.get('tenants')} tenants: bytes_per_tenant {bpt} "
+                f"outside (0, 512] — constant-memory contract broken")
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        baseline = None
+        if not failures:
+            print(f"gate: no baseline at {baseline_path} — bootstrap "
+                  f"pass. Promote a CI-run BENCH_scale.json artifact "
+                  f"there to arm the gate (same --smoke conditions).")
+            return 0
+    if baseline is not None and (baseline.get("bootstrap")
+                                 or not baseline.get("cells")):
+        baseline = None
+        if not failures:
+            print("gate: scale baseline is a bootstrap placeholder — "
+                  "pass. Promote a CI-run BENCH_scale.json artifact to "
+                  "arm the gate.")
+            return 0
+    if baseline is not None:
+        base_cells = {c.get("tenants"): c for c in baseline.get("cells", [])}
+        measured_keys = {c.get("tenants") for c in cells}
+        for k in sorted(k for k in base_cells if k not in measured_keys):
+            failures.append(f"{k} tenants: in baseline but missing from "
+                            f"measured report (coverage regression)")
+        for c in cells:
+            b = base_cells.get(c.get("tenants"))
+            if b is None:
+                continue  # new cell: no baseline yet, nothing to regress
+            bs, ms = b.get("served", 0), c.get("served", 0)
+            if bs and abs(ms - bs) > served_tol * bs:
+                failures.append(f"{c.get('tenants')} tenants: served "
+                                f"{ms} vs baseline {bs}")
+            bp = b.get("worst_tenant_p99_us")
+            mp = c.get("worst_tenant_p99_us")
+            if (isinstance(bp, (int, float)) and isinstance(mp, (int, float))
+                    and bp > 0 and abs(mp - bp) > p99_tol * bp):
+                failures.append(f"{c.get('tenants')} tenants: "
+                                f"worst_tenant_p99_us {mp:.1f} vs "
+                                f"baseline {bp:.1f}")
+    if failures:
+        print("gate: FAIL — scale report violated an invariant or "
+              "drifted from baseline (intentional change? refresh "
+              "benchmarks/BENCH_scale.baseline.json from a healthy CI "
+              "artifact):")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print(f"gate: OK — {len(cells)} scale cell(s) within tolerance of "
+          f"baseline, constant per-tenant memory")
+    return 0
+
+
 def main(argv):
     if len(argv) < 3:
         print(__doc__)
@@ -197,6 +277,9 @@ def main(argv):
     if measured.get("bench") == "resilience":
         return resilience_gate(measured, baseline_path,
                                tolerance if "--tolerance" in argv else None)
+    if measured.get("bench") == "scale":
+        return scale_gate(measured, baseline_path,
+                          tolerance if "--tolerance" in argv else None)
     m_inc = measured.get("events_per_sec_incremental")
     m_ref = measured.get("events_per_sec_reference")
     m_speedup = measured.get("speedup")
