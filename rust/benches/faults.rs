@@ -1,0 +1,138 @@
+//! Request-level fault injection against the self-healing execution
+//! layer (ISSUE 8).
+//!
+//! One leg: the duo-burst and five-storm family scenarios served across
+//! the default rtx2060 + xavier + tx2 fleet under every fault-storm
+//! preset (`none` baseline, `flaky-launches`, `straggler-swarm`,
+//! `bitflip-storm`, `full-fault-storm`) and every router. Per cell the
+//! table reports the served/cancelled split, retries, hedges and hedge
+//! wins, breaker trips, and critical p99; the summary compares each
+//! fault column against the same (scenario, router) cell under `none` —
+//! the critical-p99 degradation the recovery layer (retries, hedged
+//! re-launches, deadline-aware cancellation, circuit breakers, elastic
+//! brownout) is built to bound.
+//!
+//! Hard gates (exit 1), not remarks:
+//!   * extended conservation on every cell — `offered == admitted +
+//!     shed` and `admitted == served + lost + cancelled`;
+//!   * every device stays live under pure fault injection, so
+//!     `lost == 0` and `routed == admitted` everywhere;
+//!   * critical tenants are never shed and **never cancelled**;
+//!   * hedge winners are counted at most once (`hedge_wins <= hedges`);
+//!   * breaker ledgers agree — device `breaker_trips` sums to the
+//!     fleet total.
+//!
+//! Writes `BENCH_faults.json` (canonical, byte-deterministic per seed
+//! and across worker threads — schema in EXPERIMENTS.md §Faults). CI
+//! smoke mode: append `-- --smoke` (or set `BENCH_SMOKE=1`).
+
+use miriam::fleet::{
+    faults, run_faults_grid, FaultSpec, FleetOpts, FleetSpec, FAULT_STORMS,
+    ROUTERS,
+};
+use miriam::workloads::scenario;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").is_ok();
+    let duration_us = if smoke { 20_000.0 } else { 200_000.0 };
+    let fleet = FleetSpec::parse(
+        &["rtx2060".into(), "xavier".into(), "tx2".into()],
+        &["miriam".into()],
+    )
+    .expect("default fleet parses");
+    let scenarios = vec![
+        scenario::by_name("duo-burst", duration_us)
+            .expect("duo-burst is a family scenario"),
+        scenario::by_name("five-storm", duration_us)
+            .expect("five-storm is a family scenario"),
+    ];
+    let specs: Vec<FaultSpec> = FAULT_STORMS
+        .iter()
+        .map(|name| faults::storm(name).expect("preset exists"))
+        .collect();
+    let routers: Vec<String> = ROUTERS.iter().map(|r| r.to_string()).collect();
+    let opts = FleetOpts::default();
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    println!("# faults: {} scenarios x {} fault scripts x {} routers on {} \
+              devices, {}s of arrivals per cell, {threads} thread(s){}",
+             scenarios.len(), specs.len(), routers.len(),
+             fleet.devices.len(), duration_us / 1e6,
+             if smoke { " (smoke)" } else { "" });
+    println!("{:<12} {:<18} {:<22} {:>8} {:>7} {:>6} {:>5} {:>7} {:>6} \
+              {:>10}",
+             "scenario", "faults", "router", "served", "retries", "hedges",
+             "wins", "cancel", "trips", "crit p99");
+    println!("{:<12} {:<18} {:<22} {:>8} {:>7} {:>6} {:>5} {:>7} {:>6} \
+              {:>10}",
+             "", "", "", "", "", "", "", "", "", "(ms)");
+
+    let grid = run_faults_grid(&fleet, &scenarios, &specs, &routers, &opts,
+                               threads)
+        .expect("faults grid");
+    let mut conserved = true;
+    let mut live = true;
+    let mut crit_kept = true;
+    let mut hedged_once = true;
+    let mut ledgers = true;
+    for c in &grid.cells {
+        conserved &= c.offered() == c.admitted() + c.shed()
+            && c.admitted() == c.served() + c.lost() + c.cancelled();
+        live &= c.lost() == 0 && c.routed() == c.admitted();
+        crit_kept &= c.shed_critical() == 0 && c.critical_cancelled() == 0;
+        hedged_once &= c.hedge_wins() <= c.hedges();
+        ledgers &= c.devices.iter().map(|d| d.breaker_trips).sum::<u64>()
+            == c.breaker_trips();
+        println!("{:<12} {:<18} {:<22} {:>8} {:>7} {:>6} {:>5} {:>7} {:>6} \
+                  {:>10.2}",
+                 c.scenario, c.fault_script, c.router, c.served(),
+                 c.retries(), c.hedges(), c.hedge_wins(), c.cancelled(),
+                 c.breaker_trips(), c.crit_p99_us() / 1e3);
+    }
+
+    // Fault impact vs the calm baseline, per (scenario, router) — the
+    // hedging-effectiveness read: how far each storm pushes critical
+    // p99 with the full recovery layer answering it.
+    println!("\n{:<12} {:<22} {:>10} {:>10} {:>12} {:>10} {:>12}",
+             "scenario", "router", "calm p99", "flaky", "stragglers",
+             "bitflips", "full storm");
+    println!("{:<12} {:<22} {:>10} {:>10} {:>12} {:>10} {:>12}",
+             "", "", "(ms)", "(x calm)", "(x calm)", "(x calm)",
+             "(x calm)");
+    for sc in &grid.scenarios {
+        for r in &grid.routers {
+            let cell =
+                |script: &str| grid.cell(sc, script, r).expect("cell ran");
+            let calm = cell("none").crit_p99_us();
+            let degr = |script: &str| cell(script).crit_p99_us() / calm;
+            println!("{:<12} {:<22} {:>10.2} {:>10.2} {:>12.2} {:>10.2} \
+                      {:>12.2}",
+                     sc, r, calm / 1e3,
+                     degr("flaky-launches"),
+                     degr("straggler-swarm"),
+                     degr("bitflip-storm"),
+                     degr("full-fault-storm"));
+        }
+    }
+    println!("\nextended conservation on every cell: {}",
+             if conserved { "yes" } else { "NO" });
+    println!("nothing lost with every device live: {}",
+             if live { "yes" } else { "NO" });
+    println!("critical never shed, never cancelled: {}",
+             if crit_kept { "yes" } else { "NO" });
+    println!("hedge winners counted at most once: {}",
+             if hedged_once { "yes" } else { "NO" });
+    println!("breaker ledgers agree: {}",
+             if ledgers { "yes" } else { "NO" });
+
+    std::fs::write("BENCH_faults.json", grid.to_json())
+        .expect("write BENCH_faults.json");
+    println!("wrote BENCH_faults.json");
+
+    if !(conserved && live && crit_kept && hedged_once && ledgers) {
+        std::process::exit(1);
+    }
+}

@@ -197,10 +197,35 @@ mod tests {
             .iter()
             .filter(|r| r.criticality == Criticality::Normal)
             .collect();
-        normals.sort_by(|a, b| a.start_us.partial_cmp(&b.start_us).unwrap());
+        // NaN-safe (ISSUE 8 bugfix): total_cmp, like sorted_quantile —
+        // the old partial_cmp(..).unwrap() panicked on any NaN start.
+        normals.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
         for w in normals.windows(2) {
             assert!(w[1].start_us >= w[0].end_us - 1e-6,
                     "normal kernels overlapped");
         }
+    }
+
+    #[test]
+    fn nan_start_sorts_instead_of_panicking() {
+        // ISSUE 8 satellite: mirrors the sorted_quantile NaN regression
+        // test for the timeline sorts here and in sequential.rs — a NaN
+        // start lands last (total_cmp orders NaN after +inf) instead of
+        // panicking the whole sweep.
+        use crate::gpu::metrics::LaunchRecord;
+        let rec = |start_us: f64| LaunchRecord {
+            tag: 0,
+            name: "k".into(),
+            stream: 0,
+            criticality: Criticality::Normal,
+            submit_us: 0.0,
+            start_us,
+            end_us: start_us,
+        };
+        let mut recs = vec![rec(3.0), rec(f64::NAN), rec(1.0)];
+        recs.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
+        assert_eq!(recs[0].start_us, 1.0);
+        assert_eq!(recs[1].start_us, 3.0);
+        assert!(recs[2].start_us.is_nan());
     }
 }

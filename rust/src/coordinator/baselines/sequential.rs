@@ -119,7 +119,9 @@ mod tests {
         let stats = driver::run(GpuSpec::rtx2060(), &wl, &mut Sequential::new());
         // Consecutive records in a single-stream FIFO cannot overlap.
         let mut recs = stats.timeline.clone();
-        recs.sort_by(|a, b| a.start_us.partial_cmp(&b.start_us).unwrap());
+        // NaN-safe (ISSUE 8 bugfix): total_cmp, like sorted_quantile —
+        // the old partial_cmp(..).unwrap() panicked on any NaN start.
+        recs.sort_by(|a, b| a.start_us.total_cmp(&b.start_us));
         for w in recs.windows(2) {
             assert!(w[1].start_us >= w[0].end_us - 1e-6,
                     "{} overlaps {}", w[1].name, w[0].name);

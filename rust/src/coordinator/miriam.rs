@@ -55,9 +55,12 @@ struct NormalTask {
 }
 
 /// A critical task: all kernels submitted at arrival; finished when the
-/// last one completes.
+/// last one completes. Tags are contiguous (`first_tag..=last_tag`) —
+/// the chain is submitted in one uninterrupted loop — which is what
+/// best-effort cancellation sweeps when a hedge loses (ISSUE 8).
 struct CriticalTask {
     req_id: u64,
+    first_tag: LaunchTag,
     last_tag: LaunchTag,
 }
 
@@ -101,6 +104,12 @@ pub struct Miriam {
     static_sharding: bool,
     /// Run the retained pre-change decision plumbing (bench "before" leg).
     reference_path: bool,
+    /// Brownout mode (ISSUE 8): while on, best-effort shards are carved
+    /// at half their usual thread budget — degrading normal quality and
+    /// latency instead of shedding — so critical work sees extra
+    /// headroom when deadline-risk is high. Critical launches are never
+    /// touched (they bypass [`Miriam::leftover`] entirely).
+    brownout: bool,
     initialized: bool,
 }
 
@@ -138,6 +147,7 @@ impl Miriam {
             stream_load: Vec::new(),
             static_sharding: false,
             reference_path: false,
+            brownout: false,
             initialized: false,
         }
     }
@@ -231,9 +241,17 @@ impl Miriam {
         let spec = &eng.spec;
         let critical_active = res.critical_blocks > 0 || res.critical_pending > 0;
         if !critical_active {
+            let threads = if self.brownout {
+                // Brownout (ISSUE 8): thin best-effort shards even with
+                // no critical resident, keeping headroom for the
+                // imminent critical arrivals the risk signal predicted.
+                (spec.max_threads_per_sm / 2).max(32)
+            } else {
+                spec.max_threads_per_sm
+            };
             return Leftover {
                 blocks: spec.num_sms,
-                threads: spec.max_threads_per_sm,
+                threads,
                 critical_active: false,
             };
         }
@@ -247,7 +265,10 @@ impl Miriam {
             spec.max_threads_per_sm / 2
         };
         let spare = spec.max_threads_per_sm.saturating_sub(crit_threads);
-        let threads = ((spare as f64 * self.pad_fill_frac) as u32).max(32);
+        let mut threads = ((spare as f64 * self.pad_fill_frac) as u32).max(32);
+        if self.brownout {
+            threads = (threads / 2).max(32);
+        }
         Leftover { blocks, threads, critical_active: true }
     }
 
@@ -385,11 +406,13 @@ impl Scheduler for Miriam {
                 // no kernel-name Strings (the per-request cost the paper
                 // says must stay cheap).
                 let mut last = 0;
+                let mut first = None;
                 if self.reference_path {
                     for k in &req.model.kernels {
                         last = eng.submit(self.critical_stream,
                                           LaunchConfig::from_kernel(k),
                                           Criticality::Critical);
+                        first.get_or_insert(last);
                     }
                 } else {
                     for (k, &nid) in
@@ -399,10 +422,12 @@ impl Scheduler for Miriam {
                             self.critical_stream, nid,
                             LaunchShape::from_kernel(k),
                             Criticality::Critical, 0.0);
+                        first.get_or_insert(last);
                     }
                 }
                 self.critical_tasks.push(CriticalTask {
                     req_id: req.id,
+                    first_tag: first.unwrap_or(last),
                     last_tag: last,
                 });
                 // A critical arrival changes the leftover landscape; the
@@ -454,6 +479,55 @@ impl Scheduler for Miriam {
 
     fn pending_normal(&self) -> Option<usize> {
         Some(self.normal_queue.len())
+    }
+
+    /// Best-effort cancellation (ISSUE 8 recovery layer). Normal tasks:
+    /// remove the task so no further shards are carved, reclaim
+    /// still-queued shards from their pad streams; already-active
+    /// shards complete into the void ([`Miriam::on_completion`]
+    /// tolerates orphan tags by construction). Critical tasks (hedge
+    /// losers): sweep the contiguous tag range off the critical stream
+    /// — the chain is FIFO on one stream, so if any launch is still
+    /// queued the last one is, and removing it guarantees the task
+    /// never reports finished. A chain whose last launch already
+    /// activated cannot be recalled (no preemption) and declines.
+    fn cancel(&mut self, req_id: u64, eng: &mut Engine) -> bool {
+        if let Some(pos) =
+            self.normal_queue.iter().position(|t| t.req_id == req_id)
+        {
+            let queued: Vec<(LaunchTag, StreamId)> = self
+                .inflight_shards
+                .iter()
+                .filter(|(_, &(_, _, rid))| rid == req_id)
+                .map(|(&tag, &(stream, _, _))| (tag, stream))
+                .collect();
+            for (tag, stream) in queued {
+                if eng.cancel_queued(stream, &[tag]) == 1 {
+                    self.inflight_shards.remove(&tag);
+                    self.stream_load[stream as usize] -= 1;
+                }
+            }
+            self.normal_queue.remove(pos);
+            self.pump(eng);
+            return true;
+        }
+        if let Some(pos) =
+            self.critical_tasks.iter().position(|t| t.req_id == req_id)
+        {
+            let t = &self.critical_tasks[pos];
+            let tags: Vec<LaunchTag> = (t.first_tag..=t.last_tag).collect();
+            if eng.cancel_queued(self.critical_stream, &tags) > 0 {
+                self.critical_tasks.swap_remove(pos);
+                self.pump(eng);
+                return true;
+            }
+            return false;
+        }
+        false
+    }
+
+    fn set_brownout(&mut self, on: bool) {
+        self.brownout = on;
     }
 }
 
@@ -546,5 +620,119 @@ mod tests {
             assert!((x.end_us - y.end_us).abs() < 1e-9,
                     "{}: {} vs {}", x.name, x.end_us, y.end_us);
         }
+    }
+
+    fn req_for(eng: &mut Engine, model: ModelRef, id: u64,
+               criticality: Criticality) -> Req {
+        let ids: Vec<u32> = model
+            .kernels
+            .iter()
+            .map(|k| eng.intern_name(&k.name))
+            .collect();
+        Req {
+            id,
+            source: 0,
+            model,
+            name_ids: Arc::new(ids),
+            criticality,
+            arrival_us: 0.0,
+        }
+    }
+
+    #[test]
+    fn brownout_thins_shards_but_never_critical_geometry() {
+        let model: ModelRef = Arc::new(models::alexnet());
+        let mut eng = Engine::new(GpuSpec::rtx2060());
+        let mut m = Miriam::new(&[model]);
+        m.init(&mut eng);
+        // No critical resident: brownout halves the leftover budget.
+        let res = eng.residency();
+        let full = m.leftover(&res, &eng);
+        m.set_brownout(true);
+        let thin = m.leftover(&res, &eng);
+        assert!(!full.critical_active && !thin.critical_active);
+        assert_eq!(thin.blocks, full.blocks,
+                   "brownout thins threads, not SM coverage");
+        assert_eq!(thin.threads, (full.threads / 2).max(32));
+        // Critical resident: the already-tightened budget halves again.
+        let res = Residency {
+            now_us: 0.0,
+            critical_blocks: 1,
+            critical_block_threads: 256,
+            critical_pending: 0,
+            normal_blocks: 0,
+        };
+        m.set_brownout(false);
+        let full = m.leftover(&res, &eng);
+        m.set_brownout(true);
+        let thin = m.leftover(&res, &eng);
+        assert_eq!(thin.threads, (full.threads / 2).max(32));
+        // Critical launches bypass leftover entirely: geometry in a
+        // browned-out run is still the raw kernel shape.
+        let model: ModelRef = Arc::new(models::alexnet());
+        m.on_request(req_for(&mut eng, model.clone(), 1,
+                             Criticality::Critical),
+                     &mut eng);
+        let res = eng.residency();
+        assert!(res.critical_blocks > 0 || res.critical_pending > 0);
+        if res.critical_block_threads > 0 {
+            assert_eq!(res.critical_block_threads,
+                       model.kernels[0].block_threads,
+                       "brownout must never thin critical geometry");
+        }
+        while !eng.idle() {
+            for c in eng.step() {
+                let mut fin = Vec::new();
+                m.on_completion(&c, &mut eng, &mut fin);
+            }
+        }
+    }
+
+    #[test]
+    fn cancel_removes_normal_tasks_and_reclaims_queue() {
+        let model: ModelRef = Arc::new(models::alexnet());
+        let mut eng = Engine::new(GpuSpec::rtx2060());
+        let mut m = Miriam::new(&[model.clone()]);
+        m.init(&mut eng);
+        m.on_request(req_for(&mut eng, model.clone(), 7,
+                             Criticality::Normal),
+                     &mut eng);
+        assert_eq!(m.pending_normal(), Some(1));
+        assert!(m.cancel(7, &mut eng), "queued normal task must cancel");
+        assert_eq!(m.pending_normal(), Some(0));
+        assert!(!m.cancel(7, &mut eng), "double cancel must decline");
+        assert!(!m.cancel(999, &mut eng), "unknown id must decline");
+        // The orphaned active shards (if any) complete without panicking
+        // and without reporting the cancelled request finished.
+        let mut fin = Vec::new();
+        while !eng.idle() {
+            for c in eng.step() {
+                m.on_completion(&c, &mut eng, &mut fin);
+            }
+        }
+        assert!(fin.is_empty(), "cancelled request must never finish");
+    }
+
+    #[test]
+    fn cancel_critical_sweeps_queued_chain_tail() {
+        let model: ModelRef = Arc::new(models::alexnet());
+        assert!(model.kernels.len() > 1, "test needs a multi-kernel chain");
+        let mut eng = Engine::new(GpuSpec::rtx2060());
+        let mut m = Miriam::new(&[model.clone()]);
+        m.init(&mut eng);
+        m.on_request(req_for(&mut eng, model.clone(), 3,
+                             Criticality::Critical),
+                     &mut eng);
+        // Head kernel activated on submit; the rest are still queued, so
+        // the chain cancels (the active head completes into the void).
+        assert!(m.cancel(3, &mut eng));
+        assert!(m.critical_tasks.is_empty());
+        let mut fin = Vec::new();
+        while !eng.idle() {
+            for c in eng.step() {
+                m.on_completion(&c, &mut eng, &mut fin);
+            }
+        }
+        assert!(fin.is_empty(), "cancelled critical must never finish");
     }
 }

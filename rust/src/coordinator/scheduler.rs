@@ -57,6 +57,22 @@ pub trait Scheduler {
     fn pending_normal(&self) -> Option<usize> {
         None
     }
+
+    /// Best-effort cancellation of request `req_id` (ISSUE 8 recovery
+    /// layer). Returns `true` when the policy removed every queued
+    /// launch of the request and will never report it finished —
+    /// already-dispatched work cannot be recalled (no preemption), so a
+    /// request with resident launches is not cancellable. The default
+    /// declines: baselines run every admitted request to completion.
+    fn cancel(&mut self, _req_id: u64, _eng: &mut Engine) -> bool {
+        false
+    }
+
+    /// Toggle brownout mode (ISSUE 8): while on, policies that shape
+    /// best-effort work (Miriam's elastic shards) should degrade
+    /// best-effort quality/latency instead of shedding. No-op for
+    /// policies without that lever.
+    fn set_brownout(&mut self, _on: bool) {}
 }
 
 #[cfg(test)]

@@ -1,0 +1,749 @@
+//! Request-level fault injection and the recovery policy knobs that
+//! survive it (ISSUE 8 tentpole).
+//!
+//! A [`FaultSpec`] describes a seeded per-launch fault model — transient
+//! launch failures, straggler slowdown multipliers, and corrupted-output
+//! faults detectable at completion — scripted via a `--faults` DSL
+//! (`fail:p=0.001,straggle:p=0.01*4x,corrupt:p=0.0005`) or one of the
+//! [`FAULT_STORMS`] presets. Fault draws are a pure function of
+//! `(spec.seed, request id, attempt)` via [`FaultSpec::draw`], so the
+//! fault schedule is independent of worker-thread interleaving and the
+//! whole faults grid stays byte-deterministic.
+//!
+//! The module also holds the two pure per-device recovery state
+//! machines the fleet loop drives: a consecutive-failure circuit
+//! [`Breaker`] (trip → route-around → half-open probe in simulated
+//! time) and a [`Brownout`] controller with autoscaler-style hysteresis
+//! that trades best-effort shard width for critical deadline safety.
+//!
+//! An inert spec ([`FaultSpec::is_inert`]) injects nothing, and
+//! `fleet::run_fleet` normalizes it away entirely, so zero-fault runs
+//! are bitwise identical to fault-free builds — the contract
+//! `rust/tests/fleet_determinism.rs` pins.
+
+use crate::workloads::rng::Rng;
+
+/// Default seed for the fault-draw stream (distinct from arrival and
+/// chaos seeds so fault schedules never correlate with arrivals).
+pub const DEFAULT_FAULT_SEED: u64 = 0xFA17_5EED;
+
+/// Recovery-policy knobs consumed by the fleet loop's self-healing
+/// layer. Defaults are the production posture: retry, hedge, cancel,
+/// break, and brown out.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryConfig {
+    /// Retry budget per best-effort request (critical requests retry
+    /// without bound — they are never dropped by policy).
+    pub max_retries: u32,
+    /// Base retry backoff (us); attempt `k` waits
+    /// `backoff_us * 2^min(k, 10)` in simulated time.
+    pub backoff_us: f64,
+    /// Hedge critical requests past the deadline-risk watermark onto a
+    /// second device (first reported completion wins).
+    pub hedge: bool,
+    /// Fraction of a critical request's deadline after which a hedge
+    /// copy is launched (0.6 = hedge once 60% of the deadline elapsed
+    /// without a completion).
+    pub hedge_watermark: f64,
+    /// Cancel best-effort requests that passed their deadline while
+    /// still queued (counted `cancelled`, never applied to critical).
+    pub cancel: bool,
+    /// Consecutive launch/corruption failures on one device that trip
+    /// its circuit breaker.
+    pub breaker_threshold: u32,
+    /// Simulated time a tripped breaker stays open before admitting a
+    /// half-open probe (us).
+    pub breaker_cooldown_us: f64,
+    /// Enable brownout: degrade best-effort shard width instead of
+    /// shedding when critical deadline-risk crosses the watermark.
+    pub brownout: bool,
+    /// Deadline-risk EWMA level that turns brownout on.
+    pub brownout_high: f64,
+    /// Deadline-risk EWMA level that turns brownout back off
+    /// (hysteresis; must be below `brownout_high`).
+    pub brownout_low: f64,
+}
+
+impl Default for RecoveryConfig {
+    fn default() -> Self {
+        RecoveryConfig {
+            max_retries: 3,
+            backoff_us: 500.0,
+            hedge: true,
+            hedge_watermark: 0.6,
+            cancel: true,
+            breaker_threshold: 4,
+            breaker_cooldown_us: 10_000.0,
+            brownout: true,
+            brownout_high: 0.85,
+            brownout_low: 0.55,
+        }
+    }
+}
+
+/// One per-launch fault draw: what the injection layer decided for a
+/// given `(request, attempt)` pair.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultDraw {
+    /// The launch fails transiently at submit time (nothing runs).
+    pub fail: bool,
+    /// The completion is delayed by this slowdown multiplier (post-run
+    /// stall; `None` = no straggle).
+    pub straggle: Option<f64>,
+    /// The output is corrupted — detected at completion, forcing a
+    /// retry.
+    pub corrupt: bool,
+}
+
+impl FaultDraw {
+    /// A draw that injects nothing.
+    pub const CLEAN: FaultDraw =
+        FaultDraw { fail: false, straggle: None, corrupt: false };
+}
+
+/// A seeded request-level fault model plus the recovery policy that
+/// answers it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Script name (`"none"`, `"cli"`, or a [`FAULT_STORMS`] preset).
+    pub name: String,
+    /// Probability a launch fails transiently at submit.
+    pub fail_p: f64,
+    /// Probability a launch straggles (completion stalls).
+    pub straggle_p: f64,
+    /// Slowdown multiplier applied to a straggled launch's service time
+    /// (≥ 1).
+    pub straggle_factor: f64,
+    /// Probability a completion carries corrupted output.
+    pub corrupt_p: f64,
+    /// Seed of the fault-draw stream (independent of arrival seeds).
+    pub seed: u64,
+    /// Recovery policy the fleet loop runs against this fault model.
+    pub recovery: RecoveryConfig,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec::none()
+    }
+}
+
+/// Named fault-storm presets accepted by `--fault-storm` (`"none"` is
+/// the fault-free baseline cell).
+pub const FAULT_STORMS: [&str; 5] = [
+    "none",
+    "flaky-launches",
+    "straggler-swarm",
+    "bitflip-storm",
+    "full-fault-storm",
+];
+
+impl FaultSpec {
+    /// The inert spec: no faults, default recovery posture.
+    pub fn none() -> Self {
+        FaultSpec {
+            name: "none".into(),
+            fail_p: 0.0,
+            straggle_p: 0.0,
+            straggle_factor: 1.0,
+            corrupt_p: 0.0,
+            seed: DEFAULT_FAULT_SEED,
+            recovery: RecoveryConfig::default(),
+        }
+    }
+
+    /// True when the spec injects nothing — `run_fleet` normalizes an
+    /// inert spec to "no fault layer at all" so zero-fault runs stay
+    /// bitwise identical to pre-fault builds.
+    pub fn is_inert(&self) -> bool {
+        self.fail_p == 0.0 && self.straggle_p == 0.0 && self.corrupt_p == 0.0
+    }
+
+    /// Parse the `--faults` DSL: comma-separated items
+    /// `fail:p=F` | `straggle:p=F*Gx` | `corrupt:p=F`,
+    /// e.g. `fail:p=0.001,straggle:p=0.01*4x,corrupt:p=0.0005`.
+    /// Each kind may appear at most once. The parsed spec is named
+    /// `"cli"` and carries the default recovery posture.
+    pub fn parse(script: &str) -> Result<FaultSpec, String> {
+        let mut spec = FaultSpec::none();
+        spec.name = "cli".into();
+        let (mut saw_fail, mut saw_straggle, mut saw_corrupt) =
+            (false, false, false);
+        for item in script.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            let (kind, body) = item.split_once(':').ok_or_else(|| {
+                format!("fault item `{item}` is missing a `:` separator \
+                         (expected e.g. `fail:p=0.001`)")
+            })?;
+            let body = body.strip_prefix("p=").ok_or_else(|| {
+                format!("fault item `{item}` must give a probability as \
+                         `p=<float>`")
+            })?;
+            match kind {
+                "fail" => {
+                    if saw_fail {
+                        return Err(format!(
+                            "duplicate fault kind `fail` in `{script}`"
+                        ));
+                    }
+                    saw_fail = true;
+                    spec.fail_p = parse_prob(body, item)?;
+                }
+                "straggle" => {
+                    if saw_straggle {
+                        return Err(format!(
+                            "duplicate fault kind `straggle` in `{script}`"
+                        ));
+                    }
+                    saw_straggle = true;
+                    let (p, factor) =
+                        body.split_once('*').ok_or_else(|| {
+                            format!("straggle item `{item}` must give a \
+                                     slowdown as `*<factor>x` (e.g. \
+                                     `straggle:p=0.01*4x`)")
+                        })?;
+                    spec.straggle_p = parse_prob(p, item)?;
+                    let factor =
+                        factor.strip_suffix('x').ok_or_else(|| {
+                            format!("straggle factor in `{item}` must end \
+                                     in `x` (e.g. `4x`)")
+                        })?;
+                    spec.straggle_factor =
+                        factor.parse::<f64>().map_err(|_| {
+                            format!("bad straggle factor `{factor}` in \
+                                     `{item}`")
+                        })?;
+                }
+                "corrupt" => {
+                    if saw_corrupt {
+                        return Err(format!(
+                            "duplicate fault kind `corrupt` in `{script}`"
+                        ));
+                    }
+                    saw_corrupt = true;
+                    spec.corrupt_p = parse_prob(body, item)?;
+                }
+                other => {
+                    return Err(format!(
+                        "unknown fault kind `{other}` in `{item}` (valid \
+                         kinds: fail, straggle, corrupt)"
+                    ));
+                }
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Check the spec is physically sensible: probabilities finite in
+    /// [0, 1], `fail`/`corrupt` strictly below 1 (a certain fault never
+    /// terminates), straggle factor finite and ≥ 1, recovery watermarks
+    /// ordered.
+    pub fn validate(&self) -> Result<(), String> {
+        for (what, p) in [
+            ("fail", self.fail_p),
+            ("straggle", self.straggle_p),
+            ("corrupt", self.corrupt_p),
+        ] {
+            if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+                return Err(format!(
+                    "fault `{what}` probability {p} is outside [0, 1]"
+                ));
+            }
+        }
+        if self.fail_p >= 1.0 && self.fail_p != 0.0 {
+            return Err("fail probability 1 never terminates (every retry \
+                        fails forever); use p < 1"
+                .into());
+        }
+        if self.corrupt_p >= 1.0 && self.corrupt_p != 0.0 {
+            return Err("corrupt probability 1 never terminates (every \
+                        completion retries forever); use p < 1"
+                .into());
+        }
+        if !self.straggle_factor.is_finite() || self.straggle_factor < 1.0 {
+            return Err(format!(
+                "straggle factor {} must be finite and >= 1",
+                self.straggle_factor
+            ));
+        }
+        let r = &self.recovery;
+        if !r.backoff_us.is_finite() || r.backoff_us < 0.0 {
+            return Err(format!(
+                "retry backoff {}us must be finite and >= 0",
+                r.backoff_us
+            ));
+        }
+        if !r.hedge_watermark.is_finite()
+            || !(0.0..=1.0).contains(&r.hedge_watermark)
+        {
+            return Err(format!(
+                "hedge watermark {} is outside [0, 1]",
+                r.hedge_watermark
+            ));
+        }
+        if r.breaker_threshold == 0 {
+            return Err("breaker threshold must be >= 1".into());
+        }
+        if !r.breaker_cooldown_us.is_finite() || r.breaker_cooldown_us <= 0.0
+        {
+            return Err(format!(
+                "breaker cooldown {}us must be finite and > 0",
+                r.breaker_cooldown_us
+            ));
+        }
+        if !(r.brownout_low.is_finite() && r.brownout_high.is_finite())
+            || r.brownout_low < 0.0
+            || r.brownout_low >= r.brownout_high
+        {
+            return Err(format!(
+                "brownout watermarks must satisfy 0 <= low < high \
+                 (got low={} high={})",
+                r.brownout_low, r.brownout_high
+            ));
+        }
+        Ok(())
+    }
+
+    /// The fault decision for attempt `attempt` of request `req_id`: a
+    /// pure function of `(seed, req_id, attempt)` with a fixed draw
+    /// order (fail, straggle, corrupt), so fault schedules are
+    /// identical across thread counts and loop interleavings.
+    pub fn draw(&self, req_id: u64, attempt: u32) -> FaultDraw {
+        if self.is_inert() {
+            return FaultDraw::CLEAN;
+        }
+        let mut rng = Rng::new(
+            self.seed
+                ^ req_id.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ (attempt as u64 + 1).wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+        );
+        let fail = rng.next_f64() < self.fail_p;
+        let straggle = if rng.next_f64() < self.straggle_p {
+            Some(self.straggle_factor)
+        } else {
+            None
+        };
+        let corrupt = rng.next_f64() < self.corrupt_p;
+        FaultDraw { fail, straggle, corrupt }
+    }
+}
+
+fn parse_prob(s: &str, item: &str) -> Result<f64, String> {
+    let p = s
+        .parse::<f64>()
+        .map_err(|_| format!("bad probability `{s}` in `{item}`"))?;
+    if !p.is_finite() || !(0.0..=1.0).contains(&p) {
+        return Err(format!(
+            "probability {p} in `{item}` is outside [0, 1]"
+        ));
+    }
+    Ok(p)
+}
+
+/// The [`FAULT_STORMS`] preset named `name`, or `None` for an unknown
+/// name. `"none"` yields the inert spec (the fault-free baseline cell).
+pub fn storm(name: &str) -> Option<FaultSpec> {
+    let mut spec = FaultSpec::none();
+    spec.name = name.into();
+    match name {
+        "none" => {}
+        "flaky-launches" => {
+            spec.fail_p = 0.05;
+        }
+        "straggler-swarm" => {
+            spec.straggle_p = 0.08;
+            spec.straggle_factor = 4.0;
+        }
+        "bitflip-storm" => {
+            spec.corrupt_p = 0.03;
+        }
+        "full-fault-storm" => {
+            spec.fail_p = 0.02;
+            spec.straggle_p = 0.04;
+            spec.straggle_factor = 4.0;
+            spec.corrupt_p = 0.01;
+        }
+        _ => return None,
+    }
+    Some(spec)
+}
+
+/// Resolve a `--fault-storm` name list (`"all"` or comma-separated
+/// preset names) into specs, failing fast with the valid set on an
+/// unknown name — the same contract `--storm` has for chaos presets.
+pub fn resolve_storms(which: &str) -> Result<Vec<FaultSpec>, String> {
+    let names: Vec<&str> = if which == "all" {
+        FAULT_STORMS.to_vec()
+    } else {
+        which.split(',').map(str::trim).collect()
+    };
+    let mut specs = Vec::new();
+    for name in names {
+        match storm(name) {
+            Some(s) => specs.push(s),
+            None => {
+                return Err(format!(
+                    "unknown fault storm `{name}` (valid: {})",
+                    FAULT_STORMS.join(", ")
+                ))
+            }
+        }
+    }
+    Ok(specs)
+}
+
+/// Per-device circuit-breaker state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum BreakerState {
+    /// Healthy; counts consecutive failures toward the trip threshold.
+    Closed { consec: u32 },
+    /// Tripped; routes around this device until `until_us`.
+    Open { until_us: f64 },
+    /// Cooldown elapsed; one probe launch is allowed to decide.
+    HalfOpen,
+}
+
+/// A per-device consecutive-failure circuit breaker on simulated time:
+/// `threshold` consecutive launch/corruption failures trip it open for
+/// `cooldown_us`, after which one half-open probe either closes it
+/// (success) or re-trips it instantly (failure).
+#[derive(Debug, Clone)]
+pub struct Breaker {
+    threshold: u32,
+    cooldown_us: f64,
+    state: BreakerState,
+    trips: u64,
+}
+
+impl Breaker {
+    /// A closed breaker with the given trip policy.
+    pub fn new(threshold: u32, cooldown_us: f64) -> Self {
+        Breaker {
+            threshold: threshold.max(1),
+            cooldown_us,
+            state: BreakerState::Closed { consec: 0 },
+            trips: 0,
+        }
+    }
+
+    /// Whether the router may place work here at simulated time `now`.
+    /// An open breaker whose cooldown has elapsed transitions to
+    /// half-open and admits the probe.
+    pub fn allows(&mut self, now_us: f64) -> bool {
+        match self.state {
+            BreakerState::Closed { .. } | BreakerState::HalfOpen => true,
+            BreakerState::Open { until_us } => {
+                if now_us >= until_us {
+                    self.state = BreakerState::HalfOpen;
+                    true
+                } else {
+                    false
+                }
+            }
+        }
+    }
+
+    /// Record a launch failure / corrupted completion at `now`. A
+    /// half-open probe failure re-trips instantly; a closed breaker
+    /// trips at the consecutive-failure threshold.
+    pub fn on_failure(&mut self, now_us: f64) {
+        match self.state {
+            BreakerState::HalfOpen => self.trip(now_us),
+            BreakerState::Closed { consec } => {
+                let consec = consec + 1;
+                if consec >= self.threshold {
+                    self.trip(now_us);
+                } else {
+                    self.state = BreakerState::Closed { consec };
+                }
+            }
+            BreakerState::Open { .. } => {}
+        }
+    }
+
+    /// Record a clean completion: closes the breaker and resets the
+    /// consecutive-failure count.
+    pub fn on_success(&mut self) {
+        self.state = BreakerState::Closed { consec: 0 };
+    }
+
+    /// Times the breaker tripped open over the run.
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+
+    /// True while the breaker is open (before its half-open probe).
+    pub fn is_open(&self) -> bool {
+        matches!(self.state, BreakerState::Open { .. })
+    }
+
+    fn trip(&mut self, now_us: f64) {
+        self.trips += 1;
+        self.state = BreakerState::Open { until_us: now_us + self.cooldown_us };
+    }
+}
+
+/// EWMA smoothing factor for the brownout deadline-risk signal.
+const BROWNOUT_ALPHA: f64 = 0.2;
+
+/// A per-device brownout controller with autoscaler-style hysteresis:
+/// it smooths the observed critical deadline-risk ratio
+/// (`latency / deadline` per served critical request) with an EWMA and
+/// toggles brownout on above `high`, off below `low`. While on, the
+/// coordinator thins best-effort elastic shards instead of shedding
+/// tenants; the total browned-out simulated time is reported as
+/// `brownout_us`.
+#[derive(Debug, Clone)]
+pub struct Brownout {
+    high: f64,
+    low: f64,
+    ewma: f64,
+    on: bool,
+    since_us: f64,
+    total_us: f64,
+}
+
+impl Brownout {
+    /// A controller that trips above `high` and recovers below `low`.
+    pub fn new(high: f64, low: f64) -> Self {
+        Brownout { high, low, ewma: 0.0, on: false, since_us: 0.0, total_us: 0.0 }
+    }
+
+    /// Feed one observed critical deadline-risk ratio at simulated time
+    /// `now`. Returns `Some(new_state)` when the hysteresis toggles
+    /// brownout, `None` when the state is unchanged.
+    pub fn observe(&mut self, ratio: f64, now_us: f64) -> Option<bool> {
+        if !ratio.is_finite() {
+            return None;
+        }
+        self.ewma = BROWNOUT_ALPHA * ratio + (1.0 - BROWNOUT_ALPHA) * self.ewma;
+        if !self.on && self.ewma > self.high {
+            self.on = true;
+            self.since_us = now_us;
+            Some(true)
+        } else if self.on && self.ewma < self.low {
+            self.on = false;
+            self.total_us += now_us - self.since_us;
+            Some(false)
+        } else {
+            None
+        }
+    }
+
+    /// Whether brownout is currently engaged.
+    pub fn engaged(&self) -> bool {
+        self.on
+    }
+
+    /// Force brownout off (device went down); closes the open span at
+    /// `now` and resets the risk signal.
+    pub fn reset(&mut self, now_us: f64) {
+        if self.on {
+            self.total_us += now_us - self.since_us;
+            self.on = false;
+        }
+        self.ewma = 0.0;
+    }
+
+    /// Total browned-out simulated time, closing any open span at `now`.
+    pub fn finish(&mut self, now_us: f64) -> f64 {
+        if self.on {
+            self.total_us += now_us - self.since_us;
+            self.since_us = now_us;
+        }
+        self.total_us
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_issue_example() {
+        let spec =
+            FaultSpec::parse("fail:p=0.001,straggle:p=0.01*4x,corrupt:p=0.0005")
+                .expect("issue example must parse");
+        assert_eq!(spec.name, "cli");
+        assert_eq!(spec.fail_p, 0.001);
+        assert_eq!(spec.straggle_p, 0.01);
+        assert_eq!(spec.straggle_factor, 4.0);
+        assert_eq!(spec.corrupt_p, 0.0005);
+        assert!(!spec.is_inert());
+        spec.validate().expect("parsed spec must validate");
+    }
+
+    #[test]
+    fn rejects_malformed_scripts() {
+        for bad in [
+            "fail",                      // missing separator
+            "fail:0.1",                  // missing p=
+            "fail:p=nope",               // bad float
+            "fail:p=1.5",                // out of range
+            "fail:p=-0.1",               // out of range
+            "straggle:p=0.1",            // missing factor
+            "straggle:p=0.1*4",          // missing x suffix
+            "straggle:p=0.1*0.5x",       // factor < 1
+            "explode:p=0.1",             // unknown kind
+            "fail:p=0.1,fail:p=0.2",     // duplicate kind
+            "fail:p=1",                  // certain failure never ends
+            "corrupt:p=1.0",             // certain corruption never ends
+        ] {
+            let err = FaultSpec::parse(bad)
+                .expect_err(&format!("`{bad}` must be rejected"));
+            assert!(!err.is_empty());
+        }
+        // Unknown kinds name the valid set.
+        let err = FaultSpec::parse("explode:p=0.1").unwrap_err();
+        assert!(err.contains("fail, straggle, corrupt"), "{err}");
+    }
+
+    #[test]
+    fn validate_catches_bad_recovery_knobs() {
+        let mut spec = FaultSpec::none();
+        spec.recovery.brownout_low = 0.9; // low >= high
+        assert!(spec.validate().is_err());
+        let mut spec = FaultSpec::none();
+        spec.recovery.hedge_watermark = 1.5;
+        assert!(spec.validate().is_err());
+        let mut spec = FaultSpec::none();
+        spec.recovery.breaker_threshold = 0;
+        assert!(spec.validate().is_err());
+        let mut spec = FaultSpec::none();
+        spec.recovery.breaker_cooldown_us = 0.0;
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn storms_are_valid_and_deterministic() {
+        for name in FAULT_STORMS {
+            let a = storm(name).expect("preset must resolve");
+            let b = storm(name).expect("preset must resolve");
+            assert_eq!(a, b, "storm `{name}` must be deterministic");
+            a.validate().expect("preset must validate");
+            assert_eq!(a.is_inert(), name == "none");
+        }
+        assert!(storm("category-5").is_none());
+        let err = resolve_storms("none,category-5").unwrap_err();
+        assert!(err.contains("full-fault-storm"), "{err}");
+        assert_eq!(resolve_storms("all").unwrap().len(), FAULT_STORMS.len());
+    }
+
+    #[test]
+    fn none_spec_is_default_inert_and_clean() {
+        let spec = FaultSpec::default();
+        assert!(spec.is_inert());
+        assert_eq!(spec.name, "none");
+        for id in 0..100u64 {
+            assert_eq!(spec.draw(id, 0), FaultDraw::CLEAN);
+        }
+    }
+
+    #[test]
+    fn draws_are_pure_in_id_and_attempt() {
+        let spec = storm("full-fault-storm").unwrap();
+        let mut distinct = 0;
+        for id in 0..200u64 {
+            for attempt in 0..3u32 {
+                let a = spec.draw(id, attempt);
+                let b = spec.draw(id, attempt);
+                assert_eq!(a, b, "draw must be pure");
+                if a != FaultDraw::CLEAN {
+                    distinct += 1;
+                }
+            }
+        }
+        // At these rates some draws must inject (sanity: non-vacuous).
+        assert!(distinct > 0, "storm rates must actually inject faults");
+        // Different attempts of the same request draw independently.
+        let any_differs = (0..200u64)
+            .any(|id| spec.draw(id, 0) != spec.draw(id, 1));
+        assert!(any_differs, "attempts must not share a draw");
+    }
+
+    #[test]
+    fn breaker_trips_and_half_open_round_trips() {
+        let mut b = Breaker::new(3, 100.0);
+        assert!(b.allows(0.0));
+        b.on_failure(0.0);
+        b.on_failure(1.0);
+        assert!(b.allows(1.0), "below threshold stays closed");
+        b.on_failure(2.0);
+        assert_eq!(b.trips(), 1);
+        assert!(b.is_open());
+        assert!(!b.allows(50.0), "open before cooldown");
+        assert!(b.allows(102.0), "half-open probe admitted after cooldown");
+        assert!(!b.is_open());
+        // Probe failure re-trips instantly.
+        b.on_failure(103.0);
+        assert_eq!(b.trips(), 2);
+        assert!(!b.allows(150.0));
+        // Probe success closes and resets the consecutive count.
+        assert!(b.allows(300.0));
+        b.on_success();
+        b.on_failure(301.0);
+        b.on_failure(302.0);
+        assert!(b.allows(302.0), "success reset the consecutive count");
+    }
+
+    #[test]
+    fn breaker_success_interrupts_a_streak() {
+        let mut b = Breaker::new(2, 100.0);
+        b.on_failure(0.0);
+        b.on_success();
+        b.on_failure(1.0);
+        assert_eq!(b.trips(), 0, "non-consecutive failures must not trip");
+        b.on_failure(2.0);
+        assert_eq!(b.trips(), 1);
+    }
+
+    #[test]
+    fn brownout_hysteresis_and_time_accounting() {
+        let mut bo = Brownout::new(0.8, 0.4);
+        // Push the EWMA above the high watermark.
+        let mut toggled_on_at = None;
+        for i in 0..50 {
+            if bo.observe(1.5, i as f64) == Some(true) {
+                toggled_on_at = Some(i as f64);
+                break;
+            }
+        }
+        let on_at = toggled_on_at.expect("sustained risk must engage");
+        assert!(bo.engaged());
+        // Mid-band observations keep it on (hysteresis).
+        assert_eq!(bo.observe(0.6, on_at + 1.0), None);
+        assert!(bo.engaged());
+        // Cool observations eventually disengage.
+        let mut toggled_off_at = None;
+        for i in 0..200 {
+            let t = on_at + 2.0 + i as f64;
+            if bo.observe(0.0, t) == Some(false) {
+                toggled_off_at = Some(t);
+                break;
+            }
+        }
+        let off_at = toggled_off_at.expect("calm must disengage");
+        assert!(!bo.engaged());
+        let total = bo.finish(off_at + 100.0);
+        assert_eq!(total, off_at - on_at, "span must close at disengage");
+    }
+
+    #[test]
+    fn brownout_reset_closes_the_open_span() {
+        let mut bo = Brownout::new(0.5, 0.1);
+        for i in 0..50 {
+            bo.observe(2.0, i as f64);
+        }
+        assert!(bo.engaged());
+        bo.reset(60.0);
+        assert!(!bo.engaged());
+        let closed = bo.finish(100.0);
+        assert!(closed > 0.0 && closed <= 60.0);
+        // Fully reset: takes sustained risk to re-engage.
+        assert_eq!(bo.observe(0.0, 101.0), None);
+    }
+}

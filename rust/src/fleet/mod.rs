@@ -1,5 +1,6 @@
 //! Heterogeneous multi-GPU fleet serving (ISSUE 5 tentpole; chaos,
-//! in-flight rebalancing and autoscaling: ISSUE 6).
+//! in-flight rebalancing and autoscaling: ISSUE 6; request-level fault
+//! injection and the self-healing layer: ISSUE 8).
 //!
 //! Miriam is evaluated across two edge-GPU platforms (§8), and the
 //! ROADMAP's heavy-traffic north star needs more than one device per
@@ -47,10 +48,33 @@
 //! transient chaos state, so a storm degrades latency rather than
 //! silently re-shaping the admitted load.
 //!
+//! # Request-level faults and self-healing (ISSUE 8)
+//!
+//! A seeded [`FaultSpec`] ([`faults`]; `--faults` DSL or a
+//! [`FAULT_STORMS`] preset) injects per-launch faults — transient
+//! submit failures, straggler slowdowns, corrupted outputs detected at
+//! completion — as a pure function of `(seed, request id, attempt)`.
+//! The recovery layer answers with bounded retries under deterministic
+//! exponential backoff in simulated time (critical retries without
+//! bound), cross-device **hedged re-launches** for critical requests
+//! past a deadline-risk watermark (first *reported* completion wins,
+//! the loser is cancelled where possible and otherwise completes into
+//! the void), deadline-aware **cancellation** of doomed best-effort
+//! requests (counted `cancelled`, never applied to critical),
+//! per-device circuit [`Breaker`]s (consecutive failures trip →
+//! route-around → half-open probe), and a per-device [`Brownout`]
+//! controller that thins Miriam's best-effort elastic shards instead
+//! of shedding when critical deadline-risk runs hot. Conservation
+//! extends to `admitted == served + lost + cancelled`; with the fault
+//! layer off (`FleetOpts::faults` `None` or inert) every branch of it
+//! is unreachable and output is bitwise identical to a fault-free
+//! build (`rust/tests/fleet_determinism.rs`).
+//!
 //! CLI: `miriam fleet-sim --devices xavier,tx2 --router all
-//! --scenario duo-burst [--chaos "down:d1@8ms+10ms" | --storm all]`
-//! (README has a quickstart; EXPERIMENTS.md §Fleet and §Resilience have
-//! router/chaos semantics and the JSON schemas).
+//! --scenario duo-burst [--chaos "down:d1@8ms+10ms" | --storm all |
+//! --faults "fail:p=0.01,straggle:p=0.02*4x" | --fault-storm all]`
+//! (README has a quickstart; EXPERIMENTS.md §Fleet, §Resilience and
+//! §Faults have router/chaos/fault semantics and the JSON schemas).
 //!
 //! [`DeviceCore`]: crate::server::online
 //!
@@ -69,30 +93,34 @@
 
 pub mod autoscale;
 pub mod chaos;
+pub mod faults;
 pub mod report;
 pub mod router;
 
 pub use autoscale::{AutoscaleConfig, Autoscaler, ScaleAction};
 pub use chaos::{ChaosEvent, ChaosSpec, STORMS};
+pub use faults::{
+    Breaker, Brownout, FaultDraw, FaultSpec, RecoveryConfig, FAULT_STORMS,
+};
 pub use report::{
-    DeviceDesc, DeviceOutcome, FleetGridReport, FleetReport,
-    ResilienceGridReport,
+    DeviceDesc, DeviceOutcome, FaultsGridReport, FleetGridReport,
+    FleetReport, ResilienceGridReport,
 };
 pub use router::{router_for, FleetView, RouterPolicy, ROUTERS};
 
-use std::collections::HashSet;
+use std::collections::{BTreeSet, HashMap, HashSet};
 use std::sync::Mutex;
 
 use crate::coordinator::admission::{
     model_envelopes, AdmissionConfig, AdmissionController, AdmissionPolicy,
     Decision,
 };
-use crate::coordinator::driver::initial_arrivals;
+use crate::coordinator::driver::{initial_arrivals, ArrivalQueue};
 use crate::gpu::kernel::Criticality;
 use crate::gpu::spec::GpuSpec;
 use crate::server::online::{
     record_served, shed_arrival, tenant_outcomes, validate_admission,
-    DeviceCore,
+    DeviceCore, TenantOutcome,
 };
 use crate::workloads::mdtb::Workload;
 use crate::workloads::rng::Rng;
@@ -213,6 +241,11 @@ pub struct FleetOpts {
     pub chaos: ChaosSpec,
     /// Reactive autoscaler with its standby pool (`None` disables).
     pub autoscale: Option<AutoscaleConfig>,
+    /// Request-level fault injection + recovery policy (`None` — or an
+    /// inert spec, which `run_fleet` normalizes to `None` — leaves the
+    /// loop's arithmetic untouched: output is bitwise identical to a
+    /// run without the fault layer).
+    pub faults: Option<FaultSpec>,
 }
 
 impl Default for FleetOpts {
@@ -224,6 +257,7 @@ impl Default for FleetOpts {
             seed: None,
             chaos: ChaosSpec::none(),
             autoscale: None,
+            faults: None,
         }
     }
 }
@@ -548,11 +582,593 @@ fn pool_specs(cfg: &AutoscaleConfig) -> Result<Vec<DeviceSpec>, String> {
     Ok(out)
 }
 
+/// Sort key for the simulated-time timer queues: every timer time here
+/// is finite and >= 0, where IEEE-754 bit patterns order exactly like
+/// the values — so `BTreeSet<(u64, ..)>` gives a deterministic
+/// earliest-first queue without an `Ord` wrapper.
+fn time_bits(t: f64) -> u64 {
+    debug_assert!(t.is_finite() && t >= 0.0, "timer at {t}");
+    t.to_bits()
+}
+
+/// One live copy of an open request under the fault layer (a request
+/// has one copy normally, two while hedged).
+struct FaultCopy {
+    device: usize,
+    /// Submit time of this copy (the straggle stall scales off the
+    /// copy's device dwell time `completion - t_sub`).
+    t_sub: f64,
+    corrupt: bool,
+    straggle: Option<f64>,
+    hedge: bool,
+}
+
+/// A straggled completion whose *report* is still stalling: the engine
+/// finished (residency is free) but the result surfaces later.
+struct DeferRec {
+    device: usize,
+    due_bits: u64,
+    hedge: bool,
+}
+
+/// Per-request recovery state, alive from admission until the request
+/// is served, cancelled, or lost.
+struct OpenFault {
+    src: usize,
+    arr_us: f64,
+    crit: bool,
+    deadline_us: Option<f64>,
+    /// Launch attempts consumed so far — the fault-draw counter
+    /// ([`FaultSpec::draw`] is pure in `(id, attempt)`).
+    attempt: u32,
+    retries_used: u32,
+    hedged: bool,
+    copies: Vec<FaultCopy>,
+    defers: Vec<DeferRec>,
+}
+
+/// One due entry popped off the recovery timer queues.
+enum FaultTimer {
+    /// Re-launch a request whose last attempt failed.
+    Retry(u64),
+    /// Surface a straggled completion report.
+    Defer { id: u64, device: usize, due_bits: u64 },
+    /// Consider a hedge copy for a critical request at deadline risk.
+    Hedge(u64),
+    /// Deadline-cancel a doomed best-effort request.
+    Cancel(u64),
+}
+
+/// The fault layer's mutable runtime: per-request state, four
+/// simulated-time timer queues, and the per-device breaker / brownout
+/// machines. Exists only while `FleetOpts::faults` is armed — the
+/// fault-free loop never constructs one.
+struct Recovery {
+    spec: FaultSpec,
+    open: HashMap<u64, OpenFault>,
+    /// `(time_bits, id)` — deterministic earliest-first, id-tiebroken.
+    retry_q: BTreeSet<(u64, u64)>,
+    hedge_q: BTreeSet<(u64, u64)>,
+    cancel_q: BTreeSet<(u64, u64)>,
+    /// `(time_bits, id, device)` — a request can have one deferred
+    /// report per device while hedged.
+    defer_q: BTreeSet<(u64, u64, usize)>,
+    breakers: Vec<Breaker>,
+    brownouts: Vec<Brownout>,
+}
+
+impl Recovery {
+    fn new(spec: FaultSpec, devices: usize) -> Self {
+        let r = &spec.recovery;
+        let breakers = (0..devices)
+            .map(|_| Breaker::new(r.breaker_threshold, r.breaker_cooldown_us))
+            .collect();
+        let brownouts = (0..devices)
+            .map(|_| Brownout::new(r.brownout_high, r.brownout_low))
+            .collect();
+        Recovery {
+            spec,
+            open: HashMap::new(),
+            retry_q: BTreeSet::new(),
+            hedge_q: BTreeSet::new(),
+            cancel_q: BTreeSet::new(),
+            defer_q: BTreeSet::new(),
+            breakers,
+            brownouts,
+        }
+    }
+
+    /// Earliest due timer over all four queues as `(time_bits, rank)`.
+    /// Ranks order same-instant timers retry < defer < hedge < cancel,
+    /// so a retry that lands a clean copy disarms the same-time cancel.
+    fn peek(&self) -> Option<(u64, u8)> {
+        let heads = [
+            (self.retry_q.iter().next().map(|&(b, _)| b), 0u8),
+            (self.defer_q.iter().next().map(|&(b, _, _)| b), 1),
+            (self.hedge_q.iter().next().map(|&(b, _)| b), 2),
+            (self.cancel_q.iter().next().map(|&(b, _)| b), 3),
+        ];
+        let mut best: Option<(u64, u8)> = None;
+        for (bits, rank) in heads {
+            if let Some(b) = bits {
+                if best.map_or(true, |(bb, br)| (b, rank) < (bb, br)) {
+                    best = Some((b, rank));
+                }
+            }
+        }
+        best
+    }
+
+    /// Time of the earliest due timer, if any.
+    fn next_due_us(&self) -> Option<f64> {
+        self.peek().map(|(b, _)| f64::from_bits(b))
+    }
+
+    /// Pop the earliest timer (the loop processes exactly one per
+    /// iteration, so timer handlers observe each other's effects in a
+    /// fixed order).
+    fn pop_earliest(&mut self) -> Option<(f64, FaultTimer)> {
+        let (bits, rank) = self.peek()?;
+        let t = f64::from_bits(bits);
+        let timer = match rank {
+            0 => {
+                let e = *self.retry_q.iter().next().expect("peeked");
+                self.retry_q.remove(&e);
+                FaultTimer::Retry(e.1)
+            }
+            1 => {
+                let e = *self.defer_q.iter().next().expect("peeked");
+                self.defer_q.remove(&e);
+                FaultTimer::Defer { id: e.1, device: e.2, due_bits: e.0 }
+            }
+            2 => {
+                let e = *self.hedge_q.iter().next().expect("peeked");
+                self.hedge_q.remove(&e);
+                FaultTimer::Hedge(e.1)
+            }
+            _ => {
+                let e = *self.cancel_q.iter().next().expect("peeked");
+                self.cancel_q.remove(&e);
+                FaultTimer::Cancel(e.1)
+            }
+        };
+        Some((t, timer))
+    }
+}
+
+/// Route one placement with the circuit breakers applied: live devices
+/// whose breaker is open are masked out (route-around), falling back to
+/// the plain live set if every breaker is open — degraded service beats
+/// none. The masked fastest is recomputed with the same strict-`>`
+/// lowest-index tiebreak as [`DevCtx::recompute_live`].
+fn fault_pick_device(
+    ctx: &DevCtx,
+    rec: &mut Recovery,
+    router: &mut dyn RouterPolicy,
+    src: usize,
+    crit: Criticality,
+    now: f64,
+    requeue: bool,
+) -> usize {
+    let mut allowed = ctx.live.clone();
+    for d in 0..allowed.len() {
+        if allowed[d] && !rec.breakers[d].allows(now) {
+            allowed[d] = false;
+        }
+    }
+    if !allowed.iter().any(|&a| a) {
+        allowed.copy_from_slice(&ctx.live);
+    }
+    let mut fastest = 0usize;
+    let mut best = f64::NEG_INFINITY;
+    for (d, &a) in allowed.iter().enumerate() {
+        if a {
+            let f = ctx.effective_flops(d);
+            if f > best {
+                best = f;
+                fastest = d;
+            }
+        }
+    }
+    let view = FleetView {
+        outstanding_us: &ctx.outstanding,
+        env_solo_us: &ctx.env_solo,
+        live: &allowed,
+        fastest_live: fastest,
+    };
+    let d = if requeue {
+        router.rebalance(src, crit, &view)
+    } else {
+        router.route(src, crit, &view)
+    };
+    assert!(d < ctx.cores.len() && allowed[d],
+            "router {} returned unavailable device {d}", router.name());
+    d
+}
+
+/// Terminal-cancel one open request: counted `cancelled` on its tenant
+/// (never reached for critical — retry is unbounded and deadline-cancel
+/// is best-effort-only), resolved for outage bookkeeping, and its
+/// closed-loop slot freed like a served request's. The caller has
+/// already cancelled / drained every live copy.
+fn fault_cancel_request(
+    rec: &mut Recovery,
+    wl: &Workload,
+    tenants: &mut [TenantOutcome],
+    arrivals: &mut ArrivalQueue,
+    pending: &mut Vec<PendingReq>,
+    outages: &mut [Outage],
+    id: u64,
+    now: f64,
+) {
+    let o = rec.open.remove(&id).expect("cancelling an unknown request");
+    debug_assert!(!o.crit, "critical requests are never cancelled");
+    tenants[o.src].cancelled += 1;
+    pending.retain(|p| p.id != id);
+    for og in outages.iter_mut() {
+        if og.recovered_at.is_none()
+            && og.open.remove(&id)
+            && og.open.is_empty()
+        {
+            og.recovered_at = Some(now);
+        }
+    }
+    if wl.sources[o.src].arrival.is_closed_loop() && now < wl.duration_us {
+        arrivals.push(now, o.src);
+    }
+}
+
+/// A request just lost its last live copy (failed launch or corrupted
+/// output): schedule a retry under deterministic exponential backoff —
+/// `backoff_us * 2^min(retries_used, 10)` in simulated time — or, for a
+/// best-effort request out of retry budget, cancel it. Critical
+/// requests retry without bound: they are never dropped by policy.
+fn fault_schedule_recovery(
+    rec: &mut Recovery,
+    wl: &Workload,
+    tenants: &mut [TenantOutcome],
+    arrivals: &mut ArrivalQueue,
+    pending: &mut Vec<PendingReq>,
+    outages: &mut [Outage],
+    id: u64,
+    now: f64,
+) {
+    let (crit, used) = {
+        let o = &rec.open[&id];
+        (o.crit, o.retries_used)
+    };
+    if crit || used < rec.spec.recovery.max_retries {
+        let backoff =
+            rec.spec.recovery.backoff_us * (1u64 << used.min(10)) as f64;
+        rec.retry_q.insert((time_bits(now + backoff), id));
+    } else {
+        fault_cancel_request(rec, wl, tenants, arrivals, pending, outages,
+                             id, now);
+    }
+}
+
+/// Launch one attempt of request `id` on device `d` through the fault
+/// model: a `fail` draw burns the attempt without touching the engine
+/// (and schedules recovery if no other copy is live); otherwise the
+/// copy is submitted carrying its drawn corrupt/straggle fate.
+#[allow(clippy::too_many_arguments)]
+fn fault_launch(
+    ctx: &mut DevCtx,
+    rec: &mut Recovery,
+    wl: &Workload,
+    tenants: &mut [TenantOutcome],
+    arrivals: &mut ArrivalQueue,
+    pending: &mut Vec<PendingReq>,
+    outages: &mut [Outage],
+    d: usize,
+    id: u64,
+    now: f64,
+    hedge: bool,
+) {
+    let (src, att) = {
+        let o = rec.open.get_mut(&id).expect("launching unknown request");
+        let att = o.attempt;
+        o.attempt += 1;
+        (o.src, att)
+    };
+    let draw = rec.spec.draw(id, att);
+    if draw.fail {
+        rec.breakers[d].on_failure(now);
+        let alone = {
+            let o = &rec.open[&id];
+            o.copies.is_empty() && o.defers.is_empty()
+        };
+        // A failed hedge attempt is not retried (one hedge per request;
+        // the primary copy is still live) — it just never launches.
+        if !hedge && alone {
+            fault_schedule_recovery(rec, wl, tenants, arrivals, pending,
+                                    outages, id, now);
+        }
+        return;
+    }
+    let arr = {
+        let o = rec.open.get_mut(&id).expect("still open");
+        o.copies.push(FaultCopy {
+            device: d,
+            t_sub: now,
+            corrupt: draw.corrupt,
+            straggle: draw.straggle,
+            hedge,
+        });
+        o.arr_us
+    };
+    ctx.cores[d]
+        .as_mut()
+        .expect("placing on a live device")
+        .submit(wl, src, arr, id);
+    ctx.outstanding[d] += ctx.env_solo[d][src];
+}
+
+/// Close request `id` as served by device `d` at `now`: the **first
+/// reported** completion wins. Accounts latency / deadline on the
+/// winning device, closes the breaker, feeds the brownout controller,
+/// counts a hedge win when the winner was the hedge copy, and cancels
+/// the losing copies wherever the policy still can (refusals complete
+/// into the void as orphans and release residency then).
+#[allow(clippy::too_many_arguments)]
+fn fault_report_serve(
+    ctx: &mut DevCtx,
+    rec: &mut Recovery,
+    wl: &Workload,
+    ctrl: &mut AdmissionController,
+    tenants: &mut [TenantOutcome],
+    devices: &mut [DeviceOutcome],
+    arrivals: &mut ArrivalQueue,
+    outages: &mut [Outage],
+    d: usize,
+    id: u64,
+    now: f64,
+    was_hedge: bool,
+) {
+    let o = rec.open.remove(&id).expect("serving an unknown request");
+    let src = o.src;
+    rec.breakers[d].on_success();
+    ctrl.on_served(src);
+    record_served(wl, src, o.arr_us, now, tenants, arrivals);
+    let lat = now - o.arr_us;
+    let dev = &mut devices[d];
+    match wl.sources[src].criticality {
+        Criticality::Critical => dev.critical_latencies_us.push(lat),
+        Criticality::Normal => dev.normal_latencies_us.push(lat),
+    }
+    if wl.sources[src].deadline_us.is_some_and(|dl| lat > dl) {
+        dev.deadline_misses += 1;
+    }
+    if was_hedge {
+        tenants[src].hedge_wins += 1;
+    }
+    // Brownout: the winning device observed this critical request's
+    // deadline-risk ratio; its hysteresis decides whether to thin the
+    // device's best-effort shards (critical geometry is never touched —
+    // the coordinator guarantees that).
+    if o.crit && rec.spec.recovery.brownout {
+        if let Some(dl) = o.deadline_us {
+            if let Some(on) = rec.brownouts[d].observe(lat / dl, now) {
+                if let Some(core) = ctx.cores[d].as_mut() {
+                    core.set_brownout(on);
+                }
+            }
+        }
+    }
+    for c in &o.copies {
+        if c.device == d {
+            continue;
+        }
+        if let Some(core) = ctx.cores[c.device].as_mut() {
+            if core.cancel(id).is_some() {
+                ctx.outstanding[c.device] = (ctx.outstanding[c.device]
+                    - ctx.env_solo[c.device][src])
+                    .max(0.0);
+            }
+        }
+    }
+    for og in outages.iter_mut() {
+        if og.recovered_at.is_none()
+            && og.open.remove(&id)
+            && og.open.is_empty()
+        {
+            og.recovered_at = Some(now);
+        }
+    }
+}
+
+/// Process one engine-level completion of request `id` on device `d`
+/// under the fault layer: orphans (cancelled / already-won copies) just
+/// release their routing signal; corrupted copies fail and may schedule
+/// recovery; straggled copies defer their report; clean copies serve.
+#[allow(clippy::too_many_arguments)]
+fn fault_handle_completion(
+    ctx: &mut DevCtx,
+    rec: &mut Recovery,
+    wl: &Workload,
+    ctrl: &mut AdmissionController,
+    tenants: &mut [TenantOutcome],
+    devices: &mut [DeviceOutcome],
+    arrivals: &mut ArrivalQueue,
+    pending: &mut Vec<PendingReq>,
+    outages: &mut [Outage],
+    d: usize,
+    id: u64,
+    src: usize,
+    now: f64,
+) {
+    // The work left the engine either way: release the routing signal.
+    ctx.outstanding[d] =
+        (ctx.outstanding[d] - ctx.env_solo[d][src]).max(0.0);
+    let copy = {
+        let Some(o) = rec.open.get_mut(&id) else {
+            return;
+        };
+        let Some(pos) = o.copies.iter().position(|c| c.device == d) else {
+            return;
+        };
+        o.copies.remove(pos)
+    };
+    if copy.corrupt {
+        // Detected at completion: the output is garbage. Corruptions
+        // count toward the device's breaker like launch failures.
+        rec.breakers[d].on_failure(now);
+        let alone = {
+            let o = &rec.open[&id];
+            o.copies.is_empty() && o.defers.is_empty()
+        };
+        if alone {
+            fault_schedule_recovery(rec, wl, tenants, arrivals, pending,
+                                    outages, id, now);
+        }
+        return;
+    }
+    if let Some(factor) = copy.straggle {
+        // Straggler: the kernels ran at nominal speed — residency is
+        // free as of now — but the completion *report* stalls by
+        // (factor - 1)x the copy's device dwell time.
+        let due = now + (now - copy.t_sub) * (factor - 1.0);
+        let due_bits = time_bits(due);
+        let o = rec.open.get_mut(&id).expect("still open");
+        o.defers.push(DeferRec { device: d, due_bits, hedge: copy.hedge });
+        rec.defer_q.insert((due_bits, id, d));
+        return;
+    }
+    fault_report_serve(ctx, rec, wl, ctrl, tenants, devices, arrivals,
+                       outages, d, id, now, copy.hedge);
+}
+
+/// Admit one request into the fault layer: open its recovery state, arm
+/// its hedge (critical) or deadline-cancel (best-effort) timer, and
+/// place its first copy — or park it if the whole fleet is dark.
+#[allow(clippy::too_many_arguments)]
+fn fault_admit(
+    ctx: &mut DevCtx,
+    rec: &mut Recovery,
+    router: &mut dyn RouterPolicy,
+    wl: &Workload,
+    tenants: &mut [TenantOutcome],
+    devices: &mut [DeviceOutcome],
+    arrivals: &mut ArrivalQueue,
+    pending: &mut Vec<PendingReq>,
+    outages: &mut [Outage],
+    src: usize,
+    t: f64,
+    id: u64,
+) {
+    let s = &wl.sources[src];
+    let crit = matches!(s.criticality, Criticality::Critical);
+    rec.open.insert(id, OpenFault {
+        src,
+        arr_us: t,
+        crit,
+        deadline_us: s.deadline_us,
+        attempt: 0,
+        retries_used: 0,
+        hedged: false,
+        copies: Vec::new(),
+        defers: Vec::new(),
+    });
+    if let Some(dl) = s.deadline_us {
+        if crit && rec.spec.recovery.hedge {
+            let at = t + rec.spec.recovery.hedge_watermark * dl;
+            rec.hedge_q.insert((time_bits(at), id));
+        }
+        if !crit && rec.spec.recovery.cancel {
+            rec.cancel_q.insert((time_bits(t + dl), id));
+        }
+    }
+    if ctx.any_live() {
+        let d = fault_pick_device(ctx, rec, router, src, s.criticality, t,
+                                  false);
+        let dev = &mut devices[d];
+        dev.routed += 1;
+        match s.criticality {
+            Criticality::Critical => dev.routed_critical += 1,
+            Criticality::Normal => dev.routed_normal += 1,
+        }
+        fault_launch(ctx, rec, wl, tenants, arrivals, pending, outages, d,
+                     id, t, false);
+    } else {
+        pending.push(PendingReq { id, arr_us: t, src, placed: false });
+    }
+}
+
+/// Re-place a previously-placed request (drained off a dead device or
+/// parked): rebalance-routed, counted as a requeue, launched as a fresh
+/// attempt.
+#[allow(clippy::too_many_arguments)]
+fn fault_requeue(
+    ctx: &mut DevCtx,
+    rec: &mut Recovery,
+    router: &mut dyn RouterPolicy,
+    wl: &Workload,
+    tenants: &mut [TenantOutcome],
+    devices: &mut [DeviceOutcome],
+    arrivals: &mut ArrivalQueue,
+    pending: &mut Vec<PendingReq>,
+    outages: &mut [Outage],
+    id: u64,
+    now: f64,
+) {
+    let (src, crit) = {
+        let o = &rec.open[&id];
+        (o.src, o.crit)
+    };
+    let class = if crit { Criticality::Critical } else { Criticality::Normal };
+    let d = fault_pick_device(ctx, rec, router, src, class, now, true);
+    devices[d].requeued_in += 1;
+    tenants[src].requeues += 1;
+    fault_launch(ctx, rec, wl, tenants, arrivals, pending, outages, d, id,
+                 now, false);
+}
+
+/// The fault-layer counterpart of [`flush_pending`]: relaunch every
+/// parked request through the fault model once a device is live again.
+#[allow(clippy::too_many_arguments)]
+fn fault_flush_pending(
+    ctx: &mut DevCtx,
+    rec: &mut Recovery,
+    router: &mut dyn RouterPolicy,
+    wl: &Workload,
+    tenants: &mut [TenantOutcome],
+    devices: &mut [DeviceOutcome],
+    arrivals: &mut ArrivalQueue,
+    pending: &mut Vec<PendingReq>,
+    outages: &mut [Outage],
+    t: f64,
+) {
+    if pending.is_empty() || !ctx.any_live() {
+        return;
+    }
+    for p in std::mem::take(pending) {
+        if !rec.open.contains_key(&p.id) {
+            continue; // cancelled while parked
+        }
+        if p.placed {
+            fault_requeue(ctx, rec, router, wl, tenants, devices, arrivals,
+                          pending, outages, p.id, t);
+        } else {
+            let class = wl.sources[p.src].criticality;
+            let d = fault_pick_device(ctx, rec, router, p.src, class, t,
+                                      false);
+            let dev = &mut devices[d];
+            dev.routed += 1;
+            match class {
+                Criticality::Critical => dev.routed_critical += 1,
+                Criticality::Normal => dev.routed_normal += 1,
+            }
+            fault_launch(ctx, rec, wl, tenants, arrivals, pending, outages,
+                         d, p.id, t, false);
+        }
+    }
+}
+
 /// Serve one scenario across the fleet until every device drains.
 /// Deterministic for a given (scenario, seed, devices, router, policy,
-/// chaos, autoscale): the loop advances in simulated time only, ties
-/// (arrival vs event vs control, device vs device) break the same way
-/// every run, and no host timing enters the report.
+/// chaos, autoscale, faults): the loop advances in simulated time only,
+/// ties (arrival vs event vs control vs fault timer, device vs device)
+/// break the same way every run, and no host timing enters the report.
 pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
                  -> Result<FleetReport, String> {
     if fleet.devices.is_empty() {
@@ -576,7 +1192,15 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
             ROUTERS.join(", ")
         )
     })?;
-    let resilience = !opts.chaos.is_empty() || opts.autoscale.is_some();
+    if let Some(f) = &opts.faults {
+        f.validate()?;
+    }
+    // An inert spec is normalized away entirely: the fault layer is
+    // not just dormant but absent, so zero-fault runs are bitwise
+    // identical to pre-fault builds.
+    let fault_spec = opts.faults.clone().filter(|f| !f.is_inert());
+    let resilience = !opts.chaos.is_empty() || opts.autoscale.is_some()
+        || fault_spec.is_some();
 
     let mut wl = sc.build();
     if let Some(seed) = opts.seed {
@@ -665,9 +1289,12 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
             max_normal_queue: 0,
             requeued_in: 0,
             downtime_us: 0.0,
+            breaker_trips: 0,
+            brownout_us: 0.0,
         })
         .collect();
     let mut next_id: u64 = 1;
+    let mut rec = fault_spec.map(|spec| Recovery::new(spec, total));
 
     loop {
         let t_arr = arrivals.peek().map(|(t, _)| t);
@@ -689,14 +1316,16 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
             (Some(a), Some(b)) => Some(a.min(b)),
             (a, b) => a.or(b),
         };
-        // Control (chaos / autoscale tick) preempts arrivals and events
-        // at the same instant: a device killed at t never sees t's
-        // arrivals, and control still fires after the queues drain (a
-        // terminal heal must flush the pending list).
+        let t_flt = rec.as_ref().and_then(|r| r.next_due_us());
+        // Control (chaos / autoscale tick) preempts arrivals, events
+        // and fault timers at the same instant: a device killed at t
+        // never sees t's arrivals, and control still fires after the
+        // queues drain (a terminal heal must flush the pending list).
         let ctl_due = match t_ctl {
             Some(tc) => {
                 t_arr.map_or(true, |ta| tc <= ta)
                     && t_ev.map_or(true, |(te, _)| tc <= te)
+                    && t_flt.map_or(true, |tf| tc <= tf)
             }
             None => false,
         };
@@ -728,34 +1357,95 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
                             ctx.down_since[d] = t;
                             ctx.outstanding[d] = 0.0;
                             ctx.recompute_live();
-                            let mut o = Outage {
-                                at_us: t,
-                                open: opens
-                                    .iter()
-                                    .map(|&(id, _, _)| id)
-                                    .collect(),
-                                recovered_at: None,
-                            };
-                            if o.open.is_empty() {
-                                o.recovered_at = Some(t);
-                            }
-                            outages.push(o);
-                            if ctx.any_live() {
+                            if let Some(r) = rec.as_mut() {
+                                // The device's brownout span ends with
+                                // it; the breaker keeps its state for
+                                // the heal (a flaky device stays
+                                // suspect).
+                                r.brownouts[d].reset(t);
+                                let mut o = Outage {
+                                    at_us: t,
+                                    open: opens
+                                        .iter()
+                                        .filter(|&&(id, _, _)| {
+                                            r.open.contains_key(&id)
+                                        })
+                                        .map(|&(id, _, _)| id)
+                                        .collect(),
+                                    recovered_at: None,
+                                };
+                                if o.open.is_empty() {
+                                    o.recovered_at = Some(t);
+                                }
+                                outages.push(o);
                                 for (id, arr, src) in opens {
-                                    place_request(
-                                        &mut ctx, router.as_mut(), &wl,
-                                        &mut tenants, &mut devices, src,
-                                        arr, id, true,
-                                    );
+                                    // Drop this device's copy record;
+                                    // replace only a request with no
+                                    // surviving copy or pending report
+                                    // (served/cancelled ids died as
+                                    // orphans and need nothing).
+                                    let replace =
+                                        match r.open.get_mut(&id) {
+                                            Some(of) => {
+                                                of.copies.retain(|c| {
+                                                    c.device != d
+                                                });
+                                                of.copies.is_empty()
+                                                    && of.defers.is_empty()
+                                            }
+                                            None => false,
+                                        };
+                                    if !replace {
+                                        continue;
+                                    }
+                                    if ctx.any_live() {
+                                        fault_requeue(
+                                            &mut ctx, r, router.as_mut(),
+                                            &wl, &mut tenants,
+                                            &mut devices, &mut arrivals,
+                                            &mut pending, &mut outages,
+                                            id, t,
+                                        );
+                                    } else {
+                                        pending.push(PendingReq {
+                                            id,
+                                            arr_us: arr,
+                                            src,
+                                            placed: true,
+                                        });
+                                    }
                                 }
                             } else {
-                                for (id, arr, src) in opens {
-                                    pending.push(PendingReq {
-                                        id,
-                                        arr_us: arr,
-                                        src,
-                                        placed: true,
-                                    });
+                                let mut o = Outage {
+                                    at_us: t,
+                                    open: opens
+                                        .iter()
+                                        .map(|&(id, _, _)| id)
+                                        .collect(),
+                                    recovered_at: None,
+                                };
+                                if o.open.is_empty() {
+                                    o.recovered_at = Some(t);
+                                }
+                                outages.push(o);
+                                if ctx.any_live() {
+                                    for (id, arr, src) in opens {
+                                        place_request(
+                                            &mut ctx, router.as_mut(),
+                                            &wl, &mut tenants,
+                                            &mut devices, src, arr, id,
+                                            true,
+                                        );
+                                    }
+                                } else {
+                                    for (id, arr, src) in opens {
+                                        pending.push(PendingReq {
+                                            id,
+                                            arr_us: arr,
+                                            src,
+                                            placed: true,
+                                        });
+                                    }
                                 }
                             }
                         }
@@ -767,9 +1457,18 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
                             ctx.rebuild_core(d, t, &wl)?;
                             ctx.state[d] = DevState::Live;
                             ctx.recompute_live();
-                            flush_pending(&mut ctx, router.as_mut(), &wl,
-                                          &mut tenants, &mut devices,
-                                          &mut pending);
+                            if let Some(r) = rec.as_mut() {
+                                fault_flush_pending(
+                                    &mut ctx, r, router.as_mut(), &wl,
+                                    &mut tenants, &mut devices,
+                                    &mut arrivals, &mut pending,
+                                    &mut outages, t,
+                                );
+                            } else {
+                                flush_pending(&mut ctx, router.as_mut(),
+                                              &wl, &mut tenants,
+                                              &mut devices, &mut pending);
+                            }
                         }
                     }
                     CtlKind::ThrottleStart { factor } => {
@@ -816,9 +1515,17 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
                         ctx.state[d] = DevState::Live;
                         attaches += 1;
                         ctx.recompute_live();
-                        flush_pending(&mut ctx, router.as_mut(), &wl,
-                                      &mut tenants, &mut devices,
-                                      &mut pending);
+                        if let Some(r) = rec.as_mut() {
+                            fault_flush_pending(
+                                &mut ctx, r, router.as_mut(), &wl,
+                                &mut tenants, &mut devices, &mut arrivals,
+                                &mut pending, &mut outages, t,
+                            );
+                        } else {
+                            flush_pending(&mut ctx, router.as_mut(), &wl,
+                                          &mut tenants, &mut devices,
+                                          &mut pending);
+                        }
                     }
                     ScaleAction::Detach => {
                         let d = detach_target.expect("evaluate checked");
@@ -843,8 +1550,188 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
                 }
                 let work_remains = !arrivals.is_empty()
                     || !pending.is_empty()
-                    || ctx.cores.iter().flatten().any(|c| c.open_count() > 0);
+                    || ctx.cores.iter().flatten().any(|c| c.open_count() > 0)
+                    || rec.as_ref().map_or(false, |r| !r.open.is_empty());
                 s.schedule_next(t, work_remains);
+            }
+            continue;
+        }
+        // Fault timers preempt arrivals and events at the same instant
+        // (control already preempted them above): exactly one timer is
+        // processed per iteration, so handlers observe each other's
+        // effects in the fixed (time, kind, id) order.
+        let flt_due = match t_flt {
+            Some(tf) => {
+                t_arr.map_or(true, |ta| tf <= ta)
+                    && t_ev.map_or(true, |(te, _)| tf <= te)
+            }
+            None => false,
+        };
+        if flt_due {
+            let tf = t_flt.expect("flt_due implies a timer");
+            for core in ctx.cores.iter_mut().flatten() {
+                core.advance_to(tf);
+            }
+            let r = rec.as_mut().expect("a timer implies the fault layer");
+            let (_, timer) =
+                r.pop_earliest().expect("flt_due implies a timer");
+            match timer {
+                FaultTimer::Retry(id) => {
+                    // Stale once the request closed or regrew a copy
+                    // (it never does between failure and retry, but
+                    // stay defensive — skipping is always safe).
+                    let state = r.open.get(&id).map(|o| {
+                        (o.copies.is_empty() && o.defers.is_empty(),
+                         o.src, o.arr_us, o.crit)
+                    });
+                    if let Some((idle, src, arr, crit)) = state {
+                        if idle && ctx.any_live() {
+                            r.open
+                                .get_mut(&id)
+                                .expect("checked open")
+                                .retries_used += 1;
+                            tenants[src].retries += 1;
+                            let class = if crit {
+                                Criticality::Critical
+                            } else {
+                                Criticality::Normal
+                            };
+                            let d = fault_pick_device(
+                                &ctx, r, router.as_mut(), src, class, tf,
+                                false,
+                            );
+                            fault_launch(&mut ctx, r, &wl, &mut tenants,
+                                         &mut arrivals, &mut pending,
+                                         &mut outages, d, id, tf, false);
+                        } else if idle {
+                            // Whole fleet dark: park it; the next
+                            // heal/attach flush relaunches it (or the
+                            // run ends and it counts lost).
+                            pending.push(PendingReq {
+                                id,
+                                arr_us: arr,
+                                src,
+                                placed: true,
+                            });
+                        }
+                    }
+                }
+                FaultTimer::Defer { id, device, due_bits } => {
+                    let hit = r.open.get_mut(&id).and_then(|o| {
+                        o.defers
+                            .iter()
+                            .position(|dr| {
+                                dr.device == device
+                                    && dr.due_bits == due_bits
+                            })
+                            .map(|pos| o.defers.remove(pos))
+                    });
+                    if let Some(dr) = hit {
+                        fault_report_serve(
+                            &mut ctx, r, &wl, &mut ctrl, &mut tenants,
+                            &mut devices, &mut arrivals, &mut outages,
+                            device, id, tf, dr.hedge,
+                        );
+                    }
+                }
+                FaultTimer::Hedge(id) => {
+                    // Hedge only a still-open, not-yet-hedged request
+                    // with a live or deferred copy (a copy-less request
+                    // is already in the retry path). One hedge per
+                    // request, ever.
+                    let plan = match r.open.get(&id) {
+                        Some(o)
+                            if !o.hedged
+                                && (!o.copies.is_empty()
+                                    || !o.defers.is_empty()) =>
+                        {
+                            let mut ex: Vec<usize> = o
+                                .copies
+                                .iter()
+                                .map(|c| c.device)
+                                .collect();
+                            ex.extend(o.defers.iter().map(|d| d.device));
+                            Some((o.src, ex))
+                        }
+                        _ => None,
+                    };
+                    if let Some((src, exclude)) = plan {
+                        // Fastest live breaker-allowed device not
+                        // already carrying this request; a 1-device
+                        // fleet has nowhere to hedge.
+                        let mut target: Option<usize> = None;
+                        let mut best = f64::NEG_INFINITY;
+                        for d in 0..ctx.live.len() {
+                            if ctx.live[d]
+                                && !exclude.contains(&d)
+                                && r.breakers[d].allows(tf)
+                            {
+                                let f = ctx.effective_flops(d);
+                                if f > best {
+                                    best = f;
+                                    target = Some(d);
+                                }
+                            }
+                        }
+                        if let Some(d) = target {
+                            r.open
+                                .get_mut(&id)
+                                .expect("checked open")
+                                .hedged = true;
+                            tenants[src].hedges += 1;
+                            fault_launch(&mut ctx, r, &wl, &mut tenants,
+                                         &mut arrivals, &mut pending,
+                                         &mut outages, d, id, tf, true);
+                        }
+                    }
+                }
+                FaultTimer::Cancel(id) => {
+                    // Deadline passed for a best-effort request: cancel
+                    // wherever the policy still can. Dispatched work
+                    // cannot be recalled — if any copy refuses, the
+                    // request runs on and is served late instead.
+                    let plan = match r.open.get(&id) {
+                        Some(o) if o.defers.is_empty() => Some((
+                            o.src,
+                            o.copies
+                                .iter()
+                                .map(|c| c.device)
+                                .collect::<Vec<_>>(),
+                        )),
+                        _ => None,
+                    };
+                    if let Some((src, copy_devs)) = plan {
+                        let mut all = true;
+                        let mut gone: Vec<usize> = Vec::new();
+                        for d in copy_devs {
+                            let ok = ctx.cores[d]
+                                .as_mut()
+                                .map_or(false,
+                                        |c| c.cancel(id).is_some());
+                            if ok {
+                                gone.push(d);
+                            } else {
+                                all = false;
+                            }
+                        }
+                        for &d in &gone {
+                            ctx.outstanding[d] = (ctx.outstanding[d]
+                                - ctx.env_solo[d][src])
+                                .max(0.0);
+                        }
+                        r.open
+                            .get_mut(&id)
+                            .expect("still open")
+                            .copies
+                            .retain(|c| !gone.contains(&c.device));
+                        if all {
+                            fault_cancel_request(
+                                r, &wl, &mut tenants, &mut arrivals,
+                                &mut pending, &mut outages, id, tf,
+                            );
+                        }
+                    }
+                }
             }
             continue;
         }
@@ -868,7 +1755,14 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
                             tenants[src].admitted += 1;
                             let id = next_id;
                             next_id += 1;
-                            if ctx.any_live() {
+                            if let Some(r) = rec.as_mut() {
+                                fault_admit(
+                                    &mut ctx, r, router.as_mut(), &wl,
+                                    &mut tenants, &mut devices,
+                                    &mut arrivals, &mut pending,
+                                    &mut outages, src, t, id,
+                                );
+                            } else if ctx.any_live() {
                                 place_request(
                                     &mut ctx, router.as_mut(), &wl,
                                     &mut tenants, &mut devices, src, t,
@@ -896,6 +1790,39 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
             (_, Some((_, d))) => {
                 let mut core =
                     ctx.cores[d].take().expect("stepping a missing core");
+                if rec.is_some() {
+                    // Completions are collected first and routed through
+                    // the fault layer after the core is back in place —
+                    // recovery may need every device (hedge-loser
+                    // cancels, breaker routing on retries).
+                    let mut comps: Vec<(u64, usize, f64, f64)> =
+                        Vec::new();
+                    core.step(|id, src, arr, now| {
+                        comps.push((id, src, arr, now));
+                    });
+                    ctx.cores[d] = Some(core);
+                    let r = rec.as_mut().expect("checked above");
+                    for (id, src, _arr, now) in comps {
+                        fault_handle_completion(
+                            &mut ctx, r, &wl, &mut ctrl, &mut tenants,
+                            &mut devices, &mut arrivals, &mut pending,
+                            &mut outages, d, id, src, now,
+                        );
+                    }
+                    if ctx.state[d] == DevState::Draining
+                        && ctx.cores[d]
+                            .as_ref()
+                            .map_or(true, |c| c.open_count() == 0)
+                    {
+                        if let Some(core) = ctx.cores[d].take() {
+                            retire_core(core, &mut devices[d]);
+                        }
+                        ctx.state[d] = DevState::Standby;
+                        ctx.outstanding[d] = 0.0;
+                        ctx.recompute_live();
+                    }
+                    continue;
+                }
                 {
                     let dev = &mut devices[d];
                     let out_d = &mut ctx.outstanding[d];
@@ -955,6 +1882,18 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
     for p in &pending {
         tenants[p.src].lost += 1;
     }
+    if let Some(r) = &rec {
+        // A fault-layer request still open but not parked was stranded
+        // mid-recovery by a terminal outage (every live copy, defer, or
+        // timer would have kept the loop running): count it lost so
+        // `admitted == served + lost + cancelled` stays exact.
+        let parked: HashSet<u64> = pending.iter().map(|p| p.id).collect();
+        for (id, o) in &r.open {
+            if !parked.contains(id) {
+                tenants[o.src].lost += 1;
+            }
+        }
+    }
     for (core, dev) in ctx.cores.iter_mut().zip(&mut devices) {
         if let Some(core) = core.take() {
             retire_core(core, dev);
@@ -969,6 +1908,12 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
     for (d, dev) in devices.iter_mut().enumerate() {
         if ctx.state[d] == DevState::Down {
             dev.downtime_us += (span_us - ctx.down_since[d]).max(0.0);
+        }
+    }
+    if let Some(r) = rec.as_mut() {
+        for (d, dev) in devices.iter_mut().enumerate() {
+            dev.breaker_trips = r.breakers[d].trips();
+            dev.brownout_us = r.brownouts[d].finish(span_us);
         }
     }
     let recovery_us = outages
@@ -992,6 +1937,10 @@ pub fn run_fleet(fleet: &FleetSpec, sc: &ScenarioSpec, opts: &FleetOpts)
         attaches,
         detaches,
         resilience,
+        faults: rec.is_some(),
+        fault_script: rec
+            .as_ref()
+            .map_or_else(|| "none".to_string(), |r| r.spec.name.clone()),
     })
 }
 
@@ -1141,6 +2090,91 @@ pub fn run_resilience_grid(
         duration_us: scenarios[0].duration_us,
         scenarios: scenarios.iter().map(|s| s.name.clone()).collect(),
         storms: storms.to_vec(),
+        routers: routers.to_vec(),
+        cells,
+    })
+}
+
+/// Run the scenarios × fault-specs × routers grid (scenario-major, then
+/// fault spec, then router) across a scoped worker pool and assemble
+/// the [`FaultsGridReport`] (`BENCH_faults.json`). `specs` come from
+/// [`faults::resolve_storms`] (presets) or [`FaultSpec::parse`] (the
+/// `--faults` DSL); an inert spec — the `"none"` baseline cell — runs
+/// with the fault layer absent, so that column doubles as the calm
+/// reference the hedging-effectiveness comparisons divide by. Fault
+/// draws are pure in `(seed, id, attempt)` and every cell lands in its
+/// own slot, so the report is **byte-identical for any `threads`
+/// value**, like [`run_fleet_grid`].
+pub fn run_faults_grid(
+    fleet: &FleetSpec,
+    scenarios: &[ScenarioSpec],
+    specs: &[FaultSpec],
+    routers: &[String],
+    base: &FleetOpts,
+    threads: usize,
+) -> Result<FaultsGridReport, String> {
+    if scenarios.is_empty() {
+        return Err("faults grid needs at least one scenario".into());
+    }
+    if specs.is_empty() {
+        return Err("faults grid needs at least one fault spec".into());
+    }
+    if routers.is_empty() {
+        return Err("faults grid needs at least one router".into());
+    }
+    validate_admission(&base.admission)?;
+    for r in routers {
+        if router_for(r, fleet.devices.len().max(1)).is_none() {
+            return Err(format!(
+                "unknown router {r} (available: {})",
+                ROUTERS.join(", ")
+            ));
+        }
+    }
+    for s in specs {
+        s.validate()?;
+    }
+    let mut devices = fleet.descs();
+    if let Some(a) = &base.autoscale {
+        a.validate()?;
+        devices.extend(pool_specs(a)?.iter().map(|d| DeviceDesc {
+            name: d.name.clone(),
+            platform: d.gpu.name.clone(),
+            scheduler: d.scheduler.clone(),
+        }));
+    }
+    let cells: Vec<(usize, usize, usize)> = scenarios
+        .iter()
+        .enumerate()
+        .flat_map(|(si, _)| {
+            (0..specs.len()).flat_map(move |fi| {
+                (0..routers.len()).map(move |ri| (si, fi, ri))
+            })
+        })
+        .collect();
+    let n = cells.len();
+    let slots: Vec<Mutex<Option<Result<FleetReport, String>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    crate::coordinator::sweep::run_indexed(n, threads, |i| {
+        let (si, fi, ri) = cells[i];
+        let opts = FleetOpts {
+            router: routers[ri].clone(),
+            faults: Some(specs[fi].clone()),
+            ..base.clone()
+        };
+        *slots[i].lock().unwrap() =
+            Some(run_fleet(fleet, &scenarios[si], &opts));
+    });
+    let cells = slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("cell ran"))
+        .collect::<Result<Vec<_>, _>>()?;
+    Ok(FaultsGridReport {
+        devices,
+        policy: base.policy.name().to_string(),
+        duration_us: scenarios[0].duration_us,
+        scenarios: scenarios.iter().map(|s| s.name.clone()).collect(),
+        faults: specs.iter().map(|s| s.name.clone()).collect(),
         routers: routers.to_vec(),
         cells,
     })
@@ -1455,5 +2489,160 @@ mod tests {
         for name in STORMS {
             assert!(err.contains(name), "{err}");
         }
+    }
+
+    #[test]
+    fn inert_fault_spec_matches_no_faults_bitwise() {
+        // The zero-fault identity contract: handing run_fleet an inert
+        // spec must produce the byte-identical document a fault-free
+        // run produces (the spec is normalized away, no fault keys
+        // appear, no code path diverges).
+        let base = run_fleet(&hetero(), &duo(), &FleetOpts::default())
+            .unwrap();
+        let opts = FleetOpts {
+            faults: Some(FaultSpec::none()),
+            ..FleetOpts::default()
+        };
+        let rep = run_fleet(&hetero(), &duo(), &opts).unwrap();
+        assert!(!rep.faults, "inert spec left the fault layer armed");
+        assert_eq!(base.to_json_value().to_canonical_string(),
+                   rep.to_json_value().to_canonical_string(),
+                   "an inert fault spec changed the run");
+    }
+
+    #[test]
+    fn fault_storms_conserve_and_never_cancel_critical() {
+        for name in FAULT_STORMS {
+            let spec = faults::storm(name).unwrap();
+            let armed = !spec.is_inert();
+            let opts =
+                FleetOpts { faults: Some(spec), ..FleetOpts::default() };
+            let rep = run_fleet(&hetero(), &duo(), &opts).unwrap();
+            assert_eq!(rep.faults, armed, "{name}");
+            assert_eq!(rep.offered(), rep.admitted() + rep.shed(), "{name}");
+            assert_eq!(
+                rep.admitted(),
+                rep.served() + rep.lost() + rep.cancelled(),
+                "{name}: extended conservation broke"
+            );
+            assert_eq!(rep.lost(), 0, "{name}: lost with every device live");
+            assert_eq!(rep.critical_cancelled(), 0,
+                       "{name}: a critical request was cancelled");
+            assert_eq!(rep.shed_critical(), 0, "{name}");
+            assert_eq!(rep.routed(), rep.admitted(), "{name}");
+            assert!(rep.hedge_wins() <= rep.hedges(), "{name}");
+            if armed {
+                assert_eq!(rep.fault_script, name, "{name}");
+                assert!(rep.resilience, "{name}");
+            }
+            let again = run_fleet(&hetero(), &duo(), &opts).unwrap();
+            assert_eq!(rep.to_json_value().to_canonical_string(),
+                       again.to_json_value().to_canonical_string(),
+                       "{name}: fault runs diverged across repeats");
+        }
+    }
+
+    #[test]
+    fn heavy_launch_failures_cancel_normals_never_critical() {
+        // fail:p=0.9 exhausts the best-effort retry budget often
+        // (0.9^4 per request) and trips every breaker, while critical
+        // requests retry without bound and all eventually land.
+        let spec = FaultSpec::parse("fail:p=0.9").unwrap();
+        let opts = FleetOpts { faults: Some(spec), ..FleetOpts::default() };
+        let rep = run_fleet(&hetero(), &duo(), &opts).unwrap();
+        assert!(rep.retries() > 0, "no retries at p=0.9");
+        assert!(rep.cancelled() > 0,
+                "no best-effort request ran out of retries at p=0.9");
+        assert_eq!(rep.critical_cancelled(), 0);
+        assert_eq!(rep.lost(), 0);
+        assert_eq!(rep.admitted(),
+                   rep.served() + rep.lost() + rep.cancelled());
+        assert!(rep.breaker_trips() > 0, "no breaker tripped at p=0.9");
+        let dev_trips: u64 =
+            rep.devices.iter().map(|d| d.breaker_trips).sum();
+        assert_eq!(dev_trips, rep.breaker_trips());
+    }
+
+    #[test]
+    fn stragglers_trigger_hedges_for_deadline_risky_criticals() {
+        // Near-certain 64x stalls with an aggressive hedge watermark:
+        // critical requests must hedge onto a second device, and the
+        // brownout governor must engage somewhere under deadline-risk
+        // this extreme.
+        let mut spec = FaultSpec::parse("straggle:p=0.9*64x").unwrap();
+        spec.recovery.hedge_watermark = 0.05;
+        let opts = FleetOpts { faults: Some(spec), ..FleetOpts::default() };
+        let rep = run_fleet(&hetero(), &duo(), &opts).unwrap();
+        assert!(rep.hedges() > 0,
+                "no hedge fired under a 64x straggler storm");
+        assert!(rep.hedge_wins() <= rep.hedges());
+        assert_eq!(rep.critical_cancelled(), 0);
+        assert_eq!(rep.admitted(),
+                   rep.served() + rep.lost() + rep.cancelled());
+        assert!(rep.devices.iter().any(|d| d.brownout_us > 0.0),
+                "brownout never engaged under a 64x straggler storm");
+    }
+
+    #[test]
+    fn rejects_bad_fault_specs_and_mixed_chaos() {
+        // run_fleet re-validates the spec (CLI parsing is not the only
+        // way in).
+        let mut bad = FaultSpec::parse("fail:p=0.5").unwrap();
+        bad.recovery.brownout_high = 0.1; // below brownout_low
+        let opts = FleetOpts { faults: Some(bad), ..FleetOpts::default() };
+        assert!(run_fleet(&hetero(), &duo(), &opts).is_err());
+        // Faults compose with chaos: a kill under an active fault layer
+        // still conserves and requeues the drained requests.
+        let opts = FleetOpts {
+            faults: Some(faults::storm("flaky-launches").unwrap()),
+            chaos: ChaosSpec::parse("down:d0@5ms+8ms").unwrap(),
+            ..FleetOpts::default()
+        };
+        let rep = run_fleet(&hetero(), &duo(), &opts).unwrap();
+        assert_eq!(rep.offered(), rep.admitted() + rep.shed());
+        assert_eq!(rep.admitted(),
+                   rep.served() + rep.lost() + rep.cancelled());
+        assert_eq!(rep.lost(), 0, "lost with a live survivor");
+        assert_eq!(rep.critical_cancelled(), 0);
+    }
+
+    #[test]
+    fn faults_grid_shape_errors_and_json() {
+        use crate::runtime::json::{parse, Json};
+        let routers: Vec<String> =
+            ROUTERS.iter().map(|r| r.to_string()).collect();
+        let specs = vec![
+            FaultSpec::none(),
+            faults::storm("flaky-launches").unwrap(),
+        ];
+        let grid = run_faults_grid(&hetero(), &[duo()], &specs, &routers,
+                                   &FleetOpts::default(), 2)
+            .unwrap();
+        assert_eq!(grid.cells.len(), specs.len() * ROUTERS.len());
+        assert!(grid
+            .cell("duo-burst", "flaky-launches", "round-robin")
+            .is_some());
+        assert!(grid.cell("duo-burst", "none", "round-robin").is_some());
+        let j = grid.to_json();
+        let doc = parse(&j).expect("valid JSON");
+        assert_eq!(doc.get("bench").and_then(Json::as_str), Some("faults"));
+        assert_eq!(
+            doc.get("comparisons").and_then(Json::as_arr).map(|a| a.len()),
+            Some(grid.cells.len())
+        );
+        assert_eq!(
+            doc.get("faults").and_then(Json::as_arr).map(|a| a.len()),
+            Some(2)
+        );
+        // Shape errors fail fast.
+        assert!(run_faults_grid(&hetero(), &[duo()], &[], &routers,
+                                &FleetOpts::default(), 1)
+            .is_err());
+        assert!(run_faults_grid(&hetero(), &[], &specs, &routers,
+                                &FleetOpts::default(), 1)
+            .is_err());
+        assert!(run_faults_grid(&hetero(), &[duo()], &specs, &[],
+                                &FleetOpts::default(), 1)
+            .is_err());
     }
 }

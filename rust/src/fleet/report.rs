@@ -18,7 +18,7 @@ use crate::coordinator::stats::{merged_quantile, sorted_quantile};
 use crate::gpu::kernel::Criticality;
 use crate::runtime::json::Json;
 use crate::server::online::{
-    tenant_json, tenant_json_resilience, TenantOutcome,
+    tenant_json, tenant_json_faults, tenant_json_resilience, TenantOutcome,
 };
 
 /// Identity of one fleet device (the `devices` header of
@@ -65,6 +65,13 @@ pub struct DeviceOutcome {
     /// Total simulated time this device spent down (us; 0 without
     /// chaos).
     pub downtime_us: f64,
+    /// Times this device's circuit breaker tripped open (0 without
+    /// fault injection).
+    pub breaker_trips: u64,
+    /// Total simulated time this device spent in brownout — forcing
+    /// thinner elastic shards for best-effort tenants (us; 0 without
+    /// fault injection).
+    pub brownout_us: f64,
 }
 
 impl DeviceOutcome {
@@ -85,9 +92,10 @@ impl DeviceOutcome {
     }
 
     /// One device row of a fleet cell. The chaos-only keys appear only
-    /// when `resilience` is set, so zero-chaos documents stay
+    /// when `resilience` is set and the fault-layer keys only when
+    /// `faults` is set, so zero-chaos, zero-fault documents stay
     /// byte-identical to their pre-chaos (PR 5) form.
-    fn to_json_value(&self, resilience: bool) -> Json {
+    fn to_json_value(&self, resilience: bool, faults: bool) -> Json {
         let num = Json::Num;
         let mut m = BTreeMap::new();
         m.insert("device".into(), Json::Str(self.desc.name.clone()));
@@ -108,6 +116,10 @@ impl DeviceOutcome {
         if resilience {
             m.insert("requeued_in".into(), num(self.requeued_in as f64));
             m.insert("downtime_us".into(), num(self.downtime_us));
+        }
+        if faults {
+            m.insert("breaker_trips".into(), num(self.breaker_trips as f64));
+            m.insert("brownout_us".into(), num(self.brownout_us));
         }
         Json::Obj(m)
     }
@@ -154,6 +166,13 @@ pub struct FleetReport {
     /// the chaos-only JSON keys so zero-chaos documents stay
     /// byte-identical to their pre-chaos (PR 5) form.
     pub resilience: bool,
+    /// Whether the cell ran with request-level fault injection (ISSUE
+    /// 8). Gates the fault-layer JSON keys so zero-fault documents stay
+    /// byte-identical to their pre-fault form.
+    pub faults: bool,
+    /// Fault script name this cell ran under (`"none"`, `"cli"`, or a
+    /// fault-storm preset).
+    pub fault_script: String,
 }
 
 impl FleetReport {
@@ -196,6 +215,44 @@ impl FleetReport {
     /// `admitted == served + lost`.
     pub fn lost(&self) -> u64 {
         self.tenants.iter().map(|t| t.lost).sum()
+    }
+
+    /// Total fault-layer launch retries over all tenants (0 without
+    /// fault injection).
+    pub fn retries(&self) -> u64 {
+        self.tenants.iter().map(|t| t.retries).sum()
+    }
+
+    /// Total hedged re-launches issued for deadline-risky critical
+    /// requests (0 without fault injection).
+    pub fn hedges(&self) -> u64 {
+        self.tenants.iter().map(|t| t.hedges).sum()
+    }
+
+    /// Hedged requests whose hedge copy reported first (0 without
+    /// fault injection). Each hedged request is counted at most once.
+    pub fn hedge_wins(&self) -> u64 {
+        self.tenants.iter().map(|t| t.hedge_wins).sum()
+    }
+
+    /// Admitted requests the fault layer cancelled — doomed best-effort
+    /// requests past their deadline or out of retries. With faults on,
+    /// `admitted == served + lost + cancelled`.
+    pub fn cancelled(&self) -> u64 {
+        self.tenants.iter().map(|t| t.cancelled).sum()
+    }
+
+    /// Cancelled count over critical tenants — structurally zero (the
+    /// fault layer never cancels critical requests), recorded so tests
+    /// and gates can assert it fleet-wide.
+    pub fn critical_cancelled(&self) -> u64 {
+        self.class_sum(Criticality::Critical, |t| t.cancelled)
+    }
+
+    /// Circuit-breaker trips summed over devices (0 without fault
+    /// injection).
+    pub fn breaker_trips(&self) -> u64 {
+        self.devices.iter().map(|d| d.breaker_trips).sum()
     }
 
     /// Shed count over critical tenants — zero by the admission
@@ -303,16 +360,27 @@ impl FleetReport {
             m.insert("attaches".into(), num(self.attaches as f64));
             m.insert("detaches".into(), num(self.detaches as f64));
         }
+        if self.faults {
+            m.insert("faults".into(), Json::Str(self.fault_script.clone()));
+            m.insert("retries".into(), num(self.retries() as f64));
+            m.insert("hedges".into(), num(self.hedges() as f64));
+            m.insert("hedge_wins".into(), num(self.hedge_wins() as f64));
+            m.insert("cancelled".into(), num(self.cancelled() as f64));
+            m.insert("breaker_trips".into(),
+                     num(self.breaker_trips() as f64));
+        }
         m.insert(
             "devices".into(),
             Json::Arr(
                 self.devices
                     .iter()
-                    .map(|d| d.to_json_value(self.resilience))
+                    .map(|d| d.to_json_value(self.resilience, self.faults))
                     .collect(),
             ),
         );
-        let trow = if self.resilience {
+        let trow = if self.faults {
+            tenant_json_faults
+        } else if self.resilience {
             tenant_json_resilience
         } else {
             tenant_json
@@ -495,6 +563,133 @@ impl ResilienceGridReport {
         obj.insert(
             "storms".into(),
             Json::Arr(self.storms.iter().cloned().map(Json::Str).collect()),
+        );
+        obj.insert(
+            "routers".into(),
+            Json::Arr(self.routers.iter().cloned().map(Json::Str).collect()),
+        );
+        obj.insert("comparisons".into(), self.comparisons());
+        obj.insert(
+            "cells".into(),
+            Json::Arr(self.cells.iter().map(|c| c.to_json_value()).collect()),
+        );
+        obj.insert("version".into(), Json::Num(1.0));
+        Json::Obj(obj).to_canonical_string()
+    }
+}
+
+/// A scenarios × fault-scripts × routers comparison (the
+/// `BENCH_faults.json` document, ISSUE 8).
+#[derive(Debug, Clone)]
+pub struct FaultsGridReport {
+    /// Fleet devices (primaries first, then any standby pool).
+    pub devices: Vec<DeviceDesc>,
+    /// Admission policy applied in every cell.
+    pub policy: String,
+    /// Arrival-generation window per cell (us).
+    pub duration_us: f64,
+    /// Scenario names, in run order.
+    pub scenarios: Vec<String>,
+    /// Fault script names, in run order (`"none"` is the baseline).
+    pub faults: Vec<String>,
+    /// Router names, in run order.
+    pub routers: Vec<String>,
+    /// Cells in deterministic grid order (scenario-major, then fault
+    /// script, then router) — independent of worker-thread
+    /// interleaving.
+    pub cells: Vec<FleetReport>,
+}
+
+impl FaultsGridReport {
+    /// The cell for (scenario, fault script, router), if it ran.
+    pub fn cell(&self, scenario: &str, faults: &str, router: &str)
+                -> Option<&FleetReport> {
+        self.cells.iter().find(|c| {
+            c.scenario == scenario
+                && c.fault_script == faults
+                && c.router == router
+        })
+    }
+
+    /// Per-cell headline numbers with each fault cell's critical p99
+    /// put next to the `none` baseline of the same (scenario, router)
+    /// as a degradation ratio — what `tools/bench_gate.py --faults`
+    /// and EXPERIMENTS.md read.
+    fn comparisons(&self) -> Json {
+        let num = Json::Num;
+        let rows = self
+            .cells
+            .iter()
+            .map(|c| {
+                let base_p99 = self
+                    .cell(&c.scenario, "none", &c.router)
+                    .map(|b| b.crit_p99_us())
+                    .unwrap_or(f64::NAN);
+                let p99 = c.crit_p99_us();
+                let degradation = if base_p99.is_finite() && base_p99 > 0.0
+                {
+                    p99 / base_p99
+                } else {
+                    f64::NAN
+                };
+                let mut m = BTreeMap::new();
+                m.insert("scenario".into(), Json::Str(c.scenario.clone()));
+                m.insert("faults".into(), Json::Str(c.fault_script.clone()));
+                m.insert("router".into(), Json::Str(c.router.clone()));
+                m.insert("offered".into(), num(c.offered() as f64));
+                m.insert("admitted".into(), num(c.admitted() as f64));
+                m.insert("shed".into(), num(c.shed() as f64));
+                m.insert("served".into(), num(c.served() as f64));
+                m.insert("lost".into(), num(c.lost() as f64));
+                m.insert("cancelled".into(), num(c.cancelled() as f64));
+                m.insert("critical_cancelled".into(),
+                         num(c.critical_cancelled() as f64));
+                m.insert("retries".into(), num(c.retries() as f64));
+                m.insert("hedges".into(), num(c.hedges() as f64));
+                m.insert("hedge_wins".into(), num(c.hedge_wins() as f64));
+                m.insert("breaker_trips".into(),
+                         num(c.breaker_trips() as f64));
+                m.insert("crit_p99_us".into(), num(p99));
+                m.insert("crit_p99_degradation".into(), num(degradation));
+                Json::Obj(m)
+            })
+            .collect();
+        Json::Arr(rows)
+    }
+
+    /// The canonical `BENCH_faults.json` document: sorted keys, no
+    /// whitespace, no host-timing fields — byte-deterministic per seed
+    /// and across `--threads` values (schema in EXPERIMENTS.md
+    /// §Faults).
+    pub fn to_json(&self) -> String {
+        let mut obj = BTreeMap::new();
+        obj.insert("bench".into(), Json::Str("faults".into()));
+        obj.insert(
+            "devices".into(),
+            Json::Arr(
+                self.devices
+                    .iter()
+                    .map(|d| {
+                        let mut m = BTreeMap::new();
+                        m.insert("name".into(), Json::Str(d.name.clone()));
+                        m.insert("platform".into(),
+                                 Json::Str(d.platform.clone()));
+                        m.insert("scheduler".into(),
+                                 Json::Str(d.scheduler.clone()));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        obj.insert("policy".into(), Json::Str(self.policy.clone()));
+        obj.insert("duration_us".into(), Json::Num(self.duration_us));
+        obj.insert(
+            "scenarios".into(),
+            Json::Arr(self.scenarios.iter().cloned().map(Json::Str).collect()),
+        );
+        obj.insert(
+            "faults".into(),
+            Json::Arr(self.faults.iter().cloned().map(Json::Str).collect()),
         );
         obj.insert(
             "routers".into(),

@@ -480,6 +480,21 @@ impl Engine {
         tag
     }
 
+    /// Remove still-queued (never activated) launches with the given
+    /// tags from one stream, returning how many were removed (ISSUE 8
+    /// recovery layer). Queued launches hold no SM residency and touch
+    /// no dispatch counters until activation, so removal is pure queue
+    /// surgery. Tags already activated (stream head or resident) are
+    /// left untouched — there is no preemption; running work completes
+    /// normally and its completion must be tolerated by the caller.
+    pub fn cancel_queued(&mut self, stream: StreamId, tags: &[LaunchTag])
+                         -> usize {
+        let q = &mut self.streams[stream as usize].queue;
+        let before = q.len();
+        q.retain(|l| !tags.contains(&l.tag));
+        before - q.len()
+    }
+
     /// True when nothing is queued, dispatching, or executing.
     pub fn idle(&self) -> bool {
         self.live_launches == 0 && self.streams.iter().all(|s| s.is_empty())

@@ -17,7 +17,12 @@
 //!              [--chaos DSL|--storm all|names] [--standby presets] add
 //!              deterministic failure injection and the reactive
 //!              autoscaler; --storm runs the resilience grid and writes
-//!              BENCH_resilience.json (ISSUE 6)
+//!              BENCH_resilience.json (ISSUE 6);
+//!              [--faults DSL|--fault-storm all|names] runs the
+//!              request-level fault-injection grid against the
+//!              self-healing layer (retries, hedging, cancellation,
+//!              breakers, brownout) and writes BENCH_faults.json
+//!              (ISSUE 8)
 //!   scale-sim  [--tenants 1000,10000,100000] [--duration SECONDS]
 //!              [--threads N] — tiered-tenant scale grid over lazy arrival
 //!              streams + streaming quantiles, writes BENCH_scale.json
@@ -68,7 +73,11 @@ USAGE:
                    [--standby preset1,preset2] [--standby-scheduler miriam]
                    [--scale-high-ms 20] [--scale-low-ms 4] [--scale-eval-ms 5]
                    [--scale-cooldown-ms 20]
-                   [--out BENCH_fleet.json|BENCH_resilience.json]
+                   [--faults \"fail:p=0.001,straggle:p=0.01*4x,corrupt:p=0.0005\"
+                    | --fault-storm all|none,flaky-launches,straggler-swarm,
+                      bitflip-storm,full-fault-storm]
+                   [--out BENCH_fleet.json|BENCH_resilience.json|
+                    BENCH_faults.json]
   miriam scale-sim [--platform P] [--tenants 1000,10000,100000]
                    [--duration SECONDS] [--scheduler miriam] [--threads N]
                    [--out BENCH_scale.json]
@@ -484,6 +493,50 @@ fn resilience_sim(
     Ok(())
 }
 
+/// The `fleet-sim --faults`/`--fault-storm` path (ISSUE 8): the
+/// scenarios × fault-scripts × routers self-healing grid, stdout table
+/// plus `BENCH_faults.json`. A fault-free `none` column is always in
+/// the grid so every cell carries a critical-p99 degradation ratio
+/// against calm weather.
+#[allow(clippy::too_many_arguments)]
+fn faults_sim(
+    args: &Args,
+    spec: &fleet::FleetSpec,
+    scenarios: &[scenario::ScenarioSpec],
+    fault_specs: &[fleet::FaultSpec],
+    routers: &[String],
+    opts: &fleet::FleetOpts,
+    threads: usize,
+    duration: f64,
+) -> Result<()> {
+    let out = args.get("out", "BENCH_faults.json");
+    println!("# fleet-sim faults: {} scenario(s) x {} fault script(s) x {} \
+              router(s) on {} device(s), {duration}s of arrivals each, \
+              policy {}, {threads} thread(s)",
+             scenarios.len(), fault_specs.len(), routers.len(),
+             spec.devices.len(), opts.policy.name());
+    let grid = fleet::run_faults_grid(spec, scenarios, fault_specs, routers,
+                                      opts, threads)
+        .map_err(|e| anyhow!(e))?;
+    println!("{:<16} {:<18} {:<22} {:>8} {:>7} {:>6} {:>5} {:>7} {:>6} \
+              {:>10}",
+             "scenario", "faults", "router", "served", "retries", "hedges",
+             "wins", "cancel", "trips", "crit p99");
+    println!("{:<16} {:<18} {:<22} {:>8} {:>7} {:>6} {:>5} {:>7} {:>6} \
+              {:>10}",
+             "", "", "", "", "", "", "", "", "", "(ms)");
+    for c in &grid.cells {
+        println!("{:<16} {:<18} {:<22} {:>8} {:>7} {:>6} {:>5} {:>7} {:>6} \
+                  {:>10.2}",
+                 c.scenario, c.fault_script, c.router, c.served(),
+                 c.retries(), c.hedges(), c.hedge_wins(), c.cancelled(),
+                 c.breaker_trips(), c.crit_p99_us() / 1e3);
+    }
+    std::fs::write(out, grid.to_json())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
 /// Heterogeneous multi-GPU fleet serving (ISSUE 5 tentpole): scenario
 /// arrivals pass through one fleet-wide admission policy, each admitted
 /// request is placed on a device by the chosen router, and per-device /
@@ -530,6 +583,20 @@ fn fleet_sim(args: &Args) -> Result<()> {
             "--chaos and --storm are mutually exclusive: --chaos scripts \
              one event list, --storm sweeps the named presets"));
     }
+    let wants_faults = args.has("faults") || args.has("fault-storm");
+    if wants_faults && (args.has("chaos") || args.has("storm")) {
+        return Err(anyhow!(
+            "--faults/--fault-storm and --chaos/--storm are mutually \
+             exclusive: request-level fault injection and device-level \
+             chaos run as separate grids (compose them through the \
+             library's FleetOpts when you need both)"));
+    }
+    if args.has("faults") && args.has("fault-storm") {
+        return Err(anyhow!(
+            "--faults and --fault-storm are mutually exclusive: --faults \
+             scripts one fault model, --fault-storm sweeps the named \
+             presets"));
+    }
     let chaos = match args.get_opt("chaos") {
         Some(dsl) => {
             let c = fleet::ChaosSpec::parse(dsl).map_err(|e| anyhow!(e))?;
@@ -548,6 +615,28 @@ fn fleet_sim(args: &Args) -> Result<()> {
         chaos,
         autoscale,
     };
+    if wants_faults {
+        let mut fault_specs = match args.get_opt("faults") {
+            Some(dsl) => {
+                let f =
+                    fleet::FaultSpec::parse(dsl).map_err(|e| anyhow!(e))?;
+                if f.is_inert() {
+                    return Err(anyhow!(
+                        "--faults `{dsl}` injects nothing; omit the flag \
+                         for a fault-free run"));
+                }
+                vec![f]
+            }
+            None => fleet::faults::resolve_storms(
+                args.get("fault-storm", "all"))
+                .map_err(|e| anyhow!(e))?,
+        };
+        if !fault_specs.iter().any(|f| f.is_inert()) {
+            fault_specs.insert(0, fleet::FaultSpec::none());
+        }
+        return faults_sim(args, &spec, &scenarios, &fault_specs, &routers,
+                          &opts, threads, duration);
+    }
     if let Some(which) = args.get_opt("storm") {
         let storms: Vec<String> = if which.eq_ignore_ascii_case("all") {
             fleet::STORMS.iter().map(|s| s.to_string()).collect()

@@ -208,6 +208,35 @@ impl DeviceCore {
         rows
     }
 
+    /// True while request `id` is still in flight on this device.
+    pub(crate) fn has_open(&self, id: u64) -> bool {
+        self.open.contains_key(&id)
+    }
+
+    /// Best-effort cancellation of in-flight request `id` (ISSUE 8
+    /// recovery layer). The open entry is removed **only** when the
+    /// scheduler accepted the cancellation — i.e. it removed every
+    /// queued launch and will never report the request finished.
+    /// Otherwise the request stays open and runs to completion (the
+    /// baselines' default `Scheduler::cancel` declines; dispatched work
+    /// cannot be recalled). Returns the `(arrival_us, source)` row on
+    /// success.
+    pub(crate) fn cancel(&mut self, id: u64) -> Option<(f64, usize)> {
+        if !self.open.contains_key(&id) {
+            return None;
+        }
+        if !self.sched.cancel(id, &mut self.eng) {
+            return None;
+        }
+        self.open.remove(&id)
+    }
+
+    /// Toggle the scheduler's brownout mode (no-op for schedulers
+    /// without the lever).
+    pub(crate) fn set_brownout(&mut self, on: bool) {
+        self.sched.set_brownout(on);
+    }
+
     /// Process the device's next event: step the engine once and drain
     /// the resulting completions through the scheduler. `served` fires
     /// once per finished request — in completion order, *inside* the
@@ -289,6 +318,21 @@ pub struct TenantOutcome {
     /// was dark when the request needed a device and never recovered
     /// (0 whenever ≥ 1 device stays live).
     pub lost: u64,
+    /// Launch retries performed for this tenant by the recovery layer
+    /// after transient failures or corrupted completions (fault layer;
+    /// 0 without faults).
+    pub retries: u64,
+    /// Hedged duplicate launches placed for this tenant's critical
+    /// requests past the deadline-risk watermark (0 without faults).
+    pub hedges: u64,
+    /// Hedged requests whose *hedge* copy reported first — each counted
+    /// exactly once (0 without faults).
+    pub hedge_wins: u64,
+    /// Best-effort requests cancelled by the recovery layer (deadline
+    /// doomed or retry budget exhausted). Never applied to critical
+    /// tenants; conservation extends to
+    /// `admitted == served + lost + cancelled` (0 without faults).
+    pub cancelled: u64,
     /// End-to-end latency (us) of each served request.
     pub latencies_us: Vec<f64>,
 }
@@ -511,6 +555,23 @@ pub(crate) fn tenant_json_resilience(t: &TenantOutcome) -> Json {
     }
 }
 
+/// The fault variant of [`tenant_json_resilience`]: the same row plus
+/// the recovery-layer counters. Kept separate so zero-fault documents
+/// stay byte-identical to their pre-fault forms (ISSUE 8 determinism
+/// contract).
+pub(crate) fn tenant_json_faults(t: &TenantOutcome) -> Json {
+    match tenant_json_resilience(t) {
+        Json::Obj(mut tm) => {
+            tm.insert("retries".into(), Json::Num(t.retries as f64));
+            tm.insert("hedges".into(), Json::Num(t.hedges as f64));
+            tm.insert("hedge_wins".into(), Json::Num(t.hedge_wins as f64));
+            tm.insert("cancelled".into(), Json::Num(t.cancelled as f64));
+            Json::Obj(tm)
+        }
+        other => other,
+    }
+}
+
 /// A scenarios × policies serving comparison (the `BENCH_serve.json`
 /// document).
 #[derive(Debug, Clone)]
@@ -667,6 +728,10 @@ pub(crate) fn tenant_outcomes(sc: &ScenarioSpec, wl: &Workload)
             deadline_misses: 0,
             requeues: 0,
             lost: 0,
+            retries: 0,
+            hedges: 0,
+            hedge_wins: 0,
+            cancelled: 0,
             latencies_us: Vec::new(),
         })
         .collect()

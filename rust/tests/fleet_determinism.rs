@@ -15,7 +15,13 @@
 //!   must be invisible, pinning backward compatibility of the refactor;
 //! * (ISSUE 6) the resilience grid (`BENCH_resilience.json`) is
 //!   byte-identical across `--threads` values and repeat runs, with the
-//!   autoscaler armed.
+//!   autoscaler armed;
+//! * (ISSUE 8) an **inert `FaultSpec`** reproduces the fault-free fleet
+//!   document **bitwise** — arming the fault layer with zero
+//!   probabilities must be invisible, pinning that fault-free runs
+//!   match pre-fault builds byte for byte;
+//! * (ISSUE 8) the faults grid (`BENCH_faults.json`) is byte-identical
+//!   across `--threads` values and repeat runs.
 
 use miriam::coordinator::admission::AdmissionPolicy;
 use miriam::fleet::{run_fleet, run_fleet_grid, FleetOpts, FleetSpec, ROUTERS};
@@ -211,6 +217,67 @@ fn resilience_grid_is_byte_identical_across_threads_and_repeats() {
         .expect("repeat")
         .to_json();
     assert_eq!(j1, j1b, "BENCH_resilience.json differs across repeat runs");
+}
+
+#[test]
+fn inert_fault_spec_reproduces_the_fault_free_fleet_bitwise() {
+    use miriam::fleet::FaultSpec;
+
+    let sc = scenario::by_name("five-storm", DUR_US).unwrap();
+    let fleet = hetero();
+    for r in ROUTERS {
+        let plain = run_fleet(
+            &fleet, &sc,
+            &FleetOpts { router: (*r).into(), ..FleetOpts::default() },
+        )
+        .expect("plain run");
+        // All-zero probabilities: the spec is normalized away before the
+        // loop starts, so routing, timing, and the document are
+        // untouched — not even by one byte.
+        let zero = run_fleet(
+            &fleet, &sc,
+            &FleetOpts {
+                router: (*r).into(),
+                faults: Some(FaultSpec::none()),
+                ..FleetOpts::default()
+            },
+        )
+        .expect("inert-fault run");
+        assert_eq!(plain.to_json_value().to_canonical_string(),
+                   zero.to_json_value().to_canonical_string(),
+                   "{r}: an inert fault spec changed the fleet document");
+    }
+}
+
+#[test]
+fn faults_grid_is_byte_identical_across_threads_and_repeats() {
+    use miriam::fleet::{faults, run_faults_grid, FaultSpec};
+
+    let scenarios = vec![
+        scenario::by_name("duo-burst", DUR_US).unwrap(),
+        scenario::by_name("trio-skew", DUR_US).unwrap(),
+    ];
+    let fleet = hetero();
+    let specs = vec![
+        FaultSpec::none(),
+        faults::storm("flaky-launches").unwrap(),
+        faults::storm("full-fault-storm").unwrap(),
+    ];
+    let base = FleetOpts::default();
+    let j1 = run_faults_grid(&fleet, &scenarios, &specs, &routers(),
+                             &base, 1)
+        .expect("threads=1")
+        .to_json();
+    let j4 = run_faults_grid(&fleet, &scenarios, &specs, &routers(),
+                             &base, 4)
+        .expect("threads=4")
+        .to_json();
+    assert_eq!(j1, j4, "BENCH_faults.json differs across --threads");
+    let j1b = run_faults_grid(&fleet, &scenarios, &specs, &routers(),
+                              &base, 1)
+        .expect("repeat")
+        .to_json();
+    assert_eq!(j1, j1b, "BENCH_faults.json differs across repeat runs");
 }
 
 #[test]

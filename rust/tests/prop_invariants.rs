@@ -693,6 +693,98 @@ fn prop_chaos_conservation_and_critical_protection() {
             "no storm ever forced a requeue — the chaos axis is vacuous");
 }
 
+/// Property (ISSUE 8): **extended conservation survives fault
+/// injection** — under every fault-storm preset × router on generated
+/// scenarios, `offered == admitted + shed` and
+/// `admitted == served + lost + cancelled`; nothing is lost while every
+/// device stays live; critical requests are never shed and **never
+/// cancelled**; every admitted request is placed exactly once; hedge
+/// winners are counted at most once per hedged request
+/// (`hedge_wins <= hedges`); and per-device breaker trips sum to the
+/// fleet ledger.
+#[test]
+fn prop_faults_conservation_and_critical_protection() {
+    use miriam::fleet::faults::storm;
+    use miriam::fleet::{run_fleet, FleetOpts, FleetSpec, FAULT_STORMS,
+                        ROUTERS};
+    use miriam::workloads::scenario::ScenarioGen;
+
+    let fleet = FleetSpec::parse(
+        &["rtx2060".into(), "xavier".into(), "tx2".into()],
+        &["miriam".into()],
+    )
+    .unwrap();
+    let admission = AdmissionConfig {
+        bucket_capacity: 2.0,
+        refill_hz: 25.0,
+        max_queue_us: 3_000.0,
+        ..AdmissionConfig::default()
+    };
+    let mut gen = ScenarioGen::new(0xFA17, 8_000.0);
+    let mut any_recovered = false;
+    for case in 0..2 {
+        let sc = gen.next_scenario();
+        for router in ROUTERS {
+            for storm_name in FAULT_STORMS {
+                let opts = FleetOpts {
+                    router: router.into(),
+                    policy: AdmissionPolicy::TokenBucket,
+                    admission: admission.clone(),
+                    faults: Some(storm(storm_name).expect("preset exists")),
+                    ..FleetOpts::default()
+                };
+                let r = run_fleet(&fleet, &sc, &opts).unwrap_or_else(|e| {
+                    panic!("case {case} {router}/{storm_name}: {e}")
+                });
+                let ctx = format!("case {case} ({}) {router}/{storm_name}",
+                                  sc.name);
+                assert_eq!(r.offered(), r.admitted() + r.shed(), "{ctx}");
+                assert_eq!(r.admitted(),
+                           r.served() + r.lost() + r.cancelled(),
+                           "{ctx}: extended conservation broke");
+                assert_eq!(r.lost(), 0,
+                           "{ctx}: lost with every device live");
+                assert_eq!(r.shed_critical(), 0,
+                           "{ctx}: critical shed under faults");
+                assert_eq!(r.critical_cancelled(), 0,
+                           "{ctx}: a critical request was cancelled");
+                assert_eq!(r.routed(), r.admitted(),
+                           "{ctx}: admitted requests not placed exactly \
+                            once");
+                assert!(r.hedge_wins() <= r.hedges(),
+                        "{ctx}: more hedge wins than hedges");
+                let dev_served: u64 =
+                    r.devices.iter().map(|d| d.served()).sum();
+                assert_eq!(dev_served, r.served(),
+                           "{ctx}: a request was served twice or dropped");
+                let dev_trips: u64 =
+                    r.devices.iter().map(|d| d.breaker_trips).sum();
+                assert_eq!(dev_trips, r.breaker_trips(),
+                           "{ctx}: breaker ledgers disagree");
+                for t in &r.tenants {
+                    assert_eq!(t.offered, t.admitted + t.shed,
+                               "{ctx} {}", t.label);
+                    assert_eq!(t.admitted,
+                               t.served + t.lost + t.cancelled,
+                               "{ctx} {}: tenant conservation broke",
+                               t.label);
+                    if t.criticality == Criticality::Critical {
+                        assert_eq!(t.cancelled, 0, "{ctx} {}", t.label);
+                    }
+                }
+                any_recovered |= r.retries() > 0 || r.hedges() > 0;
+            }
+        }
+    }
+    // Non-vacuity: across the preset sweep some launch must actually
+    // have failed or straggled into a recovery action (flaky-launches
+    // alone injects a 5% launch-failure rate over hundreds of
+    // launches, so this holds deterministically).
+    assert!(any_recovered,
+            "no fault ever forced a retry or hedge — the fault axis is \
+             vacuous");
+}
+
 /// Property (ISSUE 6 satellite): killing the **fastest** device (the
 /// criticality-affinity pin target, index 1 here — fleets where the
 /// fastest is not device 0 are the audit case) with a scripted heal

@@ -30,6 +30,16 @@ The mode is dispatched on the measured document's ``"bench"`` key:
   (``bytes_per_tenant`` ≤ 512 in every cell; the streaming sketch is
   the whole point of the scale path, so a cell that grew past that is
   a memory regression regardless of what the baseline says).
+* ``"bench": "faults"`` (``BENCH_faults.json``): resilience-style
+  contract over the ``comparisons`` rows keyed
+  ``(scenario, faults, router)`` — coverage regression, 2% drift on
+  served / retries / cancelled counts, 5% critical-p99 drift — plus
+  unconditional invariants that hold even in bootstrap: extended
+  conservation on every row (``offered == admitted + shed`` and
+  ``admitted == served + lost + cancelled``), ``lost == 0`` (pure
+  fault injection keeps every device live), ``critical_cancelled ==
+  0`` (deadline-aware cancellation never touches critical requests),
+  and ``hedge_wins <= hedges`` (a hedged request wins at most once).
 
 Usage:
     bench_gate.py MEASURED_JSON BASELINE_JSON [--tolerance 0.20]
@@ -260,6 +270,108 @@ def scale_gate(measured, baseline_path, tolerance=None):
     return 0
 
 
+def faults_gate(measured, baseline_path, tolerance=None):
+    """Deterministic-report gate for BENCH_faults.json documents.
+
+    Works over the ``comparisons`` rows (one per grid cell) keyed by
+    ``(scenario, faults, router)``. The recovery-layer invariants —
+    extended conservation, nothing lost, critical never cancelled,
+    hedge winners counted at most once — are checked unconditionally
+    on every row, baseline or not; drift checks (served / retries /
+    cancelled within the served tolerance, critical p99 within the p99
+    tolerance) arm once a real baseline is promoted.
+    """
+    served_tol = tolerance if tolerance is not None else 0.02
+    p99_tol = tolerance if tolerance is not None else 0.05
+    rows = measured.get("comparisons", [])
+    print(f"measured: {len(rows)} faults cell(s), "
+          f"{sum(r.get('served', 0) for r in rows)} served total, "
+          f"{sum(r.get('retries', 0) for r in rows)} retries, "
+          f"{sum(r.get('hedges', 0) for r in rows)} hedges, "
+          f"{sum(r.get('cancelled', 0) for r in rows)} cancelled")
+    key = lambda r: (r.get("scenario"), r.get("faults"), r.get("router"))
+    failures = []
+    for r in rows:
+        offered = r.get("offered", 0)
+        admitted = r.get("admitted", 0)
+        shed = r.get("shed", 0)
+        served = r.get("served", 0)
+        lost = r.get("lost", 0)
+        cancelled = r.get("cancelled", 0)
+        if offered != admitted + shed:
+            failures.append(f"{key(r)}: offered {offered} != admitted "
+                            f"{admitted} + shed {shed} (conservation)")
+        if admitted != served + lost + cancelled:
+            failures.append(f"{key(r)}: admitted {admitted} != served "
+                            f"{served} + lost {lost} + cancelled "
+                            f"{cancelled} (extended conservation)")
+        if lost:
+            failures.append(f"{key(r)}: {lost} request(s) lost — pure "
+                            f"fault injection keeps every device live, "
+                            f"so lost must be 0")
+        if r.get("critical_cancelled", 0):
+            failures.append(f"{key(r)}: {r.get('critical_cancelled')} "
+                            f"critical request(s) cancelled — "
+                            f"deadline-aware cancellation must never "
+                            f"touch critical requests")
+        if r.get("hedge_wins", 0) > r.get("hedges", 0):
+            failures.append(f"{key(r)}: hedge_wins "
+                            f"{r.get('hedge_wins')} > hedges "
+                            f"{r.get('hedges')} — a hedged request can "
+                            f"win at most once")
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        baseline = None
+        if not failures:
+            print(f"gate: no baseline at {baseline_path} — bootstrap "
+                  f"pass (invariants held). Promote a CI-run "
+                  f"BENCH_faults.json artifact there to arm the gate "
+                  f"(same --smoke conditions).")
+            return 0
+    if baseline is not None and (baseline.get("bootstrap")
+                                 or not baseline.get("comparisons")):
+        baseline = None
+        if not failures:
+            print("gate: faults baseline is a bootstrap placeholder — "
+                  "pass (invariants held). Promote a CI-run "
+                  "BENCH_faults.json artifact to arm the gate.")
+            return 0
+    if baseline is not None:
+        base_rows = {key(r): r for r in baseline.get("comparisons", [])}
+        measured_keys = {key(r) for r in rows}
+        for k in sorted(k for k in base_rows if k not in measured_keys):
+            failures.append(f"{k}: in baseline but missing from measured "
+                            f"report (coverage regression)")
+        for r in rows:
+            b = base_rows.get(key(r))
+            if b is None:
+                continue  # new cell: no baseline yet, nothing to regress
+            for field in ("served", "retries", "cancelled"):
+                bv, mv = b.get(field, 0), r.get(field, 0)
+                if bv and abs(mv - bv) > served_tol * bv:
+                    failures.append(f"{key(r)}: {field} {mv} vs "
+                                    f"baseline {bv}")
+            bp, mp = b.get("crit_p99_us"), r.get("crit_p99_us")
+            if (isinstance(bp, (int, float)) and isinstance(mp, (int, float))
+                    and bp > 0 and abs(mp - bp) > p99_tol * bp):
+                failures.append(f"{key(r)}: crit_p99_us {mp:.1f} vs "
+                                f"baseline {bp:.1f}")
+    if failures:
+        print("gate: FAIL — faults report violated a recovery-layer "
+              "invariant or drifted from baseline (intentional change? "
+              "refresh benchmarks/BENCH_faults.baseline.json from a "
+              "healthy CI artifact; invariant failures are bugs, not "
+              "baseline drift):")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print(f"gate: OK — {len(rows)} faults cell(s) conserve requests, "
+          f"never cancel criticals, and sit within tolerance of baseline")
+    return 0
+
+
 def main(argv):
     if len(argv) < 3:
         print(__doc__)
@@ -280,6 +392,9 @@ def main(argv):
     if measured.get("bench") == "scale":
         return scale_gate(measured, baseline_path,
                           tolerance if "--tolerance" in argv else None)
+    if measured.get("bench") == "faults":
+        return faults_gate(measured, baseline_path,
+                           tolerance if "--tolerance" in argv else None)
     m_inc = measured.get("events_per_sec_incremental")
     m_ref = measured.get("events_per_sec_reference")
     m_speedup = measured.get("speedup")
