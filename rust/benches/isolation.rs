@@ -1,0 +1,171 @@
+//! Hard SM isolation vs elastic scheduling (ISSUE 9).
+//!
+//! The comparison the isolation literature asks for: the full rtx2060
+//! scenario family served under `sequential`, `miriam`, a strict
+//! MPS-style `isolation:70/30` split (criticals own 21 of 30 SMs,
+//! normals the rest, never shared), and the same split with
+//! work-conserving spillover (`isolation:70/30+spill`). Per (scenario,
+//! scheduler) the table reports mean critical p50/p99, throughput, and
+//! deadline misses; the summary pits each isolation variant against
+//! `miriam` — the headline read: elasticity must dominate hard
+//! partitioning on throughput while hard partitioning buys, at most, a
+//! marginal critical-latency edge.
+//!
+//! Hard gate (exit 1), not a remark: on every (scenario, isolation
+//! scheduler) aggregate, isolation's mean critical p99 must sit at or
+//! below miriam's × 1.05 — a dedicated critical partition that is
+//! *slower* than sharing the whole device means the mask plumbing is
+//! broken, regardless of what any baseline says.
+//!
+//! Writes `BENCH_isolation.json` (canonical; every `comparisons` field
+//! is simulated and therefore byte-deterministic per seed and across
+//! worker threads — schema in EXPERIMENTS.md §Isolation). CI smoke
+//! mode: append `-- --smoke` (or set `BENCH_SMOKE=1`).
+
+use std::collections::BTreeMap;
+
+use miriam::coordinator::sweep::{run_sweep, Aggregate, SweepSpec};
+use miriam::runtime::json::Json;
+use miriam::workloads::scenario;
+
+/// Invariant headroom: isolation critical p99 may exceed miriam's by at
+/// most this factor before the bench fails.
+const CRIT_P99_TOLERANCE: f64 = 1.05;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").is_ok();
+    let duration_us = if smoke { 20_000.0 } else { 200_000.0 };
+    let seeds = if smoke { 2 } else { 3 };
+    let schedulers = ["sequential", "miriam", "isolation:70/30",
+                      "isolation:70/30+spill"];
+    let spec = SweepSpec {
+        platform: "rtx2060".into(),
+        duration_us,
+        scenarios: scenario::family(duration_us),
+        schedulers: schedulers.iter().map(|s| s.to_string()).collect(),
+        seeds,
+        trace: false,
+        reference_rates: false,
+    };
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    println!("# isolation: {} scenarios x {} schedulers x {seeds} seed(s) \
+              on {}, {}s of arrivals per cell, {threads} thread(s){}",
+             spec.scenarios.len(), spec.schedulers.len(), spec.platform,
+             duration_us / 1e6, if smoke { " (smoke)" } else { "" });
+    println!("{:<16} {:<22} {:>9} {:>9} {:>9} {:>7}",
+             "scenario", "scheduler", "crit p50", "crit p99", "thru",
+             "misses");
+    println!("{:<16} {:<22} {:>9} {:>9} {:>9} {:>7}",
+             "", "", "(ms)", "(ms)", "(r/s)", "(crit)");
+
+    let report = run_sweep(&spec, threads).expect("isolation sweep runs");
+    let aggs = report.aggregates();
+    for a in &aggs {
+        println!("{:<16} {:<22} {:>9.2} {:>9.2} {:>9.1} {:>7}",
+                 a.scenario, a.scheduler, a.mean_crit_p50_us / 1e3,
+                 a.mean_crit_p99_us / 1e3, a.mean_throughput_rps,
+                 a.deadline_misses_critical);
+    }
+
+    // Isolation vs elasticity, per scenario — the headline table. Ratios
+    // > 1 in the p99 column mean the dedicated partition is *slower*
+    // than sharing (an invariant violation past the tolerance); ratios
+    // < 1 in the throughput column are the cost of walling off SMs.
+    fn find<'a>(aggs: &'a [Aggregate], sc: &str, sched: &str)
+                -> Option<&'a Aggregate> {
+        aggs.iter().find(|a| a.scenario == sc && a.scheduler == sched)
+    }
+    println!("\n{:<16} {:<22} {:>10} {:>10} {:>9} {:>9}",
+             "scenario", "scheduler", "crit p99", "p99", "thru", "thru");
+    println!("{:<16} {:<22} {:>10} {:>10} {:>9} {:>9}",
+             "", "", "(ms)", "(x miriam)", "(r/s)", "(x miriam)");
+    let mut violations = 0u32;
+    let mut rows: Vec<Json> = Vec::new();
+    for sc in &report.scenarios {
+        let miriam =
+            find(&aggs, sc, "miriam").expect("miriam ran everywhere");
+        let seq = find(&aggs, sc, "sequential")
+            .expect("sequential ran everywhere");
+        for &sched in
+            schedulers.iter().filter(|s| s.starts_with("isolation"))
+        {
+            let a = find(&aggs, sc, sched).expect("isolation ran everywhere");
+            let p99_x = a.mean_crit_p99_us / miriam.mean_crit_p99_us;
+            let thru_x = a.mean_throughput_rps / miriam.mean_throughput_rps;
+            let ok = !(a.mean_crit_p99_us.is_finite()
+                       && miriam.mean_crit_p99_us.is_finite()
+                       && miriam.mean_crit_p99_us > 0.0
+                       && a.mean_crit_p99_us
+                           > miriam.mean_crit_p99_us * CRIT_P99_TOLERANCE);
+            if !ok {
+                violations += 1;
+            }
+            println!("{:<16} {:<22} {:>10.2} {:>10.2} {:>9.1} {:>9.2}{}",
+                     sc, sched, a.mean_crit_p99_us / 1e3, p99_x,
+                     a.mean_throughput_rps, thru_x,
+                     if ok { "" } else { "  << INVARIANT" });
+            let num = Json::Num;
+            let mut m = BTreeMap::new();
+            m.insert("scenario".into(), Json::Str(sc.clone()));
+            m.insert("scheduler".into(), Json::Str(sched.to_string()));
+            m.insert("crit_p99_us".into(), num(a.mean_crit_p99_us));
+            m.insert("crit_p50_us".into(), num(a.mean_crit_p50_us));
+            m.insert("throughput_rps".into(), num(a.mean_throughput_rps));
+            m.insert("deadline_misses_critical".into(),
+                     num(a.deadline_misses_critical as f64));
+            m.insert("miriam_crit_p99_us".into(),
+                     num(miriam.mean_crit_p99_us));
+            m.insert("miriam_throughput_rps".into(),
+                     num(miriam.mean_throughput_rps));
+            m.insert("sequential_crit_p99_us".into(),
+                     num(seq.mean_crit_p99_us));
+            m.insert("crit_p99_vs_miriam".into(), num(p99_x));
+            m.insert("throughput_vs_miriam".into(), num(thru_x));
+            rows.push(Json::Obj(m));
+        }
+    }
+    println!("\nisolation crit p99 <= miriam x {CRIT_P99_TOLERANCE} on \
+              every cell: {}",
+             if violations == 0 {
+                 "yes".to_string()
+             } else {
+                 format!("NO ({violations} violation(s))")
+             });
+
+    // BENCH_isolation.json: comparison rows only carry simulated
+    // quantities, so the document is byte-deterministic per seed and
+    // across thread counts (host timing stays in the stdout table and
+    // BENCH_sweep.json, never here).
+    let num = Json::Num;
+    let mut doc = BTreeMap::new();
+    doc.insert("bench".into(), Json::Str("isolation".into()));
+    doc.insert("platform".into(), Json::Str(spec.platform.clone()));
+    doc.insert("duration_us".into(), num(duration_us));
+    doc.insert("seeds".into(), num(f64::from(seeds)));
+    doc.insert("smoke".into(), Json::Bool(smoke));
+    doc.insert(
+        "scenarios".into(),
+        Json::Arr(report.scenarios.iter().cloned().map(Json::Str).collect()),
+    );
+    doc.insert(
+        "schedulers".into(),
+        Json::Arr(schedulers.iter().map(|s| Json::Str(s.to_string()))
+                      .collect()),
+    );
+    doc.insert("crit_p99_tolerance".into(), num(CRIT_P99_TOLERANCE));
+    doc.insert("violations".into(), num(f64::from(violations)));
+    doc.insert("comparisons".into(), Json::Arr(rows));
+    doc.insert("version".into(), num(1.0));
+    std::fs::write("BENCH_isolation.json",
+                   Json::Obj(doc).to_canonical_string())
+        .expect("write BENCH_isolation.json");
+    println!("wrote BENCH_isolation.json");
+
+    if violations > 0 {
+        std::process::exit(1);
+    }
+}

@@ -56,7 +56,9 @@ impl RunConfig {
             return Err(format!("unknown workload {}", self.workload));
         }
         for s in &self.schedulers {
-            if !crate::coordinator::SCHEDULERS.contains(&s.as_str()) {
+            // Everything scheduler_for resolves is accepted, including
+            // miriam-ref and the parameterized isolation family.
+            if !crate::coordinator::is_scheduler_name(s) {
                 return Err(format!("unknown scheduler {s}"));
             }
         }

@@ -82,7 +82,7 @@ impl Default for InterStreamBarrier {
 }
 
 impl Scheduler for InterStreamBarrier {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "ib"
     }
 

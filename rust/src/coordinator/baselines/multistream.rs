@@ -41,7 +41,7 @@ impl Default for MultiStream {
 }
 
 impl Scheduler for MultiStream {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "multistream"
     }
 

@@ -56,7 +56,7 @@ impl Default for Sequential {
 }
 
 impl Scheduler for Sequential {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "sequential"
     }
 

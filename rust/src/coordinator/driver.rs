@@ -218,7 +218,15 @@ pub fn record_golden_traces(
     std::fs::create_dir_all(dir)?;
     let spec = GpuSpec::by_name(scenario::GOLDEN_PLATFORM)
         .expect("golden platform preset exists");
-    let cells: Vec<(scenario::ScenarioSpec, String)> = scenario::GOLDEN_CELLS
+    // The pinned paper-scheduler cells plus the isolation anchors
+    // (ISSUE 9) — one recording pass so the two sets can never drift
+    // apart on platform or duration.
+    let names: Vec<(&str, &str)> = scenario::GOLDEN_CELLS
+        .iter()
+        .chain(scenario::ISOLATION_GOLDEN_CELLS.iter())
+        .copied()
+        .collect();
+    let cells: Vec<(scenario::ScenarioSpec, String)> = names
         .iter()
         .map(|&(sc_name, sched)| {
             (scenario::by_name(sc_name, scenario::GOLDEN_DURATION_US)
@@ -234,9 +242,7 @@ pub fn record_golden_traces(
         RunOpts { reference_rates: false, trace: true },
         cells.len().min(4));
     let mut out = Vec::new();
-    for (&(sc_name, sched), mut st) in
-        scenario::GOLDEN_CELLS.iter().zip(stats)
-    {
+    for (&(sc_name, sched), mut st) in names.iter().zip(stats) {
         let trace = st.trace.take().expect("trace was requested");
         let path = dir.join(scenario::golden_file_name(sc_name, sched));
         std::fs::write(&path, trace.to_canonical_json())?;
@@ -271,8 +277,12 @@ pub fn record_device_golden_traces(
                     let sc = scenario::by_name(
                         sc_name, scenario::GOLDEN_DURATION_US)
                         .expect("device golden scenario exists");
+                    // Paper schedulers plus the pinned isolation splits
+                    // (ISSUE 9) — the per-device set is where partition
+                    // rounding down to tx2's 1/1 split gets anchored.
                     SCHEDULERS
                         .iter()
+                        .chain(scenario::ISOLATION_GOLDEN_SCHEDULERS.iter())
                         .map(move |&sched| (sc.clone(), sched.to_string()))
                 })
                 .collect();

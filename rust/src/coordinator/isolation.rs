@@ -1,0 +1,497 @@
+//! **Hard-isolation** scheduler family (ISSUE 9): MPS-style SM
+//! partitioning, the comparison point the isolation literature asks for
+//! ("Performance Isolation for Inference Processes in Edge GPU Systems",
+//! PAPERS.md). Each criticality class owns a *disjoint* SM set — the
+//! critical partition is SMs `[0, crit_sms)`, the normal partition
+//! `[crit_sms, num_sms)` — enforced by the engine's per-stream placement
+//! masks ([`crate::gpu::sm::SmMask`]), so a class can never steal the
+//! other's compute no matter how bursty it gets.
+//!
+//! Two modes:
+//!
+//! * **strict** (`isolation:70/30`): the partition boundary never moves.
+//!   Critical latency is near-solo on its slice; throughput pays for
+//!   every idle reserved SM — the hard-partitioning strawman Miriam's
+//!   elastic kernels are claimed to dominate.
+//! * **spillover** (`isolation:70/30+spill`): work-conserving lending —
+//!   while a class is fully idle (no running request, empty queue) the
+//!   other class's stream is widened to the whole device; the loan is
+//!   revoked the moment the lender has work again (before the lender
+//!   submits anything, so no *new* foreign blocks land after the
+//!   revocation). Already-resident foreign blocks drain to completion:
+//!   like real MPS reconfiguration there is no preemption, which is
+//!   exactly the residual interference the spillover benchmarks measure.
+//!
+//! Within each partition the policy is Sequential's: one request in
+//! flight per class, critical queue FIFO, normal queue FIFO. That makes
+//! `isolation:100/0` (no spill) on critical-only traffic *provably*
+//! identical to the Sequential baseline — pinned by the differential
+//! tests in `rust/tests/prop_invariants.rs`.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::scheduler::{Req, Scheduler};
+use crate::gpu::engine::{Completion, Engine};
+use crate::gpu::kernel::{Criticality, LaunchShape};
+use crate::gpu::sm::SmMask;
+use crate::gpu::stream::{LaunchTag, StreamId};
+
+/// Parsed isolation split: `critical_pct/normal_pct[+spill]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IsolationConfig {
+    /// Percentage of SMs reserved for the critical class (0..=100).
+    pub critical_pct: u32,
+    /// Percentage of SMs reserved for the normal class (100 - critical).
+    pub normal_pct: u32,
+    /// Work-conserving spillover: an idle partition lends its SMs to the
+    /// other class until its next arrival.
+    pub spillover: bool,
+}
+
+impl Default for IsolationConfig {
+    /// The documented default split: 70% critical / 30% normal, strict.
+    fn default() -> Self {
+        IsolationConfig { critical_pct: 70, normal_pct: 30, spillover: false }
+    }
+}
+
+impl IsolationConfig {
+    /// Parse the CLI split grammar `A/B` or `A/B+spill`, where `A + B`
+    /// must equal 100 (EXPERIMENTS.md §Isolation).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let (split, spillover) = match s.strip_suffix("+spill") {
+            Some(rest) => (rest, true),
+            None => (s, false),
+        };
+        let Some((a, b)) = split.split_once('/') else {
+            return Err(format!(
+                "isolation split '{s}': expected 'A/B' or 'A/B+spill'"));
+        };
+        let critical_pct: u32 = a.trim().parse().map_err(|_| {
+            format!("isolation split '{s}': bad critical share '{a}'")
+        })?;
+        let normal_pct: u32 = b.trim().parse().map_err(|_| {
+            format!("isolation split '{s}': bad normal share '{b}'")
+        })?;
+        if critical_pct + normal_pct != 100 {
+            return Err(format!(
+                "isolation split '{s}': shares must sum to 100 \
+                 (got {critical_pct}+{normal_pct})"));
+        }
+        // A 0% share may not spill: the borrowing class would run on an
+        // entirely borrowed device, and revoking that loan on the
+        // lender's arrival would strand its pending blocks on an empty
+        // mask (no preemption) — the run could never finish. Strict 0%
+        // splits are fine (the starved class just queues forever).
+        if spillover && (critical_pct == 0 || normal_pct == 0) {
+            return Err(format!(
+                "isolation split '{s}': spillover needs both shares > 0 \
+                 (a loan of the whole device cannot be revoked without \
+                 preemption)"));
+        }
+        Ok(IsolationConfig { critical_pct, normal_pct, spillover })
+    }
+
+    /// SMs in the critical partition on an `num_sms`-SM device (nearest
+    /// rounding; the normal class gets the rest). Fail-fast validation:
+    /// a non-zero share that rounds to zero SMs is an error — silently
+    /// starving a class would wedge its traffic — as is a device with
+    /// more SMs than the 64-bit placement mask can address.
+    pub fn partition(&self, num_sms: u32) -> Result<u32, String> {
+        if num_sms == 0 {
+            return Err("isolation: device has no SMs".into());
+        }
+        if num_sms > 64 {
+            return Err(format!(
+                "isolation: device has {num_sms} SMs, beyond the 64-bit \
+                 placement mask"));
+        }
+        let crit = ((num_sms * self.critical_pct + 50) / 100).min(num_sms);
+        if self.critical_pct > 0 && crit == 0 {
+            return Err(format!(
+                "isolation split {}/{} on a {num_sms}-SM device rounds the \
+                 critical partition to zero SMs",
+                self.critical_pct, self.normal_pct));
+        }
+        if self.normal_pct > 0 && crit == num_sms {
+            return Err(format!(
+                "isolation split {}/{} on a {num_sms}-SM device rounds the \
+                 normal partition to zero SMs",
+                self.critical_pct, self.normal_pct));
+        }
+        Ok(crit)
+    }
+
+    /// The registry/report name of this config: `isolation:A/B[+spill]`.
+    pub fn scheduler_name(&self) -> String {
+        format!("isolation:{}/{}{}", self.critical_pct, self.normal_pct,
+                if self.spillover { "+spill" } else { "" })
+    }
+}
+
+/// One class's lane: a FIFO queue and the single request in flight.
+struct Lane {
+    stream: StreamId,
+    queue: VecDeque<Req>,
+    /// (req id, last kernel tag) of the request on the partition.
+    running: Option<(u64, LaunchTag)>,
+    /// Whether this lane currently borrows the other partition (its
+    /// stream mask is widened to the whole device).
+    widened: bool,
+}
+
+impl Lane {
+    fn new() -> Self {
+        Lane { stream: 0, queue: VecDeque::new(), running: None,
+               widened: false }
+    }
+
+    /// Idle = nothing running *and* nothing queued: the condition under
+    /// which this lane lends its partition away.
+    fn idle(&self) -> bool {
+        self.running.is_none() && self.queue.is_empty()
+    }
+}
+
+/// The hard-isolation scheduler (see module docs).
+pub struct Isolation {
+    cfg: IsolationConfig,
+    name: String,
+    crit: Lane,
+    norm: Lane,
+    num_sms: u32,
+    /// SMs `[0, crit_sms)` are the critical partition.
+    crit_sms: u32,
+}
+
+impl Isolation {
+    /// A fresh isolation scheduler for `cfg` (call `init` before use;
+    /// `init` fail-fast-panics if `cfg` cannot partition the device —
+    /// CLI entry points pre-validate with [`IsolationConfig::partition`]).
+    pub fn new(cfg: IsolationConfig) -> Self {
+        Isolation {
+            cfg,
+            name: cfg.scheduler_name(),
+            crit: Lane::new(),
+            norm: Lane::new(),
+            num_sms: 0,
+            crit_sms: 0,
+        }
+    }
+
+    fn crit_mask(&self) -> SmMask {
+        SmMask::range(0, self.crit_sms)
+    }
+
+    fn norm_mask(&self) -> SmMask {
+        SmMask::range(self.crit_sms, self.num_sms)
+    }
+
+    fn full_mask(&self) -> SmMask {
+        SmMask::range(0, self.num_sms)
+    }
+
+    /// Re-derive both stream masks from lane idleness (spillover mode
+    /// only — strict partitions never move). Called after every arrival
+    /// *before* the arriving lane submits — so a loan is revoked ahead
+    /// of the lender's next submission, never after — and after every
+    /// completion, where widening takes effect immediately (the engine
+    /// re-attempts dispatch inside `set_stream_mask`, placing the
+    /// borrower's waiting blocks at the completion instant).
+    fn refresh_masks(&mut self, eng: &mut Engine) {
+        if !self.cfg.spillover {
+            return;
+        }
+        let widen_crit = self.norm.idle() && !self.crit.idle();
+        let widen_norm = self.crit.idle() && !self.norm.idle();
+        if widen_crit != self.crit.widened {
+            self.crit.widened = widen_crit;
+            let mask = if widen_crit { self.full_mask() }
+                       else { self.crit_mask() };
+            eng.set_stream_mask(self.crit.stream, mask);
+        }
+        if widen_norm != self.norm.widened {
+            self.norm.widened = widen_norm;
+            let mask = if widen_norm { self.full_mask() }
+                       else { self.norm_mask() };
+            eng.set_stream_mask(self.norm.stream, mask);
+        }
+    }
+
+    /// Start the next queued request on `critical`'s lane if it is free.
+    /// A lane whose partition is empty (a 0% share) and not currently
+    /// widened must keep its requests queued: submitting would wedge the
+    /// run, since blocks on an empty mask can never place.
+    fn start_next(&mut self, critical: bool, eng: &mut Engine) {
+        let own_sms = if critical { self.crit_sms }
+                      else { self.num_sms - self.crit_sms };
+        let lane = if critical { &mut self.crit } else { &mut self.norm };
+        if lane.running.is_some() || (own_sms == 0 && !lane.widened) {
+            return;
+        }
+        let Some(req) = lane.queue.pop_front() else { return };
+        let mut last = 0;
+        for (k, &nid) in req.model.kernels.iter().zip(req.name_ids.iter()) {
+            last = eng.submit_interned(lane.stream, nid,
+                                       LaunchShape::from_kernel(k),
+                                       req.criticality, 0.0);
+        }
+        lane.running = Some((req.id, last));
+    }
+}
+
+impl Scheduler for Isolation {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn init(&mut self, eng: &mut Engine) {
+        self.num_sms = eng.spec.num_sms;
+        self.crit_sms = match self.cfg.partition(self.num_sms) {
+            Ok(c) => c,
+            Err(e) => panic!("{e}"),
+        };
+        // Critical stream first (dispatch priority under spillover
+        // overlap), then the normal stream.
+        self.crit.stream = eng.add_stream(10);
+        self.norm.stream = eng.add_stream(0);
+        eng.set_stream_mask(self.crit.stream, self.crit_mask());
+        eng.set_stream_mask(self.norm.stream, self.norm_mask());
+    }
+
+    fn on_request(&mut self, req: Req, eng: &mut Engine) {
+        let critical = req.criticality == Criticality::Critical;
+        if critical {
+            self.crit.queue.push_back(req);
+        } else {
+            self.norm.queue.push_back(req);
+        }
+        // Revoke any loan this arrival invalidates *before* submitting:
+        // the spillover-conservation property (no new foreign placements
+        // after the lender's arrival) holds by construction.
+        self.refresh_masks(eng);
+        self.start_next(critical, eng);
+    }
+
+    fn on_completion(&mut self, comp: &Completion, eng: &mut Engine,
+                     finished: &mut Vec<u64>) {
+        if let Some((id, last)) = self.crit.running {
+            if comp.tag == last {
+                finished.push(id);
+                self.crit.running = None;
+                self.start_next(true, eng);
+            }
+        }
+        if let Some((id, last)) = self.norm.running {
+            if comp.tag == last {
+                finished.push(id);
+                self.norm.running = None;
+                self.start_next(false, eng);
+            }
+        }
+        // A lane that just drained may now lend its partition.
+        self.refresh_masks(eng);
+    }
+
+    fn pending_normal(&self) -> Option<usize> {
+        Some(self.norm.queue.len())
+    }
+
+    /// Real cancellation (ISSUE 9 satellite): a request still in either
+    /// class queue is removed outright — nothing was submitted yet, so
+    /// there is no engine state to unwind. The running request per lane
+    /// has every kernel submitted and its head active; with no
+    /// preemption it is not cancellable, matching the trait contract.
+    fn cancel(&mut self, req_id: u64, eng: &mut Engine) -> bool {
+        let mut hit = false;
+        for lane in [&mut self.crit, &mut self.norm] {
+            if let Some(pos) = lane.queue.iter()
+                .position(|r| r.id == req_id)
+            {
+                lane.queue.remove(pos);
+                hit = true;
+                break;
+            }
+        }
+        if hit {
+            // Emptying a queue can make the lane idle and thus a lender.
+            self.refresh_masks(eng);
+        }
+        hit
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    use crate::coordinator::driver;
+    use crate::gpu::spec::GpuSpec;
+    use crate::workloads::arrival::Arrival;
+    use crate::workloads::mdtb::{Source, Workload};
+    use crate::workloads::models;
+
+    #[test]
+    fn parse_grammar() {
+        let c = IsolationConfig::parse("70/30").unwrap();
+        assert_eq!((c.critical_pct, c.normal_pct, c.spillover), (70, 30, false));
+        let c = IsolationConfig::parse("70/30+spill").unwrap();
+        assert!(c.spillover);
+        assert_eq!(c.scheduler_name(), "isolation:70/30+spill");
+        let c = IsolationConfig::parse("100/0").unwrap();
+        assert_eq!(c.scheduler_name(), "isolation:100/0");
+        assert!(IsolationConfig::parse("70/40").is_err());
+        assert!(IsolationConfig::parse("70").is_err());
+        assert!(IsolationConfig::parse("x/30").is_err());
+        assert!(IsolationConfig::parse("70/y").is_err());
+        assert!(IsolationConfig::parse("70/30+spil").is_err());
+        // Spillover from/into a 0% share is unrevocable without
+        // preemption and is rejected at parse time.
+        assert!(IsolationConfig::parse("100/0+spill").is_err());
+        assert!(IsolationConfig::parse("0/100+spill").is_err());
+        assert!(IsolationConfig::parse("0/100").is_ok());
+    }
+
+    #[test]
+    fn partition_arithmetic_per_device() {
+        let c = IsolationConfig::parse("70/30").unwrap();
+        // rtx2060: 30 SMs -> 21/9; xavier: 8 -> 6/2; tx2: 2 -> 1/1.
+        assert_eq!(c.partition(GpuSpec::rtx2060().num_sms), Ok(21));
+        assert_eq!(c.partition(GpuSpec::xavier().num_sms), Ok(6));
+        assert_eq!(c.partition(GpuSpec::tx2().num_sms), Ok(1));
+        // 100/0 reserves everything for criticals on any device.
+        let all = IsolationConfig::parse("100/0").unwrap();
+        assert_eq!(all.partition(2), Ok(2));
+    }
+
+    #[test]
+    fn partition_fails_fast_when_a_share_starves() {
+        // 90/10 on a 2-SM device: normal's 10% rounds to zero SMs.
+        let c = IsolationConfig::parse("90/10").unwrap();
+        assert!(c.partition(2).is_err());
+        // 1/99 on a 30-SM device: critical's 1% rounds to zero SMs.
+        let c = IsolationConfig::parse("1/99").unwrap();
+        assert!(c.partition(30).is_err());
+        // Devices beyond the mask width are rejected outright.
+        let c = IsolationConfig::parse("50/50").unwrap();
+        assert!(c.partition(65).is_err());
+        assert!(c.partition(0).is_err());
+        assert_eq!(c.partition(64), Ok(32));
+    }
+
+    fn req(id: u64, crit: Criticality, eng: &mut Engine) -> Req {
+        let model: crate::workloads::models::ModelRef =
+            Arc::new(models::cifarnet());
+        let ids: Vec<u32> =
+            model.kernels.iter().map(|k| eng.intern_name(&k.name)).collect();
+        Req {
+            id,
+            source: 0,
+            model,
+            name_ids: Arc::new(ids),
+            criticality: crit,
+            arrival_us: 0.0,
+        }
+    }
+
+    #[test]
+    fn cancel_removes_queued_but_not_running() {
+        let mut eng = Engine::new(GpuSpec::rtx2060());
+        let mut iso = Isolation::new(IsolationConfig::parse("70/30").unwrap());
+        iso.init(&mut eng);
+        let r1 = req(1, Criticality::Normal, &mut eng);
+        let r2 = req(2, Criticality::Normal, &mut eng);
+        let r3 = req(3, Criticality::Critical, &mut eng);
+        iso.on_request(r1, &mut eng); // starts immediately on the lane
+        iso.on_request(r2, &mut eng); // queued behind it
+        iso.on_request(r3, &mut eng); // starts on the critical lane
+        assert_eq!(iso.pending_normal(), Some(1));
+        // Queued request: cancellable; running requests: not.
+        assert!(iso.cancel(2, &mut eng));
+        assert!(!iso.cancel(1, &mut eng));
+        assert!(!iso.cancel(3, &mut eng));
+        assert!(!iso.cancel(2, &mut eng), "already cancelled");
+        assert_eq!(iso.pending_normal(), Some(0));
+        // Drain: only the two running requests ever finish.
+        let mut finished = Vec::new();
+        loop {
+            let comps = eng.step();
+            if comps.is_empty() && eng.idle() {
+                break;
+            }
+            for c in &comps {
+                iso.on_completion(c, &mut eng, &mut finished);
+            }
+        }
+        finished.sort_unstable();
+        assert_eq!(finished, vec![1, 3]);
+    }
+
+    #[test]
+    fn strict_split_serves_both_classes() {
+        let wl = Workload {
+            name: "t".into(),
+            sources: vec![
+                Source {
+                    model: Arc::new(models::gru()),
+                    arrival: Arrival::Uniform { rate_hz: 20.0 },
+                    criticality: Criticality::Critical,
+                    deadline_us: None,
+                },
+                Source {
+                    model: Arc::new(models::cifarnet()),
+                    arrival: Arrival::ClosedLoop { clients: 1 },
+                    criticality: Criticality::Normal,
+                    deadline_us: None,
+                },
+            ],
+            duration_us: 200_000.0,
+            seed: 7,
+        };
+        let mut iso = Isolation::new(IsolationConfig::parse("70/30").unwrap());
+        let stats = driver::run(GpuSpec::rtx2060(), &wl, &mut iso);
+        assert!(stats.completed_critical() > 0);
+        assert!(stats.completed_normal() > 0);
+    }
+
+    #[test]
+    fn spillover_beats_strict_on_normal_throughput() {
+        // Critical source idle most of the time; a closed-loop normal
+        // source should complete strictly more work when it can borrow
+        // the idle critical partition.
+        let wl = Workload {
+            name: "t".into(),
+            sources: vec![
+                Source {
+                    model: Arc::new(models::gru()),
+                    arrival: Arrival::Uniform { rate_hz: 5.0 },
+                    criticality: Criticality::Critical,
+                    deadline_us: None,
+                },
+                Source {
+                    model: Arc::new(models::cifarnet()),
+                    arrival: Arrival::ClosedLoop { clients: 2 },
+                    criticality: Criticality::Normal,
+                    deadline_us: None,
+                },
+            ],
+            duration_us: 400_000.0,
+            seed: 11,
+        };
+        let strict = {
+            let mut s =
+                Isolation::new(IsolationConfig::parse("70/30").unwrap());
+            driver::run(GpuSpec::rtx2060(), &wl, &mut s)
+        };
+        let spill = {
+            let mut s =
+                Isolation::new(IsolationConfig::parse("70/30+spill").unwrap());
+            driver::run(GpuSpec::rtx2060(), &wl, &mut s)
+        };
+        assert!(spill.completed_normal() > strict.completed_normal(),
+                "spillover {} vs strict {}", spill.completed_normal(),
+                strict.completed_normal());
+        assert!(spill.completed_critical() > 0);
+    }
+}

@@ -384,7 +384,7 @@ impl Miriam {
 }
 
 impl Scheduler for Miriam {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         if self.reference_path { "miriam-ref" } else { "miriam" }
     }
 

@@ -7,6 +7,8 @@
 //! * [`miriam`] — the Miriam coordinator (elastic padding).
 //! * [`baselines`] — Sequential, Multi-stream+Priority, Inter-stream
 //!   Barrier.
+//! * [`isolation`] — the MPS-style hard-isolation scheduler family
+//!   (disjoint SM partitions per criticality class, ISSUE 9).
 //! * [`sweep`] — parallel deterministic sweep runner over the
 //!   scenario × scheduler × seed grid (ISSUE 3).
 //! * [`admission`] — online admission control (token buckets,
@@ -16,6 +18,7 @@
 pub mod admission;
 pub mod baselines;
 pub mod driver;
+pub mod isolation;
 pub mod miriam;
 pub mod scheduler;
 pub mod shaded_tree;
@@ -24,6 +27,7 @@ pub mod sweep;
 
 pub use admission::{AdmissionConfig, AdmissionController, AdmissionPolicy};
 pub use baselines::{InterStreamBarrier, MultiStream, Sequential};
+pub use isolation::{Isolation, IsolationConfig};
 pub use miriam::Miriam;
 pub use scheduler::{Req, Scheduler};
 pub use stats::RunStats;
@@ -37,7 +41,10 @@ use crate::workloads::models::ModelRef;
 /// schedulers, `"miriam-ref"` builds Miriam on its retained pre-change
 /// decision plumbing ([`Miriam::with_reference_path`]) — identical
 /// trajectories, pre-ISSUE-3 cost profile; the coordinator-in-the-loop
-/// bench's "before" leg.
+/// bench's "before" leg — and the hard-isolation family (ISSUE 9):
+/// `"isolation"` (the default 70/30 strict split) or
+/// `"isolation:A/B[+spill]"` with an explicit split per
+/// [`IsolationConfig::parse`].
 pub fn scheduler_for(name: &str, workload: &Workload) -> Option<Box<dyn Scheduler>> {
     let miriam_crits = || -> Vec<ModelRef> {
         workload
@@ -47,6 +54,10 @@ pub fn scheduler_for(name: &str, workload: &Workload) -> Option<Box<dyn Schedule
             .map(|s| s.model.clone())
             .collect()
     };
+    if let Some(split) = name.strip_prefix("isolation:") {
+        let cfg = IsolationConfig::parse(split).ok()?;
+        return Some(Box::new(Isolation::new(cfg)));
+    }
     match name {
         "sequential" => Some(Box::new(Sequential::new())),
         "multistream" => Some(Box::new(MultiStream::new())),
@@ -55,9 +66,27 @@ pub fn scheduler_for(name: &str, workload: &Workload) -> Option<Box<dyn Schedule
         "miriam-ref" => {
             Some(Box::new(Miriam::new(&miriam_crits()).with_reference_path(true)))
         }
+        "isolation" => Some(Box::new(Isolation::new(IsolationConfig::default()))),
         _ => None,
     }
 }
 
 /// All scheduler names, in the paper's presentation order.
+///
+/// Deliberately *excludes* the aliases and parameterized families that
+/// [`scheduler_for`] also resolves (`miriam-ref`, `isolation`,
+/// `isolation:A/B[+spill]`): grid runners and goldens iterate this list,
+/// and those entries are opt-in columns. Use [`is_scheduler_name`] to
+/// validate user input.
 pub const SCHEDULERS: [&str; 4] = ["sequential", "multistream", "ib", "miriam"];
+
+/// Whether `name` resolves to a scheduler — everything
+/// [`scheduler_for`] accepts, including `miriam-ref` and the isolation
+/// family with a well-formed split.
+pub fn is_scheduler_name(name: &str) -> bool {
+    if let Some(split) = name.strip_prefix("isolation:") {
+        return IsolationConfig::parse(split).is_ok();
+    }
+    matches!(name, "miriam-ref" | "isolation")
+        || SCHEDULERS.contains(&name)
+}

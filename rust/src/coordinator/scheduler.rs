@@ -33,8 +33,10 @@ pub struct Req {
 
 /// Coordination policy.
 pub trait Scheduler {
-    /// Stable scheduler name (CLI / report key).
-    fn name(&self) -> &'static str;
+    /// Stable scheduler name (CLI / report key). Parameterized schedulers
+    /// (the isolation family: `isolation:70/30`, `isolation:70/30+spill`)
+    /// build the name from their config, hence `&str` not `&'static str`.
+    fn name(&self) -> &str;
 
     /// Create streams, pre-generate elastic kernels, etc.
     fn init(&mut self, eng: &mut Engine);

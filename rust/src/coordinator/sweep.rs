@@ -276,7 +276,10 @@ impl SweepReport {
     /// excluded; schema in EXPERIMENTS.md §Sweep). When both `miriam` and
     /// `miriam-ref` ran, a `coordinator_bench` section reports the
     /// zero-clone fast path's events/sec improvement over the retained
-    /// pre-change path.
+    /// pre-change path. When an isolation scheduler ran, an `isolation`
+    /// section reports per-scenario isolation-vs-miriam comparison rows
+    /// (EXPERIMENTS.md §Isolation); both sections are omitted otherwise,
+    /// keeping pre-ISSUE-9 documents bitwise stable.
     pub fn to_json(&self) -> String {
         let num = |x: f64| Json::Num(x);
         let mut obj = BTreeMap::new();
@@ -309,11 +312,48 @@ impl SweepReport {
             );
             obj.insert("coordinator_bench".into(), Json::Obj(cb));
         }
+        // Isolation-vs-elasticity comparison cells (ISSUE 9): one row per
+        // (scenario, isolation scheduler) with the miriam ratios alongside
+        // when miriam ran. Emitted only when an isolation scheduler is in
+        // the grid, so mask-free sweeps stay bitwise identical to the
+        // PR 8 document.
+        let aggs = self.aggregates();
+        if self.schedulers.iter().any(|s| s.starts_with("isolation")) {
+            let mut rows = Vec::new();
+            for a in &aggs {
+                if !a.scheduler.starts_with("isolation") {
+                    continue;
+                }
+                let miriam = aggs.iter().find(|m| {
+                    m.scenario == a.scenario && m.scheduler == "miriam"
+                });
+                let mut m = BTreeMap::new();
+                m.insert("scenario".into(), Json::Str(a.scenario.clone()));
+                m.insert("scheduler".into(), Json::Str(a.scheduler.clone()));
+                m.insert("mean_crit_p99_us".into(), num(a.mean_crit_p99_us));
+                m.insert("mean_throughput_rps".into(),
+                         num(a.mean_throughput_rps));
+                if let Some(mi) = miriam {
+                    m.insert("miriam_crit_p99_us".into(),
+                             num(mi.mean_crit_p99_us));
+                    m.insert("miriam_throughput_rps".into(),
+                             num(mi.mean_throughput_rps));
+                    // > 1: isolation's criticals are slower than miriam's.
+                    m.insert("crit_p99_vs_miriam".into(),
+                             num(a.mean_crit_p99_us / mi.mean_crit_p99_us));
+                    // < 1: isolation completes less work than miriam.
+                    m.insert("throughput_vs_miriam".into(),
+                             num(a.mean_throughput_rps
+                                 / mi.mean_throughput_rps));
+                }
+                rows.push(Json::Obj(m));
+            }
+            obj.insert("isolation".into(), Json::Arr(rows));
+        }
         obj.insert(
             "aggregates".into(),
             Json::Arr(
-                self.aggregates()
-                    .iter()
+                aggs.iter()
                     .map(|a| {
                         let mut m = BTreeMap::new();
                         m.insert("scenario".into(),
@@ -592,5 +632,52 @@ mod tests {
             Some(4)
         );
         assert!(doc.get("coordinator_bench").is_none());
+        // No isolation scheduler in the grid: the comparison section is
+        // omitted, keeping the document bitwise stable vs PR 8.
+        assert!(doc.get("isolation").is_none());
+    }
+
+    #[test]
+    fn isolation_grid_emits_comparison_rows() {
+        let spec = SweepSpec {
+            platform: "rtx2060".into(),
+            duration_us: 8_000.0,
+            scenarios: scenario::family(8_000.0).into_iter().take(1).collect(),
+            schedulers: vec![
+                "miriam".into(),
+                "isolation:70/30".into(),
+                "isolation:70/30+spill".into(),
+            ],
+            seeds: 1,
+            trace: false,
+            reference_rates: false,
+        };
+        let r = run_sweep(&spec, 2).unwrap();
+        assert_eq!(r.cells.len(), 3);
+        let j = r.to_json();
+        let doc = crate::runtime::json::parse(&j).expect("valid JSON");
+        let rows = doc.get("isolation").and_then(Json::as_arr)
+            .expect("isolation section present");
+        assert_eq!(rows.len(), 2, "one row per isolation scheduler");
+        for row in rows {
+            assert!(row.get("scheduler").and_then(Json::as_str).unwrap()
+                        .starts_with("isolation:"));
+            assert!(row.get("crit_p99_vs_miriam").is_some());
+            assert!(row.get("throughput_vs_miriam").is_some());
+        }
+        // Determinism across thread counts extends to the new columns.
+        let r1 = run_sweep(&spec, 1).unwrap();
+        let strip = |s: &str| {
+            // wall_s / wall_ns / events_per_sec are host timing; cells and
+            // aggregates containing them differ run to run. Compare the
+            // deterministic isolation section only.
+            let d = crate::runtime::json::parse(s).unwrap();
+            let mut v = Vec::new();
+            for row in d.get("isolation").and_then(Json::as_arr).unwrap() {
+                v.push(format!("{row:?}"));
+            }
+            v
+        };
+        assert_eq!(strip(&j), strip(&r1.to_json()));
     }
 }

@@ -104,7 +104,7 @@ pub use faults::{
 };
 pub use report::{
     DeviceDesc, DeviceOutcome, FaultsGridReport, FleetGridReport,
-    FleetReport, ResilienceGridReport,
+    FleetReport, IsolationFleetRow, ResilienceGridReport,
 };
 pub use router::{router_for, FleetView, RouterPolicy, ROUTERS};
 
@@ -2002,7 +2002,52 @@ pub fn run_fleet_grid(
         routers: routers.to_vec(),
         scenarios: scenarios.iter().map(|s| s.name.clone()).collect(),
         cells,
+        isolation: Vec::new(),
     })
+}
+
+/// Re-run `base_grid`'s scenarios × routers cells with every device on
+/// each hard-isolation split in `splits` (names like `isolation:70/30`,
+/// pre-validated by the CLI against each device's SM count) and return
+/// the isolation-vs-elasticity comparison rows for `BENCH_fleet.json`
+/// (ISSUE 9). Split-major, then the base grid's cell order, each split
+/// re-using the grid runner — so the rows inherit its byte-determinism
+/// across `--threads` values.
+pub fn run_isolation_comparison(
+    fleet: &FleetSpec,
+    scenarios: &[ScenarioSpec],
+    routers: &[String],
+    base: &FleetOpts,
+    splits: &[String],
+    base_grid: &FleetGridReport,
+    threads: usize,
+) -> Result<Vec<IsolationFleetRow>, String> {
+    let mut rows = Vec::new();
+    for split in splits {
+        let mut iso_fleet = fleet.clone();
+        for d in &mut iso_fleet.devices {
+            d.scheduler = split.clone();
+        }
+        let grid =
+            run_fleet_grid(&iso_fleet, scenarios, routers, base, threads)?;
+        for cell in &grid.cells {
+            let Some(b) = base_grid.cell(&cell.scenario, &cell.router) else {
+                return Err(format!(
+                    "isolation comparison: base grid has no cell \
+                     {}/{}", cell.scenario, cell.router));
+            };
+            rows.push(IsolationFleetRow {
+                scheduler: split.clone(),
+                scenario: cell.scenario.clone(),
+                router: cell.router.clone(),
+                crit_p99_us: cell.crit_p99_us(),
+                throughput_rps: cell.throughput_rps(),
+                base_crit_p99_us: b.crit_p99_us(),
+                base_throughput_rps: b.throughput_rps(),
+            });
+        }
+    }
+    Ok(rows)
 }
 
 /// Run the scenarios × storms × routers resilience grid (scenario-major,
@@ -2360,6 +2405,41 @@ mod tests {
                    Some(3));
         assert_eq!(doc.get("devices").and_then(Json::as_arr).map(|a| a.len()),
                    Some(3));
+        // Without --isolation the comparison key must be absent (bitwise
+        // identity with the PR 8 document).
+        assert!(doc.get("isolation").is_none());
+    }
+
+    #[test]
+    fn isolation_comparison_rows_and_json_key() {
+        use crate::runtime::json::{parse, Json};
+        let routers = vec!["round-robin".to_string()];
+        let opts = FleetOpts::default();
+        let mut grid =
+            run_fleet_grid(&hetero(), &[duo()], &routers, &opts, 2).unwrap();
+        let splits = vec![
+            "isolation:70/30".to_string(),
+            "isolation:70/30+spill".to_string(),
+        ];
+        let rows = run_isolation_comparison(
+            &hetero(), &[duo()], &routers, &opts, &splits, &grid, 2)
+            .unwrap();
+        assert_eq!(rows.len(), 2, "one row per split per cell");
+        assert_eq!(rows[0].scheduler, "isolation:70/30");
+        assert_eq!(rows[1].scheduler, "isolation:70/30+spill");
+        for r in &rows {
+            assert_eq!(r.scenario, "duo-burst");
+            assert!(r.throughput_rps > 0.0, "{}: nothing served",
+                    r.scheduler);
+            assert!(r.base_throughput_rps > 0.0);
+        }
+        grid.isolation = rows;
+        let doc = parse(&grid.to_json()).expect("valid JSON");
+        let arr = doc.get("isolation").and_then(Json::as_arr)
+            .expect("isolation key present");
+        assert_eq!(arr.len(), 2);
+        assert!(arr[0].get("crit_p99_vs_base").is_some());
+        assert!(arr[0].get("throughput_vs_base").is_some());
     }
 
     #[test]

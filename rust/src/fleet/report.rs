@@ -393,6 +393,52 @@ impl FleetReport {
     }
 }
 
+/// One isolation-vs-elasticity comparison row of `BENCH_fleet.json`
+/// (ISSUE 9): the fleet grid cell re-run with every device on one
+/// hard-isolation split, against the same cell under the fleet's own
+/// schedulers.
+#[derive(Debug, Clone)]
+pub struct IsolationFleetRow {
+    /// The isolation scheduler of the re-run (`isolation:A/B[+spill]`).
+    pub scheduler: String,
+    /// Scenario of the cell.
+    pub scenario: String,
+    /// Router of the cell.
+    pub router: String,
+    /// Fleet-wide critical p99 under isolation (us).
+    pub crit_p99_us: f64,
+    /// Fleet-wide served throughput under isolation (req/s).
+    pub throughput_rps: f64,
+    /// Critical p99 of the base cell (us).
+    pub base_crit_p99_us: f64,
+    /// Throughput of the base cell (req/s).
+    pub base_throughput_rps: f64,
+}
+
+impl IsolationFleetRow {
+    /// This row as a canonical-JSON value (`isolation[]` of
+    /// `BENCH_fleet.json`). Ratios > 1 mean isolation is slower
+    /// (`crit_p99_vs_base`) or busier (`throughput_vs_base`) than the
+    /// base schedulers.
+    pub fn to_json_value(&self) -> Json {
+        let num = Json::Num;
+        let mut m = BTreeMap::new();
+        m.insert("scheduler".into(), Json::Str(self.scheduler.clone()));
+        m.insert("scenario".into(), Json::Str(self.scenario.clone()));
+        m.insert("router".into(), Json::Str(self.router.clone()));
+        m.insert("crit_p99_us".into(), num(self.crit_p99_us));
+        m.insert("throughput_rps".into(), num(self.throughput_rps));
+        m.insert("base_crit_p99_us".into(), num(self.base_crit_p99_us));
+        m.insert("base_throughput_rps".into(),
+                 num(self.base_throughput_rps));
+        m.insert("crit_p99_vs_base".into(),
+                 num(self.crit_p99_us / self.base_crit_p99_us));
+        m.insert("throughput_vs_base".into(),
+                 num(self.throughput_rps / self.base_throughput_rps));
+        Json::Obj(m)
+    }
+}
+
 /// A scenarios × routers fleet comparison (the `BENCH_fleet.json`
 /// document).
 #[derive(Debug, Clone)]
@@ -410,6 +456,11 @@ pub struct FleetGridReport {
     /// Cells in deterministic grid order (scenario-major, then router) —
     /// independent of worker-thread interleaving.
     pub cells: Vec<FleetReport>,
+    /// Isolation-vs-elasticity comparison rows (split-major, then
+    /// scenario, then router), filled only by `--isolation` runs
+    /// ([`crate::fleet::run_isolation_comparison`]). Empty rows emit no
+    /// JSON key, keeping mask-free documents bitwise stable vs PR 8.
+    pub isolation: Vec<IsolationFleetRow>,
 }
 
 impl FleetGridReport {
@@ -423,7 +474,9 @@ impl FleetGridReport {
     /// The canonical `BENCH_fleet.json` document: sorted keys, no
     /// whitespace, no host-timing fields — byte-deterministic per
     /// (seed, devices, router) and across `--threads` values (schema in
-    /// EXPERIMENTS.md §Fleet).
+    /// EXPERIMENTS.md §Fleet). `--isolation` runs add an `isolation`
+    /// comparison array (EXPERIMENTS.md §Isolation); the key is omitted
+    /// otherwise.
     pub fn to_json(&self) -> String {
         let mut obj = BTreeMap::new();
         obj.insert("bench".into(), Json::Str("fleet".into()));
@@ -458,6 +511,14 @@ impl FleetGridReport {
             "cells".into(),
             Json::Arr(self.cells.iter().map(|c| c.to_json_value()).collect()),
         );
+        if !self.isolation.is_empty() {
+            obj.insert(
+                "isolation".into(),
+                Json::Arr(
+                    self.isolation.iter().map(|r| r.to_json_value()).collect(),
+                ),
+            );
+        }
         obj.insert("version".into(), Json::Num(1.0));
         Json::Obj(obj).to_canonical_string()
     }

@@ -43,7 +43,7 @@ use crate::gpu::contention::{
 use crate::gpu::kernel::{Criticality, LaunchConfig, LaunchShape};
 use crate::gpu::metrics::{LaunchRecord, SimMetrics};
 use crate::gpu::names::NameTable;
-use crate::gpu::sm::{BlockDemand, SmState};
+use crate::gpu::sm::{BlockDemand, SmMask, SmState};
 use crate::gpu::spec::GpuSpec;
 use crate::gpu::stream::{LaunchTag, QueuedLaunch, Stream, StreamId};
 use crate::gpu::trace::{Trace, TraceEventKind, TraceRecorder};
@@ -212,6 +212,12 @@ pub struct Engine {
     stream_order: Vec<u32>,
     /// Active launch slot per stream (parallel to `streams`).
     head_slot: Vec<Option<u32>>,
+    /// Placement constraint per stream (parallel to `streams`). Streams
+    /// start at [`SmMask::ALL`], the unconstrained sentinel dispatched
+    /// through the heap path; only the isolation scheduler narrows it
+    /// (via [`Engine::set_stream_mask`]), so mask-free runs are bitwise
+    /// unchanged.
+    stream_masks: Vec<SmMask>,
     sms: Vec<SmState>,
     /// Per-SM list of live block-slot ids.
     sm_resident: Vec<Vec<u32>>,
@@ -291,6 +297,7 @@ impl Engine {
             streams: Vec::new(),
             stream_order: Vec::new(),
             head_slot: Vec::new(),
+            stream_masks: Vec::new(),
             sms: (0..n).map(|_| SmState::empty()).collect(),
             sm_resident: vec![Vec::new(); n],
             sm_bw_demand: vec![0.0; n],
@@ -367,11 +374,35 @@ impl Engine {
         let id = self.streams.len() as StreamId;
         self.streams.push(Stream::new(id, priority));
         self.head_slot.push(None);
+        self.stream_masks.push(SmMask::ALL);
         self.stream_order.push(id);
         let streams = &self.streams;
         self.stream_order
             .sort_by_key(|&i| (-streams[i as usize].priority, i));
         id
+    }
+
+    /// Constrain `stream`'s block placement to the SMs in `mask` (the
+    /// hard-isolation partitioning of ISSUE 9). Takes effect immediately:
+    /// already-activated launches with pending blocks re-attempt dispatch
+    /// under the new mask at the current instant, so *widening* a mask
+    /// (work-conserving spillover) places waiting blocks right away, and
+    /// *narrowing* one stops new foreign placements at once — blocks
+    /// already resident outside the new mask run to completion (lent SMs
+    /// drain; there is no preemption, matching MPS semantics).
+    ///
+    /// An empty mask is legal but the stream must then hold no pending
+    /// blocks — they could never place and the launch would never finish.
+    /// Passing [`SmMask::ALL`] restores the unconstrained heap path.
+    pub fn set_stream_mask(&mut self, stream: StreamId, mask: SmMask) {
+        self.stream_masks[stream as usize] = mask;
+        self.try_dispatch();
+    }
+
+    /// The placement constraint currently set for `stream`
+    /// ([`SmMask::ALL`] unless [`Engine::set_stream_mask`] narrowed it).
+    pub fn stream_mask(&self, stream: StreamId) -> SmMask {
+        self.stream_masks[stream as usize]
     }
 
     /// Current simulated time (us).
@@ -660,6 +691,29 @@ impl Engine {
         found
     }
 
+    /// Least-loaded SM *within `mask`* that fits `d` — the
+    /// mask-constrained placement path (ISSUE 9). A linear argmin over
+    /// the masked SMs with exactly [`Engine::pick_sm`]'s selection order
+    /// (smallest `threads_used`, ties broken by smallest SM id), so an
+    /// explicit mask covering every SM reproduces the unmasked heap
+    /// placement bitwise — pinned by `explicit_full_mask_matches_unmasked`
+    /// and the isolation differential suite. Masked streams exist only
+    /// under the isolation scheduler and edge devices have few SMs, so
+    /// the O(num_sms) scan never touches the default hot path.
+    fn pick_sm_masked(&self, d: &BlockDemand, mask: SmMask) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, sm) in self.sms.iter().enumerate() {
+            if !mask.contains(i as u32) || !sm.fits(d, &self.spec) {
+                continue;
+            }
+            match best {
+                Some(b) if self.sms[b].threads_used <= sm.threads_used => {}
+                _ => best = Some(i),
+            }
+        }
+        best
+    }
+
     /// Greedy block dispatcher: streams in priority order (FIFO within a
     /// stream — only the head launch dispatches); for each, place pending
     /// blocks on the least-loaded SM that fits. Lower-priority blocks may
@@ -686,9 +740,17 @@ impl Engine {
                 standalone_demand(&self.spec, &self.params, threads);
             let warps = threads.div_ceil(self.spec.warp_size) as f64;
             let memory_bound = bpb > 0.0 && fpb > 0.0;
+            // Mask read per placement (not per launch lifetime): narrowing
+            // a mask mid-launch stops further foreign placements at once.
+            let mask = self.stream_masks[si];
             let mut pending = pending0;
             while pending > 0 {
-                let Some(sm_idx) = self.pick_sm(&demand) else { break };
+                let picked = if mask.is_all() {
+                    self.pick_sm(&demand)
+                } else {
+                    self.pick_sm_masked(&demand, mask)
+                };
+                let Some(sm_idx) = picked else { break };
                 self.sms[sm_idx].admit(&demand, tag, demand_flops);
                 if self.sms[sm_idx].blocks_resident == 1 {
                     self.busy_sms += 1;
@@ -1435,5 +1497,87 @@ mod tests {
                     "tag {}: end {} vs {}", a.tag, a.record.end_us,
                     b.record.end_us);
         }
+    }
+
+    #[test]
+    fn explicit_full_mask_matches_unmasked() {
+        // The differential backbone of the masked path: a mask covering
+        // every SM must reproduce the heap placement *bitwise*, since
+        // pick_sm_masked is specified as the same argmin order.
+        let spec = GpuSpec::rtx2060();
+        let run = |mask: bool| {
+            let mut e = Engine::new(spec.clone()).with_trace();
+            let s0 = e.add_stream(10);
+            let s1 = e.add_stream(0);
+            if mask {
+                let full = SmMask::range(0, spec.num_sms);
+                assert!(!full.is_all(), "test needs the non-sentinel path");
+                e.set_stream_mask(s0, full);
+                e.set_stream_mask(s1, full);
+            }
+            for i in 0..5u32 {
+                let stream = if i % 2 == 0 { s0 } else { s1 };
+                let crit = if i % 2 == 0 {
+                    Criticality::Critical
+                } else {
+                    Criticality::Normal
+                };
+                e.submit(stream,
+                         cfg(&format!("k{i}"), 20 + 7 * i, 128 + 64 * i,
+                             1e6 + i as f64 * 2e5, i as f64 * 1e4),
+                         crit);
+            }
+            e.run_to_idle();
+            e.take_trace().unwrap().to_canonical_json()
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn masked_stream_places_only_inside_mask() {
+        let spec = GpuSpec::rtx2060();
+        let mut e = Engine::new(spec.clone()).with_trace();
+        let s = e.add_stream(0);
+        e.set_stream_mask(s, SmMask::range(0, 4));
+        // 12 blocks onto a 4-SM partition: 3 resident per SM, none outside.
+        e.submit(s, cfg("k", 12, 256, 12.0 * 215_000.0, 0.0),
+                 Criticality::Normal);
+        let done = e.run_to_idle();
+        assert_eq!(done.len(), 1);
+        let t = e.take_trace().unwrap();
+        use crate::gpu::trace::TraceEventKind as K;
+        assert_eq!(t.count_of(K::BlockPlace), 12);
+        for ev in &t.events {
+            if ev.kind == K::BlockPlace {
+                assert!(ev.loc < 4, "block placed on SM {} outside 0..4",
+                        ev.loc);
+            }
+        }
+    }
+
+    #[test]
+    fn widening_mask_dispatches_waiting_blocks() {
+        let spec = GpuSpec::rtx2060();
+        let mut e = Engine::new(spec.clone());
+        let s = e.add_stream(0);
+        // One SM holds at most 4 blocks of 256 threads; 8 blocks on a
+        // 1-SM partition leave 4 waiting once the partition saturates.
+        e.set_stream_mask(s, SmMask::range(0, 1));
+        e.submit(s, cfg("k", 8, 256, 8.0 * 215_000.0, 0.0),
+                 Criticality::Normal);
+        // Step past launch overhead so blocks dispatch.
+        while e.snapshot().normal_blocks == 0 {
+            assert!(e.step().is_empty(), "completed before placing blocks");
+        }
+        let narrow = e.snapshot();
+        assert_eq!(narrow.normal_blocks, 4, "partition should saturate");
+        assert!(narrow.sm_threads_used[1..].iter().all(|&t| t == 0));
+        // Spillover: widening the mask places the waiting blocks now.
+        e.set_stream_mask(s, SmMask::range(0, spec.num_sms));
+        let wide = e.snapshot();
+        assert_eq!(wide.normal_blocks, 8, "widened mask should dispatch");
+        assert!(wide.sm_threads_used[1] > 0);
+        let done = e.run_to_idle();
+        assert_eq!(done.len(), 1);
     }
 }

@@ -14,6 +14,64 @@
 
 use crate::gpu::spec::GpuSpec;
 
+/// A set of SMs a stream is allowed to place blocks on — the
+/// hard-isolation placement constraint (ISSUE 9). One `u64` bit per SM;
+/// every GPU preset has far fewer than 64 SMs, and the isolation
+/// scheduler fails fast on any device the mask cannot address.
+///
+/// [`SmMask::ALL`] is the *sentinel* "no constraint": the engine keeps
+/// the heap-based placement path for it, so mask-free dispatch is
+/// bitwise unchanged. An explicit mask — even one covering every SM of
+/// the device — takes the linear masked path, whose selection order is
+/// pinned to match the heap's (see `Engine::pick_sm_masked`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SmMask(u64);
+
+impl SmMask {
+    /// The unconstrained sentinel: every stream starts here, and the
+    /// engine dispatches it through the unmasked heap path.
+    pub const ALL: SmMask = SmMask(u64::MAX);
+
+    /// The SMs `start..end` (end exclusive; both at most 64). An empty
+    /// range is a legal (empty) mask — a stream holding one must simply
+    /// never be submitted to, since its blocks could never place.
+    pub fn range(start: u32, end: u32) -> SmMask {
+        assert!(start <= end && end <= 64,
+                "SM range {start}..{end} outside [0, 64]");
+        if start == end {
+            return SmMask(0);
+        }
+        let hi = if end == 64 { u64::MAX } else { (1u64 << end) - 1 };
+        let lo = (1u64 << start) - 1;
+        SmMask(hi & !lo)
+    }
+
+    /// Whether `sm` is in the set.
+    pub fn contains(self, sm: u32) -> bool {
+        sm < 64 && self.0 & (1u64 << sm) != 0
+    }
+
+    /// Whether this is the unconstrained sentinel ([`SmMask::ALL`]).
+    pub fn is_all(self) -> bool {
+        self.0 == u64::MAX
+    }
+
+    /// Whether the set holds no SMs at all.
+    pub fn is_empty(self) -> bool {
+        self.0 == 0
+    }
+
+    /// Number of SMs in the set (64 for the sentinel).
+    pub fn count(self) -> u32 {
+        self.0.count_ones()
+    }
+
+    /// The union of two masks.
+    pub fn union(self, other: SmMask) -> SmMask {
+        SmMask(self.0 | other.0)
+    }
+}
+
 /// Resource demand of one thread block.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BlockDemand {
@@ -142,6 +200,46 @@ mod tests {
 
     fn d(threads: u32, smem: u32) -> BlockDemand {
         BlockDemand { threads, smem, regs: threads * 32 }
+    }
+
+    #[test]
+    fn sm_mask_range_membership() {
+        let m = SmMask::range(4, 12);
+        assert_eq!(m.count(), 8);
+        assert!(!m.contains(3));
+        assert!(m.contains(4));
+        assert!(m.contains(11));
+        assert!(!m.contains(12));
+        assert!(!m.is_all());
+        assert!(!m.is_empty());
+    }
+
+    #[test]
+    fn sm_mask_edges() {
+        assert!(SmMask::range(5, 5).is_empty());
+        assert_eq!(SmMask::range(0, 64).count(), 64);
+        assert!(SmMask::range(0, 64).is_all());
+        assert!(SmMask::ALL.is_all());
+        assert!(SmMask::ALL.contains(63));
+        assert!(!SmMask::ALL.contains(64));
+        let full = SmMask::range(0, 30).union(SmMask::range(21, 30));
+        assert_eq!(full, SmMask::range(0, 30));
+    }
+
+    #[test]
+    fn sm_mask_partition_is_disjoint() {
+        let crit = SmMask::range(0, 21);
+        let norm = SmMask::range(21, 30);
+        for sm in 0..30 {
+            assert!(crit.contains(sm) != norm.contains(sm));
+        }
+        assert_eq!(crit.union(norm), SmMask::range(0, 30));
+    }
+
+    #[test]
+    #[should_panic]
+    fn sm_mask_range_rejects_past_64() {
+        let _ = SmMask::range(0, 65);
     }
 
     #[test]

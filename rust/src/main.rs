@@ -22,7 +22,8 @@
 //!              request-level fault-injection grid against the
 //!              self-healing layer (retries, hedging, cancellation,
 //!              breakers, brownout) and writes BENCH_faults.json
-//!              (ISSUE 8)
+//!              (ISSUE 8); [--isolation 70/30,70/30+spill] attaches
+//!              hard-SM-split vs elasticity comparison rows (ISSUE 9)
 //!   scale-sim  [--tenants 1000,10000,100000] [--duration SECONDS]
 //!              [--threads N] — tiered-tenant scale grid over lazy arrival
 //!              streams + streaming quantiles, writes BENCH_scale.json
@@ -55,7 +56,7 @@ USAGE:
                    [--record-golden DIR]
   miriam sweep [--platform P] [--duration SECONDS] [--scenario all|n1,n2,...]
                [--schedulers s1,s2,...] [--seeds N] [--threads N]
-               [--out BENCH_sweep.json]
+               [--isolation 70/30,70/30+spill] [--out BENCH_sweep.json]
   miriam serve-sim [--platform P] [--duration SECONDS]
                    [--scenario all|n1,n2,...] [--scheduler miriam]
                    [--policy none,token-bucket,deadline-feasible] [--seed N]
@@ -76,6 +77,7 @@ USAGE:
                    [--faults \"fail:p=0.001,straggle:p=0.01*4x,corrupt:p=0.0005\"
                     | --fault-storm all|none,flaky-launches,straggler-swarm,
                       bitflip-storm,full-fault-storm]
+                   [--isolation 70/30,70/30+spill]
                    [--out BENCH_fleet.json|BENCH_resilience.json|
                     BENCH_faults.json]
   miriam scale-sim [--platform P] [--tenants 1000,10000,100000]
@@ -119,6 +121,36 @@ fn resolve_scenarios(args: &Args, dur_us: f64)
                 .ok_or_else(|| anyhow!("unknown scenario {n}"))
         })
         .collect()
+}
+
+/// Parse `--isolation A/B[+spill],...` into validated isolation
+/// scheduler names (ISSUE 9). Fail-fast: every split must parse
+/// ([`coordinator::IsolationConfig::parse`]) *and* partition every
+/// listed device's SM count without starving a class — a long grid must
+/// never die mid-run on a split that rounds a share to zero SMs.
+/// Returns an empty list when the flag is absent.
+fn isolation_schedulers(args: &Args, sm_counts: &[(String, u32)])
+                        -> Result<Vec<String>> {
+    if !args.has("isolation") {
+        return Ok(Vec::new());
+    }
+    let mut out = Vec::new();
+    for split in args.get_list("isolation", "70/30") {
+        let cfg = coordinator::IsolationConfig::parse(&split)
+            .map_err(|e| anyhow!(e))?;
+        for (name, sms) in sm_counts {
+            cfg.partition(*sms).map_err(|e| anyhow!("{name}: {e}"))?;
+        }
+        let n = cfg.scheduler_name();
+        if !out.contains(&n) {
+            out.push(n);
+        }
+    }
+    if out.is_empty() {
+        return Err(anyhow!("--isolation needs at least one split \
+                            (e.g. --isolation 70/30,70/30+spill)"));
+    }
+    Ok(out)
 }
 
 /// Parse the admission tunables shared by `serve-sim` and `fleet-sim`
@@ -305,8 +337,20 @@ fn sweep_cmd(args: &Args) -> Result<()> {
     }
     let dur_us = duration * 1e6;
     let scenarios = resolve_scenarios(args, dur_us)?;
-    let schedulers = args.get_list(
+    let mut schedulers = args.get_list(
         "schedulers", "sequential,multistream,ib,miriam,miriam-ref");
+    // --isolation appends hard-isolation columns to the scheduler grid
+    // (ISSUE 9), each split pre-validated against the platform's SM
+    // count; the report then carries the isolation-vs-miriam section.
+    let gpu = GpuSpec::by_name(platform)
+        .ok_or_else(|| anyhow!("unknown platform {platform}"))?;
+    for name in isolation_schedulers(
+        args, &[(platform.to_string(), gpu.num_sms)])?
+    {
+        if !schedulers.contains(&name) {
+            schedulers.push(name);
+        }
+    }
     let seeds = args.get_usize("seeds", 8).map_err(|e| anyhow!(e))? as u32;
     let default_threads = std::thread::available_parallelism()
         .map(|n| n.get())
@@ -597,6 +641,26 @@ fn fleet_sim(args: &Args) -> Result<()> {
              scripts one fault model, --fault-storm sweeps the named \
              presets"));
     }
+    // --isolation re-runs the grid with every device on each split and
+    // attaches comparison rows (ISSUE 9); validated fail-fast against
+    // every device's SM count.
+    let iso_splits = isolation_schedulers(
+        args,
+        &spec
+            .devices
+            .iter()
+            .map(|d| (d.name.clone(), d.gpu.num_sms))
+            .collect::<Vec<_>>(),
+    )?;
+    if !iso_splits.is_empty()
+        && (wants_faults || args.has("chaos") || args.has("storm"))
+    {
+        return Err(anyhow!(
+            "--isolation and --chaos/--storm/--faults/--fault-storm are \
+             mutually exclusive: the isolation comparison runs on calm \
+             weather (compose them through the library's FleetOpts when \
+             you need both)"));
+    }
     let chaos = match args.get_opt("chaos") {
         Some(dsl) => {
             let c = fleet::ChaosSpec::parse(dsl).map_err(|e| anyhow!(e))?;
@@ -614,6 +678,9 @@ fn fleet_sim(args: &Args) -> Result<()> {
         seed: seed_from_args(args)?,
         chaos,
         autoscale,
+        // The fault path goes through faults_sim, which threads the
+        // per-cell specs into the grid runner itself.
+        faults: None,
     };
     if wants_faults {
         let mut fault_specs = match args.get_opt("faults") {
@@ -662,8 +729,8 @@ fn fleet_sim(args: &Args) -> Result<()> {
         println!("# chaos: {} ({} event(s))", opts.chaos.name,
                  opts.chaos.events.len());
     }
-    let grid = fleet::run_fleet_grid(&spec, &scenarios, &routers, &opts,
-                                     threads)
+    let mut grid = fleet::run_fleet_grid(&spec, &scenarios, &routers, &opts,
+                                         threads)
         .map_err(|e| anyhow!(e))?;
     println!("{:<16} {:<22} {:>8} {:>8} {:>6} {:>8} {:>10} {:>10} {:>6} {:>9}",
              "scenario", "router", "offered", "admit", "shed", "served",
@@ -696,6 +763,36 @@ fn fleet_sim(args: &Args) -> Result<()> {
                 println!("{r:<22} {split}");
             }
         }
+    }
+    if !iso_splits.is_empty() {
+        let rows = fleet::run_isolation_comparison(
+            &spec, &scenarios, &routers, &opts, &iso_splits, &grid, threads)
+            .map_err(|e| anyhow!(e))?;
+        println!("\n# isolation vs {} (hard SM split, every device)",
+                 spec.devices
+                     .first()
+                     .map(|d| d.scheduler.as_str())
+                     .unwrap_or("baseline"));
+        println!("{:<22} {:<16} {:<22} {:>10} {:>9} {:>9} {:>9}",
+                 "scheduler", "scenario", "router", "crit p99", "p99 x",
+                 "fleet r/s", "r/s x");
+        for r in &rows {
+            println!("{:<22} {:<16} {:<22} {:>10.2} {:>9.3} {:>9.1} {:>9.3}",
+                     r.scheduler, r.scenario, r.router,
+                     r.crit_p99_us / 1e3,
+                     if r.base_crit_p99_us > 0.0 {
+                         r.crit_p99_us / r.base_crit_p99_us
+                     } else {
+                         0.0
+                     },
+                     r.throughput_rps,
+                     if r.base_throughput_rps > 0.0 {
+                         r.throughput_rps / r.base_throughput_rps
+                     } else {
+                         0.0
+                     });
+        }
+        grid.isolation = rows;
     }
     std::fs::write(out, grid.to_json())?;
     println!("wrote {out}");

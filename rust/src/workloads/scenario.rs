@@ -427,9 +427,36 @@ pub const GOLDEN_DURATION_US: f64 = 40_000.0;
 /// goldens on this platform only, so recording must use it too.
 pub const GOLDEN_PLATFORM: &str = "rtx2060";
 
+/// Hard-isolation splits pinned by the conformance suite (ISSUE 9):
+/// one strict split and its work-conserving spillover variant, both
+/// valid on every golden platform (70/30 partitions to ≥1 SM per class
+/// on tx2's 2 SMs and up). Grid runners treat these as opt-in columns,
+/// like `miriam-ref`.
+pub const ISOLATION_GOLDEN_SCHEDULERS: [&str; 2] =
+    ["isolation:70/30", "isolation:70/30+spill"];
+
+/// Pinned isolation golden cells (ISSUE 9), recorded alongside
+/// [`GOLDEN_CELLS`] by the same writer: each split anchors one bursty
+/// and one replay/skew scenario so both the strict and the spillover
+/// mask paths have semantic-drift anchors.
+pub const ISOLATION_GOLDEN_CELLS: [(&str, &str); 4] = [
+    ("duo-burst", "isolation:70/30"),
+    ("trio-skew", "isolation:70/30"),
+    ("duo-replay", "isolation:70/30+spill"),
+    ("quad-dual-crit", "isolation:70/30+spill"),
+];
+
+/// Sanitize a scheduler name for use in a golden file name. Identity
+/// for the paper schedulers; the isolation family's `:`/`/`/`+` become
+/// `-` (`isolation:70/30+spill` → `isolation-70-30-spill`) so cell
+/// files never introduce path separators.
+pub fn scheduler_file_slug(scheduler: &str) -> String {
+    scheduler.replace([':', '/', '+'], "-")
+}
+
 /// File name of a golden trace cell.
 pub fn golden_file_name(scenario: &str, scheduler: &str) -> String {
-    format!("{scenario}__{scheduler}.trace.json")
+    format!("{scenario}__{}.trace.json", scheduler_file_slug(scheduler))
 }
 
 /// GPU presets covered by the *per-device* golden traces (ISSUE 5
@@ -439,8 +466,11 @@ pub fn golden_file_name(scenario: &str, scheduler: &str) -> String {
 pub const DEVICE_GOLDEN_PLATFORMS: [&str; 2] = ["xavier", "tx2"];
 
 /// Family scenarios pinned per device platform — one bursty duo, one
-/// skewed trio, each replayed under every scheduler on every
-/// [`DEVICE_GOLDEN_PLATFORMS`] entry (2 × 2 × 4 = 16 anchor cells).
+/// skewed trio, each replayed under every [`crate::coordinator`]
+/// scheduler plus both [`ISOLATION_GOLDEN_SCHEDULERS`] splits on every
+/// [`DEVICE_GOLDEN_PLATFORMS`] entry (2 × 2 × 6 = 24 anchor cells, so
+/// the isolation partition arithmetic is pinned down to tx2's 1/1 SM
+/// split).
 pub const DEVICE_GOLDEN_SCENARIOS: [&str; 2] = ["duo-burst", "trio-skew"];
 
 /// Subdirectory of the golden dir holding the per-device anchors
@@ -451,7 +481,8 @@ pub const DEVICE_GOLDEN_SUBDIR: &str = "devices";
 /// File name of a per-device golden trace cell (platform-qualified).
 pub fn device_golden_file_name(platform: &str, scenario: &str,
                                scheduler: &str) -> String {
-    format!("{platform}__{scenario}__{scheduler}.trace.json")
+    format!("{platform}__{scenario}__{}.trace.json",
+            scheduler_file_slug(scheduler))
 }
 
 /// One tenant tier of a [`ScaleSpec`] (ISSUE 7): a population slice
@@ -884,6 +915,32 @@ mod tests {
         assert_eq!(
             golden_file_name("duo-burst", "ib"),
             "duo-burst__ib.trace.json"
+        );
+    }
+
+    #[test]
+    fn isolation_golden_cells_exist_and_slug_is_path_safe() {
+        for (sc, sched) in ISOLATION_GOLDEN_CELLS {
+            assert!(
+                by_name(sc, GOLDEN_DURATION_US).is_some(),
+                "isolation golden cell references unknown scenario {sc}"
+            );
+            assert!(ISOLATION_GOLDEN_SCHEDULERS.contains(&sched),
+                    "isolation golden cell names unpinned scheduler {sched}");
+        }
+        for sched in ISOLATION_GOLDEN_SCHEDULERS {
+            assert!(crate::coordinator::is_scheduler_name(sched),
+                    "pinned isolation scheduler {sched} does not resolve");
+            let slug = scheduler_file_slug(sched);
+            assert!(!slug.contains(['/', ':', '+']), "unsanitized {slug}");
+        }
+        // Slug is identity on the paper schedulers (golden names stable).
+        for sched in crate::coordinator::SCHEDULERS {
+            assert_eq!(scheduler_file_slug(sched), sched);
+        }
+        assert_eq!(
+            golden_file_name("duo-burst", "isolation:70/30+spill"),
+            "duo-burst__isolation-70-30-spill.trace.json"
         );
     }
 

@@ -1,7 +1,9 @@
 //! Golden-trace conformance suite (ISSUE 2 tentpole).
 //!
 //! Drives the scenario family (`workloads::scenario`) through every
-//! scheduler with the engine trace recorder on and pins three contracts:
+//! scheduler — the four paper schedulers plus the pinned hard-isolation
+//! splits (ISSUE 9) — with the engine trace recorder on and pins three
+//! contracts:
 //!
 //! 1. **Determinism** — the same (scenario, scheduler, seed) cell run
 //!    twice produces a byte-identical canonical trace.
@@ -31,6 +33,19 @@ use miriam::workloads::scenario::{self, ScenarioSpec};
 /// Simulated window per conformance cell (us). Short but long enough
 /// that every arrival process in the family fires and queues build.
 const DUR_US: f64 = 40_000.0;
+
+/// The full conformance scheduler set: the four paper schedulers plus
+/// the two pinned hard-isolation splits (ISSUE 9). `SCHEDULERS` itself
+/// stays the paper quartet — the isolation family is an opt-in column
+/// everywhere else — but the determinism and rate-path contracts must
+/// hold for every resolvable scheduler, so the suite iterates this.
+fn conformance_schedulers() -> Vec<&'static str> {
+    SCHEDULERS
+        .iter()
+        .chain(scenario::ISOLATION_GOLDEN_SCHEDULERS.iter())
+        .copied()
+        .collect()
+}
 
 fn run_traced_on(spec: GpuSpec, sc: &ScenarioSpec, sched: &str,
                  reference: bool)
@@ -74,34 +89,43 @@ fn family_covers_at_least_eight_scenarios_for_all_schedulers() {
         assert!((2..=6).contains(&sc.tenants()), "{}", sc.name);
         assert!(sc.criticals() >= 1 && sc.criticals() < sc.tenants(),
                 "{}: not mixed-criticality", sc.name);
-        // Every scheduler can be built for every scenario.
+        // Every scheduler — paper set and isolation splits — can be
+        // built for every scenario.
         let wl = sc.build();
-        for sched in SCHEDULERS {
+        for sched in conformance_schedulers() {
             assert!(scheduler_for(sched, &wl).is_some(), "{}/{sched}",
                     sc.name);
         }
     }
+    assert_eq!(conformance_schedulers().len(), 6);
     for (sc_name, sched) in scenario::GOLDEN_CELLS {
         assert!(scenario::by_name(sc_name, DUR_US).is_some(),
                 "golden cell names unknown scenario {sc_name}");
         assert!(SCHEDULERS.contains(&sched),
                 "golden cell names unknown scheduler {sched}");
     }
+    for (sc_name, sched) in scenario::ISOLATION_GOLDEN_CELLS {
+        assert!(scenario::by_name(sc_name, DUR_US).is_some(),
+                "isolation golden cell names unknown scenario {sc_name}");
+        assert!(scenario::ISOLATION_GOLDEN_SCHEDULERS.contains(&sched),
+                "isolation golden cell names unpinned scheduler {sched}");
+    }
 }
 
 #[test]
 fn same_seed_runs_produce_byte_identical_canonical_traces() {
     for sc in scenario::family(DUR_US) {
-        for sched in SCHEDULERS {
+        for sched in conformance_schedulers() {
             let (_, t1) = run_traced(&sc, sched, false);
             let (_, t2) = run_traced(&sc, sched, false);
             assert!(!t1.is_empty(), "{}/{sched}: empty trace", sc.name);
             let a = t1.to_canonical_json();
             let b = t2.to_canonical_json();
             if a != b {
-                dump(&format!("determinism__{}__{sched}.run1.json", sc.name),
+                let slug = scenario::scheduler_file_slug(sched);
+                dump(&format!("determinism__{}__{slug}.run1.json", sc.name),
                      &a);
-                dump(&format!("determinism__{}__{sched}.run2.json", sc.name),
+                dump(&format!("determinism__{}__{slug}.run2.json", sc.name),
                      &b);
                 panic!("{}/{sched}: same-seed canonical traces differ \
                         ({} vs {} bytes; dumps in {:?})",
@@ -114,17 +138,18 @@ fn same_seed_runs_produce_byte_identical_canonical_traces() {
 #[test]
 fn incremental_rate_path_traces_match_reference_oracle() {
     for sc in scenario::family(DUR_US) {
-        for sched in SCHEDULERS {
+        for sched in conformance_schedulers() {
             let (inc_stats, inc) = run_traced(&sc, sched, false);
             let (ref_stats, refr) = run_traced(&sc, sched, true);
             assert_eq!(inc_stats.events, ref_stats.events,
                        "{}/{sched}: event counts diverged", sc.name);
             let divs = inc.diff(&refr);
             if !divs.is_empty() {
-                dump(&format!("ratepath__{}__{sched}.incremental.json",
+                let slug = scenario::scheduler_file_slug(sched);
+                dump(&format!("ratepath__{}__{slug}.incremental.json",
                               sc.name),
                      &inc.to_canonical_json());
-                dump(&format!("ratepath__{}__{sched}.reference.json",
+                dump(&format!("ratepath__{}__{slug}.reference.json",
                               sc.name),
                      &refr.to_canonical_json());
                 panic!("{}/{sched}: incremental vs reference traces \
@@ -211,7 +236,10 @@ fn golden_traces_pin_engine_and_scheduler_semantics() {
                    rust/tests/golden/ to pin them",
                   recorded.len(), dir.display());
     }
-    for (sc_name, sched) in scenario::GOLDEN_CELLS {
+    for (sc_name, sched) in scenario::GOLDEN_CELLS
+        .into_iter()
+        .chain(scenario::ISOLATION_GOLDEN_CELLS)
+    {
         let sc = scenario::by_name(sc_name, scenario::GOLDEN_DURATION_US)
             .unwrap_or_else(|| panic!("unknown golden scenario {sc_name}"));
         let (_, actual) = run_traced(&sc, sched, false);
@@ -228,7 +256,8 @@ fn golden_traces_pin_engine_and_scheduler_semantics() {
         // structurally with a tiny time tolerance.
         let divs = actual.diff_with_tolerance(&golden, 1e-6);
         if !divs.is_empty() {
-            dump(&format!("golden__{sc_name}__{sched}.actual.json"),
+            dump(&format!("golden__{sc_name}__{}.actual.json",
+                          scenario::scheduler_file_slug(sched)),
                  &actual.to_canonical_json());
             panic!("{sc_name}/{sched}: trace drifted from golden {} at {} \
                     point(s); first: {} (actual dumped in {:?}; regenerate \
@@ -272,7 +301,7 @@ fn device_golden_traces_pin_per_platform_semantics() {
                     .unwrap_or_else(|| {
                         panic!("unknown device golden scenario {sc_name}")
                     });
-            for sched in SCHEDULERS {
+            for sched in conformance_schedulers() {
                 let (_, actual) =
                     run_traced_on(spec.clone(), &sc, sched, false);
                 assert!(!actual.is_empty(),
@@ -293,8 +322,9 @@ fn device_golden_traces_pin_per_platform_semantics() {
                 let divs = actual.diff_with_tolerance(&golden, 1e-6);
                 if !divs.is_empty() {
                     dump(&format!(
-                             "device_golden__{platform}__{sc_name}__{sched}\
-                              .actual.json"),
+                             "device_golden__{platform}__{sc_name}__{}\
+                              .actual.json",
+                             scenario::scheduler_file_slug(sched)),
                          &actual.to_canonical_json());
                     panic!("{platform}/{sc_name}/{sched}: trace drifted \
                             from device golden {} at {} point(s); first: {} \
@@ -316,7 +346,7 @@ fn deadline_tagged_scenarios_score_misses_consistently() {
     // the scheduler, misses never exceed completions and an impossible
     // deadline variant scores every completion as a miss.
     let sc = scenario::by_name("duo-burst", DUR_US).unwrap();
-    for sched in SCHEDULERS {
+    for sched in conformance_schedulers() {
         let wl = sc.build();
         let mut s = scheduler_for(sched, &wl).unwrap();
         let st = driver::run(GpuSpec::rtx2060(), &wl, s.as_mut());

@@ -40,6 +40,14 @@ The mode is dispatched on the measured document's ``"bench"`` key:
   fault injection keeps every device live), ``critical_cancelled ==
   0`` (deadline-aware cancellation never touches critical requests),
   and ``hedge_wins <= hedges`` (a hedged request wins at most once).
+* ``"bench": "isolation"`` (``BENCH_isolation.json``): fleet-style
+  contract over the ``comparisons`` rows keyed
+  ``(scenario, scheduler)`` — coverage regression, 2% throughput
+  drift, 5% critical-p99 drift — plus one unconditional invariant:
+  **isolation critical p99 ≤ miriam critical p99 × 1.05** on every
+  row (a partition that dedicates SMs to criticals and still serves
+  them materially slower than whole-device sharing means the SM-mask
+  placement path is broken, regardless of what the baseline says).
 
 Usage:
     bench_gate.py MEASURED_JSON BASELINE_JSON [--tolerance 0.20]
@@ -372,6 +380,88 @@ def faults_gate(measured, baseline_path, tolerance=None):
     return 0
 
 
+def isolation_gate(measured, baseline_path, tolerance=None):
+    """Deterministic-report gate for BENCH_isolation.json documents.
+
+    Works over the ``comparisons`` rows (one per (scenario, isolation
+    scheduler) aggregate) keyed ``(scenario, scheduler)``. The
+    partitioning invariant — isolation critical p99 at or below miriam
+    critical p99 × 1.05 — is checked unconditionally on every row,
+    baseline or not; drift checks (throughput within the served
+    tolerance, critical p99 within the p99 tolerance) arm once a real
+    baseline is promoted.
+    """
+    served_tol = tolerance if tolerance is not None else 0.02
+    p99_tol = tolerance if tolerance is not None else 0.05
+    headroom = measured.get("crit_p99_tolerance", 1.05)
+    rows = measured.get("comparisons", [])
+    print(f"measured: {len(rows)} isolation cell(s) on "
+          f"{measured.get('platform')}, schedulers "
+          f"{[s for s in measured.get('schedulers', []) if str(s).startswith('isolation')]}")
+    key = lambda r: (r.get("scenario"), r.get("scheduler"))
+    failures = []
+    for r in rows:
+        mp, ep = r.get("crit_p99_us"), r.get("miriam_crit_p99_us")
+        if (isinstance(mp, (int, float)) and isinstance(ep, (int, float))
+                and ep > 0 and mp > ep * headroom):
+            failures.append(
+                f"{key(r)}: isolation crit_p99_us {mp:.1f} > miriam "
+                f"{ep:.1f} x {headroom} — a dedicated critical partition "
+                f"must not be materially slower than sharing")
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        baseline = None
+        if not failures:
+            print(f"gate: no baseline at {baseline_path} — bootstrap "
+                  f"pass (invariant held). Promote a CI-run "
+                  f"BENCH_isolation.json artifact there to arm the gate "
+                  f"(same --smoke conditions).")
+            return 0
+    if baseline is not None and (baseline.get("bootstrap")
+                                 or not baseline.get("comparisons")):
+        baseline = None
+        if not failures:
+            print("gate: isolation baseline is a bootstrap placeholder — "
+                  "pass (invariant held). Promote a CI-run "
+                  "BENCH_isolation.json artifact to arm the gate.")
+            return 0
+    if baseline is not None:
+        base_rows = {key(r): r for r in baseline.get("comparisons", [])}
+        measured_keys = {key(r) for r in rows}
+        for k in sorted(k for k in base_rows if k not in measured_keys):
+            failures.append(f"{k}: in baseline but missing from measured "
+                            f"report (coverage regression)")
+        for r in rows:
+            b = base_rows.get(key(r))
+            if b is None:
+                continue  # new cell: no baseline yet, nothing to regress
+            bt, mt = b.get("throughput_rps"), r.get("throughput_rps")
+            if (isinstance(bt, (int, float)) and isinstance(mt, (int, float))
+                    and bt > 0 and abs(mt - bt) > served_tol * bt):
+                failures.append(f"{key(r)}: throughput_rps {mt:.1f} vs "
+                                f"baseline {bt:.1f}")
+            bp, mp = b.get("crit_p99_us"), r.get("crit_p99_us")
+            if (isinstance(bp, (int, float)) and isinstance(mp, (int, float))
+                    and bp > 0 and abs(mp - bp) > p99_tol * bp):
+                failures.append(f"{key(r)}: crit_p99_us {mp:.1f} vs "
+                                f"baseline {bp:.1f}")
+    if failures:
+        print("gate: FAIL — isolation report violated the partitioning "
+              "invariant or drifted from baseline (intentional change? "
+              "refresh benchmarks/BENCH_isolation.baseline.json from a "
+              "healthy CI artifact; invariant failures are bugs, not "
+              "baseline drift):")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print(f"gate: OK — {len(rows)} isolation cell(s) keep critical p99 "
+          f"within {headroom}x of miriam and sit within tolerance of "
+          f"baseline")
+    return 0
+
+
 def main(argv):
     if len(argv) < 3:
         print(__doc__)
@@ -395,6 +485,9 @@ def main(argv):
     if measured.get("bench") == "faults":
         return faults_gate(measured, baseline_path,
                            tolerance if "--tolerance" in argv else None)
+    if measured.get("bench") == "isolation":
+        return isolation_gate(measured, baseline_path,
+                              tolerance if "--tolerance" in argv else None)
     m_inc = measured.get("events_per_sec_incremental")
     m_ref = measured.get("events_per_sec_reference")
     m_speedup = measured.get("speedup")
