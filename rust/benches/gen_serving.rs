@@ -1,0 +1,113 @@
+//! Generation-serving comparison across the gen scenario family
+//! (ISSUE 10).
+//!
+//! One leg: every gen scenario served through the live coordinator
+//! under each admission policy, plus the three reference cells the grid
+//! adds per scenario — `solo` (criticals alone, the TTFT yardstick),
+//! `sequential` (no elastic sharing) and `batched` (decode-aware
+//! continuous batching). Per cell the table reports the SLO split,
+//! token throughput, eviction/recompute traffic and critical TTFT
+//! quantiles; a summary line per scenario states the acceptance
+//! comparison — under `deadline-feasible` admission, criticals' TTFT
+//! p99 must stay within 1.10x of their solo-run TTFT p99.
+//!
+//! Unconditional invariants (token conservation, criticals never
+//! evicted, zero TTFT>latency violations) are asserted on every cell;
+//! any failure exits non-zero so the CI step fails.
+//!
+//! Writes `BENCH_gen.json` (canonical, byte-deterministic per seed and
+//! across thread counts — schema in EXPERIMENTS.md §Generation). CI
+//! smoke mode: append `-- --smoke` (or set `BENCH_SMOKE=1`).
+
+use miriam::coordinator::admission::{AdmissionPolicy, POLICIES};
+use miriam::gpu::spec::GpuSpec;
+use miriam::server::gen::{run_gen_grid, GenOpts};
+use miriam::workloads::generation;
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").is_ok();
+    let duration_us = if smoke { 40_000.0 } else { 200_000.0 };
+    let gpu = GpuSpec::rtx2060();
+    let scenarios = generation::gen_family(duration_us);
+    let opts = GenOpts::default();
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+
+    println!("# gen_serving: {} scenarios x {} policies (+solo/sequential/\
+              batched), {}s of arrivals per cell{}",
+             scenarios.len(), POLICIES.len(), duration_us / 1e6,
+             if smoke { " (smoke)" } else { "" });
+    println!("{:<14} {:<11} {:<18} {:>7} {:>6} {:>8} {:>6} {:>9} {:>9} {:>9}",
+             "scenario", "kind", "policy", "admit", "shed", "tokens",
+             "evict", "ttft p99", "gap p99", "tok/s");
+    println!("{:<14} {:<11} {:<18} {:>7} {:>6} {:>8} {:>6} {:>9} {:>9} {:>9}",
+             "", "", "", "", "", "", "", "(ms)", "(ms)", "");
+
+    let grid = run_gen_grid(&gpu, &scenarios, &POLICIES, &opts, threads)
+        .expect("gen grid");
+    let mut invariants_ok = true;
+    for c in &grid.cells {
+        println!("{:<14} {:<11} {:<18} {:>7} {:>6} {:>8} {:>6} {:>9.2} \
+                  {:>9.2} {:>9.0}",
+                 c.scenario, c.kind, c.policy.name(), c.admitted(), c.shed(),
+                 c.tokens, c.evictions, c.crit_ttft_p99_us() / 1e3,
+                 c.inter_token_quantile_us(0.99) / 1e3, c.tokens_per_sec());
+        // Unconditional invariants — hold for every cell of every run.
+        for (name, ok) in [
+            ("token conservation", c.tokens == c.drawn_tokens),
+            ("criticals never evicted", c.critical_evictions() == 0),
+            ("TTFT <= e2e latency", c.ttft_violations == 0),
+            ("accounting balance", c.offered() == c.admitted() + c.shed()),
+            ("recompute == evicted prefix",
+             c.recompute_tokens == c.evicted_prefix_tokens),
+        ] {
+            if !ok {
+                println!("INVARIANT VIOLATED [{}/{}/{}]: {name}",
+                         c.scenario, c.kind, c.policy.name());
+                invariants_ok = false;
+            }
+        }
+    }
+
+    // Acceptance comparison: deadline-feasible TTFT p99 vs solo run.
+    println!("\n{:<14} {:>14} {:>14} {:>8} {:>12} {:>12}",
+             "scenario", "ttft feas(ms)", "ttft solo(ms)", "ok",
+             "tok/s miriam", "tok/s batch");
+    let mut all_ok = true;
+    for sc in &grid.scenarios {
+        let feas = grid
+            .cell(sc, "policy", Some(AdmissionPolicy::DeadlineFeasible))
+            .expect("deadline-feasible cell");
+        let solo = grid
+            .cell(&format!("{sc}-solo"), "solo", None)
+            .expect("solo cell");
+        let bat = grid.cell(sc, "batched", None).expect("batched cell");
+        let p_mixed = feas.crit_ttft_p99_us();
+        let p_solo = solo.crit_ttft_p99_us();
+        // NaN-tolerant: a cell with zero critical completions (possible
+        // in very short smoke windows) compares as ok. The 10% + 5us
+        // slack is the ISSUE 10 acceptance bound.
+        let ok = !(p_mixed.is_finite() && p_solo.is_finite())
+            || p_mixed <= p_solo * 1.10 + 5.0;
+        all_ok &= ok;
+        println!("{:<14} {:>14.2} {:>14.2} {:>8} {:>12.0} {:>12.0}",
+                 sc, p_mixed / 1e3, p_solo / 1e3,
+                 if ok { "yes" } else { "NO" },
+                 feas.tokens_per_sec(), bat.tokens_per_sec());
+    }
+    println!("\ncritical TTFT p99 within 1.10x of solo on every scenario: \
+              {}",
+             if all_ok { "yes" } else { "NO" });
+
+    std::fs::write("BENCH_gen.json", grid.to_json())
+        .expect("write BENCH_gen.json");
+    println!("wrote BENCH_gen.json");
+
+    // Both the invariants and the TTFT acceptance comparison are gates,
+    // not remarks: a run violating either must fail the CI step.
+    if !all_ok || !invariants_ok {
+        std::process::exit(1);
+    }
+}

@@ -28,6 +28,12 @@
 //!              [--threads N] — tiered-tenant scale grid over lazy arrival
 //!              streams + streaming quantiles, writes BENCH_scale.json
 //!              (ISSUE 7)
+//!   gen-sim    [--scenario all|names] [--policy none,token-bucket,
+//!              deadline-feasible] [--seed N] [--threads N]
+//!              [--batch-window-ms W] — autoregressive prefill/decode
+//!              serving grid with KV-cache pressure and token-level SLOs,
+//!              plus solo/sequential/continuous-batching comparison rows,
+//!              writes BENCH_gen.json (ISSUE 10)
 //!   infer      --model cifarnet [--artifacts artifacts]
 //!   artifacts  [--artifacts artifacts]
 
@@ -40,8 +46,8 @@ use miriam::coordinator::{self, driver, sweep};
 use miriam::fleet;
 use miriam::gpu::spec::GpuSpec;
 use miriam::runtime::Manifest;
-use miriam::server::{online, scale};
-use miriam::workloads::{lgsvl, mdtb, scenario};
+use miriam::server::{gen, online, scale};
+use miriam::workloads::{generation, lgsvl, mdtb, scenario};
 
 const USAGE: &str = "\
 miriam — elastic-kernel multi-DNN coordination on a simulated edge GPU
@@ -83,6 +89,13 @@ USAGE:
   miriam scale-sim [--platform P] [--tenants 1000,10000,100000]
                    [--duration SECONDS] [--scheduler miriam] [--threads N]
                    [--out BENCH_scale.json]
+  miriam gen-sim [--platform P] [--duration SECONDS]
+                 [--scenario all|gen-duo,gen-pressure,gen-storm,gen-diff]
+                 [--scheduler miriam]
+                 [--policy none,token-bucket,deadline-feasible] [--seed N]
+                 [--threads N] [--batch-window-ms W] [--bucket-cap 16]
+                 [--refill-hz 40] [--max-queue-ms 100] [--drain-ways 3]
+                 [--backoff-ms 2] [--out BENCH_gen.json]
   miriam infer --model NAME [--artifacts DIR]
   miriam artifacts [--artifacts DIR]
 ";
@@ -259,6 +272,13 @@ fn scenarios(args: &Args) -> Result<()> {
         // two golden sets can never desynchronize.
         for (path, events) in driver::record_device_golden_traces(
             &dir.join(scenario::DEVICE_GOLDEN_SUBDIR))?
+        {
+            println!("recorded {} ({events} events)", path.display());
+        }
+        // Likewise the generation anchors (ISSUE 10): same invocation,
+        // same pinned platform/duration, own subdirectory.
+        for (path, events) in gen::record_gen_golden_traces(
+            &dir.join(generation::GEN_GOLDEN_SUBDIR))?
         {
             println!("recorded {} ({events} events)", path.display());
         }
@@ -868,6 +888,97 @@ fn scale_sim(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Resolve `--scenario all|n1,n2,...` for `gen-sim` against the
+/// generation family plus the standalone differential scenario.
+fn resolve_gen_scenarios(args: &Args, dur_us: f64)
+                         -> Result<Vec<generation::GenScenarioSpec>> {
+    let which = args.get("scenario", "all");
+    if which.eq_ignore_ascii_case("all") {
+        return Ok(generation::gen_family(dur_us));
+    }
+    args.get_list("scenario", "")
+        .iter()
+        .map(|n| {
+            generation::gen_by_name(n, dur_us)
+                .ok_or_else(|| anyhow!("unknown gen scenario {n}"))
+        })
+        .collect()
+}
+
+/// `gen-sim` (ISSUE 10 tentpole): the autoregressive serving grid —
+/// prefill/decode request state machines with KV-cache residency and
+/// token-level SLOs through the online core — scenarios × admission
+/// policies plus solo-criticals / sequential / continuous-batching
+/// comparison rows, stdout table plus `BENCH_gen.json`. The JSON is
+/// byte-deterministic per seed across `--threads` and repeats
+/// (`rust/tests/gen_determinism.rs` pins both).
+fn gen_sim(args: &Args) -> Result<()> {
+    let platform = args.get("platform", "rtx2060");
+    let gpu = GpuSpec::by_name(platform)
+        .ok_or_else(|| anyhow!("unknown platform {platform}"))?;
+    let duration = args.get_f64("duration", 0.2).map_err(|e| anyhow!(e))?;
+    if duration <= 0.0 {
+        return Err(anyhow!("duration must be positive"));
+    }
+    let dur_us = duration * 1e6;
+    let scenarios = resolve_gen_scenarios(args, dur_us)?;
+    let policies = args
+        .get_list("policy", "none,token-bucket,deadline-feasible")
+        .iter()
+        .map(|p| {
+            AdmissionPolicy::parse(p)
+                .ok_or_else(|| anyhow!("unknown policy {p}"))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let threads = args
+        .get_usize("threads", default_threads)
+        .map_err(|e| anyhow!(e))?;
+    let batch_window_us = if args.has("batch-window-ms") {
+        Some(args.get_f64("batch-window-ms", 0.15)
+            .map_err(|e| anyhow!(e))? * 1e3)
+    } else {
+        None // the batched comparison row uses GEN_BATCH_WINDOW_US
+    };
+    let opts = gen::GenOpts {
+        scheduler: args.get("scheduler", "miriam").to_string(),
+        policy: AdmissionPolicy::Open, // per-cell policy comes from the grid
+        admission: admission_from_args(args)?,
+        seed: seed_from_args(args)?,
+        batch_window_us,
+    };
+    let out = args.get("out", "BENCH_gen.json");
+
+    println!("# gen-sim: {} scenario(s) x {} policy(ies) (+3 comparison \
+              rows each) on {} ({} SMs), {duration}s of arrivals each, \
+              scheduler {}, {threads} thread(s)",
+             scenarios.len(), policies.len(), gpu.name, gpu.num_sms,
+             opts.scheduler);
+    let grid = gen::run_gen_grid(&gpu, &scenarios, &policies, &opts, threads)
+        .map_err(|e| anyhow!(e))?;
+    println!("{:<14} {:<11} {:<18} {:>7} {:>6} {:>7} {:>6} {:>6} {:>9} \
+              {:>9} {:>9}",
+             "scenario", "kind", "policy", "admit", "shed", "tokens",
+             "evict", "preem", "ttft p50", "ttft p99", "tok/s");
+    println!("{:<14} {:<11} {:<18} {:>7} {:>6} {:>7} {:>6} {:>6} {:>9} \
+              {:>9} {:>9}",
+             "", "", "", "", "", "", "", "", "(ms)", "(ms)", "");
+    for c in &grid.cells {
+        println!("{:<14} {:<11} {:<18} {:>7} {:>6} {:>7} {:>6} {:>6} \
+                  {:>9.2} {:>9.2} {:>9.0}",
+                 c.scenario, c.kind, c.policy.name(), c.admitted(),
+                 c.shed(), c.tokens, c.evictions, c.preempted_steps,
+                 c.crit_ttft_quantile_us(0.5) / 1e3,
+                 c.crit_ttft_p99_us() / 1e3,
+                 c.tokens_per_sec());
+    }
+    std::fs::write(out, grid.to_json())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
 fn infer(args: &Args) -> Result<()> {
     use miriam::runtime::artifacts::npy_rand;
     let model = args
@@ -912,6 +1023,7 @@ fn main() -> Result<()> {
         Some("serve-sim") => serve_sim(&args),
         Some("fleet-sim") => fleet_sim(&args),
         Some("scale-sim") => scale_sim(&args),
+        Some("gen-sim") => gen_sim(&args),
         Some("infer") => infer(&args),
         Some("artifacts") => {
             let m = Manifest::load(args.get("artifacts", "artifacts"))?;

@@ -1,0 +1,1341 @@
+//! Generation (prefill/decode) serving on the device core (ISSUE 10
+//! tentpole).
+//!
+//! A [`crate::workloads::generation::GenScenarioSpec`] tenant's request
+//! is a little state machine — Prefill → Decode(step k) → Done — that
+//! re-submits the next step's kernel graph through the interned
+//! zero-clone fast path on each step completion. This module owns that
+//! lifecycle plus the memory the paper-era loops never had to model:
+//!
+//! * **KV ledger** — every admitted request reserves its full cache
+//!   footprint (prompt + drawn output tokens) against the scenario's
+//!   device KV budget *up front*, so a resident request can always run
+//!   to completion and the ledger can never deadlock. Requests that
+//!   don't fit park (criticals first may **evict**: resident
+//!   best-effort requests are dropped largest-first and later
+//!   *recompute* exactly their evicted prefix; criticals are never
+//!   evicted).
+//! * **Token-level SLOs** — time-to-first-token is recorded at the
+//!   first emitted token and inter-token gaps at every kept decode
+//!   token, scored against the tenant's `ttft_deadline_us` /
+//!   `per_token_us` budgets and threaded through
+//!   [`TenantOutcome`](crate::server::online::TenantOutcome).
+//! * **Continuous batching** — an optional decode micro-batcher
+//!   ([`GenOpts::batch_window_us`]) that coalesces decode-ready
+//!   requests of one (model, KV bucket) into shared padded launches,
+//!   the comparison point against Miriam's shard padding.
+//!
+//! [`run_gen`] executes one cell; [`run_gen_grid`] sweeps scenarios ×
+//! policies plus the solo-criticals / sequential / batched comparison
+//! rows and serializes `BENCH_gen.json` — canonical, host-timing-free,
+//! byte-deterministic per seed for any `--threads` value.
+//!
+//! ```
+//! use miriam::gpu::spec::GpuSpec;
+//! use miriam::server::gen::{run_gen, GenOpts};
+//! use miriam::workloads::generation;
+//!
+//! let sc = generation::gen_diff(2_000.0);
+//! let r = run_gen(&GpuSpec::rtx2060(), &sc, &GenOpts::default()).unwrap();
+//! assert_eq!(r.tokens, r.drawn_tokens); // token conservation
+//! assert_eq!(r.critical_evictions(), 0); // criticals never evicted
+//! ```
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::admission::{
+    AdmissionConfig, AdmissionController, AdmissionPolicy, Decision,
+};
+use crate::coordinator::driver::{initial_arrivals, ArrivalQueue};
+use crate::coordinator::stats::merged_quantile;
+use crate::gpu::kernel::Criticality;
+use crate::gpu::spec::GpuSpec;
+use crate::gpu::trace::Trace;
+use crate::runtime::json::Json;
+use crate::server::online::{
+    tenant_json_gen, validate_admission, DeviceCore, TenantOutcome,
+};
+use crate::workloads::generation::{
+    gen_model_by_name, request_seed, GenModelDesc, GenScenarioSpec,
+};
+use crate::workloads::mdtb::Workload;
+use crate::workloads::models::ModelRef;
+use crate::workloads::rng::Rng;
+
+/// Engine-request ids at or above this are batched decode groups, not
+/// individual generation requests (request `g` uses id `g + 1`).
+const BATCH_ID_BASE: u64 = 1 << 40;
+
+/// Largest decode micro-batch one combined launch carries.
+const MAX_BATCH: u32 = 8;
+
+/// Default decode micro-batch window (us) for the grid's continuous-
+/// batching comparison rows.
+pub const GEN_BATCH_WINDOW_US: f64 = 150.0;
+
+/// Configuration of one generation serving run.
+#[derive(Debug, Clone)]
+pub struct GenOpts {
+    /// Coordinator to serve through (any `scheduler_for` name).
+    pub scheduler: String,
+    /// Admission policy applied to best-effort arrivals (envelopes come
+    /// from [`GenScenarioSpec::admission_workload`], so deadline-
+    /// feasible admission binds on TTFT).
+    pub policy: AdmissionPolicy,
+    /// Policy tunables.
+    pub admission: AdmissionConfig,
+    /// Override the scenario's pinned seed (`None` keeps it).
+    pub seed: Option<u64>,
+    /// Enable the continuous-batching decode micro-batcher with this
+    /// flush window (us). `None` (the default) resubmits each decode
+    /// step immediately — Miriam's elastic per-request path.
+    pub batch_window_us: Option<f64>,
+}
+
+impl Default for GenOpts {
+    fn default() -> Self {
+        GenOpts {
+            scheduler: "miriam".into(),
+            policy: AdmissionPolicy::Open,
+            admission: AdmissionConfig::default(),
+            seed: None,
+            batch_window_us: None,
+        }
+    }
+}
+
+/// One generation request's live state (Prefill → Decode(k) → Done).
+struct GenReq {
+    src: usize,
+    crit: bool,
+    arrival_us: f64,
+    prompt: u32,
+    output_len: u32,
+    /// Output tokens emitted and kept so far (the KV cache additionally
+    /// holds the prompt).
+    tokens_done: u32,
+    /// Bytes currently reserved in the KV ledger (0 while parked).
+    kv_reserved: f64,
+    in_flight: bool,
+    pending_batch: bool,
+    parked: bool,
+    /// The in-flight phase was evicted mid-step: discard its output on
+    /// completion (a *preempted step*) and park.
+    evicted: bool,
+    /// Next submission must re-issue the evicted prefix.
+    needs_recompute: bool,
+    /// The in-flight phase is a recompute prefill (emits no token).
+    recomputing: bool,
+    deadline_missed: bool,
+    ttft_us: f64,
+    last_token_us: f64,
+}
+
+/// The decode micro-batcher: decode-ready requests wait up to
+/// `window_us`, then flush as per-(model, KV bucket) combined launches.
+struct Batcher {
+    window_us: f64,
+    pending: Vec<usize>,
+    flush_at: Option<f64>,
+}
+
+/// Outcome of one generation serving cell.
+#[derive(Debug, Clone)]
+pub struct GenReport {
+    /// Scenario name.
+    pub scenario: String,
+    /// Row kind in the grid: `policy`, `solo`, `sequential`, or
+    /// `batched`.
+    pub kind: String,
+    /// GPU preset name.
+    pub platform: String,
+    /// Coordinator the run served through.
+    pub scheduler: String,
+    /// Admission policy applied.
+    pub policy: AdmissionPolicy,
+    /// Seed the run actually used.
+    pub seed: u64,
+    /// Arrival-generation window (us).
+    pub duration_us: f64,
+    /// Decode micro-batch window (us; 0 = batching off).
+    pub batch_window_us: f64,
+    /// Device KV budget (bytes).
+    pub kv_budget_bytes: f64,
+    /// Peak KV bytes reserved at any instant (must never exceed the
+    /// budget).
+    pub kv_peak_bytes: f64,
+    /// Simulated span until the system drained (us).
+    pub span_us: f64,
+    /// Simulator events processed.
+    pub events: u64,
+    /// Output tokens emitted and kept across all tenants.
+    pub tokens: u64,
+    /// Sum of drawn output lengths over completed requests — token
+    /// conservation requires `tokens == drawn_tokens`.
+    pub drawn_tokens: u64,
+    /// KV evictions performed (best-effort victims only).
+    pub evictions: u64,
+    /// In-flight steps discarded by eviction (each re-ran after its
+    /// recompute).
+    pub preempted_steps: u64,
+    /// Prefix tokens re-issued by recompute prefills; must equal
+    /// [`GenReport::evicted_prefix_tokens`] (the recompute re-issues
+    /// exactly the evicted prefix).
+    pub recompute_tokens: u64,
+    /// Prefix tokens (prompt + kept output) held by requests at the
+    /// moment they were evicted.
+    pub evicted_prefix_tokens: u64,
+    /// Served requests whose recorded TTFT exceeded their end-to-end
+    /// latency — structurally impossible, recorded so the gate can
+    /// assert it stays 0.
+    pub ttft_violations: u64,
+    /// Peak best-effort queue depth inside the coordinator.
+    pub max_normal_queue: usize,
+    /// Critical arrivals whose TTFT deadline was infeasible by the solo
+    /// prefill envelope (admitted regardless).
+    pub critical_at_risk: u64,
+    /// Per-tenant outcomes, in source order.
+    pub tenants: Vec<TenantOutcome>,
+}
+
+impl GenReport {
+    /// Total arrivals seen.
+    pub fn offered(&self) -> u64 {
+        self.tenants.iter().map(|t| t.offered).sum()
+    }
+
+    /// Total arrivals admitted.
+    pub fn admitted(&self) -> u64 {
+        self.tenants.iter().map(|t| t.admitted).sum()
+    }
+
+    /// Total arrivals shed.
+    pub fn shed(&self) -> u64 {
+        self.tenants.iter().map(|t| t.shed).sum()
+    }
+
+    /// Total requests served to completion.
+    pub fn served(&self) -> u64 {
+        self.tenants.iter().map(|t| t.served).sum()
+    }
+
+    /// Shed count over critical tenants (always 0: critical is never
+    /// shed).
+    pub fn shed_critical(&self) -> u64 {
+        self.class_sum(Criticality::Critical, |t| t.shed)
+    }
+
+    /// Evictions suffered by critical tenants — the never-evict-
+    /// criticals invariant requires this to be 0.
+    pub fn critical_evictions(&self) -> u64 {
+        self.class_sum(Criticality::Critical, |t| t.evictions)
+    }
+
+    /// Total TTFT deadline misses.
+    pub fn ttft_misses(&self) -> u64 {
+        self.tenants.iter().map(|t| t.ttft_misses).sum()
+    }
+
+    /// Total per-token budget misses.
+    pub fn token_misses(&self) -> u64 {
+        self.tenants.iter().map(|t| t.token_misses).sum()
+    }
+
+    fn class_sum(&self, c: Criticality, f: impl Fn(&TenantOutcome) -> u64)
+                 -> u64 {
+        self.tenants
+            .iter()
+            .filter(|t| t.criticality == c)
+            .map(f)
+            .sum()
+    }
+
+    /// Critical-class TTFT quantile over all critical tenants (NaN when
+    /// nothing was served).
+    pub fn crit_ttft_quantile_us(&self, q: f64) -> f64 {
+        merged_quantile(
+            self.tenants
+                .iter()
+                .filter(|t| t.criticality == Criticality::Critical)
+                .map(|t| t.ttft_us.as_slice()),
+            q,
+        )
+    }
+
+    /// Critical-class TTFT p99 (us).
+    pub fn crit_ttft_p99_us(&self) -> f64 {
+        self.crit_ttft_quantile_us(0.99)
+    }
+
+    /// Inter-token-gap quantile over all tenants (NaN when no decode
+    /// token was emitted).
+    pub fn inter_token_quantile_us(&self, q: f64) -> f64 {
+        merged_quantile(
+            self.tenants.iter().map(|t| t.inter_token_us.as_slice()),
+            q,
+        )
+    }
+
+    /// Kept output tokens per second of simulated span.
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.span_us <= 0.0 {
+            return 0.0;
+        }
+        self.tokens as f64 / (self.span_us / 1e6)
+    }
+
+    /// This cell as a canonical-JSON value (one `cells[]` row of
+    /// `BENCH_gen.json`; non-finite quantiles serialize as `null`).
+    pub fn to_json_value(&self) -> Json {
+        let num = Json::Num;
+        let mut m = BTreeMap::new();
+        m.insert("scenario".into(), Json::Str(self.scenario.clone()));
+        m.insert("kind".into(), Json::Str(self.kind.clone()));
+        m.insert("policy".into(), Json::Str(self.policy.name().into()));
+        m.insert("scheduler".into(), Json::Str(self.scheduler.clone()));
+        m.insert("seed".into(), num(self.seed as f64));
+        m.insert("duration_us".into(), num(self.duration_us));
+        m.insert("batch_window_us".into(), num(self.batch_window_us));
+        m.insert("kv_budget_bytes".into(), num(self.kv_budget_bytes));
+        m.insert("kv_peak_bytes".into(), num(self.kv_peak_bytes));
+        m.insert("span_us".into(), num(self.span_us));
+        m.insert("events".into(), num(self.events as f64));
+        m.insert("offered".into(), num(self.offered() as f64));
+        m.insert("admitted".into(), num(self.admitted() as f64));
+        m.insert("shed".into(), num(self.shed() as f64));
+        m.insert("served".into(), num(self.served() as f64));
+        m.insert("shed_critical".into(), num(self.shed_critical() as f64));
+        m.insert("tokens".into(), num(self.tokens as f64));
+        m.insert("drawn_tokens".into(), num(self.drawn_tokens as f64));
+        m.insert("tokens_per_sec".into(), num(self.tokens_per_sec()));
+        m.insert("evictions".into(), num(self.evictions as f64));
+        m.insert("critical_evictions".into(),
+                 num(self.critical_evictions() as f64));
+        m.insert("preempted_steps".into(), num(self.preempted_steps as f64));
+        m.insert("recompute_tokens".into(), num(self.recompute_tokens as f64));
+        m.insert("evicted_prefix_tokens".into(),
+                 num(self.evicted_prefix_tokens as f64));
+        m.insert("ttft_violations".into(), num(self.ttft_violations as f64));
+        m.insert("ttft_misses".into(), num(self.ttft_misses() as f64));
+        m.insert("token_misses".into(), num(self.token_misses() as f64));
+        m.insert("crit_ttft_p50_us".into(),
+                 num(self.crit_ttft_quantile_us(0.5)));
+        m.insert("crit_ttft_p99_us".into(), num(self.crit_ttft_p99_us()));
+        m.insert("inter_token_p99_us".into(),
+                 num(self.inter_token_quantile_us(0.99)));
+        m.insert("max_normal_queue".into(), num(self.max_normal_queue as f64));
+        m.insert("critical_at_risk".into(), num(self.critical_at_risk as f64));
+        m.insert(
+            "tenants".into(),
+            Json::Arr(self.tenants.iter().map(tenant_json_gen).collect()),
+        );
+        Json::Obj(m)
+    }
+}
+
+/// Graph-cache key: (model index, prefill?, bucketed length, batch).
+type GraphKey = (usize, bool, u32, u32);
+
+/// The live state of one generation serving run.
+struct GenSim<'a> {
+    sc: &'a GenScenarioSpec,
+    base_wl: Workload,
+    seed: u64,
+    core: DeviceCore,
+    ctrl: AdmissionController,
+    arrivals: ArrivalQueue,
+    /// Distinct generation models of the scenario.
+    models: Vec<GenModelDesc>,
+    /// Source index → index into `models`.
+    src_model: Vec<usize>,
+    graphs: BTreeMap<GraphKey, (ModelRef, Arc<Vec<u32>>)>,
+    reqs: Vec<GenReq>,
+    /// Per-source admitted-request ordinals (output-draw seeding).
+    ordinals: Vec<u64>,
+    /// Requests currently holding KV reservations, by request index.
+    resident: BTreeSet<usize>,
+    /// Requests waiting for KV space, ascending request index.
+    parked: Vec<usize>,
+    kv_used: f64,
+    kv_peak: f64,
+    tenants: Vec<TenantOutcome>,
+    batcher: Option<Batcher>,
+    batches: HashMap<u64, Vec<usize>>,
+    next_batch_id: u64,
+    tokens: u64,
+    drawn_tokens: u64,
+    evictions: u64,
+    preempted_steps: u64,
+    recompute_tokens: u64,
+    evicted_prefix_tokens: u64,
+    ttft_violations: u64,
+}
+
+impl<'a> GenSim<'a> {
+    fn new(gpu: &GpuSpec, sc: &'a GenScenarioSpec, opts: &GenOpts,
+           trace: bool) -> Result<Self, String> {
+        validate_admission(&opts.admission)?;
+        sc.validate()?;
+        if let Some(w) = opts.batch_window_us {
+            if !(w > 0.0) || !w.is_finite() {
+                return Err("batch_window_us must be positive and finite"
+                    .into());
+            }
+        }
+        let seed = opts.seed.unwrap_or(sc.seed);
+        let mut base_wl = sc.base_workload();
+        base_wl.seed = seed;
+        let core = DeviceCore::new_traced(gpu, &base_wl, &opts.scheduler,
+                                          trace)?;
+        let mut adm_wl = sc.admission_workload();
+        adm_wl.seed = seed;
+        let ctrl = AdmissionController::new(
+            opts.policy,
+            opts.admission.clone(),
+            &adm_wl,
+            core.spec(),
+            core.params(),
+        );
+        let mut rng = Rng::new(seed);
+        let arrivals = initial_arrivals(&base_wl, &mut rng);
+
+        let mut models: Vec<GenModelDesc> = Vec::new();
+        let mut src_model = Vec::with_capacity(sc.sources.len());
+        for s in &sc.sources {
+            let idx = match models.iter().position(|m| m.name == s.model) {
+                Some(i) => i,
+                None => {
+                    models.push(gen_model_by_name(&s.model).ok_or_else(
+                        || format!("unknown gen model {}", s.model),
+                    )?);
+                    models.len() - 1
+                }
+            };
+            src_model.push(idx);
+        }
+
+        let tenants = (0..sc.sources.len())
+            .map(|i| {
+                let s = &sc.sources[i];
+                TenantOutcome {
+                    source: i,
+                    label: sc.tenant_label(i),
+                    model: s.model.clone(),
+                    criticality: s.criticality,
+                    offered: 0,
+                    admitted: 0,
+                    shed: 0,
+                    served: 0,
+                    deadline_misses: 0,
+                    requeues: 0,
+                    lost: 0,
+                    retries: 0,
+                    hedges: 0,
+                    hedge_wins: 0,
+                    cancelled: 0,
+                    latencies_us: Vec::new(),
+                    tokens: 0,
+                    ttft_misses: 0,
+                    token_misses: 0,
+                    evictions: 0,
+                    preempted_steps: 0,
+                    ttft_us: Vec::new(),
+                    inter_token_us: Vec::new(),
+                }
+            })
+            .collect();
+
+        let mut sim = GenSim {
+            sc,
+            base_wl,
+            seed,
+            core,
+            ctrl,
+            arrivals,
+            models,
+            src_model,
+            graphs: BTreeMap::new(),
+            reqs: Vec::new(),
+            ordinals: vec![0; sc.sources.len()],
+            resident: BTreeSet::new(),
+            parked: Vec::new(),
+            kv_used: 0.0,
+            kv_peak: 0.0,
+            tenants,
+            batcher: opts.batch_window_us.map(|w| Batcher {
+                window_us: w,
+                pending: Vec::new(),
+                flush_at: None,
+            }),
+            batches: HashMap::new(),
+            next_batch_id: BATCH_ID_BASE,
+            tokens: 0,
+            drawn_tokens: 0,
+            evictions: 0,
+            preempted_steps: 0,
+            recompute_tokens: 0,
+            evicted_prefix_tokens: 0,
+            ttft_violations: 0,
+        };
+        // Seed the prefill-graph cache with the base workload's shared
+        // model Arcs + the core's per-source interned ids, so a
+        // recompute that lands on the original prompt bucket reuses the
+        // exact graph the first prefill ran.
+        for (src, s) in sim.sc.sources.iter().enumerate() {
+            let mi = sim.src_model[src];
+            let bucket = sim.models[mi].prompt_bucketed(s.prompt_len);
+            let key = (mi, true, bucket, 1);
+            if !sim.graphs.contains_key(&key) {
+                let model = sim.base_wl.sources[src].model.clone();
+                let ids = sim.core.source_name_ids(src);
+                sim.graphs.insert(key, (model, ids));
+            }
+        }
+        Ok(sim)
+    }
+
+    fn eng_id(g: usize) -> u64 {
+        debug_assert!((g as u64) < BATCH_ID_BASE - 1);
+        g as u64 + 1
+    }
+
+    fn footprint(&self, g: usize) -> f64 {
+        let r = &self.reqs[g];
+        self.models[self.src_model[r.src]]
+            .kv_bytes(r.prompt + r.output_len)
+    }
+
+    /// The (graph, interned ids) for a phase, built and interned on
+    /// first use; hot decode steps are pure cache hits (zero alloc).
+    fn graph_for(&mut self, mi: usize, prefill: bool, len: u32, batch: u32)
+                 -> (ModelRef, Arc<Vec<u32>>) {
+        let m = &self.models[mi];
+        let bucket = if prefill {
+            m.prompt_bucketed(len)
+        } else {
+            m.kv_bucketed(len)
+        };
+        let key = (mi, prefill, bucket, batch);
+        if let Some(hit) = self.graphs.get(&key) {
+            return hit.clone();
+        }
+        let desc = if prefill {
+            m.prefill_graph(bucket)
+        } else {
+            m.decode_graph_batched(bucket, batch)
+        };
+        let ids = self.core.intern_model(&desc);
+        let entry = (Arc::new(desc), ids);
+        self.graphs.insert(key, entry.clone());
+        entry
+    }
+
+    /// Reserve `g`'s full KV footprint. Criticals under pressure evict
+    /// resident best-effort requests (largest reservation first, ties
+    /// to the oldest; never criticals, never themselves) until the
+    /// reservation fits or no victim remains.
+    fn try_reserve(&mut self, g: usize, _now: f64) -> bool {
+        let need = self.footprint(g);
+        let budget = self.sc.kv_budget_bytes;
+        if self.kv_used + need > budget && self.reqs[g].crit {
+            while self.kv_used + need > budget {
+                let victim = self
+                    .resident
+                    .iter()
+                    .copied()
+                    .filter(|&v| !self.reqs[v].crit)
+                    .max_by(|&a, &b| {
+                        self.reqs[a]
+                            .kv_reserved
+                            .total_cmp(&self.reqs[b].kv_reserved)
+                            .then(b.cmp(&a)) // ties: oldest (smallest id)
+                    });
+                match victim {
+                    Some(v) => self.evict(v),
+                    None => break,
+                }
+            }
+        }
+        if self.kv_used + need <= budget {
+            self.kv_used += need;
+            self.kv_peak = self.kv_peak.max(self.kv_used);
+            debug_assert!(self.kv_used <= budget + 1e-6);
+            self.reqs[g].kv_reserved = need;
+            self.resident.insert(g);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Evict resident best-effort request `v`: release its reservation
+    /// and mark it for recompute. If a step is in flight its output is
+    /// discarded on completion (a preempted step); a batch-pending
+    /// victim leaves the pending queue immediately.
+    fn evict(&mut self, v: usize) {
+        debug_assert!(!self.reqs[v].crit, "evicted a critical request");
+        let (src, reserved, prefix) = {
+            let r = &mut self.reqs[v];
+            let reserved = r.kv_reserved;
+            r.kv_reserved = 0.0;
+            r.needs_recompute = true;
+            (r.src, reserved, (r.prompt + r.tokens_done) as u64)
+        };
+        self.kv_used -= reserved;
+        self.evicted_prefix_tokens += prefix;
+        self.evictions += 1;
+        self.tenants[src].evictions += 1;
+        self.resident.remove(&v);
+        if self.reqs[v].pending_batch {
+            self.reqs[v].pending_batch = false;
+            if let Some(b) = self.batcher.as_mut() {
+                b.pending.retain(|&p| p != v);
+            }
+            self.park(v);
+        } else if self.reqs[v].in_flight {
+            self.reqs[v].evicted = true; // parks at completion
+        } else {
+            // Resident but neither queued nor in flight cannot happen:
+            // every resident request always has exactly one phase
+            // pending or in flight.
+            unreachable!("evicted request {v} has no pending phase");
+        }
+    }
+
+    fn park(&mut self, g: usize) {
+        self.reqs[g].parked = true;
+        match self.parked.binary_search(&g) {
+            Ok(_) => {}
+            Err(pos) => self.parked.insert(pos, g),
+        }
+    }
+
+    /// After any KV release: admit parked requests (ascending request
+    /// id; parked criticals may evict) and submit their next phase.
+    fn unpark_pass(&mut self, now: f64) {
+        let mut i = 0;
+        while i < self.parked.len() {
+            let g = self.parked[i];
+            if self.try_reserve(g, now) {
+                self.parked.remove(i);
+                self.reqs[g].parked = false;
+                self.submit_restart(g, now);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Submit the (re)start phase of a freshly unparked request: the
+    /// initial prefill if it never emitted a token, otherwise the
+    /// recompute prefill over exactly its evicted prefix.
+    fn submit_restart(&mut self, g: usize, now: f64) {
+        let (src, crit, prompt, tokens_done, needs_recompute) = {
+            let r = &self.reqs[g];
+            (r.src, r.crit, r.prompt, r.tokens_done, r.needs_recompute)
+        };
+        if needs_recompute {
+            self.reqs[g].needs_recompute = false;
+            self.recompute_tokens += (prompt + tokens_done) as u64;
+        }
+        if tokens_done == 0 {
+            // Initial prefill (first attempt or post-eviction re-run):
+            // the exact per-source path `DeviceCore::submit` uses.
+            self.core.submit(&self.base_wl, src, now, Self::eng_id(g));
+            self.reqs[g].in_flight = true;
+        } else {
+            let mi = self.src_model[src];
+            self.reqs[g].recomputing = true;
+            let (model, ids) =
+                self.graph_for(mi, true, prompt + tokens_done, 1);
+            self.core.submit_model(
+                &model,
+                &ids,
+                src,
+                if crit { Criticality::Critical } else { Criticality::Normal },
+                now,
+                Self::eng_id(g),
+            );
+            self.reqs[g].in_flight = true;
+        }
+    }
+
+    /// One arrival from `src` at time `t`: admission, output-length
+    /// draw, KV reservation (or parking), initial prefill submit.
+    fn arrival(&mut self, src: usize, t: f64) {
+        self.tenants[src].offered += 1;
+        match self.ctrl.decide(src, t) {
+            Decision::Admitted => {}
+            Decision::Shed(_) => {
+                // Gen sources are open-loop (validated), so a shed
+                // arrival is simply dropped — no backoff retry.
+                self.tenants[src].shed += 1;
+                return;
+            }
+        }
+        self.tenants[src].admitted += 1;
+        let ord = self.ordinals[src];
+        self.ordinals[src] += 1;
+        let spec = &self.sc.sources[src];
+        let output_len =
+            spec.draw_output_len(request_seed(self.seed, src, ord));
+        let g = self.reqs.len();
+        self.reqs.push(GenReq {
+            src,
+            crit: spec.criticality == Criticality::Critical,
+            arrival_us: t,
+            prompt: spec.prompt_len,
+            output_len,
+            tokens_done: 0,
+            kv_reserved: 0.0,
+            in_flight: false,
+            pending_batch: false,
+            parked: false,
+            evicted: false,
+            needs_recompute: false,
+            recomputing: false,
+            deadline_missed: false,
+            ttft_us: f64::NAN,
+            last_token_us: t,
+        });
+        if self.try_reserve(g, t) {
+            self.core.submit(&self.base_wl, src, t, Self::eng_id(g));
+            self.reqs[g].in_flight = true;
+        } else {
+            self.park(g);
+        }
+    }
+
+    /// A phase of request `g` completed at `now`: emit/discard its
+    /// token and drive the state machine to the next phase.
+    fn on_phase_done(&mut self, g: usize, now: f64) {
+        self.reqs[g].in_flight = false;
+        if self.reqs[g].evicted {
+            // The step ran against an evicted cache: discard its
+            // output; the recompute (queued behind the parking) covers
+            // exactly the kept prefix.
+            self.reqs[g].evicted = false;
+            self.preempted_steps += 1;
+            self.tenants[self.reqs[g].src].preempted_steps += 1;
+            self.park(g);
+            return;
+        }
+        if self.reqs[g].recomputing {
+            self.reqs[g].recomputing = false;
+            self.submit_decode_or_enqueue(g, now);
+            return;
+        }
+        let first = self.reqs[g].tokens_done == 0;
+        self.reqs[g].tokens_done += 1;
+        self.emit_token(g, now, first);
+        if self.reqs[g].tokens_done == self.reqs[g].output_len {
+            self.complete(g, now);
+        } else {
+            self.submit_decode_or_enqueue(g, now);
+        }
+    }
+
+    fn emit_token(&mut self, g: usize, now: f64, first: bool) {
+        let r = &mut self.reqs[g];
+        let t = &mut self.tenants[r.src];
+        let spec = &self.sc.sources[r.src];
+        t.tokens += 1;
+        self.tokens += 1;
+        if first {
+            r.ttft_us = now - r.arrival_us;
+            t.ttft_us.push(r.ttft_us);
+            if spec.ttft_deadline_us.is_some_and(|d| r.ttft_us > d) {
+                t.ttft_misses += 1;
+                r.deadline_missed = true;
+            }
+        } else {
+            let gap = now - r.last_token_us;
+            t.inter_token_us.push(gap);
+            if spec.per_token_us.is_some_and(|d| gap > d) {
+                t.token_misses += 1;
+                r.deadline_missed = true;
+            }
+        }
+        r.last_token_us = now;
+    }
+
+    fn complete(&mut self, g: usize, now: f64) {
+        let (src, lat, ttft, missed, output_len, reserved) = {
+            let r = &self.reqs[g];
+            (r.src, now - r.arrival_us, r.ttft_us, r.deadline_missed,
+             r.output_len, r.kv_reserved)
+        };
+        let t = &mut self.tenants[src];
+        t.served += 1;
+        t.latencies_us.push(lat);
+        if missed {
+            t.deadline_misses += 1;
+        }
+        if ttft > lat + 1e-9 {
+            self.ttft_violations += 1;
+        }
+        self.drawn_tokens += output_len as u64;
+        self.ctrl.on_served(src);
+        self.kv_used -= reserved;
+        self.reqs[g].kv_reserved = 0.0;
+        self.resident.remove(&g);
+        self.unpark_pass(now);
+    }
+
+    fn submit_decode_or_enqueue(&mut self, g: usize, now: f64) {
+        if let Some(b) = self.batcher.as_mut() {
+            self.reqs[g].pending_batch = true;
+            if b.pending.is_empty() {
+                b.flush_at = Some(now + b.window_us);
+            }
+            b.pending.push(g);
+        } else {
+            self.submit_decode(g, now, 1, None);
+        }
+    }
+
+    /// Submit one decode step for `g` (`batch == 1`), or the combined
+    /// step for a whole flush chunk (`batch > 1`, `rep` given).
+    fn submit_decode(&mut self, g: usize, now: f64, batch: u32,
+                     rep: Option<u64>) {
+        let (src, crit, kv_len) = {
+            let r = &self.reqs[g];
+            (r.src, r.crit, r.prompt + r.tokens_done)
+        };
+        let mi = self.src_model[src];
+        let (model, ids) = self.graph_for(mi, false, kv_len, batch);
+        let id = rep.unwrap_or_else(|| Self::eng_id(g));
+        self.core.submit_model(
+            &model,
+            &ids,
+            src,
+            if crit { Criticality::Critical } else { Criticality::Normal },
+            now,
+            id,
+        );
+    }
+
+    /// The micro-batcher's grouping key for request `g`: (model index,
+    /// current KV bucket).
+    fn batch_key(&self, g: usize) -> (usize, u32) {
+        let r = &self.reqs[g];
+        let mi = self.src_model[r.src];
+        (mi, self.models[mi].kv_bucketed(r.prompt + r.tokens_done))
+    }
+
+    /// Flush the decode micro-batcher: group pending requests by
+    /// (model, KV bucket), submit chunks of up to [`MAX_BATCH`] as one
+    /// combined launch each (singletons go the plain path). A chunk's
+    /// class is critical iff any member is.
+    fn flush(&mut self, now: f64) {
+        let b = match self.batcher.as_mut() {
+            Some(b) => b,
+            None => return,
+        };
+        b.flush_at = None;
+        let mut pending = std::mem::take(&mut b.pending);
+        pending.sort_unstable_by_key(|&g| {
+            let (mi, bucket) = self.batch_key(g);
+            (mi, bucket, g)
+        });
+        let mut i = 0;
+        while i < pending.len() {
+            let (mi, bucket) = self.batch_key(pending[i]);
+            let mut j = i + 1;
+            while j < pending.len()
+                && j - i < MAX_BATCH as usize
+                && self.batch_key(pending[j]) == (mi, bucket)
+            {
+                j += 1;
+            }
+            let chunk: Vec<usize> = pending[i..j].to_vec();
+            for &g in &chunk {
+                self.reqs[g].pending_batch = false;
+                self.reqs[g].in_flight = true;
+            }
+            if chunk.len() == 1 {
+                self.submit_decode(chunk[0], now, 1, None);
+            } else {
+                let batch = chunk.len() as u32;
+                let crit = chunk.iter().any(|&g| self.reqs[g].crit);
+                let src = self.reqs[chunk[0]].src;
+                let (model, ids) = self.graph_for(mi, false, bucket, batch);
+                let rep = self.next_batch_id;
+                self.next_batch_id += 1;
+                self.core.submit_model(
+                    &model,
+                    &ids,
+                    src,
+                    if crit {
+                        Criticality::Critical
+                    } else {
+                        Criticality::Normal
+                    },
+                    now,
+                    rep,
+                );
+                self.batches.insert(rep, chunk);
+            }
+            i = j;
+        }
+    }
+
+    /// Drive the run to completion (arrivals exhausted, engine idle,
+    /// batcher empty, nothing parked).
+    fn run(&mut self) -> Result<(), String> {
+        let mut done_buf: Vec<(u64, f64)> = Vec::new();
+        loop {
+            let t_arr = self.arrivals.peek().map(|(t, _)| t);
+            let t_ev = self.core.next_event_time();
+            let t_fl = self.batcher.as_ref().and_then(|b| b.flush_at);
+            if t_arr.is_none() && t_ev.is_none() && t_fl.is_none() {
+                if !self.parked.is_empty() {
+                    return Err(format!(
+                        "{}: generation loop stalled with {} parked \
+                         requests",
+                        self.sc.name,
+                        self.parked.len()
+                    ));
+                }
+                break;
+            }
+            if let Some(tf) = t_fl {
+                if t_arr.map_or(true, |ta| tf < ta)
+                    && t_ev.map_or(true, |te| tf < te)
+                {
+                    self.core.advance_to(tf);
+                    self.flush(tf);
+                    continue;
+                }
+            }
+            match (t_arr, t_ev) {
+                (Some(ta), te) if te.map_or(true, |te| ta <= te) => {
+                    self.core.advance_to(ta);
+                    while let Some((t, src)) = self.arrivals.peek() {
+                        if t > ta {
+                            break;
+                        }
+                        self.arrivals.pop();
+                        self.arrival(src, t);
+                    }
+                    self.core.sample_queue_depth();
+                }
+                (_, Some(_)) => {
+                    done_buf.clear();
+                    self.core
+                        .step(|id, _src, _arr, now| done_buf.push((id, now)));
+                    for k in 0..done_buf.len() {
+                        let (id, now) = done_buf[k];
+                        if id >= BATCH_ID_BASE {
+                            let members = self
+                                .batches
+                                .remove(&id)
+                                .expect("unknown batch completion");
+                            for g in members {
+                                self.on_phase_done(g, now);
+                            }
+                        } else {
+                            self.on_phase_done((id - 1) as usize, now);
+                        }
+                    }
+                }
+                _ => unreachable!(
+                    "gen loop: impossible arrival/event state"
+                ),
+            }
+        }
+        Ok(())
+    }
+
+    fn into_report(mut self, gpu: &GpuSpec, opts: &GenOpts)
+                   -> (GenReport, Option<Trace>) {
+        let trace = self.core.take_trace();
+        let max_normal_queue = self.core.max_normal_queue();
+        let (span_us, metrics) = self.core.finish();
+        let report = GenReport {
+            scenario: self.sc.name.clone(),
+            kind: "policy".into(),
+            platform: gpu.name.clone(),
+            scheduler: opts.scheduler.clone(),
+            policy: opts.policy,
+            seed: self.seed,
+            duration_us: self.sc.duration_us,
+            batch_window_us: opts.batch_window_us.unwrap_or(0.0),
+            kv_budget_bytes: self.sc.kv_budget_bytes,
+            kv_peak_bytes: self.kv_peak,
+            span_us,
+            events: metrics.events,
+            tokens: self.tokens,
+            drawn_tokens: self.drawn_tokens,
+            evictions: self.evictions,
+            preempted_steps: self.preempted_steps,
+            recompute_tokens: self.recompute_tokens,
+            evicted_prefix_tokens: self.evicted_prefix_tokens,
+            ttft_violations: self.ttft_violations,
+            max_normal_queue,
+            critical_at_risk: self.ctrl.critical_at_risk(),
+            tenants: std::mem::take(&mut self.tenants),
+        };
+        (report, trace)
+    }
+}
+
+fn run_gen_inner(gpu: &GpuSpec, sc: &GenScenarioSpec, opts: &GenOpts,
+                 trace: bool) -> Result<(GenReport, Option<Trace>), String> {
+    let mut sim = GenSim::new(gpu, sc, opts, trace)?;
+    sim.run()?;
+    Ok(sim.into_report(gpu, opts))
+}
+
+/// Serve one generation scenario through one configuration until the
+/// system drains. Deterministic for a given (scenario, seed, policy,
+/// scheduler, batch window): the loop advances in simulated time only
+/// and no host timing enters the report.
+pub fn run_gen(gpu: &GpuSpec, sc: &GenScenarioSpec, opts: &GenOpts)
+               -> Result<GenReport, String> {
+    run_gen_inner(gpu, sc, opts, false).map(|(r, _)| r)
+}
+
+/// [`run_gen`] with the engine trace recorder attached — the
+/// golden-trace path.
+pub fn run_gen_traced(gpu: &GpuSpec, sc: &GenScenarioSpec, opts: &GenOpts)
+                      -> Result<(GenReport, Trace), String> {
+    let (report, trace) = run_gen_inner(gpu, sc, opts, true)?;
+    Ok((report, trace.ok_or("trace recorder returned nothing")?))
+}
+
+/// A generation grid: scenarios × admission policies, plus the
+/// solo-criticals / sequential / continuous-batching comparison rows
+/// per scenario (the `BENCH_gen.json` document).
+#[derive(Debug, Clone)]
+pub struct GenGridReport {
+    /// GPU preset name.
+    pub platform: String,
+    /// Coordinator the policy cells served through.
+    pub scheduler: String,
+    /// Arrival-generation window per cell (us).
+    pub duration_us: f64,
+    /// Policy names, in run order.
+    pub policies: Vec<String>,
+    /// Scenario names, in run order.
+    pub scenarios: Vec<String>,
+    /// Cells in deterministic grid order: scenario-major — each
+    /// scenario's policy cells (kind `policy`), then its `solo`,
+    /// `sequential`, and `batched` comparison rows.
+    pub cells: Vec<GenReport>,
+}
+
+impl GenGridReport {
+    /// The first cell matching (scenario, kind[, policy]), if any.
+    pub fn cell(&self, scenario: &str, kind: &str,
+                policy: Option<AdmissionPolicy>) -> Option<&GenReport> {
+        self.cells.iter().find(|c| {
+            c.scenario == scenario
+                && c.kind == kind
+                && policy.map_or(true, |p| c.policy == p)
+        })
+    }
+
+    /// Per-scenario comparison rows derived from the cells: critical
+    /// TTFT under deadline-feasible admission vs the solo run, and
+    /// tokens/sec + inter-token p99 across miriam / sequential /
+    /// continuous batching.
+    fn comparisons(&self) -> Vec<Json> {
+        let num = Json::Num;
+        self.scenarios
+            .iter()
+            .filter_map(|sc| {
+                let open = self.cell(sc, "policy",
+                                     Some(AdmissionPolicy::Open))?;
+                let df = self.cell(sc, "policy",
+                                   Some(AdmissionPolicy::DeadlineFeasible));
+                let solo = self.cell(&format!("{sc}-solo"), "solo", None)?;
+                let seq = self.cell(sc, "sequential", None)?;
+                let bat = self.cell(sc, "batched", None)?;
+                let mixed_ttft = df.unwrap_or(open).crit_ttft_p99_us();
+                let solo_ttft = solo.crit_ttft_p99_us();
+                let mut m = BTreeMap::new();
+                m.insert("scenario".into(), Json::Str(sc.clone()));
+                m.insert("crit_ttft_p99_us".into(), num(mixed_ttft));
+                m.insert("solo_crit_ttft_p99_us".into(), num(solo_ttft));
+                m.insert("ttft_ratio".into(), num(mixed_ttft / solo_ttft));
+                m.insert("miriam_tokens_per_sec".into(),
+                         num(open.tokens_per_sec()));
+                m.insert("sequential_tokens_per_sec".into(),
+                         num(seq.tokens_per_sec()));
+                m.insert("batched_tokens_per_sec".into(),
+                         num(bat.tokens_per_sec()));
+                m.insert("miriam_inter_token_p99_us".into(),
+                         num(open.inter_token_quantile_us(0.99)));
+                m.insert("batched_inter_token_p99_us".into(),
+                         num(bat.inter_token_quantile_us(0.99)));
+                Some(Json::Obj(m))
+            })
+            .collect()
+    }
+
+    /// The canonical `BENCH_gen.json` document: sorted keys, no
+    /// whitespace, no host-timing fields — byte-deterministic per seed
+    /// for any thread count (schema in EXPERIMENTS.md §Generation).
+    pub fn to_json(&self) -> String {
+        let mut obj = BTreeMap::new();
+        obj.insert("bench".into(), Json::Str("gen".into()));
+        obj.insert("platform".into(), Json::Str(self.platform.clone()));
+        obj.insert("scheduler".into(), Json::Str(self.scheduler.clone()));
+        obj.insert("duration_us".into(), Json::Num(self.duration_us));
+        obj.insert(
+            "policies".into(),
+            Json::Arr(self.policies.iter().cloned().map(Json::Str).collect()),
+        );
+        obj.insert(
+            "scenarios".into(),
+            Json::Arr(self.scenarios.iter().cloned().map(Json::Str).collect()),
+        );
+        obj.insert(
+            "cells".into(),
+            Json::Arr(self.cells.iter().map(|c| c.to_json_value()).collect()),
+        );
+        obj.insert("comparisons".into(), Json::Arr(self.comparisons()));
+        obj.insert("version".into(), Json::Num(1.0));
+        Json::Obj(obj).to_canonical_string()
+    }
+}
+
+/// Run the generation grid: for every scenario, every admission policy
+/// (kind `policy`, `base` scheduler, no batching) plus the three
+/// comparison rows — `solo` (criticals only, open admission),
+/// `sequential` (the no-elasticity baseline scheduler), and `batched`
+/// (continuous batching at [`GEN_BATCH_WINDOW_US`], or
+/// `base.batch_window_us` when set). Cells are independent and
+/// deterministic, so `threads > 1` changes wall-clock only — the
+/// report is byte-identical for any thread count.
+pub fn run_gen_grid(gpu: &GpuSpec, scenarios: &[GenScenarioSpec],
+                    policies: &[AdmissionPolicy], base: &GenOpts,
+                    threads: usize) -> Result<GenGridReport, String> {
+    if scenarios.is_empty() {
+        return Err("gen grid: no scenarios".into());
+    }
+    if policies.is_empty() {
+        return Err("gen grid: no policies".into());
+    }
+    let window = base.batch_window_us.unwrap_or(GEN_BATCH_WINDOW_US);
+    let mut jobs: Vec<(GenScenarioSpec, GenOpts, &'static str)> = Vec::new();
+    for sc in scenarios {
+        for &policy in policies {
+            let opts = GenOpts { policy, batch_window_us: None,
+                                 ..base.clone() };
+            jobs.push((sc.clone(), opts, "policy"));
+        }
+        jobs.push((
+            sc.solo_criticals(),
+            GenOpts { policy: AdmissionPolicy::Open, batch_window_us: None,
+                      ..base.clone() },
+            "solo",
+        ));
+        jobs.push((
+            sc.clone(),
+            GenOpts {
+                scheduler: "sequential".into(),
+                policy: AdmissionPolicy::Open,
+                batch_window_us: None,
+                ..base.clone()
+            },
+            "sequential",
+        ));
+        jobs.push((
+            sc.clone(),
+            GenOpts {
+                policy: AdmissionPolicy::Open,
+                batch_window_us: Some(window),
+                ..base.clone()
+            },
+            "batched",
+        ));
+    }
+
+    let slots: Vec<Mutex<Option<Result<GenReport, String>>>> =
+        jobs.iter().map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let workers = threads.max(1).min(jobs.len());
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= jobs.len() {
+                    break;
+                }
+                let (sc, opts, kind) = &jobs[i];
+                let res = run_gen(gpu, sc, opts).map(|mut r| {
+                    r.kind = (*kind).into();
+                    r
+                });
+                *slots[i].lock().expect("gen grid slot poisoned") = Some(res);
+            });
+        }
+    });
+
+    let mut cells = Vec::with_capacity(jobs.len());
+    for slot in slots {
+        let cell = slot
+            .into_inner()
+            .expect("gen grid slot poisoned")
+            .ok_or("gen grid: job never ran")??;
+        cells.push(cell);
+    }
+    Ok(GenGridReport {
+        platform: gpu.name.clone(),
+        scheduler: base.scheduler.clone(),
+        duration_us: scenarios[0].duration_us,
+        policies: policies.iter().map(|p| p.name().to_string()).collect(),
+        scenarios: scenarios.iter().map(|s| s.name.clone()).collect(),
+        cells,
+    })
+}
+
+/// Record the pinned generation golden cells
+/// ([`crate::workloads::generation::GEN_GOLDEN_CELLS`]) as canonical
+/// traces under `dir` (`rust/tests/golden/gen/`), at the same pinned
+/// duration/platform as the main golden set. Returns (path, events)
+/// per cell.
+pub fn record_gen_golden_traces(
+    dir: &std::path::Path,
+) -> std::io::Result<Vec<(std::path::PathBuf, usize)>> {
+    use crate::workloads::generation::GEN_GOLDEN_CELLS;
+    use crate::workloads::scenario::{
+        golden_file_name, GOLDEN_DURATION_US, GOLDEN_PLATFORM,
+    };
+    std::fs::create_dir_all(dir)?;
+    let spec = GpuSpec::by_name(GOLDEN_PLATFORM)
+        .expect("golden platform preset exists");
+    let mut out = Vec::new();
+    for (sc_name, sched) in GEN_GOLDEN_CELLS {
+        let sc = crate::workloads::generation::gen_by_name(
+            sc_name,
+            GOLDEN_DURATION_US,
+        )
+        .expect("gen golden cell names a known scenario");
+        let opts = GenOpts { scheduler: sched.into(), ..GenOpts::default() };
+        let (_, trace) = run_gen_traced(&spec, &sc, &opts)
+            .map_err(std::io::Error::other)?;
+        let path = dir.join(golden_file_name(sc_name, sched));
+        std::fs::write(&path, trace.to_canonical_json())?;
+        out.push((path, trace.len()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::generation::{gen_diff, gen_family};
+
+    fn gpu() -> GpuSpec {
+        GpuSpec::rtx2060()
+    }
+
+    #[test]
+    fn gen_run_conserves_tokens_and_requests() {
+        let sc = &gen_family(20_000.0)[0];
+        let r = run_gen(&gpu(), sc, &GenOpts::default()).unwrap();
+        assert!(r.offered() > 0, "no arrivals in window");
+        assert_eq!(r.offered(), r.admitted() + r.shed());
+        assert_eq!(r.admitted(), r.served(), "admitted requests must drain");
+        assert_eq!(r.tokens, r.drawn_tokens, "token conservation");
+        assert_eq!(r.ttft_violations, 0);
+        assert_eq!(r.critical_evictions(), 0);
+        assert!(r.kv_peak_bytes <= r.kv_budget_bytes + 1e-6);
+        // Every served request produced a TTFT sample and a latency.
+        for t in &r.tenants {
+            assert_eq!(t.ttft_us.len() as u64, t.served, "{}", t.label);
+            assert_eq!(t.latencies_us.len() as u64, t.served, "{}", t.label);
+        }
+    }
+
+    #[test]
+    fn gen_pressure_evicts_normals_and_recompute_matches_prefix() {
+        let sc = &gen_family(40_000.0)[1]; // gen-pressure
+        let r = run_gen(&gpu(), sc, &GenOpts::default()).unwrap();
+        assert!(r.evictions > 0, "pressure scenario produced no evictions");
+        assert_eq!(r.recompute_tokens, r.evicted_prefix_tokens,
+                   "recompute must re-issue exactly the evicted prefix");
+        assert_eq!(r.critical_evictions(), 0);
+        assert_eq!(r.tokens, r.drawn_tokens);
+    }
+
+    #[test]
+    fn gen_run_is_deterministic_per_seed() {
+        let sc = &gen_family(15_000.0)[0];
+        let a = run_gen(&gpu(), sc, &GenOpts::default()).unwrap();
+        let b = run_gen(&gpu(), sc, &GenOpts::default()).unwrap();
+        assert_eq!(a.to_json_value().to_canonical_string(),
+                   b.to_json_value().to_canonical_string());
+        let c = run_gen(&gpu(), sc,
+                        &GenOpts { seed: Some(99), ..GenOpts::default() })
+            .unwrap();
+        assert_eq!(c.seed, 99);
+    }
+
+    #[test]
+    fn batched_mode_batches_and_still_conserves() {
+        let sc = &gen_family(20_000.0)[0];
+        let opts = GenOpts {
+            batch_window_us: Some(GEN_BATCH_WINDOW_US),
+            ..GenOpts::default()
+        };
+        let r = run_gen(&gpu(), sc, &opts).unwrap();
+        assert_eq!(r.tokens, r.drawn_tokens);
+        assert_eq!(r.admitted(), r.served());
+        assert_eq!(r.batch_window_us, GEN_BATCH_WINDOW_US);
+    }
+
+    #[test]
+    fn grid_runs_all_kinds_and_is_thread_invariant() {
+        let scs = vec![gen_family(10_000.0)[0].clone()];
+        let pols = [AdmissionPolicy::Open, AdmissionPolicy::DeadlineFeasible];
+        let g1 = run_gen_grid(&gpu(), &scs, &pols, &GenOpts::default(), 1)
+            .unwrap();
+        let g4 = run_gen_grid(&gpu(), &scs, &pols, &GenOpts::default(), 4)
+            .unwrap();
+        assert_eq!(g1.to_json(), g4.to_json());
+        assert_eq!(g1.cells.len(), pols.len() + 3);
+        for kind in ["policy", "solo", "sequential", "batched"] {
+            assert!(g1.cells.iter().any(|c| c.kind == kind), "{kind}");
+        }
+        assert!(g1.to_json().contains("\"comparisons\""));
+    }
+
+    #[test]
+    fn diff_scenario_emits_exactly_one_token_per_request() {
+        let sc = gen_diff(10_000.0);
+        let r = run_gen(&gpu(), &sc, &GenOpts::default()).unwrap();
+        assert_eq!(r.tokens, r.served());
+        assert_eq!(r.evictions, 0);
+        for t in &r.tenants {
+            assert!(t.inter_token_us.is_empty(), "{}", t.label);
+            // TTFT == end-to-end for 1-token requests.
+            for (a, b) in t.ttft_us.iter().zip(&t.latencies_us) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_invalid_config() {
+        let sc = &gen_family(10_000.0)[0];
+        let bad = GenOpts {
+            batch_window_us: Some(0.0),
+            ..GenOpts::default()
+        };
+        assert!(run_gen(&gpu(), sc, &bad).is_err());
+        let bad_sched = GenOpts {
+            scheduler: "nope".into(),
+            ..GenOpts::default()
+        };
+        assert!(run_gen(&gpu(), sc, &bad_sched).is_err());
+        let mut bad_sc = sc.clone();
+        bad_sc.kv_budget_bytes = 10.0;
+        assert!(run_gen(&gpu(), &bad_sc, &GenOpts::default()).is_err());
+    }
+}

@@ -17,8 +17,12 @@
 //! admission controller into the live coordinator, with per-tenant SLO
 //! accounting (`miriam serve-sim`). [`scale`] (ISSUE 7) stretches that
 //! loop to 100k-tenant populations with lazy arrival streams and
-//! streaming quantile sketches (`miriam scale-sim`).
+//! streaming quantile sketches (`miriam scale-sim`). [`gen`] (ISSUE 10)
+//! serves autoregressive prefill/decode requests through the same core:
+//! per-step graph resubmission, KV-cache residency with memory-pressure
+//! eviction, and token-level TTFT / per-token SLOs (`miriam gen-sim`).
 
+pub mod gen;
 pub mod online;
 pub mod scale;
 

@@ -53,6 +53,7 @@ use crate::gpu::metrics::SimMetrics;
 use crate::gpu::spec::GpuSpec;
 use crate::runtime::json::Json;
 use crate::workloads::mdtb::Workload;
+use crate::workloads::models::ModelRef;
 use crate::workloads::rng::Rng;
 use crate::workloads::scenario::ScenarioSpec;
 
@@ -99,9 +100,21 @@ impl DeviceCore {
     /// zero-clone fast path, same as the batch driver).
     pub(crate) fn new(gpu: &GpuSpec, wl: &Workload, scheduler: &str)
                       -> Result<Self, String> {
+        Self::new_traced(gpu, wl, scheduler, false)
+    }
+
+    /// [`DeviceCore::new`] with an optional engine trace recorder
+    /// attached — the generation golden-trace recorder
+    /// (`crate::server::gen`) records through the same core the serving
+    /// loops run, so goldens pin the served trajectory, not a replica.
+    pub(crate) fn new_traced(gpu: &GpuSpec, wl: &Workload, scheduler: &str,
+                             trace: bool) -> Result<Self, String> {
         let mut sched = scheduler_for(scheduler, wl)
             .ok_or_else(|| format!("unknown scheduler {scheduler}"))?;
         let mut eng = Engine::new(gpu.clone());
+        if trace {
+            eng = eng.with_trace();
+        }
         sched.init(&mut eng);
         // Intern each distinct model once, keyed by the `Arc` pointer: a
         // 100k-tenant scale workload shares a handful of model Arcs
@@ -141,6 +154,32 @@ impl DeviceCore {
         &self.eng.spec
     }
 
+    /// Take the recorded engine trace, if tracing was enabled at
+    /// construction (drains the recorder; call once, after the run).
+    pub(crate) fn take_trace(&mut self) -> Option<crate::gpu::trace::Trace> {
+        self.eng.take_trace()
+    }
+
+    /// The pre-interned kernel-name ids of source `src` (cheap `Arc`
+    /// clone). The generation layer seeds its phase-graph cache with
+    /// this so a request's first prefill reuses the exact ids
+    /// [`DeviceCore::submit`] would use.
+    pub(crate) fn source_name_ids(&self, src: usize) -> Arc<Vec<u32>> {
+        self.name_ids[src].clone()
+    }
+
+    /// Intern an out-of-workload model's kernel names (decode-step and
+    /// recompute graphs, which don't exist in the base workload). Done
+    /// once per distinct graph at cache fill; per-step resubmission then
+    /// stays on the interned fast path.
+    pub(crate) fn intern_model(
+        &mut self,
+        model: &crate::workloads::models::ModelDesc,
+    ) -> Arc<Vec<u32>> {
+        let eng = &mut self.eng;
+        Arc::new(model.intern_kernels(|n| eng.intern_name(n)))
+    }
+
     /// The device's contention parameters.
     pub(crate) fn params(&self) -> &ContentionParams {
         &self.eng.params
@@ -168,6 +207,27 @@ impl DeviceCore {
             model: s.model.clone(),
             name_ids: self.name_ids[src].clone(),
             criticality: s.criticality,
+            arrival_us: t,
+        };
+        self.open.insert(id, (t, src));
+        self.sched.on_request(req, &mut self.eng);
+    }
+
+    /// [`DeviceCore::submit`] for an explicit (model, interned ids)
+    /// pair — the generation layer's per-phase entry point (decode
+    /// steps, recompute prefills, batched decode groups), where the
+    /// graph changes per step and so cannot come from the per-source
+    /// table. Same request construction, same open-table bookkeeping,
+    /// zero allocation (both handles are `Arc` clones).
+    pub(crate) fn submit_model(&mut self, model: &ModelRef,
+                               name_ids: &Arc<Vec<u32>>, src: usize,
+                               criticality: Criticality, t: f64, id: u64) {
+        let req = Req {
+            id,
+            source: src,
+            model: model.clone(),
+            name_ids: name_ids.clone(),
+            criticality,
             arrival_us: t,
         };
         self.open.insert(id, (t, src));
@@ -335,6 +395,26 @@ pub struct TenantOutcome {
     pub cancelled: u64,
     /// End-to-end latency (us) of each served request.
     pub latencies_us: Vec<f64>,
+    /// Output tokens emitted and kept for this tenant (generation
+    /// workloads; 0 for fixed-chain tenants).
+    pub tokens: u64,
+    /// Served generation requests whose first token missed the tenant's
+    /// TTFT deadline (0 without one).
+    pub ttft_misses: u64,
+    /// Inter-token gaps that exceeded the tenant's per-token budget
+    /// (0 without one).
+    pub token_misses: u64,
+    /// Times one of this tenant's resident requests was evicted from
+    /// the KV cache under memory pressure (generation; never > 0 for
+    /// critical tenants).
+    pub evictions: u64,
+    /// In-flight steps whose output was discarded because the request
+    /// was evicted mid-step (each re-runs after recompute).
+    pub preempted_steps: u64,
+    /// Time-to-first-token (us) of each served generation request.
+    pub ttft_us: Vec<f64>,
+    /// Inter-token gap (us) of every kept decode token.
+    pub inter_token_us: Vec<f64>,
 }
 
 impl TenantOutcome {
@@ -351,6 +431,21 @@ impl TenantOutcome {
     /// Mean served latency (us; NaN when nothing was served).
     pub fn mean_us(&self) -> f64 {
         mean(&self.latencies_us)
+    }
+
+    /// Median time-to-first-token (us; NaN when nothing was served).
+    pub fn ttft_p50_us(&self) -> f64 {
+        sorted_quantile(&self.ttft_us, 0.5)
+    }
+
+    /// 99th-percentile time-to-first-token (us; NaN when empty).
+    pub fn ttft_p99_us(&self) -> f64 {
+        sorted_quantile(&self.ttft_us, 0.99)
+    }
+
+    /// 99th-percentile inter-token gap (us; NaN when empty).
+    pub fn inter_token_p99_us(&self) -> f64 {
+        sorted_quantile(&self.inter_token_us, 0.99)
     }
 }
 
@@ -572,6 +667,31 @@ pub(crate) fn tenant_json_faults(t: &TenantOutcome) -> Json {
     }
 }
 
+/// The generation variant of [`tenant_json`]: the same row plus the
+/// token-level SLO and KV-pressure counters. Kept separate so
+/// `BENCH_serve.json` / `BENCH_fleet.json` documents stay byte-identical
+/// to their pre-generation forms (ISSUE 10 determinism contract);
+/// non-finite quantiles serialize as `null` like every other report.
+pub(crate) fn tenant_json_gen(t: &TenantOutcome) -> Json {
+    match tenant_json(t) {
+        Json::Obj(mut tm) => {
+            tm.insert("tokens".into(), Json::Num(t.tokens as f64));
+            tm.insert("ttft_misses".into(), Json::Num(t.ttft_misses as f64));
+            tm.insert("token_misses".into(),
+                      Json::Num(t.token_misses as f64));
+            tm.insert("evictions".into(), Json::Num(t.evictions as f64));
+            tm.insert("preempted_steps".into(),
+                      Json::Num(t.preempted_steps as f64));
+            tm.insert("ttft_p50_us".into(), Json::Num(t.ttft_p50_us()));
+            tm.insert("ttft_p99_us".into(), Json::Num(t.ttft_p99_us()));
+            tm.insert("inter_token_p99_us".into(),
+                      Json::Num(t.inter_token_p99_us()));
+            Json::Obj(tm)
+        }
+        other => other,
+    }
+}
+
 /// A scenarios × policies serving comparison (the `BENCH_serve.json`
 /// document).
 #[derive(Debug, Clone)]
@@ -733,6 +853,13 @@ pub(crate) fn tenant_outcomes(sc: &ScenarioSpec, wl: &Workload)
             hedge_wins: 0,
             cancelled: 0,
             latencies_us: Vec::new(),
+            tokens: 0,
+            ttft_misses: 0,
+            token_misses: 0,
+            evictions: 0,
+            preempted_steps: 0,
+            ttft_us: Vec::new(),
+            inter_token_us: Vec::new(),
         })
         .collect()
 }

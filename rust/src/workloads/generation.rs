@@ -1,0 +1,909 @@
+//! Autoregressive (prefill/decode) generation workloads (ISSUE 10
+//! tentpole).
+//!
+//! Every earlier workload is a CNN-style fixed kernel chain; a
+//! generation request is long-lived and stateful: one *prefill* pass
+//! over the prompt builds the KV cache and emits the first token, then
+//! one *decode* step per output token re-launches a small kernel graph
+//! whose attention kernel grows with the KV-cache length — the regime
+//! of the mirage llama3 decode loop (SNIPPETS.md: rms-linear QKV →
+//! attention over the cache → output projection → gate/up → down, with
+//! a per-step relaunch). Deadlines change shape too: a generation
+//! tenant carries a time-to-first-token (TTFT) deadline plus a
+//! per-token budget instead of one end-to-end deadline ("EdgeServing",
+//! PAPERS.md).
+//!
+//! This module is purely *descriptive*: [`GenModelDesc`] builds
+//! bucketed prefill/decode kernel graphs as ordinary
+//! [`ModelDesc`]s, [`GenScenarioSpec`] names a mixed-criticality tenant
+//! set over a device KV budget, and [`gen_family`] enumerates the named
+//! scenarios `miriam gen-sim` runs. The serving state machine that
+//! drives these graphs (KV ledger, eviction, continuous batching) lives
+//! in [`crate::server::gen`].
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::coordinator::sweep::derive_seed;
+use crate::gpu::kernel::{Criticality, KernelDesc};
+use crate::workloads::arrival::Arrival;
+use crate::workloads::mdtb::{Source, Workload};
+use crate::workloads::models::{ModelDesc, ModelRef};
+use crate::workloads::rng::Rng;
+
+/// Threads per block for generation kernels (GEMV-shaped).
+const TPB: u32 = 256;
+/// Output elements per thread (work coarsening), as in `models.rs`.
+const WPT: u32 = 8;
+/// Compute efficiency of naive matmul kernels relative to peak — the
+/// same calibration constant family as `models::CONV_EFF` (those are
+/// private to their module by design; each descriptor family owns its
+/// own calibration).
+const MM_EFF: f64 = 0.08;
+/// Achieved DRAM-bandwidth efficiency of strided accesses.
+const MEM_EFF: f64 = 0.55;
+/// fp16 weights/activations/KV entries.
+const BYTES_PER_EL: f64 = 2.0;
+/// Decode GEMVs split their rows across extra blocks (as `models::fc`
+/// does) so a single-token step still spreads over several SMs.
+const GEMV_SPLIT: u64 = 16;
+
+fn grid_for(out_elems: u64, tpb: u32) -> u32 {
+    (out_elems.div_ceil((tpb * WPT) as u64)).max(1) as u32
+}
+
+/// A transformer-ish generation model: enough shape to derive bucketed
+/// prefill and decode kernel graphs plus per-token KV-cache cost.
+///
+/// Graphs are *bucketed*: prompt lengths round up to
+/// [`GenModelDesc::prompt_bucket`] and KV lengths to
+/// [`GenModelDesc::kv_bucket`], so the set of distinct kernel names a
+/// run interns is small and the per-step resubmit path stays on the
+/// zero-alloc interned fast path (ISSUE 3).
+#[derive(Debug, Clone)]
+pub struct GenModelDesc {
+    /// Model name (e.g. "llama-edge").
+    pub name: String,
+    /// Hidden dimension (`n_heads * head_dim`).
+    pub hidden: u32,
+    /// MLP intermediate dimension (gate/up width).
+    pub intermediate: u32,
+    /// Query head count.
+    pub n_heads: u32,
+    /// KV head count (grouped-query attention; KV bytes scale with
+    /// this, not `n_heads`).
+    pub n_kv_heads: u32,
+    /// Per-head dimension.
+    pub head_dim: u32,
+    /// Prompt-length bucket granularity (tokens) for prefill graphs.
+    pub prompt_bucket: u32,
+    /// KV-length bucket granularity (tokens) for decode graphs.
+    pub kv_bucket: u32,
+    /// Maximum context (prompt + output tokens) a request may use.
+    pub max_context: u32,
+}
+
+impl GenModelDesc {
+    /// KV width per token (elements): K and V rows across the KV heads.
+    pub fn kv_dim(&self) -> u64 {
+        (self.n_kv_heads * self.head_dim) as u64
+    }
+
+    /// KV-cache bytes one token occupies (K + V, fp16).
+    pub fn kv_bytes_per_token(&self) -> f64 {
+        2.0 * self.kv_dim() as f64 * BYTES_PER_EL
+    }
+
+    /// KV-cache bytes a request holding `tokens` cache entries occupies.
+    pub fn kv_bytes(&self, tokens: u32) -> f64 {
+        tokens as f64 * self.kv_bytes_per_token()
+    }
+
+    /// Round a prompt length up to its graph bucket, clamped to
+    /// [`GenModelDesc::max_context`].
+    pub fn prompt_bucketed(&self, len: u32) -> u32 {
+        let b = self.prompt_bucket.max(1);
+        (len.max(1).div_ceil(b) * b).min(self.max_context)
+    }
+
+    /// Round a KV length up to its graph bucket, clamped to
+    /// [`GenModelDesc::max_context`].
+    pub fn kv_bucketed(&self, len: u32) -> u32 {
+        let b = self.kv_bucket.max(1);
+        (len.max(1).div_ceil(b) * b).min(self.max_context)
+    }
+
+    fn gemv(&self, name: String, seq: u64, din: u64, dout: u64)
+            -> KernelDesc {
+        let out = seq * dout;
+        // Single-token GEMVs split rows across blocks; prefill has
+        // sequence-level parallelism already.
+        let grid_elems = if seq == 1 { out * GEMV_SPLIT } else { out };
+        KernelDesc {
+            name,
+            grid: grid_for(grid_elems, TPB),
+            block_threads: TPB,
+            smem_per_block: 2 * 1024,
+            regs_per_thread: 32,
+            flops: 2.0 * (seq * din * dout) as f64 / MM_EFF,
+            bytes: BYTES_PER_EL * (din * dout + seq * (din + dout)) as f64
+                / MEM_EFF,
+        }
+    }
+
+    /// The attention kernel over a `kv_len`-entry cache for `seq` query
+    /// tokens. Both its effective FLOPs and its DRAM traffic grow
+    /// linearly with `kv_len` (the cache read), and its grid grows with
+    /// `kv_len` too — the cost/footprint growth the decode loop exists
+    /// to exercise.
+    fn attention(&self, name: String, seq: u64, kv_len: u64) -> KernelDesc {
+        let h = self.hidden as u64;
+        KernelDesc {
+            name,
+            grid: grid_for(seq * kv_len * self.n_heads as u64 * 8, TPB),
+            block_threads: TPB,
+            smem_per_block: 4 * 1024,
+            regs_per_thread: 40,
+            // QK^T plus PV over every cache entry.
+            flops: 4.0 * (seq * kv_len * h) as f64 / MM_EFF,
+            bytes: (self.kv_bytes(kv_len as u32)
+                + BYTES_PER_EL * (seq * h) as f64)
+                / MEM_EFF,
+        }
+    }
+
+    fn graph(&self, tag: &str, seq: u64, kv_len: u64) -> ModelDesc {
+        let m = &self.name;
+        let h = self.hidden as u64;
+        let inter = self.intermediate as u64;
+        let kv = self.kv_dim();
+        let kernels = vec![
+            // rms_linear: fused RMSNorm + QKV projection.
+            self.gemv(format!("{m}/{tag}/qkv"), seq, h, h + 2 * kv),
+            self.attention(format!("{m}/{tag}/attn"), seq, kv_len),
+            // Output projection.
+            self.gemv(format!("{m}/{tag}/wo"), seq, h, h),
+            // Gate + up projections (fused, SwiGLU-style).
+            self.gemv(format!("{m}/{tag}/w13"), seq, h, 2 * inter),
+            // Down projection.
+            self.gemv(format!("{m}/{tag}/w2"), seq, inter, h),
+        ];
+        ModelDesc { name: format!("{m}:{tag}"), kernels }
+    }
+
+    /// The prefill kernel graph for a prompt of `prompt_len` tokens
+    /// (bucketed): processes the whole prompt, builds the KV cache, and
+    /// emits the first output token on completion.
+    pub fn prefill_graph(&self, prompt_len: u32) -> ModelDesc {
+        let p = self.prompt_bucketed(prompt_len) as u64;
+        self.graph(&format!("p{p}"), p, p)
+    }
+
+    /// One decode step against a `kv_len`-entry cache (bucketed):
+    /// a single query token, five small launches, attention cost
+    /// growing with the cache.
+    pub fn decode_graph(&self, kv_len: u32) -> ModelDesc {
+        let k = self.kv_bucketed(kv_len) as u64;
+        self.graph(&format!("d{k}"), 1, k)
+    }
+
+    /// A continuous-batching decode step: `batch` requests sharing one
+    /// launch per kernel. Grids, FLOPs, and bytes scale by `batch`
+    /// (every member pays the *bucketed* KV read — the padding cost the
+    /// Miriam comparison measures); launch overhead is paid once, which
+    /// is the throughput win. `batch == 1` is exactly
+    /// [`GenModelDesc::decode_graph`] (same kernel names, so no extra
+    /// interning).
+    pub fn decode_graph_batched(&self, kv_len: u32, batch: u32) -> ModelDesc {
+        if batch <= 1 {
+            return self.decode_graph(kv_len);
+        }
+        let mut g = self.decode_graph(kv_len);
+        let k = self.kv_bucketed(kv_len);
+        for kd in &mut g.kernels {
+            // "{m}/d{k}/qkv" -> "{m}/d{k}/b{batch}/qkv"
+            let leaf = kd.name.rsplit('/').next().unwrap_or("k").to_string();
+            kd.name = format!("{}/d{k}/b{batch}/{leaf}", self.name);
+            kd.grid = kd.grid.saturating_mul(batch).max(1);
+            kd.flops *= batch as f64;
+            kd.bytes *= batch as f64;
+        }
+        g.name = format!("{}:d{k}:b{batch}", self.name);
+        g
+    }
+
+    /// The *expected-work* graph of one whole request from this model:
+    /// prefill over the prompt plus `round(mean_output)` decode steps at
+    /// the request's mid-life KV length. Used only to build admission
+    /// envelopes for best-effort tenants, so the deadline-feasible
+    /// burst guard sees a request's real service demand, not just its
+    /// prefill (the prefill/decode admission split of ISSUE 10).
+    pub fn expected_request_graph(&self, prompt_len: u32, mean_output: f64)
+                                  -> ModelDesc {
+        let steps = (mean_output.round() as u32).max(1);
+        let mut g = self.prefill_graph(prompt_len);
+        let mid = self
+            .prompt_bucketed(prompt_len)
+            .saturating_add(steps / 2)
+            .min(self.max_context);
+        let step = self.decode_graph(mid);
+        for _ in 0..steps {
+            g.kernels.extend(step.kernels.iter().cloned());
+        }
+        g.name = format!("{}:req-p{}", self.name, prompt_len);
+        g
+    }
+}
+
+/// Generation model registry.
+pub fn gen_model_by_name(name: &str) -> Option<GenModelDesc> {
+    match name {
+        // Scaled-down llama3-shaped edge model (SNIPPETS.md).
+        "llama-edge" => Some(GenModelDesc {
+            name: "llama-edge".into(),
+            hidden: 512,
+            intermediate: 1408,
+            n_heads: 8,
+            n_kv_heads: 4,
+            head_dim: 64,
+            prompt_bucket: 32,
+            kv_bucket: 32,
+            max_context: 512,
+        }),
+        // Chat-assistant nano variant for critical short-form tenants.
+        "llama-nano" => Some(GenModelDesc {
+            name: "llama-nano".into(),
+            hidden: 256,
+            intermediate: 704,
+            n_heads: 4,
+            n_kv_heads: 2,
+            head_dim: 64,
+            prompt_bucket: 16,
+            kv_bucket: 16,
+            max_context: 256,
+        }),
+        _ => None,
+    }
+}
+
+/// All generation model names.
+pub const GEN_MODELS: [&str; 2] = ["llama-edge", "llama-nano"];
+
+/// One generation tenant: a stream of requests sharing a model, a
+/// prompt shape, an output-length distribution, and token-level SLOs.
+#[derive(Debug, Clone)]
+pub struct GenSourceSpec {
+    /// Generation model name, resolved through [`gen_model_by_name`].
+    pub model: String,
+    /// Task class of every request from this source.
+    pub criticality: Criticality,
+    /// How requests arrive (open-loop processes only — a generation
+    /// request's lifetime is its decode chain, not a closed loop).
+    pub arrival: Arrival,
+    /// Prompt length (tokens) of every request from this source.
+    pub prompt_len: u32,
+    /// Mean of the bounded-geometric output-length draw (tokens, >= 1).
+    pub mean_output: f64,
+    /// Hard cap on drawn output lengths (tokens, >= 1).
+    pub max_output: u32,
+    /// Time-to-first-token deadline (us), if any.
+    pub ttft_deadline_us: Option<f64>,
+    /// Per-token (inter-token gap) budget (us), if any.
+    pub per_token_us: Option<f64>,
+}
+
+impl GenSourceSpec {
+    /// Draw this source's output length for one request: a bounded
+    /// geometric on `1..=max_output` with the configured mean, fully
+    /// determined by `seed` (derive it per request with
+    /// [`request_seed`], never from the arrival RNG — arrival streams
+    /// must match the fixed-chain equivalent bitwise).
+    pub fn draw_output_len(&self, seed: u64) -> u32 {
+        let mut rng = Rng::new(seed.max(1));
+        let mean = self.mean_output.max(1.0);
+        let q = 1.0 - 1.0 / mean;
+        let mut len = 1u32;
+        while len < self.max_output && rng.next_f64() < q {
+            len += 1;
+        }
+        len
+    }
+}
+
+/// The seed of the output-length draw for request number `ordinal`
+/// (0-based, per source) of source `src` in a scenario seeded `seed`.
+/// Splitmix-derived per (source, ordinal) so a source's draws are
+/// identical whether or not other tenants exist (the solo-criticals
+/// comparison and the threads determinism gate rely on this).
+pub fn request_seed(seed: u64, src: usize, ordinal: u64) -> u64 {
+    let s = derive_seed(seed ^ 0x9E37_79B9_7F4A_7C15, src as u32 + 1);
+    derive_seed(s, (ordinal as u32).wrapping_add(1).max(1))
+}
+
+/// A complete generation scenario: N tenants over a simulated window,
+/// sharing one device KV budget.
+#[derive(Debug, Clone)]
+pub struct GenScenarioSpec {
+    /// Scenario name (unique within the gen family).
+    pub name: String,
+    /// The tenants, in source order. Critical tenants come first, so
+    /// the solo-criticals variant preserves their arrival RNG draws.
+    pub sources: Vec<GenSourceSpec>,
+    /// Arrival-generation window (us). Decode chains in flight at the
+    /// end of the window drain to completion.
+    pub duration_us: f64,
+    /// RNG seed for arrivals and per-request output-length draws.
+    pub seed: u64,
+    /// Device KV-cache budget (bytes) shared by all resident requests.
+    pub kv_budget_bytes: f64,
+}
+
+impl GenScenarioSpec {
+    /// Number of request sources (tenants).
+    pub fn tenants(&self) -> usize {
+        self.sources.len()
+    }
+
+    /// Stable per-tenant label, same shape as
+    /// [`crate::workloads::scenario::ScenarioSpec::tenant_label`].
+    pub fn tenant_label(&self, i: usize) -> String {
+        let s = &self.sources[i];
+        let class = match s.criticality {
+            Criticality::Critical => "critical",
+            Criticality::Normal => "normal",
+        };
+        format!("t{i}-{}-{class}", s.model)
+    }
+
+    /// Number of critical tenants.
+    pub fn criticals(&self) -> usize {
+        self.sources
+            .iter()
+            .filter(|s| s.criticality == Criticality::Critical)
+            .count()
+    }
+
+    /// Validate the scenario: models resolve, shapes fit the context
+    /// window, every per-request KV footprint fits the budget alone
+    /// (otherwise a request could park forever), arrivals are
+    /// open-loop, and criticals precede normals.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.sources.is_empty() {
+            return Err(format!("{}: no sources", self.name));
+        }
+        if !(self.duration_us > 0.0) {
+            return Err(format!("{}: non-positive duration", self.name));
+        }
+        if !self.kv_budget_bytes.is_finite() || self.kv_budget_bytes <= 0.0 {
+            return Err(format!("{}: invalid kv budget", self.name));
+        }
+        let mut seen_normal = false;
+        for (i, s) in self.sources.iter().enumerate() {
+            let m = gen_model_by_name(&s.model).ok_or_else(|| {
+                format!("{}: unknown gen model {}", self.name, s.model)
+            })?;
+            if s.prompt_len == 0 || s.max_output == 0 {
+                return Err(format!("{}: t{i} zero prompt/output", self.name));
+            }
+            if !(s.mean_output >= 1.0) {
+                return Err(format!("{}: t{i} mean_output < 1", self.name));
+            }
+            if s.prompt_len + s.max_output > m.max_context {
+                return Err(format!(
+                    "{}: t{i} prompt {} + max_output {} exceeds {} context {}",
+                    self.name, s.prompt_len, s.max_output, s.model,
+                    m.max_context
+                ));
+            }
+            let footprint = m.kv_bytes(s.prompt_len + s.max_output);
+            if footprint > self.kv_budget_bytes {
+                return Err(format!(
+                    "{}: t{i} max KV footprint {footprint} exceeds budget {}",
+                    self.name, self.kv_budget_bytes
+                ));
+            }
+            if s.arrival.is_closed_loop() {
+                return Err(format!(
+                    "{}: t{i} closed-loop arrivals unsupported for \
+                     generation tenants",
+                    self.name
+                ));
+            }
+            match s.criticality {
+                Criticality::Normal => seen_normal = true,
+                Criticality::Critical if seen_normal => {
+                    return Err(format!(
+                        "{}: critical t{i} after a normal tenant (criticals \
+                         must come first for solo-run arrival parity)",
+                        self.name
+                    ));
+                }
+                Criticality::Critical => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// The scenario's *prefill* workload: one [`Source`] per tenant
+    /// whose model is the tenant's prefill graph and whose deadline is
+    /// its TTFT deadline. This is what the serving loop draws arrivals
+    /// from and submits as each request's first phase — and, for
+    /// 1-token scenarios, exactly the fixed-chain equivalent workload
+    /// of the differential test (decode machinery inert). Tenants
+    /// sharing (model, prompt bucket) share one [`ModelRef`], so the
+    /// device core interns each distinct graph once.
+    pub fn base_workload(&self) -> Workload {
+        let mut cache: BTreeMap<(String, u32), ModelRef> = BTreeMap::new();
+        let sources = self
+            .sources
+            .iter()
+            .map(|s| {
+                let m = gen_model_by_name(&s.model)
+                    .unwrap_or_else(|| panic!("unknown gen model {}", s.model));
+                let bucket = m.prompt_bucketed(s.prompt_len);
+                let arc = cache
+                    .entry((s.model.clone(), bucket))
+                    .or_insert_with(|| Arc::new(m.prefill_graph(s.prompt_len)))
+                    .clone();
+                Source {
+                    model: arc,
+                    arrival: s.arrival.clone(),
+                    criticality: s.criticality,
+                    deadline_us: s.ttft_deadline_us,
+                }
+            })
+            .collect();
+        Workload {
+            name: self.name.clone(),
+            sources,
+            duration_us: self.duration_us,
+            seed: self.seed,
+        }
+    }
+
+    /// The workload the admission controller sizes its envelopes from
+    /// (the prefill/decode split): critical tenants keep their prefill
+    /// graph + TTFT deadline, so deadline-feasible admission binds on
+    /// TTFT; best-effort tenants get their whole expected-request graph
+    /// ([`GenModelDesc::expected_request_graph`]), so the burst guard
+    /// sees real decode backlog, not just prefill.
+    pub fn admission_workload(&self) -> Workload {
+        let sources = self
+            .sources
+            .iter()
+            .map(|s| {
+                let m = gen_model_by_name(&s.model)
+                    .unwrap_or_else(|| panic!("unknown gen model {}", s.model));
+                let (model, deadline) = match s.criticality {
+                    Criticality::Critical => (
+                        Arc::new(m.prefill_graph(s.prompt_len)),
+                        s.ttft_deadline_us,
+                    ),
+                    Criticality::Normal => (
+                        Arc::new(m.expected_request_graph(
+                            s.prompt_len,
+                            s.mean_output,
+                        )),
+                        None,
+                    ),
+                };
+                Source {
+                    model,
+                    arrival: s.arrival.clone(),
+                    criticality: s.criticality,
+                    deadline_us: deadline,
+                }
+            })
+            .collect();
+        Workload {
+            name: self.name.clone(),
+            sources,
+            duration_us: self.duration_us,
+            seed: self.seed,
+        }
+    }
+
+    /// The solo-criticals variant: identical critical tenants, normal
+    /// tenants replaced by empty replay streams (so source indices,
+    /// labels, and — because criticals precede normals — the criticals'
+    /// arrival RNG draws are all preserved). The TTFT acceptance gate
+    /// compares mixed-run critical TTFT against this run.
+    pub fn solo_criticals(&self) -> GenScenarioSpec {
+        GenScenarioSpec {
+            name: format!("{}-solo", self.name),
+            sources: self
+                .sources
+                .iter()
+                .map(|s| {
+                    if s.criticality == Criticality::Critical {
+                        s.clone()
+                    } else {
+                        GenSourceSpec {
+                            arrival: Arrival::replay(Vec::new()),
+                            ..s.clone()
+                        }
+                    }
+                })
+                .collect(),
+            duration_us: self.duration_us,
+            seed: self.seed,
+            kv_budget_bytes: self.kv_budget_bytes,
+        }
+    }
+}
+
+fn gcrit(model: &str, arrival: Arrival, prompt: u32, mean: f64, max: u32,
+         ttft_us: f64, per_token_us: f64) -> GenSourceSpec {
+    GenSourceSpec {
+        model: model.into(),
+        criticality: Criticality::Critical,
+        arrival,
+        prompt_len: prompt,
+        mean_output: mean,
+        max_output: max,
+        ttft_deadline_us: Some(ttft_us),
+        per_token_us: Some(per_token_us),
+    }
+}
+
+fn gnorm(model: &str, arrival: Arrival, prompt: u32, mean: f64, max: u32)
+         -> GenSourceSpec {
+    GenSourceSpec {
+        model: model.into(),
+        criticality: Criticality::Normal,
+        arrival,
+        prompt_len: prompt,
+        mean_output: mean,
+        max_output: max,
+        ttft_deadline_us: None,
+        per_token_us: None,
+    }
+}
+
+/// The named generation scenario family: critical short-prompt /
+/// short-output chat tenants against normal long-generation tenants,
+/// under progressively tighter KV budgets.
+pub fn gen_family(duration_us: f64) -> Vec<GenScenarioSpec> {
+    vec![
+        // Roomy budget: the no-pressure anchor (no evictions expected);
+        // two of its cells are golden-trace pins.
+        GenScenarioSpec {
+            name: "gen-duo".into(),
+            sources: vec![
+                gcrit(
+                    "llama-nano",
+                    Arrival::Uniform { rate_hz: 120.0 },
+                    24, 4.0, 8, 8_000.0, 4_000.0,
+                ),
+                gnorm(
+                    "llama-edge",
+                    Arrival::Poisson { rate_hz: 70.0 },
+                    96, 12.0, 24,
+                ),
+            ],
+            duration_us,
+            seed: 0x6E1,
+            kv_budget_bytes: 524_288.0,
+        },
+        // Tight budget: two long-generation tenants collide, parking
+        // normals and forcing evict-and-recompute when criticals land
+        // while the cache is full.
+        GenScenarioSpec {
+            name: "gen-pressure".into(),
+            sources: vec![
+                gcrit(
+                    "llama-nano",
+                    Arrival::Uniform { rate_hz: 100.0 },
+                    16, 4.0, 8, 8_000.0, 4_000.0,
+                ),
+                gnorm(
+                    "llama-edge",
+                    Arrival::Mmpp {
+                        on_hz: 250.0,
+                        off_hz: 10.0,
+                        mean_on_us: 4_000.0,
+                        mean_off_us: 8_000.0,
+                    },
+                    128, 24.0, 48,
+                ),
+                gnorm(
+                    "llama-edge",
+                    Arrival::Poisson { rate_hz: 50.0 },
+                    128, 16.0, 32,
+                ),
+            ],
+            duration_us,
+            seed: 0x6E2,
+            kv_budget_bytes: 368_640.0,
+        },
+        // Widest mix: two critical classes, two bursty long tenants.
+        GenScenarioSpec {
+            name: "gen-storm".into(),
+            sources: vec![
+                gcrit(
+                    "llama-nano",
+                    Arrival::Mmpp {
+                        on_hz: 300.0,
+                        off_hz: 10.0,
+                        mean_on_us: 3_000.0,
+                        mean_off_us: 9_000.0,
+                    },
+                    16, 2.0, 4, 6_000.0, 3_000.0,
+                ),
+                gcrit(
+                    "llama-nano",
+                    Arrival::Uniform { rate_hz: 60.0 },
+                    32, 4.0, 8, 10_000.0, 5_000.0,
+                ),
+                gnorm(
+                    "llama-edge",
+                    Arrival::Poisson { rate_hz: 60.0 },
+                    96, 16.0, 32,
+                ),
+                gnorm(
+                    "llama-edge",
+                    Arrival::Mmpp {
+                        on_hz: 200.0,
+                        off_hz: 5.0,
+                        mean_on_us: 5_000.0,
+                        mean_off_us: 10_000.0,
+                    },
+                    160, 24.0, 48,
+                ),
+            ],
+            duration_us,
+            seed: 0x6E3,
+            kv_budget_bytes: 409_600.0,
+        },
+    ]
+}
+
+/// The differential-test scenario (ISSUE 10 satellite): every tenant
+/// draws exactly one output token (`mean_output == 1.0` makes the
+/// geometric draw degenerate), so a request is pure prefill and the
+/// decode machinery is provably inert — the run must reproduce the
+/// fixed-chain equivalent ([`GenScenarioSpec::base_workload`] under the
+/// batch driver) bitwise. Kept out of [`gen_family`] so grid baselines
+/// are untouched; reachable by name.
+pub fn gen_diff(duration_us: f64) -> GenScenarioSpec {
+    GenScenarioSpec {
+        name: "gen-diff".into(),
+        sources: vec![
+            gcrit(
+                "llama-nano",
+                Arrival::Poisson { rate_hz: 80.0 },
+                24, 1.0, 1, 20_000.0, 10_000.0,
+            ),
+            gnorm(
+                "llama-edge",
+                Arrival::Poisson { rate_hz: 60.0 },
+                64, 1.0, 1,
+            ),
+        ],
+        duration_us,
+        seed: 0x6E4,
+        kv_budget_bytes: 8.0 * 1024.0 * 1024.0,
+    }
+}
+
+/// Look up a generation scenario by name (case-insensitive): the
+/// [`gen_family`] members plus the standalone [`gen_diff`] scenario.
+pub fn gen_by_name(name: &str, duration_us: f64) -> Option<GenScenarioSpec> {
+    gen_family(duration_us)
+        .into_iter()
+        .chain(std::iter::once(gen_diff(duration_us)))
+        .find(|s| s.name.eq_ignore_ascii_case(name))
+}
+
+/// Pinned (scenario, scheduler) generation cells whose canonical engine
+/// traces are golden files under `rust/tests/golden/gen/` — recorded by
+/// the same `miriam scenarios --record-golden` flow as the main set, at
+/// [`crate::workloads::scenario::GOLDEN_DURATION_US`] on
+/// [`crate::workloads::scenario::GOLDEN_PLATFORM`].
+pub const GEN_GOLDEN_CELLS: [(&str, &str); 4] = [
+    ("gen-duo", "miriam"),
+    ("gen-duo", "sequential"),
+    ("gen-pressure", "miriam"),
+    ("gen-pressure", "sequential"),
+];
+
+/// Subdirectory of the golden dir holding the generation anchors
+/// (`rust/tests/golden/gen/`), with its own bootstrap state like
+/// `devices/`.
+pub const GEN_GOLDEN_SUBDIR: &str = "gen";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_and_dims_are_consistent() {
+        for name in GEN_MODELS {
+            let m = gen_model_by_name(name).unwrap();
+            assert_eq!(m.name, name);
+            assert_eq!(m.hidden, m.n_heads * m.head_dim, "{name}");
+            assert!(m.n_kv_heads <= m.n_heads, "{name}");
+            assert!(m.kv_bytes_per_token() > 0.0, "{name}");
+        }
+        assert!(gen_model_by_name("gpt-oss").is_none());
+    }
+
+    #[test]
+    fn graphs_are_well_formed_and_bucketed() {
+        let m = gen_model_by_name("llama-edge").unwrap();
+        let g = m.prefill_graph(100);
+        assert_eq!(g.kernels.len(), 5);
+        // 100 rounds up to the 128 bucket; names carry the bucket.
+        assert!(g.kernels[0].name.contains("/p128/"), "{}", g.kernels[0].name);
+        assert_eq!(
+            g.kernels.iter().map(|k| k.name.clone()).collect::<Vec<_>>(),
+            m.prefill_graph(128)
+                .kernels
+                .iter()
+                .map(|k| k.name.clone())
+                .collect::<Vec<_>>(),
+            "same bucket must produce identical kernel names"
+        );
+        for k in &g.kernels {
+            assert!(k.grid >= 1 && k.flops > 0.0 && k.bytes > 0.0, "{}", k.name);
+        }
+        let d = m.decode_graph(40);
+        assert_eq!(d.kernels.len(), 5);
+        assert!(d.kernels[1].name.contains("/d64/"), "{}", d.kernels[1].name);
+    }
+
+    #[test]
+    fn decode_attention_grows_with_kv_length() {
+        let m = gen_model_by_name("llama-edge").unwrap();
+        let short = m.decode_graph(32);
+        let long = m.decode_graph(480);
+        // Kernel 1 is attention: cost and footprint must grow.
+        assert!(long.kernels[1].flops > short.kernels[1].flops);
+        assert!(long.kernels[1].bytes > short.kernels[1].bytes);
+        assert!(long.kernels[1].grid >= short.kernels[1].grid);
+        // Non-attention decode kernels are KV-independent.
+        for i in [0usize, 2, 3, 4] {
+            assert_eq!(
+                long.kernels[i].flops.to_bits(),
+                short.kernels[i].flops.to_bits(),
+                "kernel {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn batched_decode_scales_and_b1_is_plain() {
+        let m = gen_model_by_name("llama-edge").unwrap();
+        let plain = m.decode_graph(64);
+        let b1 = m.decode_graph_batched(64, 1);
+        for (a, b) in plain.kernels.iter().zip(&b1.kernels) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.flops.to_bits(), b.flops.to_bits());
+        }
+        let b4 = m.decode_graph_batched(64, 4);
+        for (a, b) in plain.kernels.iter().zip(&b4.kernels) {
+            assert!(b.name.contains("/b4/"), "{}", b.name);
+            assert_eq!(b.grid, a.grid * 4);
+            assert!((b.flops - 4.0 * a.flops).abs() < 1e-6 * a.flops);
+        }
+    }
+
+    #[test]
+    fn output_draws_are_seeded_bounded_and_mean_one_is_degenerate() {
+        let fam = gen_family(100_000.0);
+        let s = &fam[1].sources[1]; // long-generation tenant
+        for ord in 0..200u64 {
+            let seed = request_seed(fam[1].seed, 1, ord);
+            let a = s.draw_output_len(seed);
+            let b = s.draw_output_len(seed);
+            assert_eq!(a, b, "draw not deterministic");
+            assert!((1..=s.max_output).contains(&a), "{a}");
+        }
+        // Different ordinals produce different lengths somewhere.
+        let mut distinct = std::collections::BTreeSet::new();
+        for ord in 0..50u64 {
+            distinct.insert(s.draw_output_len(request_seed(7, 1, ord)));
+        }
+        assert!(distinct.len() > 1, "degenerate draw distribution");
+        // mean 1.0 => always exactly 1 token (the differential lever).
+        let d = gen_diff(100_000.0);
+        for src in 0..d.sources.len() {
+            for ord in 0..100u64 {
+                let seed = request_seed(d.seed, src, ord);
+                assert_eq!(d.sources[src].draw_output_len(seed), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn family_validates_and_mixes_criticality() {
+        let fam = gen_family(100_000.0);
+        assert!(fam.len() >= 3);
+        let mut names: Vec<&str> = fam.iter().map(|s| s.name.as_str()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), fam.len(), "duplicate gen scenario names");
+        for sc in &fam {
+            sc.validate().unwrap();
+            assert!(sc.criticals() >= 1, "{}", sc.name);
+            assert!(sc.criticals() < sc.tenants(), "{}", sc.name);
+            assert!(sc.tenant_label(0).starts_with("t0-"), "{}", sc.name);
+        }
+        gen_diff(100_000.0).validate().unwrap();
+    }
+
+    #[test]
+    fn base_workload_shares_graphs_and_carries_ttft_deadlines() {
+        let sc = &gen_family(100_000.0)[1]; // gen-pressure: t1/t2 same bucket
+        let wl = sc.base_workload();
+        assert_eq!(wl.sources.len(), sc.tenants());
+        assert_eq!(wl.seed, sc.seed);
+        assert!(Arc::ptr_eq(&wl.sources[1].model, &wl.sources[2].model),
+                "same (model, prompt bucket) must share one ModelRef");
+        assert_eq!(wl.sources[0].deadline_us,
+                   sc.sources[0].ttft_deadline_us);
+        assert_eq!(wl.sources[1].deadline_us, None);
+    }
+
+    #[test]
+    fn admission_workload_splits_prefill_from_expected_work() {
+        let sc = &gen_family(100_000.0)[0];
+        let wl = sc.admission_workload();
+        let crit_work: f64 = wl.sources[0].model.total_flops();
+        let norm_work: f64 = wl.sources[1].model.total_flops();
+        let norm_prefill = gen_model_by_name("llama-edge")
+            .unwrap()
+            .prefill_graph(sc.sources[1].prompt_len)
+            .total_flops();
+        // Normals are sized by prefill + expected decode; criticals by
+        // prefill alone (TTFT-binding).
+        assert!(norm_work > norm_prefill, "{norm_work} vs {norm_prefill}");
+        let crit_prefill = gen_model_by_name("llama-nano")
+            .unwrap()
+            .prefill_graph(sc.sources[0].prompt_len)
+            .total_flops();
+        assert_eq!(crit_work.to_bits(), crit_prefill.to_bits());
+    }
+
+    #[test]
+    fn solo_criticals_preserves_criticals_and_silences_normals() {
+        for sc in gen_family(100_000.0) {
+            let solo = sc.solo_criticals();
+            solo.validate().unwrap();
+            assert_eq!(solo.tenants(), sc.tenants());
+            for (i, (a, b)) in
+                sc.sources.iter().zip(&solo.sources).enumerate()
+            {
+                assert_eq!(a.criticality, b.criticality, "{} t{i}", sc.name);
+                if a.criticality == Criticality::Critical {
+                    assert_eq!(format!("{:?}", a.arrival),
+                               format!("{:?}", b.arrival));
+                } else {
+                    let empty = matches!(
+                        &b.arrival,
+                        Arrival::Replay { times } if times.is_empty()
+                    );
+                    assert!(empty, "{} t{i} normal not silenced", sc.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn golden_cells_resolve() {
+        for (sc, sched) in GEN_GOLDEN_CELLS {
+            assert!(gen_by_name(sc, 40_000.0).is_some(), "{sc}");
+            assert!(crate::coordinator::is_scheduler_name(sched), "{sched}");
+        }
+        assert!(gen_by_name("GEN-DUO", 1e5).is_some());
+        assert!(gen_by_name("duo-burst", 1e5).is_none());
+    }
+
+    #[test]
+    fn request_seeds_are_stable_per_source_and_ordinal() {
+        assert_eq!(request_seed(9, 0, 0), request_seed(9, 0, 0));
+        assert_ne!(request_seed(9, 0, 0), request_seed(9, 0, 1));
+        assert_ne!(request_seed(9, 0, 0), request_seed(9, 1, 0));
+        assert_ne!(request_seed(9, 0, 0), request_seed(10, 0, 0));
+    }
+}

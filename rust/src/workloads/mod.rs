@@ -1,9 +1,12 @@
 //! DNN workloads: model kernel descriptors, arrival processes, the MDTB
-//! benchmark (paper Table 2), the LGSVL case-study trace (§8.5), and the
+//! benchmark (paper Table 2), the LGSVL case-study trace (§8.5), the
 //! declarative scenario harness (N-tenant mixed-criticality scenarios
-//! beyond the paper's benchmark).
+//! beyond the paper's benchmark), and the autoregressive generation
+//! family ([`generation`]: prefill/decode kernel graphs, KV-cache
+//! footprints, token-level SLOs).
 
 pub mod arrival;
+pub mod generation;
 pub mod lgsvl;
 pub mod mdtb;
 pub mod models;

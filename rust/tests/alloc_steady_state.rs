@@ -22,6 +22,7 @@ use miriam::gpu::engine::{Completion, Engine};
 use miriam::gpu::kernel::Criticality;
 use miriam::gpu::spec::GpuSpec;
 use miriam::runtime::timewheel::TimingWheel;
+use miriam::workloads::generation;
 use miriam::workloads::models::{self, ModelRef};
 use miriam::workloads::rng::Rng;
 
@@ -148,6 +149,90 @@ fn warm_pump_and_completion_path_allocates_nothing() {
     assert_eq!(measured_allocs, 0,
                "warm Miriam pump+completion path allocated \
                 {measured_allocs} time(s) over {measured_calls} calls");
+}
+
+#[test]
+fn warm_decode_step_resubmit_path_allocates_nothing() {
+    // ISSUE 10 generation serving: a decode step is a tiny five-launch
+    // graph, and one run re-submits thousands of them (one per emitted
+    // token) through the interned fast path. Pre-intern every kv-bucket
+    // decode graph of llama-nano, then run two closed-loop clients whose
+    // completions immediately resubmit the next decode step at the next
+    // bucket — the same shape `server::gen` produces as a request's KV
+    // cache grows. Once every bucket's elastic cache entry and shard
+    // name id is warm, the on_completion + resubmit windows must be
+    // exactly allocation-free: token loops stay O(Δ) regardless of how
+    // many tiny launches a generation emits.
+    let gen = generation::gen_model_by_name("llama-nano").expect("model");
+    let mut eng = Engine::new(GpuSpec::rtx2060());
+    let mut m = Miriam::new(&[]);
+    m.init(&mut eng);
+    let nb = (gen.max_context / gen.kv_bucket) as usize;
+    assert!(nb >= 4, "need several kv buckets to cycle, got {nb}");
+    let graphs: Vec<(ModelRef, Arc<Vec<u32>>)> = (1..=nb as u32)
+        .map(|i| {
+            let g: ModelRef = Arc::new(gen.decode_graph(i * gen.kv_bucket));
+            let ids = Arc::new(g.intern_kernels(|n| eng.intern_name(n)));
+            (g, ids)
+        })
+        .collect();
+    let mut next_id: u64 = 1;
+    let mut step: u64 = 0; // global decode-step ordinal, cycles buckets
+    let mut completions: Vec<Completion> = Vec::new();
+    let mut finished: Vec<u64> = Vec::new();
+    for client in 0..2usize {
+        let (g, ids) = &graphs[client % nb];
+        let req = make_req(g, ids, &mut next_id, Criticality::Normal,
+                           eng.now_us());
+        m.on_request(req, &mut eng);
+    }
+
+    const WARMUP: u64 = 2000;
+    const TOTAL: u64 = 6000;
+    let mut events: u64 = 0;
+    let mut measured_calls: u64 = 0;
+    let mut measured_allocs: u64 = 0;
+    while events < TOTAL {
+        if eng.next_event_time().is_none() {
+            break;
+        }
+        eng.step_into(&mut completions);
+        events += 1;
+        let warm = events > WARMUP;
+        for c in &completions {
+            finished.clear();
+            let a0 = allocs();
+            counting(true);
+            m.on_completion(c, &mut eng, &mut finished);
+            counting(false);
+            if warm {
+                measured_allocs += allocs() - a0;
+                measured_calls += 1;
+            }
+            for _ in 0..finished.len() {
+                // Re-submit the next decode step at the next kv bucket,
+                // exactly as the generation loop does per token.
+                step += 1;
+                let (g, ids) = &graphs[step as usize % nb];
+                let req = make_req(g, ids, &mut next_id,
+                                   Criticality::Normal, eng.now_us());
+                let a0 = allocs();
+                counting(true);
+                m.on_request(req, &mut eng);
+                counting(false);
+                if warm {
+                    measured_allocs += allocs() - a0;
+                }
+            }
+        }
+    }
+    assert_eq!(events, TOTAL, "event loop stalled early");
+    assert!(measured_calls > 200,
+            "too few warm decode completions measured: {measured_calls}");
+    assert!(step > nb as u64 * 4, "bucket cycle barely exercised: {step}");
+    assert_eq!(measured_allocs, 0,
+               "warm decode-step resubmit path allocated {measured_allocs} \
+                time(s) over {measured_calls} calls");
 }
 
 #[test]

@@ -341,6 +341,74 @@ fn device_golden_traces_pin_per_platform_semantics() {
 }
 
 #[test]
+fn gen_golden_traces_pin_generation_semantics() {
+    // ISSUE 10 satellite: golden anchors for the generation serving
+    // loop — 2 gen scenarios × miriam/sequential, traced through the
+    // same `DeviceCore` the gen loop serves on, so per-step decode
+    // resubmission, KV eviction ordering, and recompute placement are
+    // all pinned at the engine-event level. Same bootstrap-on-first-run
+    // / UPDATE_GOLDEN protocol as the main set, with its own bootstrap
+    // state under rust/tests/golden/gen/.
+    use miriam::server::gen::{run_gen_traced, record_gen_golden_traces,
+                              GenOpts};
+    use miriam::workloads::generation;
+
+    let dir = golden_dir().join(generation::GEN_GOLDEN_SUBDIR);
+    let update = !matches!(
+        std::env::var("UPDATE_GOLDEN").as_deref(),
+        Err(_) | Ok("") | Ok("0") | Ok("false")
+    );
+    let have_any = fs::read_dir(&dir)
+        .map(|mut d| d.next().is_some())
+        .unwrap_or(false);
+    if update || !have_any {
+        let recorded = record_gen_golden_traces(&dir).unwrap();
+        eprintln!("recorded {} gen golden trace(s) into {} — commit \
+                   rust/tests/golden/gen/ to pin them",
+                  recorded.len(), dir.display());
+    }
+    for (sc_name, sched) in generation::GEN_GOLDEN_CELLS {
+        let sc =
+            generation::gen_by_name(sc_name, scenario::GOLDEN_DURATION_US)
+                .unwrap_or_else(|| {
+                    panic!("unknown gen golden scenario {sc_name}")
+                });
+        let opts = GenOpts { scheduler: sched.into(), ..GenOpts::default() };
+        let (report, actual) =
+            run_gen_traced(&GpuSpec::rtx2060(), &sc, &opts)
+                .unwrap_or_else(|e| panic!("{sc_name}/{sched}: {e}"));
+        assert!(!actual.is_empty(), "{sc_name}/{sched}: empty trace");
+        assert_eq!(report.tokens, report.drawn_tokens,
+                   "{sc_name}/{sched}: token conservation broke under \
+                    tracing");
+        let path = dir.join(scenario::golden_file_name(sc_name, sched));
+        assert!(path.exists(),
+                "gen golden {} is missing while other gen goldens exist — \
+                 deleted or renamed? re-record deliberately with \
+                 UPDATE_GOLDEN=1",
+                path.display());
+        let text = fs::read_to_string(&path).unwrap();
+        let golden = Trace::from_json_str(&text)
+            .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+        // Same tolerance rationale as the main goldens: libm may differ
+        // in the last ulp across hosts, so compare structurally with a
+        // tiny time tolerance.
+        let divs = actual.diff_with_tolerance(&golden, 1e-6);
+        if !divs.is_empty() {
+            dump(&format!("gen_golden__{sc_name}__{}.actual.json",
+                          scenario::scheduler_file_slug(sched)),
+                 &actual.to_canonical_json());
+            panic!("{sc_name}/{sched}: trace drifted from gen golden {} at \
+                    {} point(s); first: {} (actual dumped in {:?}; \
+                    regenerate with UPDATE_GOLDEN=1 or `miriam scenarios \
+                    --record-golden rust/tests/golden` only if the change \
+                    is intended)",
+                   path.display(), divs.len(), divs[0], dump_dir());
+        }
+    }
+}
+
+#[test]
 fn deadline_tagged_scenarios_score_misses_consistently() {
     // duo-burst tags its critical source with a 30ms deadline; whatever
     // the scheduler, misses never exceed completions and an impossible

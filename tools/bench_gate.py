@@ -48,6 +48,18 @@ The mode is dispatched on the measured document's ``"bench"`` key:
   row (a partition that dedicates SMs to criticals and still serves
   them materially slower than whole-device sharing means the SM-mask
   placement path is broken, regardless of what the baseline says).
+* ``"bench": "gen"`` (``BENCH_gen.json``): fleet-style contract over
+  the ``cells`` rows keyed ``(scenario, kind, policy)`` — coverage
+  regression, 2% tokens/sec drift, 5% critical-TTFT-p99 drift — plus
+  unconditional invariants that hold even in bootstrap: **token
+  conservation** (``tokens == drawn_tokens``: every admitted request
+  emits exactly its drawn output length, evictions included),
+  **criticals are never evicted** (``critical_evictions == 0``),
+  **TTFT never exceeds end-to-end latency** (``ttft_violations ==
+  0``), arrival accounting (``offered == admitted + shed``), and
+  **recompute equals the evicted prefix** (``recompute_tokens ==
+  evicted_prefix_tokens``: evict-and-recompute re-issues exactly what
+  it dropped, no more, no less).
 
 Usage:
     bench_gate.py MEASURED_JSON BASELINE_JSON [--tolerance 0.20]
@@ -462,6 +474,106 @@ def isolation_gate(measured, baseline_path, tolerance=None):
     return 0
 
 
+def gen_gate(measured, baseline_path, tolerance=None):
+    """Deterministic-report gate for BENCH_gen.json documents.
+
+    Works over the ``cells`` rows keyed ``(scenario, kind, policy)``.
+    The generation-ledger invariants — token conservation, criticals
+    never evicted, TTFT bounded by end-to-end latency, arrival
+    accounting, recompute matching the evicted prefix — are checked
+    unconditionally on every cell, baseline or not; drift checks
+    (tokens/sec within the served tolerance, critical TTFT p99 within
+    the p99 tolerance) arm once a real baseline is promoted.
+    """
+    served_tol = tolerance if tolerance is not None else 0.02
+    p99_tol = tolerance if tolerance is not None else 0.05
+    cells = measured.get("cells", [])
+    print(f"measured: {len(cells)} gen cell(s) on "
+          f"{measured.get('platform')}, "
+          f"{sum(c.get('tokens', 0) for c in cells)} tokens total, "
+          f"{sum(c.get('evictions', 0) for c in cells)} evictions")
+    key = lambda c: (c.get("scenario"), c.get("kind"), c.get("policy"))
+    failures = []
+    for c in cells:
+        tokens = c.get("tokens", 0)
+        drawn = c.get("drawn_tokens", 0)
+        if tokens != drawn:
+            failures.append(f"{key(c)}: tokens {tokens} != drawn "
+                            f"{drawn} — an admitted request must emit "
+                            f"exactly its drawn output length")
+        if c.get("critical_evictions", 0):
+            failures.append(f"{key(c)}: {c.get('critical_evictions')} "
+                            f"critical KV eviction(s) — memory pressure "
+                            f"must never evict a critical request")
+        if c.get("ttft_violations", 0):
+            failures.append(f"{key(c)}: {c.get('ttft_violations')} "
+                            f"TTFT > end-to-end latency violation(s)")
+        offered = c.get("offered", 0)
+        admitted = c.get("admitted", 0)
+        shed = c.get("shed", 0)
+        if offered != admitted + shed:
+            failures.append(f"{key(c)}: offered {offered} != admitted "
+                            f"{admitted} + shed {shed} (conservation)")
+        if c.get("recompute_tokens", 0) != c.get("evicted_prefix_tokens", 0):
+            failures.append(f"{key(c)}: recompute_tokens "
+                            f"{c.get('recompute_tokens')} != "
+                            f"evicted_prefix_tokens "
+                            f"{c.get('evicted_prefix_tokens')} — "
+                            f"evict-and-recompute must re-issue exactly "
+                            f"the dropped prefix")
+    try:
+        with open(baseline_path) as f:
+            baseline = json.load(f)
+    except FileNotFoundError:
+        baseline = None
+        if not failures:
+            print(f"gate: no baseline at {baseline_path} — bootstrap "
+                  f"pass (invariants held). Promote a CI-run "
+                  f"BENCH_gen.json artifact there to arm the gate "
+                  f"(same --smoke conditions).")
+            return 0
+    if baseline is not None and (baseline.get("bootstrap")
+                                 or not baseline.get("cells")):
+        baseline = None
+        if not failures:
+            print("gate: gen baseline is a bootstrap placeholder — "
+                  "pass (invariants held). Promote a CI-run "
+                  "BENCH_gen.json artifact to arm the gate.")
+            return 0
+    if baseline is not None:
+        base_cells = {key(c): c for c in baseline.get("cells", [])}
+        measured_keys = {key(c) for c in cells}
+        for k in sorted(k for k in base_cells if k not in measured_keys):
+            failures.append(f"{k}: in baseline but missing from measured "
+                            f"report (coverage regression)")
+        for c in cells:
+            b = base_cells.get(key(c))
+            if b is None:
+                continue  # new cell: no baseline yet, nothing to regress
+            bt, mt = b.get("tokens_per_sec"), c.get("tokens_per_sec")
+            if (isinstance(bt, (int, float)) and isinstance(mt, (int, float))
+                    and bt > 0 and abs(mt - bt) > served_tol * bt):
+                failures.append(f"{key(c)}: tokens_per_sec {mt:.1f} vs "
+                                f"baseline {bt:.1f}")
+            bp, mp = b.get("crit_ttft_p99_us"), c.get("crit_ttft_p99_us")
+            if (isinstance(bp, (int, float)) and isinstance(mp, (int, float))
+                    and bp > 0 and abs(mp - bp) > p99_tol * bp):
+                failures.append(f"{key(c)}: crit_ttft_p99_us {mp:.1f} vs "
+                                f"baseline {bp:.1f}")
+    if failures:
+        print("gate: FAIL — gen report violated a generation-ledger "
+              "invariant or drifted from baseline (intentional change? "
+              "refresh benchmarks/BENCH_gen.baseline.json from a healthy "
+              "CI artifact; invariant failures are bugs, not baseline "
+              "drift):")
+        for f_ in failures:
+            print(f"  {f_}")
+        return 1
+    print(f"gate: OK — {len(cells)} gen cell(s) conserve tokens, never "
+          f"evict criticals, and sit within tolerance of baseline")
+    return 0
+
+
 def main(argv):
     if len(argv) < 3:
         print(__doc__)
@@ -488,6 +600,9 @@ def main(argv):
     if measured.get("bench") == "isolation":
         return isolation_gate(measured, baseline_path,
                               tolerance if "--tolerance" in argv else None)
+    if measured.get("bench") == "gen":
+        return gen_gate(measured, baseline_path,
+                        tolerance if "--tolerance" in argv else None)
     m_inc = measured.get("events_per_sec_incremental")
     m_ref = measured.get("events_per_sec_reference")
     m_speedup = measured.get("speedup")
