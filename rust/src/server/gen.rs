@@ -619,7 +619,14 @@ impl<'a> GenSim<'a> {
         while i < self.parked.len() {
             let g = self.parked[i];
             if self.try_reserve(g, now) {
-                self.parked.remove(i);
+                // A parked critical's reservation may have evicted a
+                // pending-batch victim, which parks it mid-list and can
+                // shift `g`'s position — re-locate `g` by value.
+                let pos = self
+                    .parked
+                    .binary_search(&g)
+                    .expect("reserved request missing from parked list");
+                self.parked.remove(pos);
                 self.reqs[g].parked = false;
                 self.submit_restart(g, now);
             } else {
@@ -792,6 +799,7 @@ impl<'a> GenSim<'a> {
             }
             b.pending.push(g);
         } else {
+            self.reqs[g].in_flight = true;
             self.submit_decode(g, now, 1, None);
         }
     }
@@ -1047,8 +1055,12 @@ impl GenGridReport {
         self.scenarios
             .iter()
             .filter_map(|sc| {
-                let open = self.cell(sc, "policy",
-                                     Some(AdmissionPolicy::Open))?;
+                // Miriam reference row: the Open-policy cell, falling
+                // back to the first policy cell when the run's policy
+                // list omits Open.
+                let open = self
+                    .cell(sc, "policy", Some(AdmissionPolicy::Open))
+                    .or_else(|| self.cell(sc, "policy", None))?;
                 let df = self.cell(sc, "policy",
                                    Some(AdmissionPolicy::DeadlineFeasible));
                 let solo = self.cell(&format!("{sc}-solo"), "solo", None)?;
